@@ -1,0 +1,72 @@
+//! Design-space exploration: the paper's §5.2 crossbar-size study — sweep
+//! PE sizes 64..512 over a sample of DNNs and find the size that minimizes
+//! EDAP most often (the paper finds 256×256 wins for 75% of its sample).
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use imcnoc::arch::{evaluate, recommend_topology, CommBackend};
+use imcnoc::config::{ArchConfig, NocConfig, SimConfig};
+use imcnoc::dnn::models;
+use imcnoc::util::Table;
+
+fn main() {
+    // The paper's §5.2 sample (8 DNNs).
+    let sample = [
+        models::lenet5(),
+        models::nin(),
+        models::squeezenet(),
+        models::resnet(152),
+        models::resnet(50),
+        models::vgg(16),
+        models::vgg(19),
+        models::densenet(100),
+    ];
+    let pe_sizes = [64usize, 128, 256, 512];
+    let sim = SimConfig::default();
+
+    let mut t = Table::new(
+        "Crossbar-size DSE (ReRAM, advisor topology): EDAP by PE size",
+        &["dnn", "64", "128", "256", "512", "best"],
+    );
+    let mut wins = vec![0usize; pe_sizes.len()];
+    for g in &sample {
+        let mut row = vec![g.name.clone()];
+        let mut edaps = Vec::new();
+        for &pe in &pe_sizes {
+            let arch = ArchConfig {
+                pe_size: pe,
+                ..ArchConfig::reram()
+            };
+            let rec = recommend_topology(g, &arch, &NocConfig::default());
+            let e = evaluate(
+                g,
+                rec.topology,
+                &arch,
+                &NocConfig::with_topology(rec.topology),
+                &sim,
+                CommBackend::Analytical,
+            );
+            edaps.push(e.edap());
+            row.push(format!("{:.4}", e.edap()));
+        }
+        let best = edaps
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        wins[best] += 1;
+        row.push(pe_sizes[best].to_string());
+        t.add_row(row);
+    }
+    print!("{}", t.render());
+    for (pe, w) in pe_sizes.iter().zip(&wins) {
+        println!("PE {pe:>3}: best for {w}/{} DNNs", sample.len());
+    }
+    println!(
+        "\nPaper §5.2: 256x256 minimizes EDAP for ~75% of the sample; our \
+         model reports the distribution above."
+    );
+}

@@ -1,0 +1,86 @@
+//! End-to-end driver (DESIGN.md §6): proves all three layers compose.
+//!
+//! 1. Loads the AOT-compiled IMC-quantized MLP artifact (L1 Pallas crossbar
+//!    kernel inside an L2 JAX forward, lowered to HLO text by
+//!    `make artifacts`) plus its float twin.
+//! 2. Serves a few hundred batched inference requests through the rust
+//!    coordinator via PJRT (no Python anywhere on this path), measuring
+//!    real latency/throughput.
+//! 3. Checks classification agreement between the hardware-quantized and
+//!    float paths on the synthetic workload.
+//! 4. Reports what the modeled ReRAM IMC chip (with the advisor-chosen
+//!    NoC) would deliver for the same network.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use imcnoc::arch::{CommBackend, HeteroArchitecture};
+use imcnoc::config::ArchConfig;
+use imcnoc::coordinator::server::{argmax, synthetic_requests, InferenceServer};
+use imcnoc::dnn::models;
+use imcnoc::runtime::artifact_path;
+
+const REQUESTS: usize = 256;
+const BATCH: usize = 8; // must match the AOT batch (aot.py MLP_BATCH)
+const IN_DIM: usize = 784;
+
+fn main() -> anyhow::Result<()> {
+    let imc_path = artifact_path("mlp");
+    let float_path = artifact_path("mlp_float");
+    if !imc_path.exists() || !float_path.exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    let mut server = InferenceServer::new(BATCH)?;
+    println!("PJRT platform: {}", server.platform());
+
+    let requests = synthetic_requests(REQUESTS, IN_DIM, 42);
+
+    // --- Serve the IMC-quantized model (the hot path). ---
+    let imc = server.serve(&imc_path, &requests, IN_DIM)?;
+    println!(
+        "IMC-quantized MLP : {} reqs, {:.2} ms/batch (p50 {:.2}, p99 {:.2}), {:.1} req/s",
+        imc.requests, imc.mean_batch_ms, imc.p50_batch_ms, imc.p99_batch_ms, imc.throughput_rps
+    );
+
+    // --- Serve the float twin and compare classifications. ---
+    let flt = server.serve(&float_path, &requests, IN_DIM)?;
+    println!(
+        "float MLP         : {:.2} ms/batch, {:.1} req/s",
+        flt.mean_batch_ms, flt.throughput_rps
+    );
+    let agree = imc
+        .outputs
+        .iter()
+        .zip(&flt.outputs)
+        .filter(|(a, b)| argmax(a) == argmax(b))
+        .count();
+    let frac = agree as f64 / imc.outputs.len() as f64;
+    println!(
+        "classification agreement (4-bit-ADC IMC vs float): {agree}/{} = {:.1}%",
+        imc.outputs.len(),
+        100.0 * frac
+    );
+    assert!(
+        frac > 0.5,
+        "quantized/float agreement {frac} collapsed — kernel or AOT regression"
+    );
+
+    // --- What the modeled IMC silicon would deliver for this network. ---
+    let mlp = models::mlp();
+    let hw = HeteroArchitecture::new(ArchConfig::reram());
+    let eval = hw.evaluate(&mlp, CommBackend::Analytical);
+    println!(
+        "\nmodeled ReRAM IMC chip for {} ({}): {:.0} FPS, {:.3} W, {:.2} mm2, EDAP {:.5}",
+        mlp.name,
+        eval.topology.name(),
+        eval.fps(),
+        eval.power_w(),
+        eval.area_mm2(),
+        eval.edap()
+    );
+    println!("e2e_inference OK");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Edge deployment study: compact DNNs (the paper's low-connection-density
+//! group) on SRAM IMC with the topology advisor — the scenario the paper's
+//! intro motivates for edge hardware (low power, NoC-tree region).
+//!
+//! ```sh
+//! cargo run --release --example edge_deployment
+//! ```
+
+use imcnoc::arch::{recommend_topology, CommBackend, HeteroArchitecture};
+use imcnoc::config::{ArchConfig, NocConfig};
+use imcnoc::dnn::models;
+use imcnoc::util::Table;
+
+fn main() {
+    let edge_models = [models::mlp(), models::lenet5(), models::nin(), models::squeezenet()];
+    let hw = HeteroArchitecture::new(ArchConfig::sram());
+
+    let mut t = Table::new(
+        "Edge deployment (SRAM IMC, advisor-chosen interconnect)",
+        &[
+            "dnn", "density", "topology", "latency_ms", "power_W", "area_mm2",
+            "FPS", "EDAP",
+        ],
+    );
+    for g in &edge_models {
+        let rec = recommend_topology(g, &hw.arch, &NocConfig::default());
+        let e = hw.evaluate(g, CommBackend::Analytical);
+        t.add_row(vec![
+            g.name.clone(),
+            format!("{:.0}", rec.density),
+            e.topology.name().into(),
+            format!("{:.4}", e.latency_s() * 1e3),
+            format!("{:.3}", e.power_w()),
+            format!("{:.2}", e.area_mm2()),
+            format!("{:.0}", e.fps()),
+            format!("{:.5}", e.edap()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Edge sanity: every compact model must be advised NoC-tree (Fig. 20).
+    for g in &edge_models {
+        let rec = recommend_topology(g, &hw.arch, &NocConfig::default());
+        if g.density_report().connection_density() < 1.0e3 {
+            assert_eq!(rec.topology.name(), "NoC-tree", "{}", g.name);
+        }
+    }
+    println!("\nAll compact models land in the NoC-tree region, as in the paper.");
+}

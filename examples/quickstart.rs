@@ -1,0 +1,38 @@
+//! Quickstart: evaluate one DNN on the heterogeneous-interconnect IMC
+//! architecture and print the paper's headline metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use imcnoc::arch::{CommBackend, HeteroArchitecture};
+use imcnoc::config::ArchConfig;
+use imcnoc::dnn::models;
+
+fn main() {
+    // 1. Pick a workload from the model zoo.
+    let vgg = models::vgg(19);
+    let report = vgg.density_report();
+    println!(
+        "{}: {} neurons, connection density {:.0}",
+        vgg.name,
+        report.neurons,
+        report.connection_density()
+    );
+
+    // 2. Build the proposed architecture (ReRAM tiles, Table 2 defaults)
+    //    and let the advisor choose the tile-level NoC (Fig. 20 rule).
+    let hw = HeteroArchitecture::new(ArchConfig::reram());
+    let eval = hw.evaluate(&vgg, CommBackend::Analytical);
+
+    // 3. Report what Table 4 reports.
+    println!("chosen interconnect : {}", eval.topology.name());
+    println!("tiles / crossbars   : {} / {}", eval.tiles, eval.crossbars);
+    println!("latency             : {:.3} ms", eval.latency_s() * 1e3);
+    println!("  compute           : {:.3} ms", eval.compute_latency_s * 1e3);
+    println!("  exposed routing   : {:.3} ms", eval.comm_latency_s * 1e3);
+    println!("power / frame       : {:.3} W", eval.power_w());
+    println!("area                : {:.1} mm2", eval.area_mm2());
+    println!("throughput          : {:.0} FPS", eval.fps());
+    println!("EDAP                : {:.3} J.ms.mm2", eval.edap());
+}

@@ -1,0 +1,129 @@
+"""AOT compile path: lower the L2 forwards to HLO *text* artifacts.
+
+HLO text — NOT serialized ``HloModuleProto`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Weights are baked into the artifact as constants (closure capture) so the
+rust hot path only feeds activations — exactly the paper's §5 execution
+model (weights loaded once, pre-execution).
+
+Usage::
+
+    python -m compile.aot --out ../artifacts          # all artifacts
+    python -m compile.aot --model mlp --out path.txt  # one artifact
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+MLP_BATCH = 8
+LENET_BATCH = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer elides
+    # big weight constants as `constant({...})`, which the rust-side text
+    # parser would read back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_mlp(batch=MLP_BATCH, seed=0):
+    """Lower the IMC-quantized MLP at a fixed batch size."""
+    params = model.init_mlp_params(seed=seed)
+    leaves = model.params_q(params)
+
+    def fn(x):
+        return model.mlp_forward(leaves, x)
+
+    spec = jax.ShapeDtypeStruct((batch, model.MLP_DIMS[0]), jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def lower_mlp_float(batch=MLP_BATCH, seed=0):
+    """Float twin of the MLP (agreement baseline for the e2e example)."""
+    params = model.init_mlp_params(seed=seed)
+    ws = [p["w"] for p in params]
+
+    def fn(x):
+        h = x
+        for i, w in enumerate(ws):
+            h = h @ w
+            if i != len(ws) - 1:
+                h = jnp.maximum(h, 0.0)
+                h = h / jnp.maximum(jnp.max(h), 1e-6)
+        return (h,)
+
+    spec = jax.ShapeDtypeStruct((batch, model.MLP_DIMS[0]), jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def lower_lenet(batch=LENET_BATCH, seed=1):
+    """Lower the IMC-quantized LeNet at a fixed batch size."""
+    params = model.init_lenet_params(seed=seed)
+    leaves = model.lenet_params_q(params)
+
+    def fn(x):
+        return model.lenet_forward(leaves, x)
+
+    spec = jax.ShapeDtypeStruct((batch, 784), jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+ARTIFACTS = {
+    "mlp": lower_mlp,
+    "mlp_float": lower_mlp_float,
+    "lenet": lower_lenet,
+}
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+    # Default model alias used by the Makefile freshness check.
+    src = os.path.join(out_dir, "mlp.hlo.txt")
+    dst = os.path.join(out_dir, "model.hlo.txt")
+    with open(src) as f, open(dst, "w") as g:
+        g.write(f.read())
+    print(f"aliased {dst}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True,
+                    help="output directory (or file with --model)")
+    ap.add_argument("--model", choices=sorted(ARTIFACTS), default=None,
+                    help="lower a single model to --out")
+    args = ap.parse_args()
+    if args.model:
+        text = to_hlo_text(ARTIFACTS[args.model]())
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {args.out}")
+    else:
+        out_dir = args.out
+        if out_dir.endswith(".hlo.txt"):
+            out_dir = os.path.dirname(out_dir)
+        build_all(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

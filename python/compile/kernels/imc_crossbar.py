@@ -1,0 +1,176 @@
+"""Layer 1 — Pallas kernel functionally modeling the IMC crossbar hot-spot.
+
+Hardware being modeled (paper §2.2/§5.2, Table 2):
+
+* a ``pe_size x pe_size`` crossbar stores 1-bit cells; an ``n_bits`` weight
+  occupies ``n_bits`` adjacent columns (bit-sliced, MSB in two's
+  complement);
+* inputs are applied **bit-serially** (no DAC — sequential 1-bit signaling,
+  paper ref. [27]): one 0/1 input bit-plane is asserted on all rows at
+  once;
+* every bitline's analog population count is digitized by a 4-bit flash
+  ADC; shift-and-add recombines weight-bit columns and input bit-planes.
+
+The kernel below computes one *crossbar read* for one input bit-plane
+across all row-blocks of a weight matrix: a (M, pe) x (pe, N·n_bits) 0/1
+matmul per grid step followed by the ADC transfer function. Everything is
+float32 arithmetic over {0,1} values, so the pure-jnp oracle in ``ref.py``
+must match bit-exactly.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid step ≡ one crossbar
+PE; BlockSpec tiles the weight matrix into (pe, pe)-sized VMEM blocks the
+way tiles hold crossbars; the ADC clamp is VPU work fused behind the MXU
+matmul. ``interpret=True`` everywhere — the CPU PJRT client cannot run
+Mosaic custom-calls; real-TPU efficiency is estimated in DESIGN.md.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_PE = 256
+DEFAULT_N_BITS = 8
+DEFAULT_ADC_BITS = 4
+
+
+def adc_levels(adc_bits: int) -> int:
+    """Distinct non-zero output codes of the flash ADC."""
+    return (1 << adc_bits) - 1
+
+
+def adc_delta(pe_size: int, adc_bits: int) -> float:
+    """Worst-case ADC step: full scale (= pe_size hits) over the codes."""
+    return max(1.0, pe_size / adc_levels(adc_bits))
+
+
+def column_deltas(w_bits, pe_size: int, adc_bits: int):
+    """Per-(row-block, column) ADC step sizes.
+
+    Flash-ADC references are calibrated per column to the column's maximum
+    possible population count (the number of programmed cells) — standard
+    practice in IMC macros, and what lets a 4-bit ADC digitize sparse
+    bitlines with little loss (paper §5.2: "minimum or no accuracy
+    degradation").
+
+    Returns (blocks, C) float32; w_bits must already be padded.
+    """
+    kk, c = w_bits.shape
+    blocks = kk // pe_size
+    col_max = w_bits.reshape(blocks, pe_size, c).sum(axis=1)
+    return jnp.maximum(1.0, col_max / adc_levels(adc_bits))
+
+
+def _crossbar_kernel(x_ref, w_ref, d_ref, o_ref, *, levels: int):
+    """One crossbar read: 0/1 matmul + flash-ADC transfer function."""
+    s = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    delta = d_ref[...]  # (1, C) per-column calibrated step
+    # Flash ADC: mid-tread uniform quantizer, clipped at full scale.
+    q = jnp.clip(jnp.round(s / delta), 0.0, float(levels)) * delta
+    o_ref[...] = q[None]  # output block is (1, M, C): one row-block per step
+
+
+def crossbar_read(x_plane, w_bits, *, pe_size=DEFAULT_PE, adc_bits=DEFAULT_ADC_BITS,
+                  interpret=True):
+    """Digitized per-row-block partial sums of one input bit-plane.
+
+    Args:
+      x_plane: (M, K) float32 of {0, 1} — one input bit-plane.
+      w_bits:  (K, C) float32 of {0, 1} — bit-sliced weight columns.
+      pe_size: crossbar rows per PE; K is padded up to a multiple.
+    Returns:
+      (K/pe_size, M, C) float32 — ADC outputs per row-block (each row-block
+      is a physically separate crossbar, so partial sums are digitized
+      *before* being accumulated digitally).
+    """
+    m, k = x_plane.shape
+    k2, c = w_bits.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    blocks = -(-k // pe_size)
+    pad = blocks * pe_size - k
+    if pad:
+        x_plane = jnp.pad(x_plane, ((0, 0), (0, pad)))
+        w_bits = jnp.pad(w_bits, ((0, pad), (0, 0)))
+
+    deltas = column_deltas(w_bits, pe_size, adc_bits)
+    kernel = partial(_crossbar_kernel, levels=adc_levels(adc_bits))
+    return pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((m, pe_size), lambda b: (0, b)),
+            pl.BlockSpec((pe_size, c), lambda b: (b, 0)),
+            pl.BlockSpec((1, c), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, c), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, m, c), jnp.float32),
+        interpret=interpret,
+    )(x_plane, w_bits, deltas)
+
+
+def weight_to_bits(w_q, n_bits=DEFAULT_N_BITS):
+    """Bit-slice integer weights (two's complement) into 0/1 columns.
+
+    Args:
+      w_q: (K, N) int32 in [-2^(n-1), 2^(n-1)-1].
+    Returns:
+      (K, N * n_bits) float32 of {0, 1}; column n*n_bits-major: bit j of
+      weight column n lives at flat column n * n_bits + j.
+    """
+    w_u = jnp.asarray(w_q, jnp.int32) & ((1 << n_bits) - 1)  # two's complement
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    bits = (w_u[:, :, None] >> shifts[None, None, :]) & 1
+    k, n, _ = bits.shape
+    return bits.astype(jnp.float32).reshape(k, n * n_bits)
+
+
+def activation_to_planes(x_q, n_bits=DEFAULT_N_BITS):
+    """Split unsigned integer activations into bit-planes.
+
+    Args:
+      x_q: (M, K) int32 in [0, 2^n - 1].
+    Returns:
+      (n_bits, M, K) float32 of {0, 1}, LSB first.
+    """
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    planes = (jnp.asarray(x_q, jnp.int32)[None] >> shifts[:, None, None]) & 1
+    return planes.astype(jnp.float32)
+
+
+def bit_weights(n_bits: int):
+    """Shift-and-add weights per weight bit (two's complement: MSB < 0)."""
+    w = jnp.float32(2.0) ** jnp.arange(n_bits, dtype=jnp.float32)
+    return w.at[n_bits - 1].set(-w[n_bits - 1])
+
+
+def imc_matmul(x_q, w_q, *, pe_size=DEFAULT_PE, n_bits=DEFAULT_N_BITS,
+               adc_bits=DEFAULT_ADC_BITS, interpret=True):
+    """Full IMC matrix multiply: y = x_q @ w_q under crossbar semantics.
+
+    Args:
+      x_q: (M, K) int32, unsigned activations in [0, 2^n_bits - 1].
+      w_q: (K, N) int32, signed weights in [-2^(n_bits-1), 2^(n_bits-1)-1].
+    Returns:
+      (M, N) float32 — the hardware-quantized product (exact when every
+      bitline count is representable by the ADC, else ADC-rounded).
+    """
+    m, k = x_q.shape
+    _, n = w_q.shape
+    w_bits = weight_to_bits(w_q, n_bits)
+    planes = activation_to_planes(x_q, n_bits)
+    wb = bit_weights(n_bits)
+
+    # The bit-plane loop is unrolled (n_bits is static and small) — this is
+    # also the hardware truth: planes are sequential reads in time. NOTE:
+    # lax.map/vmap over pallas_call mis-batches the grid index maps in
+    # interpret mode, so the unroll is load-bearing, not just stylistic.
+    out = jnp.zeros((m, n), jnp.float32)
+    for b in range(n_bits):
+        # (blocks, M, N*n_bits) ADC outputs for this input bit-plane.
+        q = crossbar_read(planes[b], w_bits, pe_size=pe_size,
+                          adc_bits=adc_bits, interpret=interpret)
+        # Digital accumulate over crossbars, then weight-bit shift-add.
+        q = q.sum(axis=0).reshape(m, n, n_bits)
+        out = out + jnp.float32(2.0) ** b * jnp.einsum("mnb,b->mn", q, wb)
+    return out

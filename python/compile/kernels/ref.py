@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracle for the Pallas IMC crossbar kernel.
+
+Implements exactly the same bit-serial / bit-sliced / ADC-quantized
+dataflow as ``imc_crossbar.py`` but with plain ``jnp`` ops (no pallas, no
+blocking) so the two can be compared bit-exactly, plus the *ideal*
+(infinite-ADC) integer matmul used to bound quantization error.
+"""
+
+import jax.numpy as jnp
+
+from . import imc_crossbar as k
+
+
+def crossbar_read_ref(x_plane, w_bits, *, pe_size=k.DEFAULT_PE,
+                      adc_bits=k.DEFAULT_ADC_BITS):
+    """Reference for ``imc_crossbar.crossbar_read`` (unblocked jnp)."""
+    m, kk = x_plane.shape
+    blocks = -(-kk // pe_size)
+    pad = blocks * pe_size - kk
+    if pad:
+        x_plane = jnp.pad(x_plane, ((0, 0), (0, pad)))
+        w_bits = jnp.pad(w_bits, ((0, pad), (0, 0)))
+    levels = k.adc_levels(adc_bits)
+    delta = k.column_deltas(w_bits, pe_size, adc_bits)[:, None, :]
+    xs = x_plane.reshape(m, blocks, pe_size).transpose(1, 0, 2)
+    ws = w_bits.reshape(blocks, pe_size, -1)
+    s = jnp.einsum("bmk,bkc->bmc", xs, ws)
+    return jnp.clip(jnp.round(s / delta), 0.0, float(levels)) * delta
+
+
+def imc_matmul_ref(x_q, w_q, *, pe_size=k.DEFAULT_PE, n_bits=k.DEFAULT_N_BITS,
+                   adc_bits=k.DEFAULT_ADC_BITS):
+    """Reference for ``imc_crossbar.imc_matmul``."""
+    m, _ = x_q.shape
+    _, n = w_q.shape
+    w_bits = k.weight_to_bits(w_q, n_bits)
+    planes = k.activation_to_planes(x_q, n_bits)
+    wb = k.bit_weights(n_bits)
+    plane_w = jnp.float32(2.0) ** jnp.arange(n_bits, dtype=jnp.float32)
+    out = jnp.zeros((m, n), jnp.float32)
+    for b in range(n_bits):
+        q = crossbar_read_ref(planes[b], w_bits, pe_size=pe_size,
+                              adc_bits=adc_bits)
+        q = q.sum(axis=0).reshape(m, n, n_bits)
+        out = out + plane_w[b] * jnp.einsum("mnb,b->mn", q, wb)
+    return out
+
+
+def ideal_matmul(x_q, w_q):
+    """Infinite-precision integer matmul (no ADC quantization)."""
+    return jnp.asarray(x_q, jnp.float32) @ jnp.asarray(w_q, jnp.float32)
+
+
+def adc_error_bound(k_dim, *, pe_size=k.DEFAULT_PE, n_bits=k.DEFAULT_N_BITS,
+                    adc_bits=k.DEFAULT_ADC_BITS):
+    """Worst-case |imc - ideal| for a K-deep dot product.
+
+    Each ADC conversion errs by at most delta/2 (plus clipping, which the
+    bound ignores — callers should keep bitline counts under full scale);
+    there are blocks x n_bits x n_bits conversions contributing to one
+    output, weighted by 2^i x (+/-2^j).
+    """
+    blocks = -(-k_dim // pe_size)
+    delta = k.adc_delta(pe_size, adc_bits)
+    weight_sum = float(sum(2.0 ** i for i in range(n_bits)) ** 2)
+    return 0.5 * delta * blocks * weight_sum

@@ -1,0 +1,233 @@
+"""Layer 2 — JAX forward passes built on the L1 crossbar kernel.
+
+Two inference networks mirror the rust model zoo's compact members and run
+entirely through IMC-crossbar semantics (bit-serial inputs, bit-sliced
+weights, 4-bit flash ADC):
+
+* ``mlp_forward``   — 784-512-256-10 MLP (the paper's lowest-density DNN),
+* ``lenet_forward`` — LeNet-5-class CNN (conv via im2col -> crossbar
+  matmul, exactly how the Eq. 2 mapping lays convolutions onto crossbars).
+
+Float-precision twins (``*_forward_float``) provide the agreement baseline
+the e2e example checks. Weights are synthetic but deterministic — the
+interconnect study never depends on trained weights, and functional
+correctness is defined as IMC-vs-float agreement, not dataset accuracy.
+
+``aot.py`` lowers the jitted forwards to HLO text; the rust runtime
+executes them via PJRT. Python never runs at request time.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import imc_crossbar as xbar
+
+MLP_DIMS = (784, 512, 256, 10)
+
+
+def quantize_activations(x, n_bits=xbar.DEFAULT_N_BITS):
+    """Quantize [0, 1] activations to unsigned n-bit codes (int32)."""
+    hi = (1 << n_bits) - 1
+    return jnp.clip(jnp.round(x * hi), 0, hi).astype(jnp.int32)
+
+
+def quantize_weights(w, n_bits=xbar.DEFAULT_N_BITS):
+    """Symmetric per-tensor weight quantization to signed n-bit codes.
+
+    Returns (w_q int32, scale float) with w ~= w_q * scale.
+    """
+    hi = float((1 << (n_bits - 1)) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / hi
+    w_q = jnp.clip(jnp.round(w / scale), -hi - 1, hi).astype(jnp.int32)
+    return w_q, scale
+
+
+def imc_linear(x, w_q, w_scale, *, n_bits=xbar.DEFAULT_N_BITS,
+               adc_bits=xbar.DEFAULT_ADC_BITS, pe_size=xbar.DEFAULT_PE,
+               interpret=True):
+    """One IMC fully-connected layer on [0, 1]-ranged inputs.
+
+    Activations are requantized to n-bit codes at the tile input buffer
+    (the paper's I/O buffer), multiplied on the crossbars, and rescaled
+    back to real units.
+    """
+    x_q = quantize_activations(x, n_bits)
+    y = xbar.imc_matmul(x_q, w_q, pe_size=pe_size, n_bits=n_bits,
+                        adc_bits=adc_bits, interpret=interpret)
+    act_scale = 1.0 / float((1 << n_bits) - 1)
+    return y * (w_scale * act_scale)
+
+
+def _glorot(key, shape, sparsity=0.9):
+    """Sparse glorot-uniform synthetic weights.
+
+    Trained DNN layers activate only a few bitline cells per read — that is
+    precisely why the paper's 4-bit flash ADC loses little accuracy (§5.2).
+    Dense i.i.d. random weights would be the adversarial worst case for ADC
+    quantization, so the synthetic weights mirror realistic sparsity.
+    """
+    k1, k2 = jax.random.split(key)
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    w = jax.random.uniform(k1, shape, jnp.float32, -lim, lim)
+    mask = jax.random.uniform(k2, shape) >= sparsity
+    return w * mask
+
+
+def init_mlp_params(seed=0, dims=MLP_DIMS, n_bits=xbar.DEFAULT_N_BITS):
+    """Deterministic synthetic MLP weights, pre-quantized for the IMC path."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(dims) - 1)
+    params = []
+    for key, (d_in, d_out) in zip(keys, zip(dims[:-1], dims[1:])):
+        w = _glorot(key, (d_in, d_out))
+        w_q, scale = quantize_weights(w, n_bits)
+        params.append({"w": w, "w_q": w_q, "scale": scale})
+    return params
+
+
+@partial(jax.jit, static_argnames=("n_bits", "adc_bits", "pe_size", "interpret"))
+def mlp_forward(params_q, x, *, n_bits=xbar.DEFAULT_N_BITS,
+                adc_bits=xbar.DEFAULT_ADC_BITS, pe_size=xbar.DEFAULT_PE,
+                interpret=True):
+    """IMC-quantized MLP forward: x (batch, 784) in [0,1] -> logits.
+
+    ``params_q`` is a list of (w_q, scale) leaves (jit-friendly).
+    """
+    h = x
+    last = len(params_q) - 1
+    for i, (w_q, scale) in enumerate(params_q):
+        h = imc_linear(h, w_q, scale, n_bits=n_bits, adc_bits=adc_bits,
+                       pe_size=pe_size, interpret=interpret)
+        if i != last:
+            # ReLU + renormalize into the next tile's input range.
+            h = jnp.maximum(h, 0.0)
+            h = h / jnp.maximum(jnp.max(h), 1e-6)
+    return (h,)
+
+
+def mlp_forward_float(params, x):
+    """Float-precision twin of ``mlp_forward`` (same normalization)."""
+    h = x
+    last = len(params) - 1
+    for i, p in enumerate(params):
+        h = h @ p["w"]
+        if i != last:
+            h = jnp.maximum(h, 0.0)
+            h = h / jnp.maximum(jnp.max(h), 1e-6)
+    return (h,)
+
+
+def params_q(params):
+    """Extract the jit-friendly quantized leaves."""
+    return [(p["w_q"], p["scale"]) for p in params]
+
+
+# --- LeNet-5-class CNN -----------------------------------------------------
+
+LENET_CFG = (
+    # (kind, ...) layers; shapes follow rust/src/dnn/models/classic.rs
+    ("conv", 5, 1, 6),    # 28x28x1 -> 28x28x6 ('same')
+    ("pool", 2),          # -> 14x14x6
+    ("conv", 5, 6, 16),   # -> 14x14x16
+    ("pool", 2),          # -> 7x7x16
+    ("fc", 7 * 7 * 16, 120),
+    ("fc", 120, 84),
+    ("fc", 84, 10),
+)
+
+
+def init_lenet_params(seed=1, n_bits=xbar.DEFAULT_N_BITS):
+    params = []
+    key = jax.random.PRNGKey(seed)
+    for layer in LENET_CFG:
+        if layer[0] == "conv":
+            _, k, c_in, c_out = layer
+            key, sub = jax.random.split(key)
+            w = _glorot(sub, (k * k * c_in, c_out))
+        elif layer[0] == "fc":
+            _, d_in, d_out = layer
+            key, sub = jax.random.split(key)
+            w = _glorot(sub, (d_in, d_out))
+        else:
+            params.append(None)
+            continue
+        w_q, scale = quantize_weights(w, n_bits)
+        params.append({"w": w, "w_q": w_q, "scale": scale})
+    return params
+
+
+def _im2col(x, k):
+    """(B, H, W, C) -> (B*H*W, k*k*C) patches with 'same' padding.
+
+    This is the Eq. 2 view of a convolution: each output pixel's receptive
+    field becomes one crossbar input vector of length Kx*Ky*C_in.
+    """
+    b, h, w, c = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    patches = jax.lax.conv_general_dilated_patches(
+        xp.transpose(0, 3, 1, 2),  # NCHW
+        filter_shape=(k, k),
+        window_strides=(1, 1),
+        padding="VALID",
+    )  # (B, C*k*k, H, W)
+    patches = patches.transpose(0, 2, 3, 1).reshape(b * h * w, c * k * k)
+    # conv_general_dilated_patches orders features as (C, k, k); our weight
+    # rows are (k, k, C) — reorder to match.
+    patches = patches.reshape(-1, c, k * k).transpose(0, 2, 1).reshape(b * h * w, k * k * c)
+    return patches
+
+
+def _run_lenet(params, x, linear):
+    """Shared LeNet skeleton; ``linear(h2d, layer_idx)`` does the matmul."""
+    b = x.shape[0]
+    h = x.reshape(b, 28, 28, 1)
+    for i, layer in enumerate(LENET_CFG):
+        if layer[0] == "conv":
+            k = layer[1]
+            bb, hh, ww, cc = h.shape
+            cols = _im2col(h, k)
+            out = linear(cols, i)
+            h = out.reshape(bb, hh, ww, -1)
+            h = jnp.maximum(h, 0.0)
+            h = h / jnp.maximum(jnp.max(h), 1e-6)
+        elif layer[0] == "pool":
+            s = layer[1]
+            bb, hh, ww, cc = h.shape
+            h = h.reshape(bb, hh // s, s, ww // s, s, cc).max(axis=(2, 4))
+        else:  # fc
+            if h.ndim > 2:
+                h = h.reshape(b, -1)
+            h = linear(h, i)
+            if i != len(LENET_CFG) - 1:
+                h = jnp.maximum(h, 0.0)
+                h = h / jnp.maximum(jnp.max(h), 1e-6)
+    return (h,)
+
+
+@partial(jax.jit, static_argnames=("n_bits", "adc_bits", "pe_size", "interpret"))
+def lenet_forward(params_q_leaves, x, *, n_bits=xbar.DEFAULT_N_BITS,
+                  adc_bits=xbar.DEFAULT_ADC_BITS, pe_size=xbar.DEFAULT_PE,
+                  interpret=True):
+    """IMC-quantized LeNet forward: x (batch, 784) in [0,1] -> logits."""
+
+    def linear(h2d, i):
+        w_q, scale = params_q_leaves[i]
+        return imc_linear(h2d, w_q, scale, n_bits=n_bits, adc_bits=adc_bits,
+                          pe_size=pe_size, interpret=interpret)
+
+    return _run_lenet(None, x, linear)
+
+
+def lenet_forward_float(params, x):
+    def linear(h2d, i):
+        return h2d @ params[i]["w"]
+
+    return _run_lenet(params, x, linear)
+
+
+def lenet_params_q(params):
+    """jit-friendly leaves, indexed like LENET_CFG (None for pools)."""
+    return [None if p is None else (p["w_q"], p["scale"]) for p in params]

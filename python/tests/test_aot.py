@@ -1,0 +1,69 @@
+"""AOT path: HLO text emission, shape/parameter sanity, float-twin parity.
+
+The rust round trip itself is covered by `rust/tests/runtime_e2e.rs`; here
+we check the compile path emits parseable single-module HLO text with the
+expected entry signature.
+"""
+
+import re
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def _entry_shapes(hlo_text):
+    """Extract the ENTRY computation's parameter shapes and ROOT line."""
+    entry = hlo_text[hlo_text.index("ENTRY "):]
+    body = entry[: entry.index("\n}")]
+    params = re.findall(r"(\S+\[[\d,]*\])\S*\s+parameter\(\d+\)", body)
+    root = [l for l in body.splitlines() if l.strip().startswith("ROOT")]
+    assert root, "no ROOT in ENTRY"
+    return params, root[0]
+
+
+def test_mlp_artifact_text():
+    text = aot.to_hlo_text(aot.lower_mlp(batch=2))
+    assert text.startswith("HloModule"), text[:60]
+    params, root = _entry_shapes(text)
+    # Weights are baked in as constants: exactly one (activation) parameter.
+    assert params == ["f32[2,784]"]
+    assert "f32[2,10]" in root
+
+
+def test_lenet_artifact_text():
+    text = aot.to_hlo_text(aot.lower_lenet(batch=1))
+    assert text.startswith("HloModule")
+    params, root = _entry_shapes(text)
+    assert params == ["f32[1,784]"]
+    assert "f32[1,10]" in root
+
+
+def test_float_twin_matches_eager():
+    """The lowered float MLP equals the eager float forward."""
+    lowered = aot.lower_mlp_float(batch=2, seed=0)
+    compiled = lowered.compile()
+    params = model.init_mlp_params(seed=0)
+    x = jnp.linspace(0.0, 1.0, 2 * 784, dtype=jnp.float32).reshape(2, 784)
+    got = compiled(x)[0]
+    want = model.mlp_forward_float(params, x)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_artifact_matches_eager():
+    """The lowered IMC MLP equals the eager IMC forward (same weights)."""
+    lowered = aot.lower_mlp(batch=2, seed=0)
+    compiled = lowered.compile()
+    params = model.init_mlp_params(seed=0)
+    leaves = model.params_q(params)
+    x = jnp.linspace(0.0, 1.0, 2 * 784, dtype=jnp.float32).reshape(2, 784)
+    got = compiled(x)[0]
+    want = model.mlp_forward(leaves, x)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_artifact_registry_complete():
+    assert set(aot.ARTIFACTS) == {"mlp", "mlp_float", "lenet"}

@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (the core signal).
+
+hypothesis sweeps shapes / bit-widths / PE sizes; every case must match the
+oracle exactly (identical float ops on {0,1} data), and the quantized
+product must stay within the analytic ADC error bound of the ideal
+integer matmul.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import imc_crossbar as xbar
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand_case(seed, m, k, n, n_bits):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x_q = jax.random.randint(kx, (m, k), 0, 1 << n_bits)
+    lo = -(1 << (n_bits - 1))
+    hi = (1 << (n_bits - 1))
+    w_q = jax.random.randint(kw, (k, n), lo, hi)
+    return x_q, w_q
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 6),
+    k=st.integers(1, 200),
+    n=st.integers(1, 8),
+    n_bits=st.sampled_from([2, 4, 8]),
+    adc_bits=st.sampled_from([2, 4, 6]),
+    pe_size=st.sampled_from([32, 64, 128]),
+)
+def test_kernel_matches_ref(seed, m, k, n, n_bits, adc_bits, pe_size):
+    x_q, w_q = _rand_case(seed, m, k, n, n_bits)
+    got = xbar.imc_matmul(x_q, w_q, pe_size=pe_size, n_bits=n_bits,
+                          adc_bits=adc_bits)
+    want = ref.imc_matmul_ref(x_q, w_q, pe_size=pe_size, n_bits=n_bits,
+                              adc_bits=adc_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 4),
+    k=st.integers(1, 150),
+    n=st.integers(1, 6),
+    n_bits=st.sampled_from([2, 4]),
+)
+def test_quantization_error_bounded(seed, m, k, n, n_bits):
+    x_q, w_q = _rand_case(seed, m, k, n, n_bits)
+    got = xbar.imc_matmul(x_q, w_q, pe_size=64, n_bits=n_bits, adc_bits=4)
+    ideal = ref.ideal_matmul(x_q, w_q)
+    bound = ref.adc_error_bound(k, pe_size=64, n_bits=n_bits, adc_bits=4)
+    err = float(jnp.max(jnp.abs(got - ideal)))
+    assert err <= bound + 1e-3, f"error {err} exceeds bound {bound}"
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 120))
+def test_exact_when_adc_wide_enough(seed, k):
+    """With enough ADC codes to represent every count, IMC == ideal."""
+    x_q, w_q = _rand_case(seed, 3, k, 4, 2)
+    # 8-bit ADC on <=64-row blocks: delta = 1 -> lossless.
+    got = xbar.imc_matmul(x_q, w_q, pe_size=64, n_bits=2, adc_bits=8)
+    ideal = ref.ideal_matmul(x_q, w_q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ideal),
+                               rtol=0, atol=1e-3)
+
+
+def test_weight_bits_roundtrip():
+    """Bit-slicing + two's-complement shift-add reconstructs the weights."""
+    w_q = jnp.arange(-8, 8, dtype=jnp.int32).reshape(16, 1)
+    bits = xbar.weight_to_bits(w_q, 4).reshape(16, 1, 4)
+    wb = xbar.bit_weights(4)
+    rec = jnp.einsum("knb,b->kn", bits, wb)
+    np.testing.assert_array_equal(np.asarray(rec).ravel(),
+                                  np.arange(-8, 8, dtype=np.float32))
+
+
+def test_activation_planes_roundtrip():
+    x_q = jnp.arange(0, 16, dtype=jnp.int32).reshape(4, 4)
+    planes = xbar.activation_to_planes(x_q, 4)
+    weights = 2.0 ** np.arange(4)
+    rec = np.einsum("bmk,b->mk", np.asarray(planes), weights)
+    np.testing.assert_array_equal(rec, np.asarray(x_q, dtype=np.float32))
+
+
+def test_adc_monotone():
+    """The ADC transfer function is monotone in the bitline count."""
+    w_bits = jnp.ones((64, 3), jnp.float32)
+    prev = -1.0
+    for ones in range(0, 65, 8):
+        x = jnp.zeros((1, 64), jnp.float32).at[0, :ones].set(1.0)
+        q = float(ref.crossbar_read_ref(x, w_bits, pe_size=64, adc_bits=4)[0, 0, 0])
+        assert q >= prev
+        prev = q
+
+
+def test_k_padding_is_transparent():
+    """K not a multiple of pe_size pads with zero rows (no value change)."""
+    x_q, w_q = _rand_case(7, 2, 65, 3, 4)
+    a = xbar.imc_matmul(x_q, w_q, pe_size=64, n_bits=4, adc_bits=4)
+    # Explicitly pad K to 128 with zeros: same result.
+    x_pad = jnp.pad(x_q, ((0, 0), (0, 63)))
+    w_pad = jnp.pad(w_q, ((0, 63), (0, 0)))
+    b = xbar.imc_matmul(x_pad, w_pad, pe_size=64, n_bits=4, adc_bits=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@pytest.mark.parametrize("adc_bits", [2, 4, 8])
+def test_more_adc_bits_never_hurt(adc_bits):
+    x_q, w_q = _rand_case(3, 4, 128, 4, 4)
+    ideal = np.asarray(ref.ideal_matmul(x_q, w_q))
+    got = np.asarray(
+        xbar.imc_matmul(x_q, w_q, pe_size=64, n_bits=4, adc_bits=adc_bits)
+    )
+    err = np.abs(got - ideal).max()
+    got_hi = np.asarray(
+        xbar.imc_matmul(x_q, w_q, pe_size=64, n_bits=4, adc_bits=adc_bits + 2)
+    )
+    err_hi = np.abs(got_hi - ideal).max()
+    assert err_hi <= err + 1e-4

@@ -1,0 +1,111 @@
+"""L2 correctness: model shapes, quantization, IMC-vs-float agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import imc_crossbar as xbar
+
+
+def test_mlp_shapes_and_determinism():
+    params = model.init_mlp_params(seed=0)
+    leaves = model.params_q(params)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 784))
+    y1 = model.mlp_forward(leaves, x)[0]
+    y2 = model.mlp_forward(leaves, x)[0]
+    assert y1.shape == (8, 10)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_mlp_agreement_with_float():
+    """IMC-quantized argmax agrees with float on most synthetic inputs."""
+    params = model.init_mlp_params(seed=0)
+    leaves = model.params_q(params)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (32, 784))
+    yq = model.mlp_forward(leaves, x)[0]
+    yf = model.mlp_forward_float(params, x)[0]
+    agree = float(jnp.mean((jnp.argmax(yq, 1) == jnp.argmax(yf, 1))
+                           .astype(jnp.float32)))
+    assert agree >= 0.6, f"IMC/float argmax agreement {agree}"
+
+
+def test_lenet_shapes_and_agreement():
+    params = model.init_lenet_params(seed=1)
+    leaves = model.lenet_params_q(params)
+    x = jax.random.uniform(jax.random.PRNGKey(3), (4, 784))
+    yq = model.lenet_forward(leaves, x)[0]
+    yf = model.lenet_forward_float(params, x)[0]
+    assert yq.shape == (4, 10)
+    agree = float(jnp.mean((jnp.argmax(yq, 1) == jnp.argmax(yf, 1))
+                           .astype(jnp.float32)))
+    assert agree >= 0.5, f"LeNet agreement {agree}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_quantize_roundtrip_weights(seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (37, 11)) * 0.3
+    w_q, scale = model.quantize_weights(w, 8)
+    rec = np.asarray(w_q, np.float32) * float(scale)
+    err = np.abs(rec - np.asarray(w)).max()
+    assert err <= float(scale) / 2 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n_bits=st.sampled_from([4, 8]))
+def test_quantize_activations_range(seed, n_bits):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (5, 17))
+    x_q = model.quantize_activations(x, n_bits)
+    assert int(x_q.min()) >= 0
+    assert int(x_q.max()) <= (1 << n_bits) - 1
+    # Monotone in x.
+    order = jnp.argsort(x[0])
+    assert bool(jnp.all(jnp.diff(x_q[0][order]) >= 0))
+
+
+def test_im2col_matches_conv():
+    """im2col + matmul equals lax.conv with 'same' padding."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.uniform(key, (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(5), (5, 5, 3, 6)) * 0.1
+    cols = model._im2col(x, 5)  # (2*8*8, 75) in (k,k,C) order
+    y_cols = (cols @ w.reshape(75, 6)).reshape(2, 8, 8, 6)
+    y_conv = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(np.asarray(y_cols), np.asarray(y_conv),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_imc_linear_scales_back_to_real_units():
+    """imc_linear approximates the real-valued product."""
+    key = jax.random.PRNGKey(6)
+    x = jax.random.uniform(key, (4, 100))
+    w = jax.random.normal(jax.random.PRNGKey(7), (100, 5)) * 0.1
+    w_q, scale = model.quantize_weights(w, 8)
+    y_imc = model.imc_linear(x, w_q, scale, pe_size=64)
+    y_real = x @ w
+    # Relative tolerance is generous: 4-bit ADC + 8-bit codes.
+    err = float(jnp.max(jnp.abs(y_imc - y_real)))
+    ref_mag = float(jnp.max(jnp.abs(y_real)))
+    assert err <= 0.35 * max(ref_mag, 1e-3), f"err {err} vs mag {ref_mag}"
+
+
+@pytest.mark.parametrize("dims", [(20, 12, 6), (300, 64, 10)])
+def test_mlp_forward_custom_dims(dims):
+    full_dims = dims
+    params = model.init_mlp_params(seed=9, dims=full_dims)
+    leaves = model.params_q(params)
+    x = jax.random.uniform(jax.random.PRNGKey(8), (3, dims[0]))
+    y = model.mlp_forward(leaves, x)[0]
+    assert y.shape == (3, dims[-1])
+
+
+def test_bit_weights_msb_negative():
+    wb = np.asarray(xbar.bit_weights(8))
+    assert wb[-1] == -128.0
+    assert (wb[:-1] > 0).all()

@@ -1,0 +1,49 @@
+//! Analytical-model benchmarks: the Fig. 12 speed-up measurement (full
+//! Algorithm 2 vs full Algorithm 1 per DNN) plus the queueing-solver
+//! micro-benchmark.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, observe};
+use imcnoc::config::{ArchConfig, NocConfig, SimConfig};
+use imcnoc::dnn::models;
+use imcnoc::mapping::{InjectionMatrix, Mapping};
+use imcnoc::noc::latency::{estimate_dnn, simulate_dnn};
+use imcnoc::noc::sim::uniform_random_flows;
+use imcnoc::noc::topology::{Network, Topology};
+use imcnoc::noc::AnalyticalModel;
+
+fn main() {
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim_cfg = SimConfig::default();
+
+    // Queueing solver micro-bench (per-router matrices on a 64-node mesh).
+    let net = Network::build(Topology::Mesh, 64);
+    let flows = uniform_random_flows(64, 0.10);
+    bench("algorithm2_64n_uniform", 2, 10, || {
+        let model = AnalyticalModel::new(&net, &noc);
+        let est = model.layer_latency(&flows);
+        observe(&est.avg_latency);
+    });
+
+    // Fig. 12: per-DNN analytical vs cycle-accurate wall-clock (mesh).
+    for g in [models::mlp(), models::lenet5(), models::nin()] {
+        let mapping = Mapping::build(&g, &arch);
+        let inj = InjectionMatrix::build(&g, &mapping, &arch, &noc);
+        let ana = bench(&format!("analytical_{}", g.name), 1, 5, || {
+            let est = estimate_dnn(&inj, Topology::Mesh, &arch, &noc);
+            observe(&est.total_latency);
+        });
+        let sim = bench(&format!("cycle_accurate_{}", g.name), 0, 3, || {
+            let r = simulate_dnn(&inj, Topology::Mesh, &arch, &noc, &sim_cfg, true, false);
+            observe(&r.total_cycles);
+        });
+        println!(
+            "  -> Fig. 12 speed-up for {}: {:.1}x",
+            g.name,
+            sim / ana.max(1e-9)
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! End-to-end evaluation benchmarks: one per paper table.
+//!
+//! * Table 3 pipeline — steady per-pair latency stats for one DNN.
+//! * Table 4 pipeline — the full VGG-19 architecture evaluation (both
+//!   backends) that produces the headline comparison.
+//! * Whole-framework sweep — the 6-DNN × 2-topology evaluation behind
+//!   Fig. 16/17 (the paper's "8× overall analysis speed-up" context).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, observe};
+use imcnoc::arch::{evaluate, CommBackend};
+use imcnoc::config::{ArchConfig, NocConfig, SimConfig};
+use imcnoc::dnn::{eval_set, models};
+use imcnoc::mapping::{InjectionMatrix, Mapping};
+use imcnoc::noc::latency::simulate_dnn;
+use imcnoc::noc::topology::Topology;
+
+fn main() {
+    let sim_cfg = SimConfig::default();
+
+    // Table 3 pipeline: steady per-pair stats on LeNet-5 (mesh).
+    {
+        let g = models::lenet5();
+        let arch = ArchConfig::reram();
+        let noc = NocConfig::default();
+        let mapping = Mapping::build(&g, &arch);
+        let inj = InjectionMatrix::build(&g, &mapping, &arch, &noc);
+        bench("table3_pipeline_lenet5", 1, 5, || {
+            let r = simulate_dnn(&inj, Topology::Mesh, &arch, &noc, &sim_cfg, false, true);
+            observe(&r.avg_flit_latency);
+        });
+    }
+
+    // Table 4 pipeline: VGG-19 full evaluation.
+    let vgg = models::vgg(19);
+    for (name, backend) in [
+        ("table4_vgg19_analytical", CommBackend::Analytical),
+        ("table4_vgg19_cycle_accurate", CommBackend::Simulate),
+    ] {
+        let arch = ArchConfig::reram();
+        let noc = NocConfig::default();
+        let iters = if backend == CommBackend::Analytical { 5 } else { 2 };
+        bench(name, 0, iters, || {
+            let e = evaluate(&vgg, Topology::Mesh, &arch, &noc, &sim_cfg, backend);
+            observe(&e.comm_cycles);
+        });
+    }
+
+    // Fig. 16/17 sweep: 6 DNNs x {tree, mesh}, analytical backend.
+    bench("fig16_17_sweep_analytical", 0, 3, || {
+        for g in eval_set() {
+            for topo in [Topology::Tree, Topology::Mesh] {
+                let arch = ArchConfig::sram();
+                let e = evaluate(
+                    &g,
+                    topo,
+                    &arch,
+                    &NocConfig::with_topology(topo),
+                    &sim_cfg,
+                    CommBackend::Analytical,
+                );
+                observe(&e.comm_cycles);
+            }
+        }
+    });
+}

@@ -1,0 +1,31 @@
+//! Minimal shared bench harness (criterion is unavailable offline).
+//!
+//! Each bench target is a `harness = false` binary that times closures with
+//! warmup + repeated measurement and prints mean/min/max per iteration —
+//! the format EXPERIMENTS.md records.
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` runs; prints a row.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    println!("bench {name:<42} mean {mean:>10.3} ms  min {min:>10.3}  max {max:>10.3}  (n={iters})");
+    mean
+}
+
+/// Black-box helper to keep results alive.
+#[inline]
+pub fn observe<T>(value: &T) {
+    std::hint::black_box(value);
+}

@@ -1,0 +1,79 @@
+//! Cycle-accurate NoC simulator benchmarks — the L3 hot path (the paper:
+//! NoC simulation takes up to 80% of total analysis time). Covers the
+//! Fig. 5 configuration (64-node uniform random) and DNN-derived traffic.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, observe};
+use imcnoc::config::{ArchConfig, NocConfig};
+use imcnoc::dnn::models;
+use imcnoc::mapping::{InjectionMatrix, Mapping};
+use imcnoc::noc::latency::layer_flows;
+use imcnoc::noc::sim::{uniform_random_flows, Mode, NocSim};
+use imcnoc::noc::topology::Topology;
+
+fn main() {
+    let cfg = NocConfig::default();
+
+    // Fig. 5 point: 8x8 mesh, uniform random at moderate load.
+    for topo in [Topology::Mesh, Topology::Tree, Topology::P2P] {
+        let flows = uniform_random_flows(64, 0.10);
+        bench(&format!("steady_64n_rate0.10_{}", topo.name()), 1, 5, || {
+            let stats = NocSim::new(
+                topo,
+                64,
+                &cfg,
+                &flows,
+                Mode::Steady {
+                    warmup: 1_000,
+                    measure: 10_000,
+                },
+                7,
+            )
+            .run();
+            observe(&stats.avg_latency);
+        });
+    }
+
+    // DNN-derived drain workloads (Algorithm 1 inner loop).
+    let arch = ArchConfig::default();
+    for g in [models::lenet5(), models::nin()] {
+        let mapping = Mapping::build(&g, &arch);
+        let inj = InjectionMatrix::build(&g, &mapping, &arch, &cfg);
+        // Busiest layer (most flits).
+        let layer = inj
+            .flows
+            .iter()
+            .map(|f| f.dst_layer)
+            .max_by_key(|&l| {
+                layer_flows(&inj, l, &arch, &cfg, true)
+                    .iter()
+                    .map(|f| f.flits)
+                    .sum::<u64>()
+            })
+            .unwrap();
+        let flows = layer_flows(&inj, layer, &arch, &cfg, true);
+        let total: u64 = flows.iter().map(|f| f.flits).sum();
+        bench(
+            &format!("drain_{}_busiest_layer_{}flits", g.name, total),
+            1,
+            5,
+            || {
+                let stats = NocSim::new(
+                    Topology::Mesh,
+                    inj.total_tiles,
+                    &cfg,
+                    &flows,
+                    Mode::Drain {
+                        max_cycles: 1_000 + total * 64,
+                    },
+                    3,
+                )
+                .run();
+                assert!(stats.drained);
+                observe(&stats.makespan);
+            },
+        );
+    }
+}

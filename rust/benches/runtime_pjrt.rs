@@ -1,0 +1,40 @@
+//! PJRT serving-path benchmarks: artifact compile time and per-batch
+//! execution latency for the IMC-quantized and float MLP artifacts.
+//! Skips (exit 0) when `make artifacts` has not been run.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, observe};
+use imcnoc::coordinator::server::synthetic_requests;
+use imcnoc::runtime::{artifact_available, artifact_path, Runtime};
+
+fn main() {
+    if !artifact_available("mlp") || !artifact_available("mlp_float") {
+        println!("runtime_pjrt: artifacts missing, run `make artifacts` (skipping)");
+        return;
+    }
+    let batch = 8usize;
+    let in_dim = 784usize;
+    let reqs = synthetic_requests(batch, in_dim, 11);
+    let flat: Vec<f32> = reqs.iter().flatten().copied().collect();
+    let dims = [batch as i64, in_dim as i64];
+
+    for name in ["mlp_float", "mlp"] {
+        let path = artifact_path(name);
+        // Compile (load) cost.
+        bench(&format!("pjrt_compile_{name}"), 0, 3, || {
+            let mut rt = Runtime::cpu().expect("client");
+            let m = rt.load(&path).expect("load");
+            observe(&m.path);
+        });
+        // Hot-path execute cost.
+        let mut rt = Runtime::cpu().expect("client");
+        rt.load(&path).expect("load");
+        bench(&format!("pjrt_execute_{name}_b{batch}"), 2, 10, || {
+            let m = rt.load(&path).expect("cached");
+            let out = m.run_f32(&[(&flat, &dims)]).expect("run");
+            observe(&out[0][0]);
+        });
+    }
+}

@@ -1,0 +1,308 @@
+//! Whole-architecture evaluation: maps a DNN, costs the compute fabric,
+//! runs (or estimates) the interconnect, and rolls everything up into the
+//! paper's reporting metrics.
+
+use crate::circuit::ChipCost;
+use crate::config::{ArchConfig, NocConfig, SimConfig};
+use crate::dnn::DnnGraph;
+use crate::mapping::{InjectionMatrix, Mapping};
+use crate::noc::analytical::AnalyticalModel;
+use crate::noc::latency::layer_flows;
+use crate::noc::sim::{FlowSpec, Mode, NocSim};
+use crate::noc::topology::{Network, Topology};
+use crate::noc::NocPower;
+
+/// Interconnect evaluation backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommBackend {
+    /// Cycle-accurate drain-mode simulation (Algorithm 1). Slow, exact.
+    Simulate,
+    /// Analytical bandwidth/queueing estimate (Algorithm 2 + makespan
+    /// bound). 100–2000× faster (paper Fig. 12).
+    Analytical,
+}
+
+/// Full evaluation result for one (DNN, technology, topology) point.
+#[derive(Clone, Debug)]
+pub struct ArchEvaluation {
+    pub dnn: String,
+    pub topology: Topology,
+    pub tiles: usize,
+    pub crossbars: usize,
+    /// Compute-side numbers (circuit model).
+    pub compute_latency_s: f64,
+    pub compute_energy_j: f64,
+    pub compute_area_mm2: f64,
+    /// Interconnect-side numbers. `comm_cycles` is the raw per-layer sum;
+    /// `comm_latency_s` is the *exposed* (non-overlapped with compute)
+    /// communication time that actually extends the frame.
+    pub comm_cycles: u64,
+    pub comm_latency_s: f64,
+    pub comm_energy_j: f64,
+    pub noc_area_mm2: f64,
+    /// Per-layer communication cycles (for Fig. 3-style breakdowns).
+    pub comm_per_layer: Vec<(usize, u64)>,
+}
+
+impl ArchEvaluation {
+    /// End-to-end inference latency per frame, seconds (layer-by-layer:
+    /// compute and communication serialize, paper §5).
+    pub fn latency_s(&self) -> f64 {
+        self.compute_latency_s + self.comm_latency_s
+    }
+
+    /// Total energy per frame, J.
+    pub fn energy_j(&self) -> f64 {
+        self.compute_energy_j + self.comm_energy_j
+    }
+
+    /// Total area, mm².
+    pub fn area_mm2(&self) -> f64 {
+        self.compute_area_mm2 + self.noc_area_mm2
+    }
+
+    /// Frames per second.
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s()
+    }
+
+    /// Average power per frame, W.
+    pub fn power_w(&self) -> f64 {
+        self.energy_j() / self.latency_s()
+    }
+
+    /// Energy-delay-area product, J·ms·mm² (the paper's headline metric).
+    pub fn edap(&self) -> f64 {
+        self.energy_j() * (self.latency_s() * 1e3) * self.area_mm2()
+    }
+
+    /// Routing latency share of end-to-end latency (Fig. 3).
+    pub fn routing_fraction(&self) -> f64 {
+        self.comm_latency_s / self.latency_s()
+    }
+}
+
+/// Evaluate `graph` on the IMC architecture with the given interconnect.
+///
+/// Communication model (see DESIGN.md §Comm-model): layer-by-layer, but a
+/// layer's input transfer overlaps its producers' compute (outputs stream
+/// as they are produced — the paper's tile output buffers exist for exactly
+/// this). Each layer therefore contributes
+/// `max(compute_cycles, comm_cycles)` to the frame, where
+///
+/// ```text
+/// comm_cycles = bottleneck_flits + avg_flit_latency
+/// ```
+///
+/// `bottleneck_flits` is the heaviest per-frame load on any link/ejection
+/// port (tree root links, mesh dst-region perimeter, half-duplex P2P
+/// nodes), and `avg_latency` is the average flit residence time at
+/// production-rate injection, taken from the cycle-accurate simulator
+/// (`Simulate`) or the Algorithm-2 queueing model (`Analytical`).
+pub fn evaluate(
+    graph: &DnnGraph,
+    topology: Topology,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    sim: &SimConfig,
+    backend: CommBackend,
+) -> ArchEvaluation {
+    let mapping = Mapping::build(graph, arch);
+    let chip = ChipCost::evaluate(graph, &mapping, arch);
+    let inj = InjectionMatrix::build(graph, &mapping, arch, noc);
+
+    let net = Network::build(topology, inj.total_tiles);
+    let model = AnalyticalModel::new(&net, noc);
+
+    let mut comm_per_layer: Vec<(usize, u64)> = Vec::new();
+    let mut comm_cycles: u64 = 0;
+    let mut frame_cycles: f64 = 0.0;
+    for (li, lt) in mapping.layers.iter().enumerate() {
+        let compute_cycles = chip.per_layer[li].cycles as f64;
+        let dflows = layer_flows(&inj, lt.layer, arch, noc, true);
+        if dflows.is_empty() {
+            frame_cycles += compute_cycles;
+            continue;
+        }
+        // The tile's local port drains the router into `ces_per_tile`
+        // parallel H-tree lanes (Fig. 10), so ejection-bound transfers run
+        // at that multiple of the link bandwidth. P2P tiles have no router
+        // buffer to fan out from: their half-duplex forwarding latch ingests
+        // one flit every other cycle.
+        let eject_cap = if topology.has_routers() {
+            arch.ces_per_tile as f64
+        } else {
+            0.5
+        };
+        let (bottleneck, _) = model.layer_bottleneck_with_eject(&dflows, eject_cap);
+        let zero_load = model.zero_load(&dflows).max(1.0);
+        // Production-rate injection: the transfer window equals the
+        // consumer's compute window, so each pair offers flits/window.
+        let window = compute_cycles.max(1.0);
+        let pflows: Vec<FlowSpec> = dflows
+            .iter()
+            .map(|f| FlowSpec {
+                src: f.src,
+                dst: f.dst,
+                rate: (f.flits as f64 / window).min(1.0),
+                flits: 0,
+            })
+            .collect();
+        let avg_latency = match backend {
+            CommBackend::Analytical => model.layer_latency(&pflows).avg_latency,
+            CommBackend::Simulate => {
+                NocSim::new(
+                    topology,
+                    inj.total_tiles,
+                    noc,
+                    &pflows,
+                    Mode::Steady {
+                        warmup: sim.warmup_cycles,
+                        measure: sim.measure_cycles,
+                    },
+                    sim.seed ^ lt.layer as u64,
+                )
+                .run()
+                .avg_latency
+            }
+        };
+        // Makespan model: the bandwidth bound plus the (possibly congested)
+        // residence time of the last flit. Saturated networks report very
+        // large average latencies; cap at 100× zero-load so a single layer
+        // cannot dominate un-physically.
+        let comm = bottleneck + avg_latency.max(zero_load).min(zero_load * 100.0);
+        comm_per_layer.push((lt.layer, comm.ceil() as u64));
+        comm_cycles += comm.ceil() as u64;
+        frame_cycles += compute_cycles.max(comm);
+    }
+    // Exposed (non-overlapped) communication latency.
+    let compute_cycles_total = chip.latency_s * arch.freq_hz;
+    let comm_latency_s = (frame_cycles - compute_cycles_total).max(0.0) / arch.freq_hz;
+
+    // --- Communication energy & NoC area (route-exact flit·hop counts) ---
+    let tile_edge_mm = (chip.area_mm2 / mapping.total_tiles.max(1) as f64).sqrt();
+    let power = NocPower::new(&net, noc, arch.tech_nm, tile_edge_mm.max(0.1));
+    let mut comm_energy_j = 0.0;
+    for f in &inj.flows {
+        let flits_per_pair = (f.activations as f64 * arch.n_bits as f64
+            / ((f.src_tiles.len() * f.dst_tiles.len()) as f64 * noc.bus_width as f64))
+            .ceil();
+        for s in f.src_tiles.clone() {
+            for d in f.dst_tiles.clone() {
+                if s == d {
+                    continue;
+                }
+                let hops = net.hops(s, d);
+                comm_energy_j += flits_per_pair * power.flit_energy_j(hops);
+            }
+        }
+    }
+    comm_energy_j += power.leakage_w * comm_latency_s;
+
+    ArchEvaluation {
+        dnn: graph.name.clone(),
+        topology,
+        tiles: mapping.total_tiles,
+        crossbars: mapping.total_crossbars,
+        compute_latency_s: chip.latency_s,
+        compute_energy_j: chip.energy_j,
+        compute_area_mm2: chip.area_mm2,
+        comm_cycles,
+        comm_latency_s,
+        comm_energy_j,
+        noc_area_mm2: power.area_mm2,
+        comm_per_layer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    fn eval(
+        g: &DnnGraph,
+        topo: Topology,
+        arch: &ArchConfig,
+        backend: CommBackend,
+    ) -> ArchEvaluation {
+        evaluate(
+            g,
+            topo,
+            arch,
+            &NocConfig::with_topology(topo),
+            &SimConfig::default(),
+            backend,
+        )
+    }
+
+    #[test]
+    fn analytical_and_sim_agree_on_lenet() {
+        let g = models::lenet5();
+        let arch = ArchConfig::default();
+        let sim = eval(&g, Topology::Mesh, &arch, CommBackend::Simulate);
+        let ana = eval(&g, Topology::Mesh, &arch, CommBackend::Analytical);
+        assert!(sim.comm_cycles > 0 && ana.comm_cycles > 0);
+        let ratio = ana.comm_cycles as f64 / sim.comm_cycles as f64;
+        assert!((0.3..3.0).contains(&ratio), "ratio {ratio}");
+        // Shared parts identical.
+        assert_eq!(sim.compute_area_mm2, ana.compute_area_mm2);
+        assert_eq!(sim.tiles, ana.tiles);
+    }
+
+    #[test]
+    fn metrics_are_positive_and_consistent() {
+        let g = models::mlp();
+        let arch = ArchConfig::default();
+        let e = eval(&g, Topology::Tree, &arch, CommBackend::Analytical);
+        assert!(e.latency_s() > 0.0);
+        assert!(e.energy_j() > 0.0);
+        assert!(e.area_mm2() > 0.0);
+        assert!(e.edap() > 0.0);
+        assert!((e.fps() - 1.0 / e.latency_s()).abs() < 1e-9);
+        assert!(e.routing_fraction() > 0.0 && e.routing_fraction() < 1.0);
+    }
+
+    #[test]
+    fn p2p_routing_dominates_dense_nets() {
+        // Paper Fig. 3: routing latency reaches up to 94% of end-to-end
+        // latency on P2P for dense DNNs, and P2P is always worse than the
+        // NoC on the same workload. (Batch-1 MLP is communication-bound on
+        // any spatial fabric, so we assert dominance + NoC superiority
+        // rather than strict density-monotonicity — the paper's own Fig. 3
+        // is non-monotone at VGG-19.)
+        let arch = ArchConfig::default();
+        let dense_p2p = eval(
+            &models::densenet(40),
+            Topology::P2P,
+            &arch,
+            CommBackend::Analytical,
+        );
+        let dense_mesh = eval(
+            &models::densenet(40),
+            Topology::Mesh,
+            &arch,
+            CommBackend::Analytical,
+        );
+        assert!(
+            dense_p2p.routing_fraction() > 0.6,
+            "dense P2P share {}",
+            dense_p2p.routing_fraction()
+        );
+        assert!(
+            dense_p2p.routing_fraction() > dense_mesh.routing_fraction(),
+            "P2P {} must exceed mesh {}",
+            dense_p2p.routing_fraction(),
+            dense_mesh.routing_fraction()
+        );
+    }
+
+    #[test]
+    fn mesh_area_energy_exceed_tree() {
+        let g = models::nin();
+        let arch = ArchConfig::default();
+        let mesh = eval(&g, Topology::Mesh, &arch, CommBackend::Analytical);
+        let tree = eval(&g, Topology::Tree, &arch, CommBackend::Analytical);
+        assert!(mesh.noc_area_mm2 > tree.noc_area_mm2);
+    }
+}

@@ -1,0 +1,13 @@
+//! End-to-end architecture evaluation: compute fabric (circuit model) +
+//! interconnect (NoC simulation or analytical model) composed into the
+//! latency / energy / area / EDAP / FPS numbers every paper figure uses,
+//! plus the heterogeneous-interconnect architecture of Fig. 10 and the
+//! optimal-topology advisor of Fig. 20.
+
+pub mod evaluator;
+pub mod hetero;
+pub mod optimizer;
+
+pub use evaluator::{evaluate, ArchEvaluation, CommBackend};
+pub use hetero::HeteroArchitecture;
+pub use optimizer::{recommend_topology, Recommendation};

@@ -1,0 +1,137 @@
+//! Optimal-topology guidance (paper §6.4 + Fig. 20): pick NoC-tree or
+//! NoC-mesh for a DNN from the analytical model, and expose the paper's
+//! closed-form rule (Eq. 16: injection load ∝ ρ/μ — synaptic density over
+//! neurons — with density thresholds around 1–2 × 10³).
+
+use super::evaluator::{evaluate, CommBackend};
+use crate::config::{ArchConfig, NocConfig, SimConfig};
+use crate::dnn::DnnGraph;
+use crate::noc::topology::Topology;
+
+/// Advisor output.
+#[derive(Clone, Debug)]
+pub struct Recommendation {
+    pub topology: Topology,
+    /// EDAP of tree and mesh under the analytical backend (J·ms·mm²).
+    pub edap_tree: f64,
+    pub edap_mesh: f64,
+    /// The Fig. 20 closed-form classification for reference.
+    pub rule_of_thumb: Topology,
+    /// Synaptic connection density ρ (Fig. 20 x-axis magnitude).
+    pub density: f64,
+    /// Neurons μ.
+    pub neurons: usize,
+}
+
+/// Fig. 20 thresholds on synaptic connection density.
+pub const DENSITY_MESH_THRESHOLD: f64 = 2.0e3;
+pub const DENSITY_TREE_THRESHOLD: f64 = 1.0e3;
+
+/// The paper's closed-form guidance: mesh above 2×10³ connections/neuron,
+/// tree below 1×10³; in between, both are acceptable (we return the one the
+/// analytical model prefers via [`recommend_topology`]).
+pub fn rule_of_thumb(density: f64) -> Option<Topology> {
+    if density > DENSITY_MESH_THRESHOLD {
+        Some(Topology::Mesh)
+    } else if density < DENSITY_TREE_THRESHOLD {
+        Some(Topology::Tree)
+    } else {
+        None
+    }
+}
+
+/// Full advisor: apply the Fig. 20 closed-form rule first; inside the
+/// overlap band (1–2 × 10³), fall back to comparing tree and mesh EDAP
+/// with the analytical backend.
+pub fn recommend_topology(
+    graph: &DnnGraph,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+) -> Recommendation {
+    let sim = SimConfig::default();
+    let tree = evaluate(
+        graph,
+        Topology::Tree,
+        arch,
+        &NocConfig {
+            topology: Topology::Tree,
+            ..noc.clone()
+        },
+        &sim,
+        CommBackend::Analytical,
+    );
+    let mesh = evaluate(
+        graph,
+        Topology::Mesh,
+        arch,
+        &NocConfig {
+            topology: Topology::Mesh,
+            ..noc.clone()
+        },
+        &sim,
+        CommBackend::Analytical,
+    );
+    let report = graph.density_report();
+    let density = report.connection_density();
+    let rule = rule_of_thumb(density);
+    let edap_choice = if tree.edap() <= mesh.edap() {
+        Topology::Tree
+    } else {
+        Topology::Mesh
+    };
+    let topology = rule.unwrap_or(edap_choice);
+    Recommendation {
+        topology,
+        edap_tree: tree.edap(),
+        edap_mesh: mesh.edap(),
+        rule_of_thumb: rule.unwrap_or(edap_choice),
+        density,
+        neurons: report.neurons,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    #[test]
+    fn compact_nets_get_tree() {
+        let arch = ArchConfig::default();
+        let noc = NocConfig::default();
+        for g in [models::mlp(), models::lenet5()] {
+            let r = recommend_topology(&g, &arch, &noc);
+            assert_eq!(r.topology, Topology::Tree, "{}: {r:?}", g.name);
+        }
+    }
+
+    #[test]
+    fn rule_thresholds() {
+        assert_eq!(rule_of_thumb(5.0e3), Some(Topology::Mesh));
+        assert_eq!(rule_of_thumb(0.5e3), Some(Topology::Tree));
+        assert_eq!(rule_of_thumb(1.5e3), None);
+    }
+
+    #[test]
+    fn vgg19_density_in_mesh_band() {
+        // VGG-19's connection density (~2-4.5k) must land in the paper's
+        // mesh region of Fig. 20.
+        let d = models::vgg(19).density_report().connection_density();
+        assert!(d > DENSITY_MESH_THRESHOLD, "VGG-19 density {d}");
+    }
+
+    #[test]
+    fn lenet_density_in_tree_band() {
+        let d = models::lenet5().density_report().connection_density();
+        assert!(d < DENSITY_TREE_THRESHOLD, "LeNet-5 density {d}");
+    }
+
+    #[test]
+    fn dense_nets_get_mesh_from_rule() {
+        // The paper places DenseNet-100 and ResNet-50 in the mesh region.
+        for g in [models::densenet(100), models::resnet(50)] {
+            let r = recommend_topology(&g, &ArchConfig::default(), &NocConfig::default());
+            assert_eq!(r.topology, Topology::Mesh, "{}: density {}", g.name, r.density);
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! State-of-the-art comparators for Table 4 and the P2P baseline of
+//! Fig. 3 / Fig. 8.
+//!
+//! As in the paper, ISAAC / PipeLayer / AtomLayer are compared through
+//! their *published* VGG-19 numbers (the paper quotes latency values from
+//! AtomLayer's table — the entries marked `*`); the proposed-SRAM and
+//! proposed-ReRAM rows come from our own evaluator. The P2P-interconnect
+//! IMC architecture (paper ref. [32]-style) is fully modeled.
+
+use crate::arch::{CommBackend, HeteroArchitecture};
+use crate::config::ArchConfig;
+use crate::dnn::models;
+
+/// One row of the Table 4 comparison.
+#[derive(Clone, Debug)]
+pub struct BaselineRow {
+    pub name: &'static str,
+    /// Inference latency for VGG-19, ms.
+    pub latency_ms: f64,
+    /// Dynamic power per frame, W.
+    pub power_w: f64,
+    /// Throughput, frames/s.
+    pub fps: f64,
+    /// Energy-delay-area product, J·ms·mm².
+    pub edap: f64,
+    /// True for rows quoted from the literature (paper Table 4 `*`).
+    pub published: bool,
+}
+
+/// AtomLayer (Qiao et al., DAC'18) published VGG-19 numbers.
+pub fn atomlayer() -> BaselineRow {
+    BaselineRow {
+        name: "AtomLayer",
+        latency_ms: 6.92,
+        power_w: 4.8,
+        fps: 145.0,
+        edap: 1.58,
+        published: true,
+    }
+}
+
+/// PipeLayer (Song et al., HPCA'17) published VGG-19 numbers
+/// (latency as reported in AtomLayer).
+pub fn pipelayer() -> BaselineRow {
+    BaselineRow {
+        name: "PipeLayer",
+        latency_ms: 2.6,
+        power_w: 168.6,
+        fps: 385.0,
+        edap: 94.17,
+        published: true,
+    }
+}
+
+/// ISAAC (Shafiee et al., ISCA'16) published VGG-19 numbers
+/// (latency as reported in AtomLayer).
+pub fn isaac() -> BaselineRow {
+    BaselineRow {
+        name: "ISAAC",
+        latency_ms: 8.0,
+        power_w: 65.8,
+        fps: 125.0,
+        edap: 359.64,
+        published: true,
+    }
+}
+
+/// Our proposed architecture evaluated on VGG-19 (Table 4 rows 1–2).
+pub fn proposed(arch: ArchConfig, backend: CommBackend) -> BaselineRow {
+    let tech = arch.tech;
+    let hw = HeteroArchitecture::new(arch);
+    let e = hw.evaluate(&models::vgg(19), backend);
+    BaselineRow {
+        name: match tech {
+            crate::config::MemTech::Sram => "Proposed-SRAM",
+            crate::config::MemTech::Reram => "Proposed-ReRAM",
+        },
+        latency_ms: e.latency_s() * 1e3,
+        power_w: e.power_w(),
+        fps: e.fps(),
+        edap: e.edap(),
+        published: false,
+    }
+}
+
+/// All Table 4 rows in the paper's order.
+pub fn table4_rows(backend: CommBackend) -> Vec<BaselineRow> {
+    vec![
+        proposed(ArchConfig::sram(), backend),
+        proposed(ArchConfig::reram(), backend),
+        atomlayer(),
+        pipelayer(),
+        isaac(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_rows_match_paper_table4() {
+        let a = atomlayer();
+        assert_eq!(a.latency_ms, 6.92);
+        assert_eq!(a.edap, 1.58);
+        let p = pipelayer();
+        assert_eq!(p.power_w, 168.6);
+        let i = isaac();
+        assert_eq!(i.fps, 125.0);
+        assert!(a.published && p.published && i.published);
+    }
+
+    #[test]
+    fn proposed_beats_baselines_on_edap() {
+        // The paper's headline: proposed ReRAM achieves ~6x EDAP vs
+        // AtomLayer (and orders of magnitude vs PipeLayer/ISAAC). Our model
+        // must reproduce the *direction* and a >2x margin.
+        let ours = proposed(ArchConfig::reram(), CommBackend::Analytical);
+        assert!(
+            ours.edap < atomlayer().edap / 2.0,
+            "proposed EDAP {} vs AtomLayer {}",
+            ours.edap,
+            atomlayer().edap
+        );
+        assert!(ours.edap < pipelayer().edap);
+        assert!(ours.edap < isaac().edap);
+        // Power per frame should be far below PipeLayer's 168.6 W.
+        assert!(ours.power_w < pipelayer().power_w / 10.0);
+    }
+
+    #[test]
+    fn table_has_five_rows_in_order() {
+        let rows = table4_rows(CommBackend::Analytical);
+        let names: Vec<_> = rows.iter().map(|r| r.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "Proposed-SRAM",
+                "Proposed-ReRAM",
+                "AtomLayer",
+                "PipeLayer",
+                "ISAAC"
+            ]
+        );
+    }
+}

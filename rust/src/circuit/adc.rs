@@ -1,0 +1,87 @@
+//! Column periphery: flash ADC, sample-and-hold, column multiplexer.
+//!
+//! The paper's architecture (§5.2) digitizes each bitline with a 4-bit
+//! flash ADC behind an 8:1 column mux, with no DAC (inputs are bit-serial).
+
+/// Column-periphery macro-model.
+#[derive(Clone, Copy, Debug)]
+pub struct AdcParams {
+    /// Resolution in bits.
+    pub bits: usize,
+    /// Columns sharing one ADC through the mux.
+    pub mux_share: usize,
+    /// ADC area in µm² (flash: ~2^bits comparators + thermometer decode).
+    pub area_um2: f64,
+    /// Energy per conversion in J.
+    pub energy_per_conv_j: f64,
+    /// Sample-and-hold area per column, µm².
+    pub sh_area_um2: f64,
+    /// Sample-and-hold energy per sample, J.
+    pub sh_energy_j: f64,
+}
+
+impl AdcParams {
+    /// Flash-ADC model: area and energy grow with 2^bits (comparator count),
+    /// scaled from a 4-bit/32 nm calibration point (~150 µm², ~90 fJ/conv).
+    pub fn flash(bits: usize, tech_nm: f64) -> Self {
+        let comparators = (1usize << bits) - 1;
+        let base_comparators = 15.0; // 4-bit reference
+        let f2 = (tech_nm / 32.0) * (tech_nm / 32.0);
+        let f1 = tech_nm / 32.0;
+        Self {
+            bits,
+            mux_share: 8,
+            area_um2: 150.0 * (comparators as f64 / base_comparators) * f2,
+            energy_per_conv_j: 90.0e-15 * (comparators as f64 / base_comparators) * f1,
+            sh_area_um2: 2.0 * f2,
+            sh_energy_j: 1.0e-15 * f1,
+        }
+    }
+
+    /// ADCs needed to serve `columns` bitlines.
+    pub fn adcs_per_array(&self, columns: usize) -> usize {
+        columns.div_ceil(self.mux_share)
+    }
+
+    /// Conversions to digitize all `columns` once (one bit-plane).
+    pub fn conversions_per_bitplane(&self, columns: usize) -> usize {
+        columns
+    }
+
+    /// Extra cycles serialized by the mux per bit-plane (the `mux_share`
+    /// conversions behind each ADC are pipelined with array reads after the
+    /// first, so only the fill cost is exposed).
+    pub fn mux_fill_cycles(&self) -> usize {
+        self.mux_share - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_bit_reference_point() {
+        let a = AdcParams::flash(4, 32.0);
+        assert_eq!(a.bits, 4);
+        assert!((a.area_um2 - 150.0).abs() < 1e-9);
+        assert!((a.energy_per_conv_j - 90.0e-15).abs() < 1e-24);
+    }
+
+    #[test]
+    fn higher_resolution_costs_exponentially() {
+        let a4 = AdcParams::flash(4, 32.0);
+        let a8 = AdcParams::flash(8, 32.0);
+        // 255/15 = 17x comparators.
+        assert!(a8.area_um2 / a4.area_um2 > 16.0);
+        assert!(a8.energy_per_conv_j / a4.energy_per_conv_j > 16.0);
+    }
+
+    #[test]
+    fn sharing_math() {
+        let a = AdcParams::flash(4, 32.0);
+        assert_eq!(a.adcs_per_array(256), 32);
+        assert_eq!(a.conversions_per_bitplane(256), 256);
+        assert_eq!(a.mux_fill_cycles(), 7);
+    }
+}

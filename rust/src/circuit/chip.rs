@@ -1,0 +1,169 @@
+//! Per-layer and whole-chip compute costs (interconnect excluded — the
+//! paper replaces NeuroSim's interconnect with BookSim; ours lives in
+//! [`crate::noc`]).
+//!
+//! Execution model (paper §5): layer-by-layer, all weights resident
+//! on-chip, no DRAM traffic, no pipelining across layers. Within a layer,
+//! every crossbar holding a slice of that layer works in parallel on the
+//! same input vector; successive input vectors (conv output pixels) are
+//! processed sequentially through the bit-serial read pipeline.
+
+use super::tile::TileCost;
+use super::Cost;
+use crate::config::ArchConfig;
+use crate::dnn::{DnnGraph, LayerKind};
+use crate::mapping::Mapping;
+
+/// Compute cost of one weight layer.
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    /// Graph index of the layer.
+    pub layer: usize,
+    /// Crossbar reads per crossbar (conv: one per output pixel; FC: one).
+    pub reads: usize,
+    /// Compute cycles for the layer.
+    pub cycles: u64,
+    /// Compute energy for the layer (all crossbars, all reads), J.
+    pub energy_j: f64,
+}
+
+/// Whole-chip compute rollup for one DNN.
+#[derive(Clone, Debug)]
+pub struct ChipCost {
+    pub per_layer: Vec<LayerCost>,
+    /// Total compute latency, s (layer-by-layer sum).
+    pub latency_s: f64,
+    /// Total compute energy incl. leakage, J.
+    pub energy_j: f64,
+    /// Chip area (tiles only; NoC area is added by the arch evaluator), mm².
+    pub area_mm2: f64,
+    /// One-time weight-programming energy (reported, not charged to
+    /// inference — paper §5).
+    pub program_energy_j: f64,
+}
+
+impl ChipCost {
+    /// Evaluate the compute fabric for `graph` under `cfg` and `mapping`.
+    pub fn evaluate(graph: &DnnGraph, mapping: &Mapping, cfg: &ArchConfig) -> Self {
+        let tile = TileCost::new(cfg);
+        let mut per_layer = Vec::with_capacity(mapping.layers.len());
+        let mut total_cycles: u64 = 0;
+        let mut energy = 0.0f64;
+
+        for lt in &mapping.layers {
+            let layer = &graph.layers[lt.layer];
+            let reads = match layer.kind {
+                LayerKind::Conv { .. } => layer.out_x * layer.out_y,
+                LayerKind::Fc { .. } => 1,
+                _ => 0,
+            };
+            let cycles = (reads * tile.ce.pe.cycles_per_read) as u64;
+            // Every allocated crossbar fires on every read; tile-level
+            // overhead is charged per read per crossbar.
+            let e = lt.crossbars as f64 * reads as f64 * tile.energy_per_read_j();
+            per_layer.push(LayerCost {
+                layer: lt.layer,
+                reads,
+                cycles,
+                energy_j: e,
+            });
+            total_cycles += cycles;
+            energy += e;
+        }
+
+        let latency_s = total_cycles as f64 / cfg.freq_hz;
+        let area_mm2 = mapping.total_tiles as f64 * tile.area_mm2;
+        let leakage = tile.leakage_w * mapping.total_tiles as f64 * latency_s;
+        let program_energy_j =
+            mapping.total_crossbars as f64 * tile.ce.pe.program_energy_j;
+
+        Self {
+            per_layer,
+            latency_s,
+            energy_j: energy + leakage,
+            area_mm2,
+            program_energy_j,
+        }
+    }
+
+    /// Aggregate compute cost triple.
+    pub fn cost(&self) -> Cost {
+        Cost {
+            area_mm2: self.area_mm2,
+            energy_j: self.energy_j,
+            latency_s: self.latency_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    fn chip(g: &DnnGraph, cfg: &ArchConfig) -> ChipCost {
+        let m = Mapping::build(g, cfg);
+        ChipCost::evaluate(g, &m, cfg)
+    }
+
+    #[test]
+    fn vgg19_reram_in_calibrated_band() {
+        // DESIGN.md calibration: ReRAM VGG-19 latency O(1) ms, power O(0.1–1) W,
+        // area O(100) mm² — same order as the paper's Table 4 row.
+        let g = models::vgg(19);
+        let c = chip(&g, &ArchConfig::reram());
+        assert!(
+            (0.5e-3..8e-3).contains(&c.latency_s),
+            "latency {}",
+            c.latency_s
+        );
+        let p = c.cost().power_w();
+        assert!((0.1..3.0).contains(&p), "power {p}");
+        assert!((50.0..900.0).contains(&c.area_mm2), "area {}", c.area_mm2);
+    }
+
+    #[test]
+    fn sram_faster_but_bigger_than_reram() {
+        let g = models::vgg(19);
+        let s = chip(&g, &ArchConfig::sram());
+        let r = chip(&g, &ArchConfig::reram());
+        assert!(s.latency_s < r.latency_s, "SRAM must be faster");
+        assert!(s.area_mm2 > r.area_mm2, "SRAM must be bigger");
+        // Paper Table 4: SRAM latency ~2.2x lower.
+        let ratio = r.latency_s / s.latency_s;
+        assert!((1.2..3.0).contains(&ratio), "latency ratio {ratio}");
+    }
+
+    #[test]
+    fn fc_layers_read_once() {
+        let g = models::mlp();
+        let cfg = ArchConfig::default();
+        let c = chip(&g, &cfg);
+        assert!(c.per_layer.iter().all(|l| l.reads == 1));
+    }
+
+    #[test]
+    fn conv_reads_match_output_pixels() {
+        let g = models::lenet5();
+        let cfg = ArchConfig::default();
+        let c = chip(&g, &cfg);
+        // conv1 emits 28x28.
+        assert_eq!(c.per_layer[0].reads, 28 * 28);
+    }
+
+    #[test]
+    fn energy_monotone_in_model_size() {
+        let cfg = ArchConfig::default();
+        let small = chip(&models::lenet5(), &cfg);
+        let big = chip(&models::vgg(19), &cfg);
+        assert!(big.energy_j > 100.0 * small.energy_j);
+        assert!(big.area_mm2 > small.area_mm2);
+    }
+
+    #[test]
+    fn program_energy_reported_separately(){
+        let cfg = ArchConfig::default();
+        let c = chip(&models::lenet5(), &cfg);
+        assert!(c.program_energy_j > 0.0);
+    }
+}

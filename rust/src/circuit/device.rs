@@ -1,0 +1,109 @@
+//! Technology/device constants. Values are calibrated at 32 nm against the
+//! component budgets of the silicon macros the paper cites (SRAM: Khwa et
+//! al. ISSCC'18 [12]; ReRAM 1T1R: NeuroSim [2]) and ISAAC's published
+//! breakdowns, then scaled to other nodes with standard F² (area) / F
+//! (energy, delay) rules. Absolute numbers are *model* numbers — all paper
+//! claims we reproduce are relative (see DESIGN.md §2).
+
+use crate::config::{ArchConfig, MemTech};
+
+/// Per-technology device parameters at the configured node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceParams {
+    /// Bitcell area in µm².
+    pub cell_area_um2: f64,
+    /// Energy to read one cell onto the bitline during an analog MAC, in J.
+    pub cell_read_energy_j: f64,
+    /// Array read cycles per input bit-plane (sensing speed; SRAM resolves
+    /// in one cycle at 1 GHz, ReRAM needs two).
+    pub read_cycles_per_bitplane: usize,
+    /// Write energy per cell in J (weight loading; excluded from inference
+    /// energy per the paper's §5 assumption, reported separately).
+    pub cell_write_energy_j: f64,
+    /// Leakage power per cell in W (SRAM only; ReRAM is non-volatile).
+    pub cell_leakage_w: f64,
+}
+
+/// Feature size scaling helper: area ∝ F², energy/delay ∝ F (to first order).
+fn scale(base_32nm: f64, tech_nm: f64, exponent: f64) -> f64 {
+    base_32nm * (tech_nm / 32.0).powf(exponent)
+}
+
+impl DeviceParams {
+    pub fn new(tech: MemTech, tech_nm: f64) -> Self {
+        match tech {
+            MemTech::Sram => Self {
+                // 8T compute-SRAM bitcell ≈ 190 F² -> 0.195 µm² at 32 nm.
+                cell_area_um2: scale(0.195, tech_nm, 2.0),
+                // Bitline discharge per cell per bit-plane MAC.
+                cell_read_energy_j: scale(0.28e-15, tech_nm, 1.0),
+                read_cycles_per_bitplane: 1,
+                cell_write_energy_j: scale(5.0e-15, tech_nm, 1.0),
+                cell_leakage_w: scale(2.0e-12, tech_nm, 1.0),
+            },
+            MemTech::Reram => Self {
+                // 1T1R cell ≈ 12 F² -> 0.0123 µm² at 32 nm.
+                cell_area_um2: scale(0.0123, tech_nm, 2.0),
+                // Current through the RRAM device per bit-plane MAC.
+                cell_read_energy_j: scale(0.04e-15, tech_nm, 1.0),
+                read_cycles_per_bitplane: 2,
+                cell_write_energy_j: scale(1.0e-12, tech_nm, 1.0),
+                cell_leakage_w: 0.0,
+            },
+        }
+    }
+
+    pub fn from_arch(cfg: &ArchConfig) -> Self {
+        Self::new(cfg.tech, cfg.tech_nm)
+    }
+}
+
+/// Digital-logic constants shared by both technologies (32 nm base).
+#[derive(Clone, Copy, Debug)]
+pub struct LogicParams {
+    /// Energy per bit of shift-and-add, J.
+    pub shift_add_energy_per_bit_j: f64,
+    /// Shift-and-add area per output column, µm².
+    pub shift_add_area_um2: f64,
+    /// SRAM buffer: area per bit, µm².
+    pub buffer_area_per_bit_um2: f64,
+    /// SRAM buffer: access energy per bit, J.
+    pub buffer_energy_per_bit_j: f64,
+    /// Router-less local wire energy per bit per mm, J.
+    pub wire_energy_per_bit_mm_j: f64,
+}
+
+impl LogicParams {
+    pub fn new(tech_nm: f64) -> Self {
+        Self {
+            shift_add_energy_per_bit_j: scale(2.0e-15, tech_nm, 1.0),
+            shift_add_area_um2: scale(60.0, tech_nm, 2.0),
+            buffer_area_per_bit_um2: scale(0.35, tech_nm, 2.0),
+            buffer_energy_per_bit_j: scale(10.0e-15, tech_nm, 1.0),
+            wire_energy_per_bit_mm_j: scale(60.0e-15, tech_nm, 1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reram_denser_than_sram() {
+        let s = DeviceParams::new(MemTech::Sram, 32.0);
+        let r = DeviceParams::new(MemTech::Reram, 32.0);
+        assert!(r.cell_area_um2 < s.cell_area_um2 / 10.0);
+        assert!(r.cell_read_energy_j < s.cell_read_energy_j);
+        assert!(r.read_cycles_per_bitplane > s.read_cycles_per_bitplane);
+        assert_eq!(r.cell_leakage_w, 0.0);
+    }
+
+    #[test]
+    fn scaling_laws() {
+        let a32 = DeviceParams::new(MemTech::Sram, 32.0);
+        let a64 = DeviceParams::new(MemTech::Sram, 64.0);
+        assert!((a64.cell_area_um2 / a32.cell_area_um2 - 4.0).abs() < 1e-9);
+        assert!((a64.cell_read_energy_j / a32.cell_read_energy_j - 2.0).abs() < 1e-9);
+    }
+}

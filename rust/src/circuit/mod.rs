@@ -1,0 +1,74 @@
+//! Circuit-level performance estimator for the IMC compute fabric — the
+//! NeuroSim-class substrate of the paper's simulator (Fig. 6, left half).
+//!
+//! The estimator is a hierarchy of parametric macro-models:
+//!
+//! * [`device`] — technology constants (32 nm default) for SRAM-8T and
+//!   ReRAM-1T1R bitcells, calibrated against the silicon macros the paper
+//!   cites ([12] SRAM, [2] ReRAM) and ISAAC-class component budgets,
+//! * [`adc`] — 4-bit flash ADC + sample-and-hold + column mux,
+//! * [`crossbar`] — one PE: cell array + column periphery + shift-add,
+//! * [`tile`] — CE (4 PEs + local bus) and tile (4 CEs + H-tree + buffers +
+//!   activation/accumulation units), matching Fig. 10,
+//! * [`chip`] — per-layer and whole-DNN compute latency / energy / area
+//!   (interconnect cost is *excluded* here; the paper replaces NeuroSim's
+//!   interconnect with BookSim, and so do we — see [`crate::noc`]).
+
+pub mod adc;
+pub mod chip;
+pub mod crossbar;
+pub mod device;
+pub mod tile;
+
+pub use chip::{ChipCost, LayerCost};
+pub use crossbar::PeCost;
+pub use device::DeviceParams;
+pub use tile::{CeCost, TileCost};
+
+/// Area/energy/latency triple every level of the hierarchy reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    /// Silicon area in mm².
+    pub area_mm2: f64,
+    /// Energy in joules (for whatever operation the context defines).
+    pub energy_j: f64,
+    /// Latency in seconds.
+    pub latency_s: f64,
+}
+
+impl Cost {
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    /// Energy-delay-area product in J·ms·mm² (the paper's EDAP unit).
+    pub fn edap(&self) -> f64 {
+        self.energy_j * (self.latency_s * 1e3) * self.area_mm2
+    }
+
+    /// Average power in watts over the operation.
+    pub fn power_w(&self) -> f64 {
+        if self.latency_s > 0.0 {
+            self.energy_j / self.latency_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edap_units() {
+        let c = Cost {
+            area_mm2: 100.0,
+            energy_j: 1e-3,
+            latency_s: 2e-3,
+        };
+        // 1e-3 J * 2 ms * 100 mm^2 = 0.2 J.ms.mm^2
+        assert!((c.edap() - 0.2).abs() < 1e-12);
+        assert!((c.power_w() - 0.5).abs() < 1e-12);
+    }
+}

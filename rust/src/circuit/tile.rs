@@ -1,0 +1,144 @@
+//! Computing elements and tiles (paper Fig. 10): a CE groups 4 PEs behind a
+//! local bus; a tile groups 4 CEs behind an H-tree P2P network plus the
+//! tile-level buffers, accumulators and activation units. This is the
+//! *intra-tile* part of the heterogeneous interconnect — deliberately
+//! simple links, because intra-tile data volume is low (paper §5.2).
+
+use super::crossbar::PeCost;
+use super::device::LogicParams;
+use super::Cost;
+use crate::config::ArchConfig;
+
+/// One computing element: `pes_per_ce` PEs + bus + partial-sum accumulator.
+#[derive(Clone, Copy, Debug)]
+pub struct CeCost {
+    pub pe: PeCost,
+    pub area_mm2: f64,
+    /// Bus + accumulator energy per PE read routed through the CE, J.
+    pub overhead_per_read_j: f64,
+}
+
+impl CeCost {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        let pe = PeCost::new(cfg);
+        let logic = LogicParams::new(cfg.tech_nm);
+        // Bus wiring ≈ perimeter of the PE block; accumulator per column.
+        let pe_edge_mm = pe.area_mm2.sqrt();
+        let bus_area = 0.02 * cfg.pes_per_ce as f64 * pe.area_mm2; // 2% wiring overhead per PE
+        let accum_area = cfg.pes_per_ce as f64 * logic.shift_add_area_um2 * 4.0 / 1e6;
+        let area_mm2 = cfg.pes_per_ce as f64 * pe.area_mm2 + bus_area + accum_area;
+        // Moving one read's outputs (pe_size/n_bits words × n_bits bits)
+        // over ~one PE edge of wire, plus accumulation.
+        let out_bits = cfg.pe_size as f64; // (pe_size/n_bits) words × n_bits
+        let overhead_per_read_j = out_bits * pe_edge_mm * logic.wire_energy_per_bit_mm_j
+            + out_bits * logic.shift_add_energy_per_bit_j;
+        Self {
+            pe,
+            area_mm2,
+            overhead_per_read_j,
+        }
+    }
+}
+
+/// One tile: `ces_per_tile` CEs + H-tree + I/O buffer + activation unit.
+#[derive(Clone, Copy, Debug)]
+pub struct TileCost {
+    pub ce: CeCost,
+    pub area_mm2: f64,
+    /// Buffer bits provisioned per tile.
+    pub buffer_bits: usize,
+    /// H-tree + buffer + activation energy per PE read, J.
+    pub overhead_per_read_j: f64,
+    /// Tile leakage, W.
+    pub leakage_w: f64,
+}
+
+impl TileCost {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        let ce = CeCost::new(cfg);
+        let logic = LogicParams::new(cfg.tech_nm);
+        // I/O buffer sized to double-buffer one full tile of input vectors:
+        // pes_per_tile × pe_size elements × n_bits × 2.
+        let buffer_bits = 2 * cfg.pes_per_tile() * cfg.pe_size * cfg.n_bits;
+        let buffer_area = buffer_bits as f64 * logic.buffer_area_per_bit_um2 / 1e6;
+        let htree_area = 0.03 * cfg.ces_per_tile as f64 * ce.area_mm2; // 3% wiring
+        let activation_area = 0.01 * ce.area_mm2;
+        let area_mm2 =
+            cfg.ces_per_tile as f64 * ce.area_mm2 + buffer_area + htree_area + activation_area;
+
+        let tile_edge_mm = area_mm2.sqrt();
+        let out_bits = cfg.pe_size as f64;
+        // Per read: H-tree traversal (≈ half tile edge) + buffer write+read
+        // + ReLU (negligible, folded into shift-add constant).
+        let overhead_per_read_j = out_bits * 0.5 * tile_edge_mm * logic.wire_energy_per_bit_mm_j
+            + 2.0 * out_bits * logic.buffer_energy_per_bit_j;
+
+        Self {
+            ce,
+            area_mm2,
+            buffer_bits,
+            overhead_per_read_j,
+            leakage_w: ce.pe.leakage_w * cfg.pes_per_tile() as f64,
+        }
+    }
+
+    /// Full per-read energy at tile level: PE read + CE bus + tile overhead.
+    pub fn energy_per_read_j(&self) -> f64 {
+        self.ce.pe.energy_per_read_j + self.ce.overhead_per_read_j + self.overhead_per_read_j
+    }
+
+    /// Cost of one tile performing `reads` PE reads with `parallel_pes`
+    /// PEs active concurrently.
+    pub fn read_cost(&self, cfg: &ArchConfig, reads: usize, parallel_pes: usize) -> Cost {
+        let parallel = parallel_pes.clamp(1, cfg.pes_per_tile());
+        let rounds = reads.div_ceil(parallel);
+        Cost {
+            area_mm2: self.area_mm2,
+            energy_j: self.energy_per_read_j() * reads as f64,
+            latency_s: (self.ce.pe.cycles_per_read * rounds) as f64 / cfg.freq_hz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hierarchy_areas_nest() {
+        let cfg = ArchConfig::default();
+        let ce = CeCost::new(&cfg);
+        let tile = TileCost::new(&cfg);
+        assert!(ce.area_mm2 > cfg.pes_per_ce as f64 * ce.pe.area_mm2);
+        assert!(tile.area_mm2 > cfg.ces_per_tile as f64 * ce.area_mm2);
+        // Overheads must stay overheads: < 20% on top of raw arrays.
+        let raw = cfg.pes_per_tile() as f64 * ce.pe.area_mm2;
+        assert!(tile.area_mm2 < 1.2 * raw + 0.5, "tile {}", tile.area_mm2);
+    }
+
+    #[test]
+    fn tile_energy_exceeds_pe_energy() {
+        let cfg = ArchConfig::default();
+        let tile = TileCost::new(&cfg);
+        assert!(tile.energy_per_read_j() > tile.ce.pe.energy_per_read_j);
+        // ...but interconnect/buffer overhead is bounded (< 50%).
+        assert!(tile.energy_per_read_j() < 1.5 * tile.ce.pe.energy_per_read_j);
+    }
+
+    #[test]
+    fn parallel_reads_cut_latency_not_energy() {
+        let cfg = ArchConfig::default();
+        let tile = TileCost::new(&cfg);
+        let serial = tile.read_cost(&cfg, 16, 1);
+        let parallel = tile.read_cost(&cfg, 16, 16);
+        assert!((serial.energy_j - parallel.energy_j).abs() < 1e-18);
+        assert!((serial.latency_s / parallel.latency_s - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buffer_sized_for_double_buffering() {
+        let cfg = ArchConfig::default();
+        let tile = TileCost::new(&cfg);
+        assert_eq!(tile.buffer_bits, 2 * 16 * 256 * 8);
+    }
+}

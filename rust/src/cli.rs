@@ -1,0 +1,382 @@
+//! Hand-rolled CLI (no clap in the offline environment).
+//!
+//! ```text
+//! repro figure <id> [--exact] [--fast] [--csv] [--seed N]
+//! repro table <id>  [--exact] [--fast] [--csv]
+//! repro all         [--exact] [--fast] [--csv]
+//! repro eval <dnn> [--tech sram|reram] [--topology mesh|tree|p2p|cmesh] [--exact]
+//! repro advise <dnn>
+//! repro serve <artifact> [--requests N] [--batch N] [--in-dim N]
+//! repro config [--show] [--load path]
+//! repro list
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::arch::{evaluate, recommend_topology, CommBackend};
+use crate::config::{ArchConfig, Config, MemTech, NocConfig, SimConfig};
+use crate::coordinator::server::{synthetic_requests, InferenceServer};
+use crate::dnn::by_name;
+use crate::experiments::{find, registry, Options};
+use crate::noc::topology::Topology;
+use crate::util::{fmt_sig, Table};
+
+/// Parsed flag set: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // Value-flags take the next token unless it is another flag.
+                let value = argv
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned();
+                let consumed = value.is_some() && flag_takes_value(name);
+                args.flags.push((
+                    name.to_string(),
+                    if consumed { value } else { None },
+                ));
+                i += if consumed { 2 } else { 1 };
+            } else {
+                args.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        args
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+fn flag_takes_value(name: &str) -> bool {
+    matches!(
+        name,
+        "seed" | "tech" | "topology" | "requests" | "batch" | "in-dim" | "load" | "threads"
+    )
+}
+
+fn options_from(args: &Args) -> Result<Options> {
+    Ok(Options {
+        backend: if args.has("exact") {
+            CommBackend::Simulate
+        } else {
+            CommBackend::Analytical
+        },
+        fast: args.has("fast"),
+        seed: args.get_usize("seed", 0x1AC5_EED)? as u64,
+    })
+}
+
+fn print_tables(tables: &[Table], csv: bool) {
+    for t in tables {
+        if csv {
+            println!("# {}", t.title);
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.render());
+        }
+        println!();
+    }
+}
+
+/// Entry point; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv);
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "figure" | "table" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: repro {cmd} <id>"))?;
+            let prefix = if cmd == "figure" { "fig" } else { "table" };
+            let full_id = if id.chars().all(|c| c.is_ascii_digit()) {
+                format!("{prefix}{id}")
+            } else {
+                id.clone()
+            };
+            let exp = find(&full_id)
+                .ok_or_else(|| anyhow!("unknown experiment '{full_id}' (try `repro list`)"))?;
+            let opts = options_from(&args)?;
+            eprintln!("== {} — {} ==", exp.id, exp.title);
+            let tables = (exp.run)(&opts);
+            print_tables(&tables, args.has("csv"));
+        }
+        "all" => {
+            let opts = options_from(&args)?;
+            for exp in registry() {
+                eprintln!("== {} — {} ==", exp.id, exp.title);
+                let tables = (exp.run)(&opts);
+                print_tables(&tables, args.has("csv"));
+            }
+        }
+        "eval" => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: repro eval <dnn>"))?;
+            let g = by_name(name).ok_or_else(|| anyhow!("unknown DNN '{name}'"))?;
+            let tech = match args.get("tech") {
+                None => MemTech::Reram,
+                Some(t) => MemTech::parse(t).ok_or_else(|| anyhow!("bad --tech '{t}'"))?,
+            };
+            let topo = match args.get("topology") {
+                None => recommend_topology(&g, &ArchConfig::default(), &NocConfig::default())
+                    .topology,
+                Some(t) => Topology::parse(t).ok_or_else(|| anyhow!("bad --topology '{t}'"))?,
+            };
+            let arch = ArchConfig {
+                tech,
+                ..ArchConfig::default()
+            };
+            let backend = if args.has("exact") {
+                CommBackend::Simulate
+            } else {
+                CommBackend::Analytical
+            };
+            let e = evaluate(
+                &g,
+                topo,
+                &arch,
+                &NocConfig::with_topology(topo),
+                &SimConfig::default(),
+                backend,
+            );
+            let mut t = Table::new(
+                format!("{} on {} IMC with {}", g.name, tech.name(), topo.name()),
+                &["metric", "value"],
+            );
+            t.add_row(vec!["tiles".into(), e.tiles.to_string()]);
+            t.add_row(vec!["crossbars".into(), e.crossbars.to_string()]);
+            t.add_row(vec![
+                "latency_ms".into(),
+                fmt_sig(e.latency_s() * 1e3, 4),
+            ]);
+            t.add_row(vec![
+                "  compute_ms".into(),
+                fmt_sig(e.compute_latency_s * 1e3, 4),
+            ]);
+            t.add_row(vec![
+                "  routing_ms".into(),
+                fmt_sig(e.comm_latency_s * 1e3, 4),
+            ]);
+            t.add_row(vec!["power_W".into(), fmt_sig(e.power_w(), 4)]);
+            t.add_row(vec!["area_mm2".into(), fmt_sig(e.area_mm2(), 4)]);
+            t.add_row(vec!["FPS".into(), fmt_sig(e.fps(), 4)]);
+            t.add_row(vec!["EDAP_J.ms.mm2".into(), fmt_sig(e.edap(), 4)]);
+            print_tables(&[t], args.has("csv"));
+            if args.has("verbose") {
+                let mut pl = Table::new(
+                    "per-layer communication (cycles)",
+                    &["layer", "name", "comm_cycles"],
+                );
+                for (layer, cycles) in &e.comm_per_layer {
+                    pl.add_row(vec![
+                        layer.to_string(),
+                        g.layers[*layer].name.clone(),
+                        cycles.to_string(),
+                    ]);
+                }
+                print_tables(&[pl], args.has("csv"));
+            }
+        }
+        "advise" => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: repro advise <dnn>"))?;
+            let g = by_name(name).ok_or_else(|| anyhow!("unknown DNN '{name}'"))?;
+            let rec = recommend_topology(&g, &ArchConfig::default(), &NocConfig::default());
+            println!(
+                "{}: use {} (rho={:.1}, mu={}, EDAP tree={:.4} mesh={:.4}, rule-of-thumb={})",
+                g.name,
+                rec.topology.name(),
+                rec.density,
+                rec.neurons,
+                rec.edap_tree,
+                rec.edap_mesh,
+                rec.rule_of_thumb.name(),
+            );
+        }
+        "serve" => {
+            let artifact = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: repro serve <artifact.hlo.txt>"))?;
+            let requests = args.get_usize("requests", 256)?;
+            let batch = args.get_usize("batch", 8)?;
+            let in_dim = args.get_usize("in-dim", 784)?;
+            let mut server = InferenceServer::new(batch)?;
+            eprintln!("platform: {}", server.platform());
+            let reqs = synthetic_requests(requests, in_dim, 42);
+            let report = server.serve(artifact, &reqs, in_dim)?;
+            println!(
+                "served {} requests in {} batches of {}: mean {:.3} ms/batch, p50 {:.3}, p99 {:.3}, {:.1} req/s",
+                report.requests,
+                report.batches,
+                report.batch_size,
+                report.mean_batch_ms,
+                report.p50_batch_ms,
+                report.p99_batch_ms,
+                report.throughput_rps
+            );
+        }
+        "config" => {
+            if let Some(path) = args.get("load") {
+                let cfg = Config::from_file(path).map_err(|e| anyhow!(e))?;
+                println!("{}", cfg.to_ini());
+            } else {
+                println!("{}", Config::default().to_ini());
+            }
+        }
+        "sweep" => {
+            // Parallel sweep over the whole zoo x {tree, mesh} x tech via
+            // the coordinator driver (demonstrates the parallel runtime).
+            let tech = match args.get("tech") {
+                None => MemTech::Reram,
+                Some(t) => MemTech::parse(t).ok_or_else(|| anyhow!("bad --tech '{t}'"))?,
+            };
+            let backend = if args.has("exact") {
+                CommBackend::Simulate
+            } else {
+                CommBackend::Analytical
+            };
+            let points: Vec<_> = crate::dnn::model_zoo()
+                .iter()
+                .flat_map(|g| {
+                    [Topology::Tree, Topology::Mesh].into_iter().map(|t| {
+                        (
+                            g.name.clone(),
+                            ArchConfig { tech, ..ArchConfig::default() },
+                            NocConfig::with_topology(t),
+                            backend,
+                        )
+                    })
+                })
+                .collect();
+            let driver = crate::coordinator::Driver::new();
+            let results = driver.evaluate_many(&points);
+            let mut t = Table::new(
+                format!("Sweep: zoo x {{tree, mesh}} on {} IMC", tech.name()),
+                &["dnn", "topology", "latency_ms", "FPS", "EDAP"],
+            );
+            for r in &results {
+                t.add_row(vec![
+                    r.dnn.clone(),
+                    r.topology.name().into(),
+                    fmt_sig(r.latency_s() * 1e3, 4),
+                    fmt_sig(r.fps(), 4),
+                    fmt_sig(r.edap(), 3),
+                ]);
+            }
+            print_tables(&[t], args.has("csv"));
+        }
+        "list" => {
+            for exp in registry() {
+                println!("{:8} {}", exp.id, exp.title);
+            }
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+        }
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "imcnoc repro — interconnect-aware IMC accelerator study (JETC'21 reproduction)
+
+USAGE:
+  repro figure <id> [--exact] [--fast] [--csv] [--seed N]   regenerate a paper figure
+  repro table <id>  [--exact] [--fast] [--csv]              regenerate a paper table
+  repro all [--fast] [--csv]                                run every experiment
+  repro eval <dnn> [--tech sram|reram] [--topology ...]     evaluate one design point
+  repro advise <dnn>                                        optimal-topology advisor
+  repro serve <artifact> [--requests N] [--batch N]         serve inference via PJRT
+  repro sweep [--tech sram|reram] [--exact]                 parallel zoo sweep
+  repro config [--load path]                                show/parse configuration
+  repro list                                                list experiments
+
+FLAGS:
+  --exact   use the cycle-accurate NoC simulator (default: analytical model)
+  --fast    restrict sweeps to the small-DNN subset
+  --csv     emit CSV instead of ASCII tables"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_positionals_and_flags() {
+        let argv: Vec<String> = ["figure", "16", "--fast", "--seed", "7", "--csv"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["figure", "16"]);
+        assert!(a.has("fast"));
+        assert!(a.has("csv"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn boolean_flag_does_not_eat_positional() {
+        let argv: Vec<String> = ["figure", "--fast", "16"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["figure", "16"]);
+    }
+
+    #[test]
+    fn run_list_and_config() {
+        run(&["list".to_string()]).unwrap();
+        run(&["config".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn run_unknown_command_errors() {
+        assert!(run(&["frobnicate".to_string()]).is_err());
+    }
+
+    #[test]
+    fn run_small_figure() {
+        run(&["figure".into(), "1".into()]).unwrap();
+        run(&["advise".into(), "MLP".into()]).unwrap();
+    }
+}

@@ -1,0 +1,366 @@
+//! Configuration system: typed configs with Table-2 defaults plus a
+//! hand-rolled INI-style parser/serializer (`key = value`, `[section]`
+//! headers, `#`/`;` comments) — the offline build has no serde.
+
+mod parse;
+
+pub use parse::{parse_ini, IniDoc, ParseError};
+
+use crate::noc::topology::Topology;
+
+/// Memory technology of the IMC processing elements (crossbars).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemTech {
+    /// 8T/capacitive-coupling SRAM bitcell macro (paper ref [12]).
+    Sram,
+    /// 1T1R ReRAM bitcell (paper ref [2]).
+    Reram,
+}
+
+impl MemTech {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemTech::Sram => "SRAM",
+            MemTech::Reram => "ReRAM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sram" => Some(MemTech::Sram),
+            "reram" | "rram" => Some(MemTech::Reram),
+            _ => None,
+        }
+    }
+}
+
+/// Architecture parameters (paper Table 2 defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchConfig {
+    /// Crossbar (PE) array rows = cols. Paper default: 256.
+    pub pe_size: usize,
+    /// Bits stored per IMC cell. Paper default: 1.
+    pub cell_bits: usize,
+    /// Weight/activation data precision in bits. Paper default: 8.
+    pub n_bits: usize,
+    /// Flash-ADC resolution in bits. Paper default: 4.
+    pub adc_bits: usize,
+    /// Technology node in nm. Paper default: 32.
+    pub tech_nm: f64,
+    /// Operating frequency in Hz. Paper default: 1 GHz.
+    pub freq_hz: f64,
+    /// PEs (crossbars) per computing element. Paper §5.2: 4.
+    pub pes_per_ce: usize,
+    /// CEs per tile. Paper §5.2: 4.
+    pub ces_per_tile: usize,
+    /// Memory technology of the PEs.
+    pub tech: MemTech,
+    /// Target throughput in frames/s used for injection-rate calculation.
+    pub fps: f64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            pe_size: 256,
+            cell_bits: 1,
+            n_bits: 8,
+            adc_bits: 4,
+            tech_nm: 32.0,
+            freq_hz: 1.0e9,
+            pes_per_ce: 4,
+            ces_per_tile: 4,
+            tech: MemTech::Reram,
+            fps: 60.0,
+        }
+    }
+}
+
+impl ArchConfig {
+    pub fn sram() -> Self {
+        Self {
+            tech: MemTech::Sram,
+            ..Self::default()
+        }
+    }
+
+    pub fn reram() -> Self {
+        Self::default()
+    }
+
+    /// Crossbars per tile (paper §5.2: 4 CEs × 4 PEs = 16).
+    pub fn pes_per_tile(&self) -> usize {
+        self.pes_per_ce * self.ces_per_tile
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.pe_size.is_power_of_two() || !(64..=512).contains(&self.pe_size) {
+            return Err(format!(
+                "pe_size must be a power of two in [64, 512], got {}",
+                self.pe_size
+            ));
+        }
+        if self.cell_bits == 0 || self.cell_bits > self.n_bits {
+            return Err("cell_bits must be in [1, n_bits]".into());
+        }
+        if self.n_bits == 0 || self.n_bits > 32 {
+            return Err("n_bits must be in [1, 32]".into());
+        }
+        if self.adc_bits == 0 || self.adc_bits > 12 {
+            return Err("adc_bits must be in [1, 12]".into());
+        }
+        if self.freq_hz <= 0.0 || self.fps <= 0.0 {
+            return Err("freq_hz and fps must be positive".into());
+        }
+        if self.pes_per_ce == 0 || self.ces_per_tile == 0 {
+            return Err("pes_per_ce / ces_per_tile must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// NoC parameters (paper Table 2 + §2.3 defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NocConfig {
+    pub topology: Topology,
+    /// Link/bus width in bits. Paper default: 32.
+    pub bus_width: usize,
+    /// Virtual channels per port. Paper default: 1.
+    pub virtual_channels: usize,
+    /// Buffer depth in flits (per input port, all VCs). Paper default: 8.
+    pub buffer_depth: usize,
+    /// Router pipeline stages. Paper default: 3.
+    pub pipeline_stages: usize,
+    /// Flits per packet (header + payload); latency stats are flit-level
+    /// like BookSim's default single-flit packets.
+    pub flits_per_packet: usize,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        Self {
+            topology: Topology::Mesh,
+            bus_width: 32,
+            virtual_channels: 1,
+            buffer_depth: 8,
+            pipeline_stages: 3,
+            flits_per_packet: 1,
+        }
+    }
+}
+
+impl NocConfig {
+    pub fn with_topology(topology: Topology) -> Self {
+        Self {
+            topology,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bus_width == 0 || self.bus_width > 1024 {
+            return Err("bus_width must be in [1, 1024]".into());
+        }
+        if self.virtual_channels == 0 || self.virtual_channels > 16 {
+            return Err("virtual_channels must be in [1, 16]".into());
+        }
+        if self.buffer_depth == 0 {
+            return Err("buffer_depth must be positive".into());
+        }
+        if self.pipeline_stages == 0 || self.pipeline_stages > 8 {
+            return Err("pipeline_stages must be in [1, 8]".into());
+        }
+        if self.flits_per_packet == 0 {
+            return Err("flits_per_packet must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Simulation-control parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// PRNG seed for the cycle-accurate simulator.
+    pub seed: u64,
+    /// Warm-up cycles excluded from statistics.
+    pub warmup_cycles: u64,
+    /// Measured cycles after warm-up.
+    pub measure_cycles: u64,
+    /// Cycles to wait for in-flight drain after injection stops.
+    pub drain_cycles: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x1AC5_EED,
+            warmup_cycles: 200,
+            measure_cycles: 2_000,
+            drain_cycles: 20_000,
+        }
+    }
+}
+
+/// Bundle of all three configs, loadable from an INI file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub arch: ArchConfig,
+    pub noc: NocConfig,
+    pub sim: SimConfig,
+}
+
+impl Config {
+    /// Load from INI text. Unknown keys are rejected so typos surface.
+    pub fn from_ini(text: &str) -> Result<Self, String> {
+        let doc = parse_ini(text).map_err(|e| e.to_string())?;
+        let mut cfg = Config::default();
+        for (section, key, value) in doc.entries() {
+            let v = value;
+            let parse_err = |k: &str| format!("invalid value for {section}.{k}: '{v}'");
+            match (section, key) {
+                ("arch", "pe_size") => cfg.arch.pe_size = v.parse().map_err(|_| parse_err(key))?,
+                ("arch", "cell_bits") => {
+                    cfg.arch.cell_bits = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("arch", "n_bits") => cfg.arch.n_bits = v.parse().map_err(|_| parse_err(key))?,
+                ("arch", "adc_bits") => {
+                    cfg.arch.adc_bits = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("arch", "tech_nm") => cfg.arch.tech_nm = v.parse().map_err(|_| parse_err(key))?,
+                ("arch", "freq_hz") => cfg.arch.freq_hz = v.parse().map_err(|_| parse_err(key))?,
+                ("arch", "pes_per_ce") => {
+                    cfg.arch.pes_per_ce = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("arch", "ces_per_tile") => {
+                    cfg.arch.ces_per_tile = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("arch", "tech") => {
+                    cfg.arch.tech = MemTech::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("arch", "fps") => cfg.arch.fps = v.parse().map_err(|_| parse_err(key))?,
+                ("noc", "topology") => {
+                    cfg.noc.topology = Topology::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("noc", "bus_width") => {
+                    cfg.noc.bus_width = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("noc", "virtual_channels") => {
+                    cfg.noc.virtual_channels = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("noc", "buffer_depth") => {
+                    cfg.noc.buffer_depth = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("noc", "pipeline_stages") => {
+                    cfg.noc.pipeline_stages = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("noc", "flits_per_packet") => {
+                    cfg.noc.flits_per_packet = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("sim", "seed") => cfg.sim.seed = v.parse().map_err(|_| parse_err(key))?,
+                ("sim", "warmup_cycles") => {
+                    cfg.sim.warmup_cycles = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("sim", "measure_cycles") => {
+                    cfg.sim.measure_cycles = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("sim", "drain_cycles") => {
+                    cfg.sim.drain_cycles = v.parse().map_err(|_| parse_err(key))?
+                }
+                _ => return Err(format!("unknown config key: [{section}] {key}")),
+            }
+        }
+        cfg.arch.validate()?;
+        cfg.noc.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_ini(&text)
+    }
+
+    /// Serialize back to INI (round-trips through [`Config::from_ini`]).
+    pub fn to_ini(&self) -> String {
+        format!(
+            "[arch]\npe_size = {}\ncell_bits = {}\nn_bits = {}\nadc_bits = {}\n\
+             tech_nm = {}\nfreq_hz = {}\npes_per_ce = {}\nces_per_tile = {}\n\
+             tech = {}\nfps = {}\n\n[noc]\ntopology = {}\nbus_width = {}\n\
+             virtual_channels = {}\nbuffer_depth = {}\npipeline_stages = {}\n\
+             flits_per_packet = {}\n\n[sim]\nseed = {}\nwarmup_cycles = {}\n\
+             measure_cycles = {}\ndrain_cycles = {}\n",
+            self.arch.pe_size,
+            self.arch.cell_bits,
+            self.arch.n_bits,
+            self.arch.adc_bits,
+            self.arch.tech_nm,
+            self.arch.freq_hz,
+            self.arch.pes_per_ce,
+            self.arch.ces_per_tile,
+            self.arch.tech.name(),
+            self.arch.fps,
+            self.noc.topology.name(),
+            self.noc.bus_width,
+            self.noc.virtual_channels,
+            self.noc.buffer_depth,
+            self.noc.pipeline_stages,
+            self.noc.flits_per_packet,
+            self.sim.seed,
+            self.sim.warmup_cycles,
+            self.sim.measure_cycles,
+            self.sim.drain_cycles,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let a = ArchConfig::default();
+        assert_eq!(a.pe_size, 256);
+        assert_eq!(a.cell_bits, 1);
+        assert_eq!(a.n_bits, 8);
+        assert_eq!(a.adc_bits, 4);
+        assert_eq!(a.tech_nm, 32.0);
+        assert_eq!(a.freq_hz, 1.0e9);
+        let n = NocConfig::default();
+        assert_eq!(n.bus_width, 32);
+        assert_eq!(n.virtual_channels, 1);
+        assert_eq!(n.buffer_depth, 8);
+        assert_eq!(n.pipeline_stages, 3);
+    }
+
+    #[test]
+    fn ini_roundtrip() {
+        let cfg = Config::default();
+        let text = cfg.to_ini();
+        let parsed = Config::from_ini(&text).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn ini_overrides_and_rejects_unknown() {
+        let cfg = Config::from_ini("[arch]\npe_size = 128\ntech = sram\n").unwrap();
+        assert_eq!(cfg.arch.pe_size, 128);
+        assert_eq!(cfg.arch.tech, MemTech::Sram);
+        assert!(Config::from_ini("[arch]\nnot_a_key = 1\n").is_err());
+        assert!(Config::from_ini("[arch]\npe_size = banana\n").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        assert!(Config::from_ini("[arch]\npe_size = 100\n").is_err()); // not pow2
+        assert!(Config::from_ini("[noc]\nbus_width = 0\n").is_err());
+        assert!(Config::from_ini("[noc]\nvirtual_channels = 99\n").is_err());
+    }
+
+    #[test]
+    fn memtech_parse() {
+        assert_eq!(MemTech::parse("SRAM"), Some(MemTech::Sram));
+        assert_eq!(MemTech::parse("rram"), Some(MemTech::Reram));
+        assert_eq!(MemTech::parse("dram"), None);
+    }
+}

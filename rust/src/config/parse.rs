@@ -1,0 +1,150 @@
+//! Hand-rolled INI parser: `[section]` headers, `key = value` pairs,
+//! `#`/`;` comments, blank lines. Values keep interior whitespace; inline
+//! comments are supported after a `#` or `;` preceded by whitespace.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ini parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed INI document: ordered (section, key, value) triples.
+#[derive(Debug, Clone, Default)]
+pub struct IniDoc {
+    entries: Vec<(String, String, String)>,
+}
+
+impl IniDoc {
+    /// Iterate entries as (&section, &key, &value).
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &str)> {
+        self.entries
+            .iter()
+            .map(|(s, k, v)| (s.as_str(), k.as_str(), v.as_str()))
+    }
+
+    /// Look up a key in a section (last occurrence wins).
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_inline_comment(s: &str) -> &str {
+    // A comment starts at '#' or ';' that is at the start or preceded by
+    // whitespace (so values like "a#b" survive).
+    let bytes = s.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if (b == b'#' || b == b';') && (i == 0 || bytes[i - 1].is_ascii_whitespace()) {
+            return &s[..i];
+        }
+    }
+    s
+}
+
+/// Parse INI text into an [`IniDoc`].
+pub fn parse_ini(text: &str) -> Result<IniDoc, ParseError> {
+    let mut doc = IniDoc::default();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_inline_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(ParseError {
+                line: lineno,
+                message: "unterminated section header".into(),
+            })?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(ParseError {
+                    line: lineno,
+                    message: "empty section name".into(),
+                });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or(ParseError {
+            line: lineno,
+            message: format!("expected 'key = value', got '{line}'"),
+        })?;
+        let key = line[..eq].trim();
+        let value = line[eq + 1..].trim();
+        if key.is_empty() {
+            return Err(ParseError {
+                line: lineno,
+                message: "empty key".into(),
+            });
+        }
+        doc.entries
+            .push((section.clone(), key.to_string(), value.to_string()));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_keys_comments() {
+        let doc = parse_ini(
+            "# top comment\n[arch]\npe_size = 256  # inline\n\n; semicolon comment\n[noc]\ntopology = mesh\n",
+        )
+        .unwrap();
+        assert_eq!(doc.len(), 2);
+        assert_eq!(doc.get("arch", "pe_size"), Some("256"));
+        assert_eq!(doc.get("noc", "topology"), Some("mesh"));
+        assert_eq!(doc.get("noc", "missing"), None);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let doc = parse_ini("[a]\nk = 1\nk = 2\n").unwrap();
+        assert_eq!(doc.get("a", "k"), Some("2"));
+    }
+
+    #[test]
+    fn keyless_section_and_errors() {
+        assert!(parse_ini("[unterminated\n").is_err());
+        assert!(parse_ini("[ ]\n").is_err());
+        assert!(parse_ini("no-equals-here\n").is_err());
+        assert!(parse_ini("= value\n").is_err());
+    }
+
+    #[test]
+    fn value_with_hash_no_space_survives() {
+        let doc = parse_ini("[s]\nk = a#b\n").unwrap();
+        assert_eq!(doc.get("s", "k"), Some("a#b"));
+    }
+
+    #[test]
+    fn error_reports_line_number() {
+        let err = parse_ini("[ok]\nk = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 3);
+        assert!(err.to_string().contains("line 3"));
+    }
+}

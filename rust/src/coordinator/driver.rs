@@ -1,0 +1,193 @@
+//! Parallel sweep driver with result caching.
+//!
+//! Experiments evaluate many (DNN × technology × topology × NoC-config)
+//! points; cycle-accurate points are expensive (the paper: up to 80% of
+//! total analysis time), so the driver fans evaluations out over OS threads
+//! and memoizes completed points for the lifetime of the process.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::arch::{evaluate, ArchEvaluation, CommBackend};
+use crate::config::{ArchConfig, MemTech, NocConfig, SimConfig};
+use crate::dnn::{by_name, DnnGraph};
+use crate::noc::topology::Topology;
+
+/// Cache key for one evaluation point.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct EvalKey {
+    pub dnn: String,
+    pub tech: MemTech,
+    pub topology: Topology,
+    /// Distinguishing NoC parameters (bus width, VCs) and backend.
+    pub bus_width: usize,
+    pub virtual_channels: usize,
+    pub analytical: bool,
+    /// PE size (for the §5.2 crossbar-size study).
+    pub pe_size: usize,
+}
+
+impl EvalKey {
+    pub fn new(
+        graph: &DnnGraph,
+        arch: &ArchConfig,
+        noc: &NocConfig,
+        backend: CommBackend,
+    ) -> Self {
+        Self {
+            dnn: graph.name.clone(),
+            tech: arch.tech,
+            topology: noc.topology,
+            bus_width: noc.bus_width,
+            virtual_channels: noc.virtual_channels,
+            analytical: backend == CommBackend::Analytical,
+            pe_size: arch.pe_size,
+        }
+    }
+}
+
+/// The sweep driver.
+#[derive(Clone, Default)]
+pub struct Driver {
+    cache: Arc<Mutex<HashMap<EvalKey, ArchEvaluation>>>,
+    /// Worker threads for [`Driver::evaluate_many`]; defaults to
+    /// `available_parallelism`.
+    pub threads: Option<usize>,
+}
+
+impl Driver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate one point (memoized).
+    pub fn evaluate(
+        &self,
+        graph: &DnnGraph,
+        arch: &ArchConfig,
+        noc: &NocConfig,
+        sim: &SimConfig,
+        backend: CommBackend,
+    ) -> ArchEvaluation {
+        let key = EvalKey::new(graph, arch, noc, backend);
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return hit.clone();
+        }
+        let result = evaluate(graph, noc.topology, arch, noc, sim, backend);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, result.clone());
+        result
+    }
+
+    /// Evaluate a batch of points in parallel. Points are specified by DNN
+    /// name so they can cross thread boundaries cheaply; unknown names
+    /// panic (they indicate an experiment bug, not user input).
+    pub fn evaluate_many(
+        &self,
+        points: &[(String, ArchConfig, NocConfig, CommBackend)],
+    ) -> Vec<ArchEvaluation> {
+        let threads = self
+            .threads
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            })
+            .max(1);
+        let sim = SimConfig::default();
+        let work: Vec<(usize, (String, ArchConfig, NocConfig, CommBackend))> =
+            points.iter().cloned().enumerate().collect();
+        let work = Arc::new(Mutex::new(work));
+        let results: Arc<Mutex<Vec<Option<ArchEvaluation>>>> =
+            Arc::new(Mutex::new(vec![None; points.len()]));
+
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(points.len().max(1)) {
+                let work = Arc::clone(&work);
+                let results = Arc::clone(&results);
+                let driver = self.clone();
+                let sim = sim.clone();
+                scope.spawn(move || loop {
+                    let item = work.lock().unwrap().pop();
+                    let Some((idx, (dnn, arch, noc, backend))) = item else {
+                        break;
+                    };
+                    let graph = by_name(&dnn)
+                        .unwrap_or_else(|| panic!("unknown DNN in sweep: {dnn}"));
+                    let eval = driver.evaluate(&graph, &arch, &noc, &sim, backend);
+                    results.lock().unwrap()[idx] = Some(eval);
+                });
+            }
+        });
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("worker leaked results handle"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("sweep point not evaluated"))
+            .collect()
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    #[test]
+    fn cache_hits_are_stable() {
+        let d = Driver::new();
+        let g = models::mlp();
+        let arch = ArchConfig::default();
+        let noc = NocConfig::default();
+        let sim = SimConfig::default();
+        let a = d.evaluate(&g, &arch, &noc, &sim, CommBackend::Analytical);
+        assert_eq!(d.cache_len(), 1);
+        let b = d.evaluate(&g, &arch, &noc, &sim, CommBackend::Analytical);
+        assert_eq!(d.cache_len(), 1);
+        assert_eq!(a.comm_cycles, b.comm_cycles);
+    }
+
+    #[test]
+    fn parallel_sweep_preserves_order() {
+        let d = Driver::new();
+        let points: Vec<_> = ["MLP", "LeNet-5", "NiN"]
+            .iter()
+            .flat_map(|name| {
+                [Topology::Tree, Topology::Mesh].into_iter().map(|t| {
+                    (
+                        name.to_string(),
+                        ArchConfig::default(),
+                        NocConfig::with_topology(t),
+                        CommBackend::Analytical,
+                    )
+                })
+            })
+            .collect();
+        let results = d.evaluate_many(&points);
+        assert_eq!(results.len(), 6);
+        for (r, (name, _, noc, _)) in results.iter().zip(&points) {
+            assert_eq!(&r.dnn, name);
+            assert_eq!(r.topology, noc.topology);
+        }
+        assert_eq!(d.cache_len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "a scoped thread panicked")]
+    fn unknown_dnn_panics() {
+        let d = Driver { threads: Some(1), ..Driver::new() };
+        d.evaluate_many(&[(
+            "NotANet".into(),
+            ArchConfig::default(),
+            NocConfig::default(),
+            CommBackend::Analytical,
+        )]);
+    }
+}

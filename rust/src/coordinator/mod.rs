@@ -1,0 +1,11 @@
+//! Layer-3 coordination: the simulation driver that orchestrates
+//! circuit-estimator + NoC-simulator runs across DNNs/topologies/configs
+//! in parallel (the paper's "simulation framework", Fig. 6), and the
+//! inference serving loop that batches requests through the PJRT-compiled
+//! artifacts.
+
+pub mod driver;
+pub mod server;
+
+pub use driver::{Driver, EvalKey};
+pub use server::{InferenceServer, ServeReport};

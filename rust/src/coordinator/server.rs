@@ -1,0 +1,142 @@
+//! Inference serving loop: batches requests through a PJRT-compiled
+//! artifact and reports measured latency/throughput alongside what the
+//! modeled IMC chip would deliver for the same network.
+//!
+//! This is the functional end of the stack — the AOT artifacts compute the
+//! *quantized* IMC forward pass (bit-serial inputs + 4-bit ADC, Layer 1/2),
+//! while the architecture simulator prices the same computation on the
+//! modeled hardware. Python is never on this path.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{LoadedModel, Runtime};
+use crate::util::{percentile, Pcg32};
+
+/// Serving statistics for one run.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batch_size: usize,
+    pub batches: usize,
+    /// Wall-clock per batch, ms.
+    pub mean_batch_ms: f64,
+    pub p50_batch_ms: f64,
+    pub p99_batch_ms: f64,
+    /// Requests per second end to end.
+    pub throughput_rps: f64,
+    /// Output vectors per request (argmax class for classifiers).
+    pub outputs: Vec<Vec<f32>>,
+}
+
+/// A batched single-model inference server.
+pub struct InferenceServer {
+    runtime: Runtime,
+    batch_size: usize,
+}
+
+impl InferenceServer {
+    pub fn new(batch_size: usize) -> Result<Self> {
+        Ok(Self {
+            runtime: Runtime::cpu()?,
+            batch_size: batch_size.max(1),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Load a model artifact.
+    pub fn load(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.runtime.load(path)?;
+        Ok(())
+    }
+
+    /// Serve `requests` feature vectors of length `in_dim` through the
+    /// loaded artifact at `path`. The artifact must accept a single
+    /// `[batch, in_dim]` f32 input (the AOT models are lowered at a fixed
+    /// batch; requests are padded into full batches).
+    pub fn serve(
+        &mut self,
+        path: impl AsRef<std::path::Path>,
+        requests: &[Vec<f32>],
+        in_dim: usize,
+    ) -> Result<ServeReport> {
+        let model: &LoadedModel = self.runtime.load(path)?;
+        let bs = self.batch_size;
+        let mut batch_times = Vec::new();
+        let mut outputs = Vec::with_capacity(requests.len());
+        let t0 = Instant::now();
+        for chunk in requests.chunks(bs) {
+            // Pad the final partial batch.
+            let mut flat = Vec::with_capacity(bs * in_dim);
+            for r in chunk {
+                assert_eq!(r.len(), in_dim, "request feature length mismatch");
+                flat.extend_from_slice(r);
+            }
+            flat.resize(bs * in_dim, 0.0);
+            let tb = Instant::now();
+            let result = model.run_f32(&[(&flat, &[bs as i64, in_dim as i64])])?;
+            batch_times.push(tb.elapsed().as_secs_f64() * 1e3);
+            // First tuple element is the logits tensor [bs, classes].
+            let logits = &result[0];
+            let classes = logits.len() / bs;
+            for i in 0..chunk.len() {
+                outputs.push(logits[i * classes..(i + 1) * classes].to_vec());
+            }
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+        Ok(ServeReport {
+            requests: requests.len(),
+            batch_size: bs,
+            batches: batch_times.len(),
+            mean_batch_ms: crate::util::mean(&batch_times),
+            p50_batch_ms: percentile(&batch_times, 50.0),
+            p99_batch_ms: percentile(&batch_times, 99.0),
+            throughput_rps: requests.len() as f64 / total_s.max(1e-12),
+            outputs,
+        })
+    }
+}
+
+/// Generate a synthetic digit-like workload: `n` feature vectors in [0, 1)
+/// with a deterministic seed (the e2e example and benches share this).
+pub fn synthetic_requests(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_f64() as f32).collect())
+        .collect()
+}
+
+/// Argmax helper for classifier outputs.
+pub fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_requests_deterministic() {
+        let a = synthetic_requests(4, 8, 7);
+        let b = synthetic_requests(4, 8, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|r| r.len() == 8));
+        assert!(a.iter().flatten().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,401 @@
+//! The DNN DAG plus the neuron / connection-density accounting that drives
+//! the whole study (paper Fig. 1, Fig. 2, Eq. 14–16).
+
+use super::layer::{Layer, LayerKind};
+use super::Dataset;
+
+/// A DNN as a DAG of layers. `layers[0]` is always the [`LayerKind::Input`]
+/// node; edges point from producer to consumer via `Layer::inputs`.
+#[derive(Clone, Debug)]
+pub struct DnnGraph {
+    pub name: String,
+    pub dataset: Dataset,
+    pub layers: Vec<Layer>,
+}
+
+/// Density metrics. The paper uses "connection density" loosely; we compute
+/// both readings (see DESIGN.md §2):
+///
+/// * `structural_density` — average outgoing layer-level connections per
+///   neuron (linear nets = 1.0, Fig. 2's definition).
+/// * `synaptic_density` — average fan-in per neuron (the magnitude used by
+///   the Fig. 20 guidance rule and Eq. 16).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DensityReport {
+    pub neurons: usize,
+    pub structural_connections: usize,
+    pub structural_density: f64,
+    pub synaptic_density: f64,
+}
+
+impl DensityReport {
+    /// The paper's "connection density" at Fig. 20 magnitude (10³-scale
+    /// thresholds): effective connections per neuron *including reuse* —
+    /// each neuron's synaptic fan-in is re-read once per structural
+    /// consumer, so ρ = structural × synaptic. Linear ImageNet CNNs land
+    /// at ~2–4 × 10³ (mesh region), compact edge nets at ~10²
+    /// (tree region), matching the paper's placement of each DNN.
+    pub fn connection_density(&self) -> f64 {
+        self.structural_density * self.synaptic_density
+    }
+}
+
+impl DnnGraph {
+    pub fn new(name: impl Into<String>, dataset: Dataset) -> Self {
+        let (h, w, c) = dataset.input_dims();
+        Self {
+            name: name.into(),
+            dataset,
+            layers: vec![Layer {
+                name: "input".into(),
+                kind: LayerKind::Input,
+                inputs: vec![],
+                out_x: w,
+                out_y: h,
+                out_c: c,
+            }],
+        }
+    }
+
+    /// Append a layer; returns its index.
+    pub fn push(&mut self, layer: Layer) -> usize {
+        self.layers.push(layer);
+        self.layers.len() - 1
+    }
+
+    /// Convenience: conv + implicit ReLU consuming `from`, 'same' padding.
+    pub fn conv(
+        &mut self,
+        name: impl Into<String>,
+        from: usize,
+        k: usize,
+        c_out: usize,
+        stride: usize,
+    ) -> usize {
+        let src = &self.layers[from];
+        let (ix, iy, c_in) = (src.out_x, src.out_y, src.out_c);
+        // 'same' padding: out = ceil(in / stride).
+        let ox = ix.div_ceil(stride);
+        let oy = iy.div_ceil(stride);
+        self.push(Layer {
+            name: name.into(),
+            kind: LayerKind::Conv {
+                kx: k,
+                ky: k,
+                c_in,
+                c_out,
+                stride,
+            },
+            inputs: vec![from],
+            out_x: ox,
+            out_y: oy,
+            out_c: c_out,
+        })
+    }
+
+    /// Max/avg pool consuming `from`.
+    pub fn pool(&mut self, name: impl Into<String>, from: usize, k: usize, stride: usize) -> usize {
+        let src = &self.layers[from];
+        let (ix, iy, c) = (src.out_x, src.out_y, src.out_c);
+        self.push(Layer {
+            name: name.into(),
+            kind: LayerKind::Pool { k, stride },
+            inputs: vec![from],
+            out_x: ix / stride,
+            out_y: iy / stride,
+            out_c: c,
+        })
+    }
+
+    /// Global average pool to 1×1.
+    pub fn global_pool(&mut self, name: impl Into<String>, from: usize) -> usize {
+        let c = self.layers[from].out_c;
+        self.push(Layer {
+            name: name.into(),
+            kind: LayerKind::GlobalPool,
+            inputs: vec![from],
+            out_x: 1,
+            out_y: 1,
+            out_c: c,
+        })
+    }
+
+    /// Fully-connected layer consuming the flattened output of `from`.
+    pub fn fc(&mut self, name: impl Into<String>, from: usize, outputs: usize) -> usize {
+        let inputs = self.layers[from].output_elems();
+        self.push(Layer {
+            name: name.into(),
+            kind: LayerKind::Fc { inputs, outputs },
+            inputs: vec![from],
+            out_x: 1,
+            out_y: 1,
+            out_c: outputs,
+        })
+    }
+
+    /// Residual elementwise add of two branches (shapes must match).
+    pub fn add(&mut self, name: impl Into<String>, a: usize, b: usize) -> usize {
+        let (la, lb) = (&self.layers[a], &self.layers[b]);
+        assert_eq!(
+            (la.out_x, la.out_y, la.out_c),
+            (lb.out_x, lb.out_y, lb.out_c),
+            "residual add shape mismatch in {}",
+            self.name
+        );
+        let (x, y, c) = (la.out_x, la.out_y, la.out_c);
+        self.push(Layer {
+            name: name.into(),
+            kind: LayerKind::Add,
+            inputs: vec![a, b],
+            out_x: x,
+            out_y: y,
+            out_c: c,
+        })
+    }
+
+    /// Channel concat of several branches (spatial dims must match).
+    pub fn concat(&mut self, name: impl Into<String>, parts: &[usize]) -> usize {
+        assert!(!parts.is_empty());
+        let (x, y) = (self.layers[parts[0]].out_x, self.layers[parts[0]].out_y);
+        let mut c = 0;
+        for &p in parts {
+            assert_eq!(
+                (self.layers[p].out_x, self.layers[p].out_y),
+                (x, y),
+                "concat spatial mismatch in {}",
+                self.name
+            );
+            c += self.layers[p].out_c;
+        }
+        self.push(Layer {
+            name: name.into(),
+            kind: LayerKind::Concat,
+            inputs: parts.to_vec(),
+            out_x: x,
+            out_y: y,
+            out_c: c,
+        })
+    }
+
+    /// Indices of weight-bearing layers (conv/FC) in topological (insertion)
+    /// order. These are the layers that map onto crossbar tiles.
+    pub fn weight_layers(&self) -> Vec<usize> {
+        (0..self.layers.len())
+            .filter(|&i| self.layers[i].kind.has_weights())
+            .collect()
+    }
+
+    pub fn num_weight_layers(&self) -> usize {
+        self.weight_layers().len()
+    }
+
+    /// Total neurons (paper Fig. 1 x-axis).
+    pub fn neurons(&self) -> usize {
+        self.layers.iter().map(|l| l.neurons()).sum()
+    }
+
+    /// Total weights across the network.
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+
+    /// Total MACs for one inference.
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Input activations consumed by weight layer `li` (paper `A_i`): the
+    /// number of activation *elements* that must arrive at layer `li`'s
+    /// tiles, i.e. the flattened outputs of its predecessors (transitively
+    /// resolving weight-less nodes like pool/add/concat to their source
+    /// volume).
+    pub fn input_activations(&self, li: usize) -> usize {
+        self.layers[li]
+            .inputs
+            .iter()
+            .map(|&p| self.layers[p].output_elems())
+            .sum()
+    }
+
+    /// Number of structural (layer-level) connections each producer neuron
+    /// of layer `li` fans out to, used for the density report: the count of
+    /// weight-layer consumers reachable through weight-less nodes.
+    fn weight_consumers(&self, li: usize) -> usize {
+        let mut count = 0;
+        for (j, layer) in self.layers.iter().enumerate() {
+            if j == li {
+                continue;
+            }
+            if layer.inputs.contains(&li) {
+                if layer.kind.has_weights() {
+                    count += 1;
+                } else {
+                    count += self.weight_consumers(j);
+                }
+            }
+        }
+        count
+    }
+
+    /// Density metrics (see [`DensityReport`]).
+    pub fn density_report(&self) -> DensityReport {
+        let neurons = self.neurons();
+        let mut structural = 0usize;
+        let mut synapse_weighted = 0.0f64;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let n = layer.neurons();
+            if n > 0 {
+                // Terminal layers feed the network output: one connection
+                // (this is what makes a strictly linear net density 1.0,
+                // Fig. 2).
+                structural += n * self.weight_consumers(i).max(1);
+                synapse_weighted += (n * layer.fan_in()) as f64;
+            }
+        }
+        DensityReport {
+            neurons,
+            structural_connections: structural,
+            structural_density: if neurons == 0 {
+                0.0
+            } else {
+                structural as f64 / neurons as f64
+            },
+            synaptic_density: if neurons == 0 {
+                0.0
+            } else {
+                synapse_weighted / neurons as f64
+            },
+        }
+    }
+
+    /// Structural sanity checks: DAG order, edge validity, single input.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() || self.layers[0].kind != LayerKind::Input {
+            return Err("layer 0 must be the Input node".into());
+        }
+        for (i, layer) in self.layers.iter().enumerate() {
+            if i == 0 {
+                if !layer.inputs.is_empty() {
+                    return Err("input node must have no predecessors".into());
+                }
+                continue;
+            }
+            if layer.inputs.is_empty() {
+                return Err(format!("layer {} '{}' has no inputs", i, layer.name));
+            }
+            for &p in &layer.inputs {
+                if p >= i {
+                    return Err(format!(
+                        "layer {} '{}' references non-topological input {}",
+                        i, layer.name, p
+                    ));
+                }
+            }
+            if layer.out_x == 0 || layer.out_y == 0 || layer.out_c == 0 {
+                return Err(format!("layer {} '{}' has empty output", i, layer.name));
+            }
+            if let LayerKind::Conv { c_in, c_out, .. } = layer.kind {
+                let got: usize = layer.inputs.iter().map(|&p| self.layers[p].out_c).sum();
+                // Depthwise convolutions carry c_in = 1 (per-channel filter)
+                // with c_out equal to the input channel count.
+                let depthwise = c_in == 1 && c_out == got;
+                if got != c_in && !depthwise {
+                    return Err(format!(
+                        "layer {} '{}': c_in {} != sum of input channels {}",
+                        i, layer.name, c_in, got
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// input -> conv(16) -> conv(32) -> fc(10): a strictly linear net.
+    fn tiny_linear() -> DnnGraph {
+        let mut g = DnnGraph::new("tiny", Dataset::Mnist);
+        let c1 = g.conv("c1", 0, 3, 16, 1);
+        let c2 = g.conv("c2", c1, 3, 32, 2);
+        g.fc("fc", c2, 10);
+        g
+    }
+
+    #[test]
+    fn linear_density_is_exactly_one() {
+        let g = tiny_linear();
+        g.validate().unwrap();
+        let r = g.density_report();
+        assert_eq!(r.neurons, 16 + 32 + 10);
+        // c1 feeds c2; c2 feeds fc; fc feeds the network output.
+        assert_eq!(r.structural_connections, 16 + 32 + 10);
+        assert!((r.structural_density - 1.0).abs() < 1e-12);
+        assert!(r.connection_density() > r.synaptic_density * 0.99);
+    }
+
+    #[test]
+    fn residual_raises_density() {
+        let mut g = DnnGraph::new("res", Dataset::Cifar);
+        let c1 = g.conv("c1", 0, 3, 16, 1);
+        let c2 = g.conv("c2", c1, 3, 16, 1);
+        let add = g.add("add", c1, c2);
+        g.conv("c3", add, 3, 16, 1);
+        g.validate().unwrap();
+        // c1 feeds c2 directly AND c3 through the add -> 2 consumers.
+        let r = g.density_report();
+        let lin = tiny_linear().density_report();
+        assert!(r.structural_density > lin.structural_density);
+    }
+
+    #[test]
+    fn concat_propagates_channels() {
+        let mut g = DnnGraph::new("cat", Dataset::Cifar);
+        let a = g.conv("a", 0, 3, 8, 1);
+        let b = g.conv("b", a, 3, 8, 1);
+        let cat = g.concat("cat", &[a, b]);
+        assert_eq!(g.layers[cat].out_c, 16);
+        let c = g.conv("c", cat, 1, 4, 1);
+        assert_eq!(g.layers[c].out_c, 4);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn input_activations_resolve_predecessors() {
+        let g = tiny_linear();
+        let wl = g.weight_layers();
+        // First conv consumes the 28*28*1 input image.
+        assert_eq!(g.input_activations(wl[0]), 28 * 28);
+        // Second conv consumes c1's 28*28*16 output.
+        assert_eq!(g.input_activations(wl[1]), 28 * 28 * 16);
+    }
+
+    #[test]
+    fn validate_catches_bad_graphs() {
+        let mut g = tiny_linear();
+        g.layers[2].inputs = vec![5]; // forward reference
+        assert!(g.validate().is_err());
+
+        let mut g2 = tiny_linear();
+        if let LayerKind::Conv { ref mut c_in, .. } = g2.layers[2].kind {
+            *c_in = 999;
+        }
+        assert!(g2.validate().is_err());
+    }
+
+    #[test]
+    fn stride_and_pool_shapes() {
+        let mut g = DnnGraph::new("s", Dataset::ImageNet);
+        let c = g.conv("c", 0, 7, 64, 2); // 224 -> 112
+        assert_eq!(g.layers[c].out_x, 112);
+        let p = g.pool("p", c, 3, 2); // 112 -> 56
+        assert_eq!(g.layers[p].out_x, 56);
+        let gp = g.global_pool("gp", p);
+        assert_eq!(
+            (g.layers[gp].out_x, g.layers[gp].out_y, g.layers[gp].out_c),
+            (1, 1, 64)
+        );
+    }
+}

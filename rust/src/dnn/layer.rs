@@ -1,0 +1,167 @@
+//! Layer descriptors. A layer is a node of the DNN DAG; edges are recorded
+//! as predecessor indices on each node (see [`crate::dnn::graph`]).
+
+/// What a layer computes. Only the shape-relevant structure is captured.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// Network input (one per graph, index 0).
+    Input,
+    /// 2-D convolution, `c_in -> c_out` channels with a `kx × ky` kernel.
+    Conv {
+        kx: usize,
+        ky: usize,
+        c_in: usize,
+        c_out: usize,
+        stride: usize,
+    },
+    /// Fully-connected layer.
+    Fc { inputs: usize, outputs: usize },
+    /// Pooling (max or average — identical for our purposes).
+    Pool { k: usize, stride: usize },
+    /// Elementwise addition of predecessors (residual join).
+    Add,
+    /// Channel concatenation of predecessors (dense join).
+    Concat,
+    /// Global average pool to 1×1.
+    GlobalPool,
+}
+
+impl LayerKind {
+    /// Does this layer hold weights (and therefore map onto crossbars)?
+    pub fn has_weights(&self) -> bool {
+        matches!(self, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Input => "input",
+            LayerKind::Conv { .. } => "conv",
+            LayerKind::Fc { .. } => "fc",
+            LayerKind::Pool { .. } => "pool",
+            LayerKind::Add => "add",
+            LayerKind::Concat => "concat",
+            LayerKind::GlobalPool => "gap",
+        }
+    }
+}
+
+/// One node of the DNN graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    /// Human-readable name, e.g. "conv3_2".
+    pub name: String,
+    pub kind: LayerKind,
+    /// Indices (into `DnnGraph::layers`) of the layers feeding this one.
+    pub inputs: Vec<usize>,
+    /// Output spatial size and channels.
+    pub out_x: usize,
+    pub out_y: usize,
+    pub out_c: usize,
+}
+
+impl Layer {
+    /// Number of output activation elements (`x·y·c`).
+    pub fn output_elems(&self) -> usize {
+        self.out_x * self.out_y * self.out_c
+    }
+
+    /// Paper definition of "neurons": output feature maps for conv, units
+    /// for FC. Non-weight layers contribute no neurons of their own.
+    pub fn neurons(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { c_out, .. } => c_out,
+            LayerKind::Fc { outputs, .. } => outputs,
+            _ => 0,
+        }
+    }
+
+    /// Fan-in per neuron (synaptic connections): `c_in·kx·ky` for conv,
+    /// `inputs` for FC. Zero for weight-less layers.
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { kx, ky, c_in, .. } => kx * ky * c_in,
+            LayerKind::Fc { inputs, .. } => inputs,
+            _ => 0,
+        }
+    }
+
+    /// Weight count (for storage accounting).
+    pub fn weights(&self) -> usize {
+        self.neurons() * self.fan_in()
+    }
+
+    /// Multiply–accumulate operations to evaluate this layer once.
+    pub fn macs(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { .. } => self.out_x * self.out_y * self.out_c * self.fan_in(),
+            LayerKind::Fc { .. } => self.weights(),
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv3x3() -> Layer {
+        Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv {
+                kx: 3,
+                ky: 3,
+                c_in: 64,
+                c_out: 128,
+                stride: 1,
+            },
+            inputs: vec![0],
+            out_x: 56,
+            out_y: 56,
+            out_c: 128,
+        }
+    }
+
+    #[test]
+    fn conv_accounting() {
+        let l = conv3x3();
+        assert_eq!(l.neurons(), 128);
+        assert_eq!(l.fan_in(), 3 * 3 * 64);
+        assert_eq!(l.weights(), 128 * 576);
+        assert_eq!(l.macs(), 56 * 56 * 128 * 576);
+        assert!(l.kind.has_weights());
+    }
+
+    #[test]
+    fn fc_accounting() {
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc {
+                inputs: 4096,
+                outputs: 1000,
+            },
+            inputs: vec![1],
+            out_x: 1,
+            out_y: 1,
+            out_c: 1000,
+        };
+        assert_eq!(l.neurons(), 1000);
+        assert_eq!(l.fan_in(), 4096);
+        assert_eq!(l.macs(), 4096 * 1000);
+    }
+
+    #[test]
+    fn weightless_layers() {
+        let l = Layer {
+            name: "p".into(),
+            kind: LayerKind::Pool { k: 2, stride: 2 },
+            inputs: vec![0],
+            out_x: 14,
+            out_y: 14,
+            out_c: 64,
+        };
+        assert_eq!(l.neurons(), 0);
+        assert_eq!(l.macs(), 0);
+        assert!(!l.kind.has_weights());
+        assert_eq!(l.output_elems(), 14 * 14 * 64);
+    }
+}

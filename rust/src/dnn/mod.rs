@@ -1,0 +1,133 @@
+//! DNN workload specification: layer graphs (DAGs), neuron and
+//! connection-density accounting (paper Fig. 1/2), and a model zoo covering
+//! every network the paper evaluates (MLP, LeNet-5, NiN, SqueezeNet,
+//! VGG-16/19, ResNet-50/152, DenseNet-40/100/121).
+//!
+//! Only quantities that drive the hardware study are modeled: layer shapes,
+//! kernel sizes, channel counts, and inter-layer connectivity (including
+//! residual skips and dense concatenations). Weights/pixel values never
+//! matter here — the interconnect study depends on data *volumes* (Eq. 3).
+
+pub mod graph;
+pub mod layer;
+pub mod models;
+
+pub use graph::{DensityReport, DnnGraph};
+pub use layer::{Layer, LayerKind};
+
+/// Dataset a model is defined for (sets the input resolution; Fig. 1 groups
+/// models by dataset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Mnist,
+    Cifar,
+    ImageNet,
+}
+
+impl Dataset {
+    /// (height, width, channels) of one input frame.
+    pub fn input_dims(self) -> (usize, usize, usize) {
+        match self {
+            Dataset::Mnist => (28, 28, 1),
+            Dataset::Cifar => (32, 32, 3),
+            Dataset::ImageNet => (224, 224, 3),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::Mnist => "MNIST",
+            Dataset::Cifar => "CIFAR",
+            Dataset::ImageNet => "ImageNet",
+        }
+    }
+}
+
+/// The six representative DNNs of the paper's evaluation (§6.4), in the
+/// order every figure reports them: three low-connection-density networks
+/// (MLP, LeNet-5, NiN) then three high-density ones (ResNet-50, VGG-19,
+/// DenseNet-100).
+pub fn eval_set() -> Vec<DnnGraph> {
+    vec![
+        models::mlp(),
+        models::lenet5(),
+        models::nin(),
+        models::resnet(50),
+        models::vgg(19),
+        models::densenet(100),
+    ]
+}
+
+/// The full zoo (Fig. 1 scatter + §5.2 crossbar-size study set).
+pub fn model_zoo() -> Vec<DnnGraph> {
+    vec![
+        models::mlp(),
+        models::lenet5(),
+        models::nin(),
+        models::squeezenet(),
+        models::mobilenet(),
+        models::alexnet(),
+        models::vgg(11),
+        models::vgg(13),
+        models::vgg(16),
+        models::vgg(19),
+        models::resnet(18),
+        models::resnet(34),
+        models::resnet(50),
+        models::resnet(101),
+        models::resnet(152),
+        models::densenet(40),
+        models::densenet(100),
+        models::densenet(121),
+    ]
+}
+
+/// Look a zoo model up by (case-insensitive) name, e.g. "vgg-19".
+pub fn by_name(name: &str) -> Option<DnnGraph> {
+    let want = name.to_ascii_lowercase().replace(['_', ' '], "-");
+    model_zoo()
+        .into_iter()
+        .find(|m| m.name.to_ascii_lowercase() == want)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_builds_and_validates() {
+        for m in model_zoo() {
+            m.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+            assert!(m.num_weight_layers() > 0, "{} has no weight layers", m.name);
+        }
+    }
+
+    #[test]
+    fn eval_set_order_matches_paper() {
+        let names: Vec<_> = eval_set().iter().map(|m| m.name.clone()).collect();
+        assert_eq!(
+            names,
+            vec!["MLP", "LeNet-5", "NiN", "ResNet-50", "VGG-19", "DenseNet-100"]
+        );
+    }
+
+    #[test]
+    fn by_name_variants() {
+        assert!(by_name("VGG-19").is_some());
+        assert!(by_name("vgg_19").is_some());
+        assert!(by_name("densenet-100").is_some());
+        assert!(by_name("nonexistent-net").is_none());
+    }
+
+    #[test]
+    fn density_ordering_matches_fig1() {
+        // Linear nets have structural density 1.0; residual slightly above;
+        // dense structures well above (paper Fig. 2).
+        let lin = models::vgg(19).density_report().structural_density;
+        let res = models::resnet(50).density_report().structural_density;
+        let den = models::densenet(100).density_report().structural_density;
+        assert!((lin - 1.0).abs() < 1e-9, "VGG-19 structural density {lin}");
+        assert!(res > 1.0 && res < 4.0, "ResNet-50 {res}");
+        assert!(den > res, "DenseNet-100 {den} should exceed ResNet {res}");
+    }
+}

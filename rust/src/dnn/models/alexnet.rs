@@ -1,0 +1,111 @@
+//! AlexNet (Krizhevsky et al. 2012) and MobileNetV1 (Howard et al. 2017) —
+//! additional Fig. 1 density points: AlexNet is an early linear ImageNet
+//! CNN; MobileNet's depthwise-separable convolutions give the lowest
+//! synaptic density of any ImageNet model (an edge design point).
+
+use crate::dnn::{Dataset, DnnGraph, Layer, LayerKind};
+
+/// Build AlexNet (the single-tower variant).
+pub fn alexnet() -> DnnGraph {
+    let mut g = DnnGraph::new("AlexNet", Dataset::ImageNet);
+    let c1 = g.conv("conv1", 0, 11, 96, 4); // 224/4 = 56
+    let p1 = g.pool("pool1", c1, 3, 2); // 28
+    let c2 = g.conv("conv2", p1, 5, 256, 1);
+    let p2 = g.pool("pool2", c2, 3, 2); // 14
+    let c3 = g.conv("conv3", p2, 3, 384, 1);
+    let c4 = g.conv("conv4", c3, 3, 384, 1);
+    let c5 = g.conv("conv5", c4, 3, 256, 1);
+    let p5 = g.pool("pool5", c5, 3, 2); // 7
+    let f6 = g.fc("fc6", p5, 4096);
+    let f7 = g.fc("fc7", f6, 4096);
+    g.fc("fc8", f7, 1000);
+    g
+}
+
+/// A depthwise conv: one k×k filter per channel (fan-in k²).
+fn depthwise(g: &mut DnnGraph, name: &str, from: usize, k: usize, stride: usize) -> usize {
+    let src = &g.layers[from];
+    let (ix, iy, c) = (src.out_x, src.out_y, src.out_c);
+    let ox = ix.div_ceil(stride);
+    let oy = iy.div_ceil(stride);
+    g.push(Layer {
+        name: name.into(),
+        kind: LayerKind::Conv {
+            kx: k,
+            ky: k,
+            c_in: 1, // per-channel filter: fan-in k*k
+            c_out: c,
+            stride,
+        },
+        inputs: vec![from],
+        out_x: ox,
+        out_y: oy,
+        out_c: c,
+    })
+}
+
+/// Build MobileNetV1 (width 1.0).
+pub fn mobilenet() -> DnnGraph {
+    let mut g = DnnGraph::new("MobileNetV1", Dataset::ImageNet);
+    let mut prev = g.conv("conv0", 0, 3, 32, 2); // 112
+    // (pointwise out channels, stride of the depthwise stage)
+    let stages: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, &(c_out, stride)) in stages.iter().enumerate() {
+        let dw = depthwise(&mut g, &format!("dw{}", i + 1), prev, 3, stride);
+        prev = g.conv(format!("pw{}", i + 1), dw, 1, c_out, 1);
+    }
+    let gp = g.global_pool("gap", prev);
+    g.fc("fc", gp, 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_reference_counts() {
+        let g = alexnet();
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 8);
+        // Published single-tower AlexNet params ~61M; our 'same'-padding
+        // bookkeeping keeps 7x7 (vs 6x6) into fc6, giving ~76M — same
+        // order, same layer structure.
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((55.0..85.0).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn mobilenet_reference_counts() {
+        let g = mobilenet();
+        g.validate().unwrap();
+        // conv0 + 13x(dw+pw) + fc = 28 weight layers.
+        assert_eq!(g.num_weight_layers(), 28);
+        // Published MobileNetV1 params ~4.2M.
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((3.5..5.0).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn mobilenet_lowest_imagenet_density() {
+        // Depthwise separability slashes fan-in: MobileNet's synaptic
+        // density must be far below AlexNet/VGG.
+        let m = mobilenet().density_report().synaptic_density;
+        let a = alexnet().density_report().synaptic_density;
+        assert!(m < a / 3.0, "mobilenet {m} vs alexnet {a}");
+    }
+}

@@ -1,0 +1,87 @@
+//! Compact / classic networks: MLP, LeNet-5, Network-in-Network.
+
+use crate::dnn::{Dataset, DnnGraph};
+
+/// 3-layer MLP on MNIST (784–512–256–10) — the paper's lowest-density model.
+pub fn mlp() -> DnnGraph {
+    let mut g = DnnGraph::new("MLP", Dataset::Mnist);
+    let f1 = g.fc("fc1", 0, 512);
+    let f2 = g.fc("fc2", f1, 256);
+    g.fc("fc3", f2, 10);
+    g
+}
+
+/// LeNet-5 (LeCun et al. 1998) on MNIST.
+pub fn lenet5() -> DnnGraph {
+    let mut g = DnnGraph::new("LeNet-5", Dataset::Mnist);
+    let c1 = g.conv("conv1", 0, 5, 6, 1); // 28x28x6 ('same' padding)
+    let p1 = g.pool("pool1", c1, 2, 2); // 14x14x6
+    let c2 = g.conv("conv2", p1, 5, 16, 1); // 14x14x16
+    let p2 = g.pool("pool2", c2, 2, 2); // 7x7x16
+    let f1 = g.fc("fc1", p2, 120);
+    let f2 = g.fc("fc2", f1, 84);
+    g.fc("fc3", f2, 10);
+    g
+}
+
+/// Network-in-Network (Lin et al. 2013) on CIFAR: three mlpconv stacks of
+/// one spatial conv followed by two 1×1 convs.
+pub fn nin() -> DnnGraph {
+    let mut g = DnnGraph::new("NiN", Dataset::Cifar);
+    // Block 1
+    let c = g.conv("conv1", 0, 5, 192, 1);
+    let c = g.conv("cccp1", c, 1, 160, 1);
+    let c = g.conv("cccp2", c, 1, 96, 1);
+    let p = g.pool("pool1", c, 3, 2); // 32 -> 16
+    // Block 2
+    let c = g.conv("conv2", p, 5, 192, 1);
+    let c = g.conv("cccp3", c, 1, 192, 1);
+    let c = g.conv("cccp4", c, 1, 192, 1);
+    let p = g.pool("pool2", c, 3, 2); // 16 -> 8
+    // Block 3
+    let c = g.conv("conv3", p, 3, 192, 1);
+    let c = g.conv("cccp5", c, 1, 192, 1);
+    let c = g.conv("cccp6", c, 1, 100, 1); // CIFAR-100 head
+    g.global_pool("gap", c);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_shapes() {
+        let g = mlp();
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 3);
+        assert_eq!(g.neurons(), 512 + 256 + 10);
+        assert_eq!(g.total_weights(), 784 * 512 + 512 * 256 + 256 * 10);
+    }
+
+    #[test]
+    fn lenet_shapes() {
+        let g = lenet5();
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 5);
+        // fc1 consumes 7*7*16 = 784 flattened activations.
+        let wl = g.weight_layers();
+        assert_eq!(g.input_activations(wl[2]), 7 * 7 * 16);
+        assert_eq!(g.neurons(), 6 + 16 + 120 + 84 + 10);
+    }
+
+    #[test]
+    fn nin_shapes() {
+        let g = nin();
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 9);
+        // Final conv emits 8x8x100 before global pooling.
+        let last_conv = g
+            .layers
+            .iter()
+            .rev()
+            .find(|l| l.kind.has_weights())
+            .unwrap();
+        assert_eq!((last_conv.out_x, last_conv.out_c), (8, 100));
+    }
+}

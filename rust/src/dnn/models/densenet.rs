@@ -1,0 +1,118 @@
+//! DenseNets (Huang et al. 2017) on CIFAR — the paper's representative
+//! dense-connectivity networks.
+//!
+//! DenseNet-40 and DenseNet-100 are the *plain* variants from the DenseNet
+//! paper's CIFAR table (k = 12, no bottleneck, no compression; 1.0M and
+//! 7.0M parameters) — these carry the high structural connection density
+//! the paper's Fig. 1/20 placement relies on. DenseNet-121 is the BC
+//! variant (bottleneck + 0.5 compression, k = 32).
+
+use crate::dnn::{Dataset, DnnGraph};
+
+/// Build DenseNet-`depth` for CIFAR (depth ∈ {40, 100, 121}).
+pub fn densenet(depth: usize) -> DnnGraph {
+    let (growth, bottleneck, layers_per_block, compression): (usize, bool, usize, f64) =
+        match depth {
+            // DenseNet-40: 3 blocks × 12 convs, k=12, plain.
+            40 => (12, false, 12, 1.0),
+            // DenseNet-100: 3 blocks × 32 convs, k=12, plain (7.0M params).
+            100 => (12, false, 32, 1.0),
+            // DenseNet-BC-121-style on CIFAR: k=32, 3 blocks × 13, θ=0.5.
+            121 => (32, true, 13, 0.5),
+            _ => panic!("unsupported DenseNet depth {depth}"),
+        };
+    let mut g = DnnGraph::new(format!("DenseNet-{depth}"), Dataset::Cifar);
+    let mut prev = g.conv("conv0", 0, 3, 2 * growth, 1);
+
+    for block in 0..3 {
+        // Every layer in the block consumes the concat of ALL previous
+        // outputs in the block (this is what drives connection density up).
+        let mut feeds: Vec<usize> = vec![prev];
+        for l in 0..layers_per_block {
+            let tag = |part: &str| format!("b{}l{}_{part}", block + 1, l + 1);
+            let cat = if feeds.len() == 1 {
+                feeds[0]
+            } else {
+                g.concat(tag("cat"), &feeds)
+            };
+            let new = if bottleneck {
+                let b = g.conv(tag("bn1x1"), cat, 1, 4 * growth, 1);
+                g.conv(tag("conv"), b, 3, growth, 1)
+            } else {
+                g.conv(tag("conv"), cat, 3, growth, 1)
+            };
+            feeds.push(new);
+        }
+        let cat = g.concat(format!("b{}_out", block + 1), &feeds);
+        prev = cat;
+        if block < 2 {
+            // Transition: 1x1 conv (+ compression for BC) + 2x2 avg pool.
+            let c = (g.layers[cat].out_c as f64 * compression).floor() as usize;
+            let t = g.conv(format!("trans{}_conv", block + 1), cat, 1, c, 1);
+            prev = g.pool(format!("trans{}_pool", block + 1), t, 2, 2);
+        }
+    }
+    let gp = g.global_pool("gap", prev);
+    g.fc("fc", gp, 100);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densenet100_reference_counts() {
+        let g = densenet(100);
+        g.validate().unwrap();
+        // 1 stem + 3*32 block convs + 2 transition convs + 1 fc = 100.
+        assert_eq!(g.num_weight_layers(), 100);
+        // Published plain DenseNet-100 (k=12) params ~7.0M.
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((6.0..8.0).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn densenet40_reference_counts() {
+        let g = densenet(40);
+        g.validate().unwrap();
+        // 1 stem + 3*12 + 2 transitions + 1 fc = 40.
+        assert_eq!(g.num_weight_layers(), 40);
+        // Published DenseNet-40 (k=12) params ~1.0M.
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((0.8..1.3).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn densenet121_bc_builds() {
+        let g = densenet(121);
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 1 + 3 * 13 * 2 + 2 + 1);
+    }
+
+    #[test]
+    fn dense_density_dominates() {
+        let d = densenet(100).density_report();
+        // Each block layer fans out to every later layer in the block: the
+        // structural density must far exceed residual nets.
+        assert!(
+            d.structural_density > 8.0,
+            "DenseNet-100 structural density {}",
+            d.structural_density
+        );
+        // Fig. 20: DenseNet-100 must land in the mesh region (> 2e3).
+        assert!(
+            d.connection_density() > 2.0e3,
+            "connection density {}",
+            d.connection_density()
+        );
+    }
+
+    #[test]
+    fn channel_growth_within_block() {
+        let g = densenet(40);
+        // After block 1 (12 layers of growth 12 on a 24-ch stem):
+        let b1 = g.layers.iter().find(|l| l.name == "b1_out").unwrap();
+        assert_eq!(b1.out_c, 24 + 12 * 12);
+    }
+}

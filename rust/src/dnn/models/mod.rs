@@ -1,0 +1,16 @@
+//! Model zoo generators. Layer shapes follow the original papers; graphs
+//! are generated programmatically (no giant hand-written tables).
+
+mod alexnet;
+mod classic;
+mod densenet;
+mod resnet;
+mod squeezenet;
+mod vgg;
+
+pub use alexnet::{alexnet, mobilenet};
+pub use classic::{lenet5, mlp, nin};
+pub use densenet::densenet;
+pub use resnet::resnet;
+pub use squeezenet::squeezenet;
+pub use vgg::vgg;

@@ -1,0 +1,102 @@
+//! ResNets (He et al. 2016) on ImageNet — the paper's representative
+//! residual-connectivity networks (ResNet-50 in the eval set, ResNet-152 in
+//! the crossbar-size study, ResNet-18 for density scatter coverage).
+
+use crate::dnn::{Dataset, DnnGraph};
+
+/// Build ResNet-`depth` (18 = basic blocks; 50/101/152 = bottleneck).
+pub fn resnet(depth: usize) -> DnnGraph {
+    let (bottleneck, blocks): (bool, [usize; 4]) = match depth {
+        18 => (false, [2, 2, 2, 2]),
+        34 => (false, [3, 4, 6, 3]),
+        50 => (true, [3, 4, 6, 3]),
+        101 => (true, [3, 4, 23, 3]),
+        152 => (true, [3, 8, 36, 3]),
+        _ => panic!("unsupported ResNet depth {depth}"),
+    };
+    let mut g = DnnGraph::new(format!("ResNet-{depth}"), Dataset::ImageNet);
+    // Stem: 7x7/2 conv + 3x3/2 maxpool -> 56x56x64.
+    let stem = g.conv("conv1", 0, 7, 64, 2);
+    let mut prev = g.pool("pool1", stem, 3, 2);
+
+    let widths = [64usize, 128, 256, 512];
+    for (stage, (&reps, &w)) in blocks.iter().zip(&widths).enumerate() {
+        for b in 0..reps {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let tag = |part: &str| format!("s{}b{}_{part}", stage + 1, b + 1);
+            let out_c = if bottleneck { w * 4 } else { w };
+            // Main branch.
+            let main = if bottleneck {
+                let c1 = g.conv(tag("c1"), prev, 1, w, stride);
+                let c2 = g.conv(tag("c2"), c1, 3, w, 1);
+                g.conv(tag("c3"), c2, 1, out_c, 1)
+            } else {
+                let c1 = g.conv(tag("c1"), prev, 3, w, stride);
+                g.conv(tag("c2"), c1, 3, w, 1)
+            };
+            // Shortcut branch: 1x1 projection whenever shape changes.
+            let shortcut = if g.layers[prev].out_c != out_c || stride != 1 {
+                g.conv(tag("proj"), prev, 1, out_c, stride)
+            } else {
+                prev
+            };
+            prev = g.add(tag("add"), main, shortcut);
+        }
+    }
+    let gp = g.global_pool("gap", prev);
+    g.fc("fc", gp, 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_reference_counts() {
+        let g = resnet(50);
+        g.validate().unwrap();
+        // 53 convs + 1 fc (49 main/stem + 4 projections).
+        assert_eq!(g.num_weight_layers(), 54);
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((25.0..26.0).contains(&w), "weights {w}M");
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((3.8..4.3).contains(&m), "MACs {m}G");
+    }
+
+    #[test]
+    fn resnet152_reference_counts() {
+        let g = resnet(152);
+        g.validate().unwrap();
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((59.0..61.0).contains(&w), "weights {w}M");
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((11.0..12.0).contains(&m), "MACs {m}G");
+    }
+
+    #[test]
+    fn resnet18_reference_counts() {
+        let g = resnet(18);
+        g.validate().unwrap();
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((11.0..12.0).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn density_above_one() {
+        let r = resnet(50).density_report();
+        assert!(
+            r.structural_density > 1.0,
+            "residual nets must exceed density 1, got {}",
+            r.structural_density
+        );
+    }
+
+    #[test]
+    fn final_stage_shape() {
+        let g = resnet(50);
+        // Last add before gap is 7x7x2048.
+        let gap = g.layers.iter().find(|l| l.name == "gap").unwrap();
+        assert_eq!(gap.out_c, 2048);
+    }
+}

@@ -1,0 +1,56 @@
+//! SqueezeNet v1.1 (Iandola et al. 2016) on ImageNet — a compact edge model
+//! used in the paper's crossbar-size study (§5.2).
+
+use crate::dnn::{Dataset, DnnGraph};
+
+/// A fire module: squeeze 1×1 then parallel expand 1×1 / 3×3, concatenated.
+fn fire(g: &mut DnnGraph, name: &str, from: usize, squeeze: usize, expand: usize) -> usize {
+    let s = g.conv(format!("{name}_sq1x1"), from, 1, squeeze, 1);
+    let e1 = g.conv(format!("{name}_ex1x1"), s, 1, expand, 1);
+    let e3 = g.conv(format!("{name}_ex3x3"), s, 3, expand, 1);
+    g.concat(format!("{name}_cat"), &[e1, e3])
+}
+
+/// Build SqueezeNet v1.1.
+pub fn squeezenet() -> DnnGraph {
+    let mut g = DnnGraph::new("SqueezeNet", Dataset::ImageNet);
+    let c1 = g.conv("conv1", 0, 3, 64, 2); // 112
+    let p1 = g.pool("pool1", c1, 3, 2); // 56
+    let f2 = fire(&mut g, "fire2", p1, 16, 64);
+    let f3 = fire(&mut g, "fire3", f2, 16, 64);
+    let p3 = g.pool("pool3", f3, 3, 2); // 28
+    let f4 = fire(&mut g, "fire4", p3, 32, 128);
+    let f5 = fire(&mut g, "fire5", f4, 32, 128);
+    let p5 = g.pool("pool5", f5, 3, 2); // 14
+    let f6 = fire(&mut g, "fire6", p5, 48, 192);
+    let f7 = fire(&mut g, "fire7", f6, 48, 192);
+    let f8 = fire(&mut g, "fire8", f7, 64, 256);
+    let f9 = fire(&mut g, "fire9", f8, 64, 256);
+    let c10 = g.conv("conv10", f9, 1, 1000, 1);
+    g.global_pool("gap", c10);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squeezenet_reference_counts() {
+        let g = squeezenet();
+        g.validate().unwrap();
+        // conv1 + 8 fires × 3 convs + conv10 = 26 weight layers.
+        assert_eq!(g.num_weight_layers(), 26);
+        // Published v1.1 params ~1.23M.
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((1.1..1.4).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn fire_module_branches() {
+        let g = squeezenet();
+        // The squeeze conv feeds two expand convs -> structural density > 1.
+        let d = g.density_report();
+        assert!(d.structural_density > 1.0, "{}", d.structural_density);
+    }
+}

@@ -1,0 +1,75 @@
+//! VGG-16 / VGG-19 (Simonyan & Zisserman 2014) on ImageNet — the paper's
+//! headline comparison network (Table 4 uses VGG-19).
+
+use crate::dnn::{Dataset, DnnGraph};
+
+/// Build VGG-`depth` (11, 13, 16 or 19).
+pub fn vgg(depth: usize) -> DnnGraph {
+    // convs-per-stage for each variant; channels double per stage.
+    let stages: &[usize] = match depth {
+        11 => &[1, 1, 2, 2, 2],
+        13 => &[2, 2, 2, 2, 2],
+        16 => &[2, 2, 3, 3, 3],
+        19 => &[2, 2, 4, 4, 4],
+        _ => panic!("unsupported VGG depth {depth} (use 11, 13, 16 or 19)"),
+    };
+    let channels = [64usize, 128, 256, 512, 512];
+    let mut g = DnnGraph::new(format!("VGG-{depth}"), Dataset::ImageNet);
+    let mut prev = 0;
+    for (s, (&reps, &ch)) in stages.iter().zip(&channels).enumerate() {
+        for r in 0..reps {
+            prev = g.conv(format!("conv{}_{}", s + 1, r + 1), prev, 3, ch, 1);
+        }
+        prev = g.pool(format!("pool{}", s + 1), prev, 2, 2);
+    }
+    // 224 / 2^5 = 7 -> 7*7*512 = 25088 into the classifier.
+    let f1 = g.fc("fc6", prev, 4096);
+    let f2 = g.fc("fc7", f1, 4096);
+    g.fc("fc8", f2, 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_reference_counts() {
+        let g = vgg(19);
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 19);
+        // Published VGG-19 parameter count: ~143.7M.
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((143.0..145.0).contains(&w), "weights {w}M");
+        // Published MACs ~19.6 GMAC.
+        let m = g.total_macs() as f64 / 1e9;
+        assert!((19.0..20.5).contains(&m), "MACs {m}G");
+        // fc6 consumes 7*7*512 activations.
+        let wl = g.weight_layers();
+        assert_eq!(g.input_activations(wl[16]), 25088);
+    }
+
+    #[test]
+    fn vgg16_reference_counts() {
+        let g = vgg(16);
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 16);
+        let w = g.total_weights() as f64 / 1e6;
+        assert!((138.0..139.5).contains(&w), "weights {w}M");
+    }
+
+    #[test]
+    fn vgg11_and_13_build() {
+        for d in [11, 13] {
+            let g = vgg(d);
+            g.validate().unwrap();
+            assert_eq!(g.num_weight_layers(), d);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsupported_depth_panics() {
+        vgg(10);
+    }
+}

@@ -1,0 +1,214 @@
+//! Ablation studies on the design choices the paper fixes (DESIGN.md §5):
+//!
+//! * `ablation_adc` — flash-ADC resolution sweep (the paper picks 4 bits),
+//! * `ablation_buffers` — router buffer-depth sweep (the paper picks 8),
+//! * `ablation_pe` — crossbar-size sweep (paper §5.2 picks 256×256),
+//! * `topology_exploration` — all six topologies incl. torus/hypercube
+//!   (paper §2.3 dismisses them on power; we quantify).
+
+use super::Options;
+use crate::arch::{evaluate, recommend_topology};
+use crate::config::{ArchConfig, NocConfig, SimConfig};
+use crate::dnn::{eval_set, models};
+use crate::noc::topology::Topology;
+use crate::util::{fmt_sig, Table};
+
+fn sim(opts: &Options) -> SimConfig {
+    SimConfig {
+        seed: opts.seed,
+        ..SimConfig::default()
+    }
+}
+
+/// ADC-resolution ablation: area/energy grow exponentially with bits while
+/// compute latency is unchanged — EDAP has an interior optimum.
+pub fn ablation_adc(opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablation — flash-ADC resolution (ReRAM, advisor topology)",
+        &["dnn", "adc_bits", "latency_ms", "power_W", "area_mm2", "EDAP"],
+    );
+    let nets = [models::lenet5(), models::nin(), models::vgg(19)];
+    for g in &nets {
+        if opts.fast && g.total_macs() >= 1_000_000_000 {
+            continue;
+        }
+        for adc_bits in [2usize, 4, 6, 8] {
+            let arch = ArchConfig {
+                adc_bits,
+                ..ArchConfig::reram()
+            };
+            let rec = recommend_topology(g, &arch, &NocConfig::default());
+            let e = evaluate(
+                g,
+                rec.topology,
+                &arch,
+                &NocConfig::with_topology(rec.topology),
+                &sim(opts),
+                opts.backend,
+            );
+            t.add_row(vec![
+                g.name.clone(),
+                adc_bits.to_string(),
+                fmt_sig(e.latency_s() * 1e3, 4),
+                fmt_sig(e.power_w(), 3),
+                fmt_sig(e.area_mm2(), 4),
+                fmt_sig(e.edap(), 3),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// Buffer-depth ablation: NoC area/leakage grow with depth; DNN traffic is
+/// too sparse to use it (ties to Fig. 13's near-empty queues).
+pub fn ablation_buffers(opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablation — router buffer depth (ReRAM, mesh)",
+        &["dnn", "buffer_depth", "noc_area_mm2", "comm_cycles", "EDAP"],
+    );
+    for g in eval_set() {
+        if opts.fast && g.total_macs() >= 1_000_000_000 {
+            continue;
+        }
+        for depth in [2usize, 4, 8, 16] {
+            let arch = ArchConfig::reram();
+            let noc = NocConfig {
+                buffer_depth: depth,
+                ..NocConfig::default()
+            };
+            let e = evaluate(&g, Topology::Mesh, &arch, &noc, &sim(opts), opts.backend);
+            t.add_row(vec![
+                g.name.clone(),
+                depth.to_string(),
+                fmt_sig(e.noc_area_mm2, 4),
+                e.comm_cycles.to_string(),
+                fmt_sig(e.edap(), 3),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// Crossbar-size ablation (paper §5.2): EDAP by PE size per DNN.
+pub fn ablation_pe(opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Ablation — crossbar (PE) size (ReRAM, advisor topology)",
+        &["dnn", "pe_size", "tiles", "latency_ms", "EDAP"],
+    );
+    let nets = [models::lenet5(), models::squeezenet(), models::vgg(19)];
+    for g in &nets {
+        if opts.fast && g.total_macs() >= 1_000_000_000 {
+            continue;
+        }
+        for pe in [64usize, 128, 256, 512] {
+            let arch = ArchConfig {
+                pe_size: pe,
+                ..ArchConfig::reram()
+            };
+            let rec = recommend_topology(g, &arch, &NocConfig::default());
+            let e = evaluate(
+                g,
+                rec.topology,
+                &arch,
+                &NocConfig::with_topology(rec.topology),
+                &sim(opts),
+                opts.backend,
+            );
+            t.add_row(vec![
+                g.name.clone(),
+                pe.to_string(),
+                e.tiles.to_string(),
+                fmt_sig(e.latency_s() * 1e3, 4),
+                fmt_sig(e.edap(), 3),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// All six topologies (paper §2.3): torus/hypercube/c-mesh cost more for
+/// marginal latency gains over mesh.
+pub fn topology_exploration(opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Topology exploration — all interconnects (ReRAM)",
+        &["dnn", "topology", "latency_ms", "noc_area_mm2", "comm_energy_mJ", "EDAP"],
+    );
+    let nets = [models::nin(), models::resnet(50)];
+    for g in &nets {
+        if opts.fast && g.total_macs() >= 1_000_000_000 {
+            continue;
+        }
+        for topo in Topology::all() {
+            let arch = ArchConfig::reram();
+            let e = evaluate(
+                g,
+                topo,
+                &arch,
+                &NocConfig::with_topology(topo),
+                &sim(opts),
+                opts.backend,
+            );
+            t.add_row(vec![
+                g.name.clone(),
+                topo.name().into(),
+                fmt_sig(e.latency_s() * 1e3, 4),
+                fmt_sig(e.noc_area_mm2, 4),
+                fmt_sig(e.comm_energy_j * 1e3, 3),
+                fmt_sig(e.edap(), 3),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CommBackend;
+
+    fn fast_opts() -> Options {
+        Options {
+            fast: true,
+            backend: CommBackend::Analytical,
+            ..Options::default()
+        }
+    }
+
+    #[test]
+    fn adc_area_grows_with_bits() {
+        let t = &ablation_adc(&fast_opts())[0];
+        // For each DNN, area must be monotone non-decreasing in adc_bits.
+        let mut prev: Option<(String, f64)> = None;
+        for row in &t.rows {
+            let area: f64 = row[4].parse().unwrap();
+            if let Some((ref name, p)) = prev {
+                if *name == row[0] {
+                    assert!(area >= p * 0.999, "{}: area shrank {p} -> {area}", row[0]);
+                }
+            }
+            prev = Some((row[0].clone(), area));
+        }
+    }
+
+    #[test]
+    fn buffers_grow_noc_area_not_latency() {
+        let t = &ablation_buffers(&fast_opts())[0];
+        // Depth 16 vs depth 2 for the same DNN: area up, comm cycles equal
+        // or better (queues are near-empty, Fig. 13).
+        for g in ["MLP", "LeNet-5", "NiN"] {
+            let rows: Vec<_> = t.rows.iter().filter(|r| r[0] == g).collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let a2: f64 = rows[0][2].parse().unwrap();
+            let a16: f64 = rows[3][2].parse().unwrap();
+            assert!(a16 > a2, "{g}: buffer area must grow");
+        }
+    }
+
+    #[test]
+    fn topology_exploration_runs_all() {
+        let t = &topology_exploration(&fast_opts())[0];
+        assert_eq!(t.rows.len() % 6, 0);
+    }
+}

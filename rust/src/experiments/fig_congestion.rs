@@ -1,0 +1,204 @@
+//! Traffic-congestion analysis (paper §6.3): Fig. 13 (queues empty at
+//! arrival), Fig. 14 (non-zero queue occupancy for NiN and VGG-19),
+//! Fig. 15 (average vs worst-case latency per pair for LeNet-5 and NiN),
+//! Table 3 (MAPD of worst-case vs average latency).
+
+use super::Options;
+use crate::config::{ArchConfig, NocConfig, SimConfig};
+use crate::dnn::{by_name, eval_set};
+use crate::mapping::{InjectionMatrix, Mapping};
+use crate::noc::latency::simulate_dnn;
+use crate::noc::topology::Topology;
+use crate::util::{fmt_sig, Table};
+
+fn sim_cfg(opts: &Options) -> SimConfig {
+    SimConfig {
+        seed: opts.seed,
+        measure_cycles: if opts.fast { 5_000 } else { 50_000 },
+        ..SimConfig::default()
+    }
+}
+
+fn run_steady(
+    name: &str,
+    opts: &Options,
+    track_pairs: bool,
+) -> crate::noc::latency::DnnCommSim {
+    let g = by_name(name).unwrap_or_else(|| panic!("unknown DNN {name}"));
+    let arch = ArchConfig::reram();
+    let noc = NocConfig::default(); // mesh, Table 2 parameters
+    let mapping = Mapping::build(&g, &arch);
+    let inj = InjectionMatrix::build(&g, &mapping, &arch, &noc);
+    simulate_dnn(
+        &inj,
+        Topology::Mesh,
+        &arch,
+        &noc,
+        &sim_cfg(opts),
+        false,
+        track_pairs,
+    )
+}
+
+/// Fig. 13: percentage of queues with zero occupancy when a flit arrives.
+pub fn fig13(opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 13 — % of queues with zero occupancy at flit arrival (mesh)",
+        &["dnn", "arrivals", "zero_occupancy_%"],
+    );
+    for g in eval_set() {
+        if opts.fast && g.total_macs() >= 1_000_000_000 {
+            continue;
+        }
+        let r = run_steady(&g.name, opts, false);
+        let (mut arrivals, mut zero) = (0u64, 0u64);
+        for l in &r.per_layer {
+            arrivals += l.stats.arrivals;
+            zero += l.stats.arrivals_zero;
+        }
+        let pct = if arrivals == 0 {
+            100.0
+        } else {
+            100.0 * zero as f64 / arrivals as f64
+        };
+        t.add_row(vec![g.name.clone(), arrivals.to_string(), fmt_sig(pct, 3)]);
+    }
+    vec![t]
+}
+
+/// Fig. 14: average occupancy of non-empty queues for NiN and VGG-19.
+pub fn fig14(opts: &Options) -> Vec<Table> {
+    let mut tables = Vec::new();
+    let nets: &[&str] = if opts.fast {
+        &["NiN"]
+    } else {
+        &["NiN", "VGG-19"]
+    };
+    for name in nets {
+        let r = run_steady(name, opts, false);
+        let mut t = Table::new(
+            format!("Fig. 14 — avg occupancy of non-empty queues, {name} (per layer)"),
+            &["layer", "nonzero_arrivals", "avg_occupancy"],
+        );
+        for l in &r.per_layer {
+            t.add_row(vec![
+                l.layer.to_string(),
+                l.stats.nonzero_occ_count.to_string(),
+                fmt_sig(l.stats.mean_nonzero_occupancy(), 3),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Fig. 15: average vs worst-case latency per source-destination pair for
+/// LeNet-5 and NiN (pairs with non-zero traffic).
+pub fn fig15(opts: &Options) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for name in ["LeNet-5", "NiN"] {
+        let r = run_steady(name, opts, true);
+        let mut t = Table::new(
+            format!("Fig. 15 — avg vs worst-case latency per pair, {name}"),
+            &["src", "dst", "flits", "avg_cycles", "worst_cycles", "diff"],
+        );
+        let mut pairs: Vec<_> = r
+            .per_layer
+            .iter()
+            .flat_map(|l| l.stats.per_pair.iter())
+            .collect();
+        pairs.sort_by_key(|(k, _)| **k);
+        for (key, p) in pairs {
+            let (src, dst) = ((key >> 32) as u32, (key & 0xFFFF_FFFF) as u32);
+            t.add_row(vec![
+                src.to_string(),
+                dst.to_string(),
+                p.count.to_string(),
+                fmt_sig(p.avg(), 4),
+                p.max_latency.to_string(),
+                fmt_sig(p.max_latency as f64 - p.avg(), 3),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+/// Table 3: MAPD of worst-case latency from average latency per DNN.
+pub fn table3(opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 3 — MAPD of worst-case vs average NoC latency (%)",
+        &["dnn", "pairs", "MAPD_%"],
+    );
+    for g in eval_set() {
+        if opts.fast && g.total_macs() >= 1_000_000_000 {
+            continue;
+        }
+        let r = run_steady(&g.name, opts, true);
+        let (mut avg, mut worst) = (Vec::new(), Vec::new());
+        for l in &r.per_layer {
+            for p in l.stats.per_pair.values() {
+                if p.count > 0 {
+                    avg.push(p.avg());
+                    worst.push(p.max_latency as f64);
+                }
+            }
+        }
+        let mapd = crate::util::stats::mapd(&avg, &worst);
+        t.add_row(vec![
+            g.name.clone(),
+            avg.len().to_string(),
+            fmt_sig(mapd, 3),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CommBackend;
+
+    fn fast_opts() -> Options {
+        Options {
+            fast: true,
+            backend: CommBackend::Analytical,
+            ..Options::default()
+        }
+    }
+
+    #[test]
+    fn fig13_zero_occupancy_in_paper_band() {
+        // Paper: 64-100% of queues empty at arrival.
+        let t = &fig13(&fast_opts())[0];
+        for row in &t.rows {
+            let pct: f64 = row[2].parse().unwrap();
+            assert!(pct > 50.0, "{}: only {pct}% empty", row[0]);
+        }
+    }
+
+    #[test]
+    fn fig14_occupancies_are_small() {
+        // Paper: average non-zero queue length 0.004-0.5 (plus margin).
+        for t in fig14(&fast_opts()) {
+            for row in &t.rows {
+                let occ: f64 = row[2].parse().unwrap();
+                assert!(occ < 8.0, "occupancy {occ} out of band");
+            }
+        }
+    }
+
+    #[test]
+    fn table3_mapd_small() {
+        // Paper Table 3: 0-21%. Allow headroom but catch blow-ups.
+        let t = &table3(&fast_opts())[0];
+        for row in &t.rows {
+            let mapd: f64 = row[2].parse().unwrap();
+            assert!(
+                (0.0..200.0).contains(&mapd),
+                "{}: MAPD {mapd}%",
+                row[0]
+            );
+        }
+    }
+}

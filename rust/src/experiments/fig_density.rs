@@ -1,0 +1,103 @@
+//! Fig. 1 (connection density vs neurons) and Fig. 20 (optimal-topology
+//! regions).
+
+use super::Options;
+use crate::arch::optimizer::{recommend_topology, rule_of_thumb};
+use crate::config::{ArchConfig, NocConfig};
+use crate::dnn::model_zoo;
+use crate::util::{fmt_sig, Table};
+
+/// Fig. 1: density/neuron scatter for the full zoo.
+pub fn fig1(_opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig. 1 — connection density of DNNs (per dataset)",
+        &[
+            "dnn",
+            "dataset",
+            "neurons",
+            "structural_density",
+            "synaptic_density",
+            "weights_M",
+            "class",
+        ],
+    );
+    for g in model_zoo() {
+        let r = g.density_report();
+        let class = if r.structural_density > 2.0 {
+            "dense"
+        } else if r.structural_density > 1.0 {
+            "residual"
+        } else {
+            "linear"
+        };
+        t.add_row(vec![
+            g.name.clone(),
+            g.dataset.name().into(),
+            r.neurons.to_string(),
+            fmt_sig(r.structural_density, 3),
+            fmt_sig(r.synaptic_density, 3),
+            fmt_sig(g.total_weights() as f64 / 1e6, 3),
+            class.into(),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 20: advisor decision for every zoo model on the (ρ, μ) plane.
+pub fn fig20(_opts: &Options) -> Vec<Table> {
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let mut t = Table::new(
+        "Fig. 20 — optimal NoC topology per DNN (ρ = synaptic density, μ = neurons)",
+        &[
+            "dnn",
+            "rho",
+            "mu",
+            "rule_of_thumb",
+            "advisor_choice",
+            "edap_tree",
+            "edap_mesh",
+        ],
+    );
+    for g in model_zoo() {
+        let rec = recommend_topology(&g, &arch, &noc);
+        let rule = match rule_of_thumb(rec.density) {
+            Some(topo) => topo.name().to_string(),
+            None => "either".to_string(),
+        };
+        t.add_row(vec![
+            g.name.clone(),
+            fmt_sig(rec.density, 3),
+            rec.neurons.to_string(),
+            rule,
+            rec.topology.name().into(),
+            fmt_sig(rec.edap_tree, 3),
+            fmt_sig(rec.edap_mesh, 3),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_rows_cover_zoo() {
+        let t = &fig1(&Options::default())[0];
+        assert_eq!(t.rows.len(), model_zoo().len());
+        // Every class present.
+        let classes: Vec<&str> = t.rows.iter().map(|r| r[6].as_str()).collect();
+        assert!(classes.contains(&"linear"));
+        assert!(classes.contains(&"residual"));
+        assert!(classes.contains(&"dense"));
+    }
+
+    #[test]
+    fn fig20_compact_vs_dense_split() {
+        let t = &fig20(&Options::default())[0];
+        let row = |name: &str| t.rows.iter().find(|r| r[0] == name).unwrap();
+        assert_eq!(row("MLP")[4], "NoC-tree");
+        assert_eq!(row("LeNet-5")[4], "NoC-tree");
+    }
+}

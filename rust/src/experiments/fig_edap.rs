@@ -1,0 +1,241 @@
+//! EDAP/topology-comparison experiments: Fig. 9 (tree/mesh/c-mesh EDAP),
+//! Fig. 16/17 (tree vs mesh throughput + EDAP for SRAM/ReRAM), Fig. 18
+//! (virtual-channel sweep), Fig. 19 (bus-width sweep).
+
+use super::Options;
+use crate::arch::evaluate;
+use crate::config::{ArchConfig, NocConfig, SimConfig};
+use crate::dnn::{eval_set, DnnGraph};
+use crate::noc::topology::Topology;
+use crate::util::{fmt_sig, Table};
+
+fn eval_dnns(opts: &Options) -> Vec<DnnGraph> {
+    if opts.fast {
+        eval_set()
+            .into_iter()
+            .filter(|g| g.total_macs() < 1_000_000_000)
+            .collect()
+    } else {
+        eval_set()
+    }
+}
+
+fn sim_cfg(opts: &Options) -> SimConfig {
+    SimConfig {
+        seed: opts.seed,
+        ..SimConfig::default()
+    }
+}
+
+/// Fig. 9: EDAP of tree / mesh / c-mesh NoCs. Like the paper, this is the
+/// EDAP of the *interconnect* (NoC energy × NoC latency × NoC area), not
+/// of the whole chip — that is where c-mesh's resource overhead explodes.
+pub fn fig9(opts: &Options) -> Vec<Table> {
+    let arch = ArchConfig::reram();
+    let sim = sim_cfg(opts);
+    let mut t = Table::new(
+        "Fig. 9 — NoC-only EDAP (J·ms·mm²) for NoC-tree / NoC-mesh / c-mesh",
+        &["dnn", "NoC-tree", "NoC-mesh", "c-mesh", "cmesh/mesh"],
+    );
+    for g in eval_dnns(opts) {
+        let edap: Vec<f64> = [Topology::Tree, Topology::Mesh, Topology::CMesh]
+            .into_iter()
+            .map(|topo| {
+                let e = evaluate(
+                    &g,
+                    topo,
+                    &arch,
+                    &NocConfig::with_topology(topo),
+                    &sim,
+                    opts.backend,
+                );
+                let noc_latency_ms = e.comm_cycles as f64 / arch.freq_hz * 1e3;
+                e.comm_energy_j * noc_latency_ms * e.noc_area_mm2
+            })
+            .collect();
+        t.add_row(vec![
+            g.name.clone(),
+            fmt_sig(edap[0], 3),
+            fmt_sig(edap[1], 3),
+            fmt_sig(edap[2], 3),
+            fmt_sig(edap[2] / edap[1], 3),
+        ]);
+    }
+    vec![t]
+}
+
+/// Shared shape of Fig. 16/17: tree vs mesh normalized throughput & EDAP.
+fn tree_vs_mesh(opts: &Options, arch: ArchConfig, fig: &str) -> Vec<Table> {
+    let sim = sim_cfg(opts);
+    let mut thr = Table::new(
+        format!(
+            "{fig}(a) — throughput normalized to NoC-tree ({})",
+            arch.tech.name()
+        ),
+        &["dnn", "tree", "mesh", "winner"],
+    );
+    let mut edap = Table::new(
+        format!(
+            "{fig}(b) — EDAP normalized to NoC-tree ({})",
+            arch.tech.name()
+        ),
+        &["dnn", "tree", "mesh", "winner"],
+    );
+    for g in eval_dnns(opts) {
+        let t = evaluate(
+            &g,
+            Topology::Tree,
+            &arch,
+            &NocConfig::with_topology(Topology::Tree),
+            &sim,
+            opts.backend,
+        );
+        let m = evaluate(
+            &g,
+            Topology::Mesh,
+            &arch,
+            &NocConfig::with_topology(Topology::Mesh),
+            &sim,
+            opts.backend,
+        );
+        let thr_ratio = m.fps() / t.fps();
+        let edap_ratio = m.edap() / t.edap();
+        thr.add_row(vec![
+            g.name.clone(),
+            "1.00".into(),
+            fmt_sig(thr_ratio, 3),
+            if thr_ratio > 1.0 { "mesh" } else { "tree" }.into(),
+        ]);
+        edap.add_row(vec![
+            g.name.clone(),
+            "1.00".into(),
+            fmt_sig(edap_ratio, 3),
+            if edap_ratio < 1.0 { "mesh" } else { "tree" }.into(),
+        ]);
+    }
+    vec![thr, edap]
+}
+
+/// Fig. 16: SRAM-based IMC, tree vs mesh.
+pub fn fig16(opts: &Options) -> Vec<Table> {
+    tree_vs_mesh(opts, ArchConfig::sram(), "Fig. 16")
+}
+
+/// Fig. 17: ReRAM-based IMC, tree vs mesh.
+pub fn fig17(opts: &Options) -> Vec<Table> {
+    tree_vs_mesh(opts, ArchConfig::reram(), "Fig. 17")
+}
+
+/// Fig. 18: virtual-channel sweep (ReRAM): the guidance must not change.
+pub fn fig18(opts: &Options) -> Vec<Table> {
+    sweep(
+        opts,
+        "Fig. 18",
+        &[1usize, 2, 4],
+        |noc, vcs| noc.virtual_channels = *vcs,
+        "virtual_channels",
+    )
+}
+
+/// Fig. 19: bus-width sweep (ReRAM): the guidance must not change.
+pub fn fig19(opts: &Options) -> Vec<Table> {
+    sweep(
+        opts,
+        "Fig. 19",
+        &[16usize, 32, 64],
+        |noc, w| noc.bus_width = *w,
+        "bus_width",
+    )
+}
+
+fn sweep(
+    opts: &Options,
+    fig: &str,
+    values: &[usize],
+    set: impl Fn(&mut NocConfig, &usize),
+    param: &str,
+) -> Vec<Table> {
+    let arch = ArchConfig::reram();
+    let sim = sim_cfg(opts);
+    let mut thr = Table::new(
+        format!("{fig}(a) — mesh/tree throughput ratio vs {param} (ReRAM)"),
+        &["dnn", param, "thr_mesh_over_tree", "preferred"],
+    );
+    let mut edap = Table::new(
+        format!("{fig}(b) — mesh/tree EDAP ratio vs {param} (ReRAM)"),
+        &["dnn", param, "edap_mesh_over_tree", "preferred"],
+    );
+    for g in eval_dnns(opts) {
+        for v in values {
+            let mut tree_cfg = NocConfig::with_topology(Topology::Tree);
+            set(&mut tree_cfg, v);
+            let mut mesh_cfg = NocConfig::with_topology(Topology::Mesh);
+            set(&mut mesh_cfg, v);
+            let t = evaluate(&g, Topology::Tree, &arch, &tree_cfg, &sim, opts.backend);
+            let m = evaluate(&g, Topology::Mesh, &arch, &mesh_cfg, &sim, opts.backend);
+            let tr = m.fps() / t.fps();
+            let er = m.edap() / t.edap();
+            thr.add_row(vec![
+                g.name.clone(),
+                v.to_string(),
+                fmt_sig(tr, 3),
+                if tr > 1.0 { "mesh" } else { "tree" }.into(),
+            ]);
+            edap.add_row(vec![
+                g.name.clone(),
+                v.to_string(),
+                fmt_sig(er, 3),
+                if er < 1.0 { "mesh" } else { "tree" }.into(),
+            ]);
+        }
+    }
+    vec![thr, edap]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CommBackend;
+
+    fn fast_opts() -> Options {
+        Options {
+            fast: true,
+            backend: CommBackend::Analytical,
+            ..Options::default()
+        }
+    }
+
+    #[test]
+    fn fig9_cmesh_edap_dominates() {
+        let t = &fig9(&fast_opts())[0];
+        for row in &t.rows {
+            let ratio: f64 = row[4].parse().unwrap();
+            assert!(ratio > 1.0, "{}: c-mesh/mesh EDAP ratio {ratio}", row[0]);
+        }
+    }
+
+    #[test]
+    fn fig16_compact_nets_prefer_tree_edap() {
+        let tables = fig16(&fast_opts());
+        let edap = &tables[1];
+        for row in &edap.rows {
+            if row[0] == "MLP" || row[0] == "LeNet-5" {
+                assert_eq!(row[3], "tree", "{}: expected tree EDAP win", row[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn fig18_guidance_consistent_across_vcs() {
+        // Paper §6.4.1: the preferred topology per DNN is the same for all
+        // VC counts.
+        let tables = fig18(&fast_opts());
+        let edap = &tables[1];
+        use std::collections::HashMap;
+        let mut pref: HashMap<&str, &str> = HashMap::new();
+        for row in &edap.rows {
+            let e = pref.entry(row[0].as_str()).or_insert(row[3].as_str());
+            assert_eq!(*e, row[3], "{} changed preference across VCs", row[0]);
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! P2P-scalability experiments: Fig. 3 (routing-latency share), Fig. 5
+//! (latency vs injection bandwidth), Fig. 8 (topology throughput,
+//! SRAM-normalized-to-P2P), Fig. 21 (latency vs density, P2P vs NoC).
+
+use super::Options;
+use crate::arch::evaluate;
+use crate::config::{ArchConfig, NocConfig, SimConfig};
+use crate::dnn::{eval_set, model_zoo};
+use crate::noc::sim::{uniform_random_flows, Mode, NocSim};
+use crate::noc::topology::Topology;
+use crate::util::{fmt_sig, Table};
+
+fn eval_dnns(opts: &Options) -> Vec<crate::dnn::DnnGraph> {
+    if opts.fast {
+        eval_set()
+            .into_iter()
+            .filter(|g| g.total_macs() < 1_000_000_000)
+            .collect()
+    } else {
+        eval_set()
+    }
+}
+
+/// Fig. 3: routing latency share on the P2P IMC architecture.
+pub fn fig3(opts: &Options) -> Vec<Table> {
+    let arch = ArchConfig::sram();
+    let noc = NocConfig::with_topology(Topology::P2P);
+    let sim = SimConfig {
+        seed: opts.seed,
+        ..SimConfig::default()
+    };
+    let mut t = Table::new(
+        "Fig. 3 — contribution of routing latency to total latency (P2P IMC)",
+        &["dnn", "density", "compute_ms", "routing_ms", "routing_share_%"],
+    );
+    for g in eval_dnns(opts) {
+        let e = evaluate(&g, Topology::P2P, &arch, &noc, &sim, opts.backend);
+        t.add_row(vec![
+            g.name.clone(),
+            fmt_sig(g.density_report().structural_density, 3),
+            fmt_sig(e.compute_latency_s * 1e3, 3),
+            fmt_sig(e.comm_latency_s * 1e3, 3),
+            fmt_sig(100.0 * e.routing_fraction(), 3),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 5: average latency vs injection bandwidth for 64-node P2P,
+/// NoC-tree, and 8×8 NoC-mesh under uniform-random traffic.
+pub fn fig5(opts: &Options) -> Vec<Table> {
+    let cfg = NocConfig::default();
+    let rates = if opts.fast {
+        vec![0.02, 0.10, 0.25]
+    } else {
+        vec![0.01, 0.02, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.40]
+    };
+    let mut t = Table::new(
+        "Fig. 5 — average latency (cycles) vs injection bandwidth, 64 nodes",
+        &["rate_flits_per_node_cycle", "P2P", "NoC-tree", "NoC-mesh"],
+    );
+    for &rate in &rates {
+        let mut row = vec![fmt_sig(rate, 3)];
+        for topo in [Topology::P2P, Topology::Tree, Topology::Mesh] {
+            let flows = uniform_random_flows(64, rate);
+            let stats = NocSim::new(
+                topo,
+                64,
+                &cfg,
+                &flows,
+                Mode::Steady {
+                    warmup: 1_000,
+                    measure: if opts.fast { 3_000 } else { 10_000 },
+                },
+                opts.seed,
+            )
+            .run();
+            // Saturated networks deliver few flits at huge latency; report
+            // the (large) number rather than hiding it, like BookSim does.
+            row.push(fmt_sig(stats.avg_latency, 4));
+        }
+        t.add_row(row);
+    }
+    vec![t]
+}
+
+/// Fig. 8: throughput of the SRAM IMC architecture with P2P / tree / mesh,
+/// normalized to P2P.
+pub fn fig8(opts: &Options) -> Vec<Table> {
+    let arch = ArchConfig::sram();
+    let sim = SimConfig {
+        seed: opts.seed,
+        ..SimConfig::default()
+    };
+    let mut t = Table::new(
+        "Fig. 8 — normalized throughput (SRAM IMC), P2P / NoC-tree / NoC-mesh",
+        &["dnn", "P2P", "NoC-tree", "NoC-mesh"],
+    );
+    for g in eval_dnns(opts) {
+        let fps: Vec<f64> = [Topology::P2P, Topology::Tree, Topology::Mesh]
+            .into_iter()
+            .map(|topo| {
+                evaluate(
+                    &g,
+                    topo,
+                    &arch,
+                    &NocConfig::with_topology(topo),
+                    &sim,
+                    opts.backend,
+                )
+                .fps()
+            })
+            .collect();
+        t.add_row(vec![
+            g.name.clone(),
+            "1.00".into(),
+            fmt_sig(fps[1] / fps[0], 3),
+            fmt_sig(fps[2] / fps[0], 3),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 21: total inference latency vs connection density for P2P vs the
+/// advisor-chosen NoC, both technologies.
+pub fn fig21(opts: &Options) -> Vec<Table> {
+    let sim = SimConfig {
+        seed: opts.seed,
+        ..SimConfig::default()
+    };
+    let mut tables = Vec::new();
+    for arch in [ArchConfig::sram(), ArchConfig::reram()] {
+        let mut t = Table::new(
+            format!(
+                "Fig. 21 — total latency vs connection density ({})",
+                arch.tech.name()
+            ),
+            &["dnn", "density", "P2P_ms", "NoC_ms", "P2P/NoC"],
+        );
+        let mut models: Vec<_> = if opts.fast {
+            eval_dnns(opts)
+        } else {
+            model_zoo()
+        };
+        models.sort_by(|a, b| {
+            a.density_report()
+                .structural_density
+                .partial_cmp(&b.density_report().structural_density)
+                .unwrap()
+        });
+        for g in models {
+            let p2p = evaluate(
+                &g,
+                Topology::P2P,
+                &arch,
+                &NocConfig::with_topology(Topology::P2P),
+                &sim,
+                opts.backend,
+            );
+            let rec = crate::arch::recommend_topology(&g, &arch, &NocConfig::default());
+            let noc = evaluate(
+                &g,
+                rec.topology,
+                &arch,
+                &NocConfig::with_topology(rec.topology),
+                &sim,
+                opts.backend,
+            );
+            t.add_row(vec![
+                g.name.clone(),
+                fmt_sig(g.density_report().structural_density, 3),
+                fmt_sig(p2p.latency_s() * 1e3, 4),
+                fmt_sig(noc.latency_s() * 1e3, 4),
+                fmt_sig(p2p.latency_s() / noc.latency_s(), 3),
+            ]);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CommBackend;
+
+    fn fast_opts() -> Options {
+        Options {
+            fast: true,
+            backend: CommBackend::Analytical,
+            ..Options::default()
+        }
+    }
+
+    #[test]
+    fn fig3_routing_dominates_p2p_at_high_density() {
+        // Paper: the routing share reaches up to 94% as connection density
+        // grows (their own Fig. 3 is non-monotone — VGG-19 dips).
+        let t = &fig3(&fast_opts())[0];
+        assert!(t.rows.len() >= 3);
+        let last: f64 = t.rows.last().unwrap()[4].parse().unwrap();
+        assert!(last > 80.0, "densest DNN share {last}% too low");
+        for row in &t.rows {
+            let share: f64 = row[4].parse().unwrap();
+            assert!((0.0..=100.0).contains(&share), "{}: {share}", row[0]);
+        }
+    }
+
+    #[test]
+    fn fig5_mesh_wins_at_high_rate() {
+        let t = &fig5(&fast_opts())[0];
+        let last = t.rows.last().unwrap();
+        let p2p: f64 = last[1].parse().unwrap();
+        let mesh: f64 = last[3].parse().unwrap();
+        assert!(
+            mesh < p2p,
+            "mesh latency {mesh} must beat P2P {p2p} at high load"
+        );
+    }
+
+    #[test]
+    fn fig8_noc_never_slower_than_p2p_on_dense() {
+        let t = &fig8(&fast_opts())[0];
+        let dense_rows: Vec<_> = t
+            .rows
+            .iter()
+            .filter(|r| r[0].starts_with("DenseNet") || r[0].starts_with("ResNet"))
+            .collect();
+        for r in dense_rows {
+            let mesh: f64 = r[3].parse().unwrap();
+            assert!(mesh >= 1.0, "{}: mesh normalized {mesh} < 1", r[0]);
+        }
+    }
+}

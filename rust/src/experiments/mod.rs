@@ -1,0 +1,202 @@
+//! Experiment registry: one generator per paper figure/table. Each
+//! generator returns [`Table`]s whose rows/series match what the paper
+//! reports; `repro figure <n>` / `repro table <n>` print them.
+//!
+//! See DESIGN.md §5 for the experiment index and EXPERIMENTS.md for the
+//! recorded paper-vs-measured outcomes.
+
+pub mod ablations;
+pub mod fig_analytical;
+pub mod fig_congestion;
+pub mod fig_density;
+pub mod fig_edap;
+pub mod fig_p2p;
+pub mod tables;
+
+use crate::arch::CommBackend;
+use crate::util::Table;
+
+/// Options shared by all experiments.
+#[derive(Clone, Debug)]
+pub struct Options {
+    /// Interconnect backend: `Analytical` (fast, default for the CLI) or
+    /// `Simulate` (cycle-accurate, what the paper's BookSim runs did).
+    pub backend: CommBackend,
+    /// Restrict expensive sweeps to a smaller DNN set.
+    pub fast: bool,
+    /// Simulation seed.
+    pub seed: u64,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            backend: CommBackend::Analytical,
+            fast: false,
+            seed: 0x1AC5_EED,
+        }
+    }
+}
+
+/// One registered experiment.
+pub struct Experiment {
+    /// Canonical id: "fig1" … "fig21", "table2" … "table4".
+    pub id: &'static str,
+    pub title: &'static str,
+    pub run: fn(&Options) -> Vec<Table>,
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "fig1",
+            title: "Connection density vs number of neurons (model zoo)",
+            run: fig_density::fig1,
+        },
+        Experiment {
+            id: "fig3",
+            title: "Routing latency share of total latency, P2P IMC",
+            run: fig_p2p::fig3,
+        },
+        Experiment {
+            id: "fig5",
+            title: "Average latency vs injection bandwidth (64 nodes)",
+            run: fig_p2p::fig5,
+        },
+        Experiment {
+            id: "fig8",
+            title: "Throughput of P2P / NoC-tree / NoC-mesh (SRAM), normalized to P2P",
+            run: fig_p2p::fig8,
+        },
+        Experiment {
+            id: "fig9",
+            title: "EDAP of NoC-tree / NoC-mesh / c-mesh",
+            run: fig_edap::fig9,
+        },
+        Experiment {
+            id: "fig11",
+            title: "Analytical model accuracy vs cycle-accurate simulation",
+            run: fig_analytical::fig11,
+        },
+        Experiment {
+            id: "fig12",
+            title: "Analytical model speed-up vs cycle-accurate simulation (mesh)",
+            run: fig_analytical::fig12,
+        },
+        Experiment {
+            id: "fig13",
+            title: "Percentage of queues with zero occupancy at flit arrival",
+            run: fig_congestion::fig13,
+        },
+        Experiment {
+            id: "fig14",
+            title: "Average occupancy of non-empty queues (NiN, VGG-19)",
+            run: fig_congestion::fig14,
+        },
+        Experiment {
+            id: "fig15",
+            title: "Average vs worst-case latency per source-destination pair",
+            run: fig_congestion::fig15,
+        },
+        Experiment {
+            id: "fig16",
+            title: "Normalized throughput and EDAP, NoC-tree vs NoC-mesh (SRAM)",
+            run: fig_edap::fig16,
+        },
+        Experiment {
+            id: "fig17",
+            title: "Normalized throughput and EDAP, NoC-tree vs NoC-mesh (ReRAM)",
+            run: fig_edap::fig17,
+        },
+        Experiment {
+            id: "fig18",
+            title: "Virtual-channel sweep: throughput and EDAP (ReRAM)",
+            run: fig_edap::fig18,
+        },
+        Experiment {
+            id: "fig19",
+            title: "Bus-width sweep: throughput and EDAP (ReRAM)",
+            run: fig_edap::fig19,
+        },
+        Experiment {
+            id: "fig20",
+            title: "Optimal NoC topology regions (density vs neurons)",
+            run: fig_density::fig20,
+        },
+        Experiment {
+            id: "fig21",
+            title: "Total latency vs connection density, P2P vs NoC",
+            run: fig_p2p::fig21,
+        },
+        Experiment {
+            id: "ablation-adc",
+            title: "Ablation: flash-ADC resolution sweep",
+            run: ablations::ablation_adc,
+        },
+        Experiment {
+            id: "ablation-buffers",
+            title: "Ablation: router buffer-depth sweep",
+            run: ablations::ablation_buffers,
+        },
+        Experiment {
+            id: "ablation-pe",
+            title: "Ablation: crossbar (PE) size sweep",
+            run: ablations::ablation_pe,
+        },
+        Experiment {
+            id: "topologies",
+            title: "Topology exploration: all six interconnects",
+            run: ablations::topology_exploration,
+        },
+        Experiment {
+            id: "table2",
+            title: "Design parameters",
+            run: tables::table2,
+        },
+        Experiment {
+            id: "table3",
+            title: "MAPD of worst-case vs average NoC latency",
+            run: fig_congestion::table3,
+        },
+        Experiment {
+            id: "table4",
+            title: "VGG-19 inference vs state-of-the-art accelerators",
+            run: tables::table4,
+        },
+    ]
+}
+
+/// Look an experiment up by id ("fig16", "16", "table4", ...).
+pub fn find(id: &str) -> Option<Experiment> {
+    let want = id.to_ascii_lowercase();
+    registry().into_iter().find(|e| {
+        e.id == want
+            || e.id.strip_prefix("fig") == Some(want.as_str())
+            || e.id.strip_prefix("table") == Some(want.as_str())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        for want in [
+            "fig1", "fig3", "fig5", "fig8", "fig9", "fig11", "fig12", "fig13", "fig14", "fig15",
+            "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "table2", "table3", "table4",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn find_accepts_bare_numbers() {
+        assert_eq!(find("16").unwrap().id, "fig16");
+        assert_eq!(find("fig16").unwrap().id, "fig16");
+        assert_eq!(find("table4").unwrap().id, "table4");
+        assert!(find("99").is_none());
+    }
+}

@@ -1,0 +1,144 @@
+//! Table 2 (design parameters) and Table 4 (VGG-19 vs state-of-the-art).
+
+use super::Options;
+use crate::baselines::table4_rows;
+use crate::config::Config;
+use crate::util::{fmt_sig, Table};
+
+/// Table 2: the configured design parameters.
+pub fn table2(_opts: &Options) -> Vec<Table> {
+    let cfg = Config::default();
+    let mut t = Table::new("Table 2 — design parameters", &["parameter", "value"]);
+    t.add_row(vec![
+        "PE array size".into(),
+        format!("{0}x{0}", cfg.arch.pe_size),
+    ]);
+    t.add_row(vec!["Technology node".into(), format!("{}nm", cfg.arch.tech_nm)]);
+    t.add_row(vec![
+        "Cell levels".into(),
+        format!("{} bit/cell", cfg.arch.cell_bits),
+    ]);
+    t.add_row(vec![
+        "Data precision".into(),
+        format!("{} bits", cfg.arch.n_bits),
+    ]);
+    t.add_row(vec!["Read-out method".into(), "Parallel".into()]);
+    t.add_row(vec![
+        "Flash ADC resolution".into(),
+        format!("{} bits", cfg.arch.adc_bits),
+    ]);
+    t.add_row(vec![
+        "Operating frequency".into(),
+        format!("{} GHz", cfg.arch.freq_hz / 1e9),
+    ]);
+    t.add_row(vec![
+        "NoC bus width".into(),
+        cfg.noc.bus_width.to_string(),
+    ]);
+    t.add_row(vec![
+        "Virtual channels".into(),
+        cfg.noc.virtual_channels.to_string(),
+    ]);
+    t.add_row(vec![
+        "Buffer depth".into(),
+        cfg.noc.buffer_depth.to_string(),
+    ]);
+    t.add_row(vec![
+        "Router pipeline stages".into(),
+        cfg.noc.pipeline_stages.to_string(),
+    ]);
+    vec![t]
+}
+
+/// Table 4: VGG-19 inference comparison against published accelerators.
+pub fn table4(opts: &Options) -> Vec<Table> {
+    let mut t = Table::new(
+        "Table 4 — VGG-19 inference vs state-of-the-art (\"*\" = published numbers)",
+        &["architecture", "latency_ms", "power_W", "FPS", "EDAP_J.ms.mm2"],
+    );
+    let rows = table4_rows(opts.backend);
+    for r in &rows {
+        let star = if r.published { "*" } else { "" };
+        t.add_row(vec![
+            format!("{}{star}", r.name),
+            fmt_sig(r.latency_ms, 3),
+            fmt_sig(r.power_w, 3),
+            fmt_sig(r.fps, 4),
+            fmt_sig(r.edap, 3),
+        ]);
+    }
+    // Headline ratios (paper §6.5).
+    let ours = &rows[1]; // Proposed-ReRAM
+    let atom = &rows[2];
+    let pipe = &rows[3];
+    let isaac = &rows[4];
+    let mut h = Table::new("Table 4 — headline ratios (paper §6.5)", &["claim", "paper", "measured"]);
+    h.add_row(vec![
+        "EDAP improvement vs AtomLayer".into(),
+        "6x".into(),
+        fmt_sig(atom.edap / ours.edap, 3),
+    ]);
+    h.add_row(vec![
+        "FPS improvement vs AtomLayer".into(),
+        "4.7x".into(),
+        fmt_sig(ours.fps / atom.fps, 3),
+    ]);
+    h.add_row(vec![
+        "Power reduction vs PipeLayer".into(),
+        "400x".into(),
+        fmt_sig(pipe.power_w / ours.power_w, 3),
+    ]);
+    h.add_row(vec![
+        "Latency improvement vs ISAAC".into(),
+        "5.4x".into(),
+        fmt_sig(isaac.latency_ms / ours.latency_ms, 3),
+    ]);
+    h.add_row(vec![
+        "SRAM vs ReRAM latency".into(),
+        "2.2x".into(),
+        fmt_sig(ours.latency_ms / rows[0].latency_ms, 3),
+    ]);
+    vec![t, h]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CommBackend;
+
+    #[test]
+    fn table2_matches_paper_defaults() {
+        let t = &table2(&Options::default())[0];
+        let get = |k: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == k)
+                .map(|r| r[1].clone())
+                .unwrap()
+        };
+        assert_eq!(get("PE array size"), "256x256");
+        assert_eq!(get("Technology node"), "32nm");
+        assert_eq!(get("Data precision"), "8 bits");
+        assert_eq!(get("Flash ADC resolution"), "4 bits");
+        assert_eq!(get("Operating frequency"), "1 GHz");
+        assert_eq!(get("NoC bus width"), "32");
+    }
+
+    #[test]
+    fn table4_headline_directions_hold() {
+        let opts = Options {
+            backend: CommBackend::Analytical,
+            ..Options::default()
+        };
+        let tables = table4(&opts);
+        let h = &tables[1];
+        for row in &h.rows {
+            let measured: f64 = row[2].parse().unwrap();
+            assert!(
+                measured > 1.0,
+                "claim '{}' direction violated: {measured}",
+                row[0]
+            );
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! # imcnoc — interconnect-aware in-memory-computing DNN accelerator simulator
+//!
+//! Reproduction of *"Impact of On-Chip Interconnect on In-Memory Acceleration
+//! of Deep Neural Networks"* (Krishnan, Mandal, Chakrabarti, Seo, Ogras, Cao —
+//! ACM JETC 2021, DOI 10.1145/3460233).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer rust + JAX + Pallas
+//! stack:
+//!
+//! * **L1** (`python/compile/kernels/`) — a Pallas kernel that functionally
+//!   models the IMC crossbar hot-spot (bit-serial inputs, per-bitline 4-bit
+//!   flash-ADC quantization, shift-and-add recombination).
+//! * **L2** (`python/compile/model.py`) — JAX forward passes built on the
+//!   kernel, AOT-lowered to HLO text in `artifacts/`.
+//! * **L3** (this crate) — everything the paper's evaluation needs:
+//!   * [`dnn`] — DNN layer graphs + connection-density accounting (Fig. 1/2),
+//!   * [`mapping`] — crossbar/tile mapping (Eq. 2) and injection matrices (Eq. 3),
+//!   * [`circuit`] — NeuroSim-class circuit-level estimator for SRAM/ReRAM tiles,
+//!   * [`noc`] — BookSim-class cycle-accurate NoC simulator (P2P, tree, mesh,
+//!     c-mesh, torus, hypercube) plus the analytical model of Algorithm 2,
+//!   * [`arch`] — end-to-end architecture evaluation (latency/energy/area/EDAP)
+//!     and the heterogeneous-interconnect architecture of Fig. 10,
+//!   * [`baselines`] — ISAAC / PipeLayer / AtomLayer / P2P-IMC comparators,
+//!   * [`runtime`] — PJRT loader executing the AOT artifacts from rust,
+//!   * [`coordinator`] — parallel sweep driver + batched inference serving loop,
+//!   * [`experiments`] — one generator per paper figure/table.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod arch;
+pub mod baselines;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dnn;
+pub mod experiments;
+pub mod mapping;
+pub mod noc;
+pub mod runtime;
+pub mod util;
+
+pub use arch::evaluator::{evaluate, ArchEvaluation};
+pub use config::{ArchConfig, MemTech, NocConfig, SimConfig};
+pub use dnn::{model_zoo, DnnGraph};
+pub use noc::topology::Topology;

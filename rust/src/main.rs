@@ -1,0 +1,9 @@
+//! `repro` — the Layer-3 coordinator binary. See `repro help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = imcnoc::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,227 @@
+//! Injection-rate matrix construction (paper Eq. 3 / Algorithm 1 lines
+//! 3–10): for every consumer weight layer `i` and every producer weight
+//! layer `p` feeding it (resolved through weight-less pool/add/concat
+//! nodes), traffic flows from every tile of `p` to every tile of `i` at
+//!
+//! ```text
+//! λ = A_(p→i) · N_bits · FPS / (T_p · T_i · W · freq)      [flits/cycle]
+//! ```
+//!
+//! where `A_(p→i)` is the number of activation elements `p` delivers to `i`
+//! per frame. The first weight layer receives the input image from outside
+//! the NoC (Algorithm 1 guards `i > 0`), so it generates no on-chip flows.
+
+use super::Mapping;
+use crate::config::{ArchConfig, NocConfig};
+use crate::dnn::DnnGraph;
+
+/// One all-pairs flow bundle between two layers' tile ranges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficFlow {
+    /// Producer weight-layer graph index.
+    pub src_layer: usize,
+    /// Consumer weight-layer graph index.
+    pub dst_layer: usize,
+    /// Activation elements delivered per frame.
+    pub activations: usize,
+    /// Per-(src-tile, dst-tile) injection rate in flits/cycle.
+    pub rate: f64,
+    /// Source tile ids.
+    pub src_tiles: std::ops::Range<usize>,
+    /// Destination tile ids.
+    pub dst_tiles: std::ops::Range<usize>,
+}
+
+impl TrafficFlow {
+    /// Total bits transferred per frame for this flow bundle.
+    pub fn bits_per_frame(&self, n_bits: usize) -> usize {
+        self.activations * n_bits
+    }
+}
+
+/// The full injection specification for one DNN on one mapping.
+#[derive(Clone, Debug)]
+pub struct InjectionMatrix {
+    pub flows: Vec<TrafficFlow>,
+    pub total_tiles: usize,
+}
+
+impl InjectionMatrix {
+    /// Build from a graph + mapping (Eq. 3).
+    pub fn build(
+        graph: &DnnGraph,
+        mapping: &Mapping,
+        arch: &ArchConfig,
+        noc: &NocConfig,
+    ) -> Self {
+        let mut flows = Vec::new();
+        for lt in &mapping.layers {
+            let consumer = lt.layer;
+            for (producer, activations) in resolve_producers(graph, consumer) {
+                let Some(pt) = mapping.tiles_of(producer) else {
+                    continue; // producer is the network input -> off-NoC
+                };
+                let t_src = pt.count;
+                let t_dst = lt.count;
+                let rate = (activations as f64 * arch.n_bits as f64 * arch.fps)
+                    / (t_src as f64 * t_dst as f64 * noc.bus_width as f64 * arch.freq_hz);
+                flows.push(TrafficFlow {
+                    src_layer: producer,
+                    dst_layer: consumer,
+                    activations,
+                    rate,
+                    src_tiles: pt.tiles(),
+                    dst_tiles: lt.tiles(),
+                });
+            }
+        }
+        Self {
+            flows,
+            total_tiles: mapping.total_tiles,
+        }
+    }
+
+    /// Flows whose destination is weight layer `li`.
+    pub fn flows_into(&self, li: usize) -> impl Iterator<Item = &TrafficFlow> {
+        self.flows.iter().filter(move |f| f.dst_layer == li)
+    }
+
+    /// Aggregate injection rate per source tile (flits/cycle), used for
+    /// saturation checks and the analytical model's Λ diagonal.
+    pub fn node_injection_rates(&self) -> Vec<f64> {
+        let mut rates = vec![0.0; self.total_tiles];
+        for f in &self.flows {
+            for s in f.src_tiles.clone() {
+                rates[s] += f.rate * f.dst_tiles.len() as f64;
+            }
+        }
+        rates
+    }
+
+    /// Sum of all pairwise rates (network load in flits/cycle).
+    pub fn total_rate(&self) -> f64 {
+        self.flows
+            .iter()
+            .map(|f| f.rate * (f.src_tiles.len() * f.dst_tiles.len()) as f64)
+            .sum()
+    }
+}
+
+/// Resolve the producers of weight layer `li` through weight-less nodes.
+/// Returns `(producer_graph_index, activation_elements)` pairs; producers
+/// that resolve to the network input are reported with index 0 (the Input
+/// node — callers treat it as off-chip).
+pub fn resolve_producers(graph: &DnnGraph, li: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    // Walk each direct predecessor; descend through weight-less layers.
+    fn descend(graph: &DnnGraph, node: usize, out: &mut Vec<(usize, usize)>) {
+        let layer = &graph.layers[node];
+        if layer.kind.has_weights() || node == 0 {
+            out.push((node, layer.output_elems()));
+            return;
+        }
+        for &p in &layer.inputs {
+            descend(graph, p, out);
+        }
+    }
+    for &p in &graph.layers[li].inputs {
+        descend(graph, p, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{models, Dataset, DnnGraph};
+
+    fn build_all(g: &DnnGraph) -> (Mapping, InjectionMatrix) {
+        let arch = ArchConfig::default();
+        let noc = NocConfig::default();
+        let m = Mapping::build(g, &arch);
+        let inj = InjectionMatrix::build(g, &m, &arch, &noc);
+        (m, inj)
+    }
+
+    #[test]
+    fn eq3_worked_example() {
+        // Two FC layers: fc1 (784->512, 64 xbars -> 4 tiles),
+        // fc2 (512->256, 2*8=16 xbars -> 1 tile).
+        // A = 512 activations into fc2; rate = 512*8*60/(4*1*32*1e9).
+        let mut g = DnnGraph::new("two-fc", Dataset::Mnist);
+        let f1 = g.fc("fc1", 0, 512);
+        g.fc("fc2", f1, 256);
+        let (m, inj) = build_all(&g);
+        assert_eq!(m.total_tiles, 4 + 1);
+        assert_eq!(inj.flows.len(), 1);
+        let f = &inj.flows[0];
+        assert_eq!(f.activations, 512);
+        let expect = 512.0 * 8.0 * 60.0 / (4.0 * 1.0 * 32.0 * 1.0e9);
+        assert!((f.rate - expect).abs() < 1e-18);
+    }
+
+    #[test]
+    fn first_layer_generates_no_onchip_flow() {
+        let g = models::mlp();
+        let (_, inj) = build_all(&g);
+        // 3 FC layers -> flows fc1->fc2 and fc2->fc3 only.
+        assert_eq!(inj.flows.len(), 2);
+    }
+
+    #[test]
+    fn residual_creates_skip_flows() {
+        let g = models::resnet(50);
+        let (_, inj) = build_all(&g);
+        // Every Add joins two producers, so some consumers have >1 inbound flow.
+        let multi = g
+            .weight_layers()
+            .iter()
+            .filter(|&&li| inj.flows_into(li).count() > 1)
+            .count();
+        assert!(multi > 10, "expected many multi-producer consumers, got {multi}");
+    }
+
+    #[test]
+    fn densenet_fanout_dominates() {
+        // DenseNet flows-per-weight-layer must exceed VGG's (connectivity).
+        let d = models::densenet(100);
+        let v = models::vgg(19);
+        let (_, id) = build_all(&d);
+        let (_, iv) = build_all(&v);
+        let fd = id.flows.len() as f64 / d.num_weight_layers() as f64;
+        let fv = iv.flows.len() as f64 / v.num_weight_layers() as f64;
+        assert!(fd > 2.0 * fv, "DenseNet {fd} vs VGG {fv}");
+    }
+
+    #[test]
+    fn rates_scale_inversely_with_bus_width() {
+        let g = models::lenet5();
+        let arch = ArchConfig::default();
+        let m = Mapping::build(&g, &arch);
+        let w32 = InjectionMatrix::build(&g, &m, &arch, &NocConfig::default());
+        let w64 = InjectionMatrix::build(
+            &g,
+            &m,
+            &arch,
+            &NocConfig {
+                bus_width: 64,
+                ..NocConfig::default()
+            },
+        );
+        for (a, b) in w32.flows.iter().zip(&w64.flows) {
+            assert!((a.rate - 2.0 * b.rate).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn node_rates_cover_all_sources(){
+        let g = models::vgg(19);
+        let (m, inj) = build_all(&g);
+        let rates = inj.node_injection_rates();
+        assert_eq!(rates.len(), m.total_tiles);
+        // Last layer's tiles send nothing; early tiles send something.
+        assert!(rates.iter().any(|&r| r > 0.0));
+        let total: f64 = rates.iter().sum();
+        assert!((total - inj.total_rate()).abs() < 1e-9);
+    }
+}

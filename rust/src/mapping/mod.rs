@@ -1,0 +1,197 @@
+//! Mapping a DNN onto the multi-tiled IMC architecture:
+//!
+//! * Eq. 2 — crossbars per layer from kernel/channel shapes and PE size,
+//! * tiles per layer (no layer split across tiles, tiles not shared),
+//! * Fig. 7 — sequential tile numbering/placement,
+//! * Eq. 3 — per source–destination injection-rate matrix.
+
+pub mod injection;
+pub mod placement;
+
+pub use injection::{InjectionMatrix, TrafficFlow};
+pub use placement::Placement;
+
+use crate::config::ArchConfig;
+use crate::dnn::{DnnGraph, LayerKind};
+
+/// Crossbar arrays needed by one weight layer (paper Eq. 2):
+/// `ceil(Kx·Ky·C_in / PE_x) × ceil(C_out·N_bits / PE_y)`.
+pub fn crossbars_for_layer(graph: &DnnGraph, li: usize, cfg: &ArchConfig) -> usize {
+    let layer = &graph.layers[li];
+    let (rows, cols) = match layer.kind {
+        LayerKind::Conv {
+            kx, ky, c_in, c_out, ..
+        } => (kx * ky * c_in, c_out),
+        LayerKind::Fc { inputs, outputs } => (inputs, outputs),
+        _ => return 0,
+    };
+    // n_bits of weight precision spread over cells holding cell_bits each.
+    let bit_cols = cols * cfg.n_bits.div_ceil(cfg.cell_bits);
+    rows.div_ceil(cfg.pe_size) * bit_cols.div_ceil(cfg.pe_size)
+}
+
+/// The tile assignment of one weight layer: tiles `[start, start+count)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerTiles {
+    /// Index into `DnnGraph::layers`.
+    pub layer: usize,
+    /// First global tile id owned by this layer.
+    pub start: usize,
+    /// Number of tiles (≥ 1).
+    pub count: usize,
+    /// Crossbars occupied (for utilization reporting).
+    pub crossbars: usize,
+}
+
+impl LayerTiles {
+    pub fn tiles(&self) -> std::ops::Range<usize> {
+        self.start..self.start + self.count
+    }
+}
+
+/// Full mapping of a DNN to tiles.
+#[derive(Clone, Debug)]
+pub struct Mapping {
+    /// One entry per weight layer, in topological order.
+    pub layers: Vec<LayerTiles>,
+    pub total_tiles: usize,
+    pub total_crossbars: usize,
+}
+
+impl Mapping {
+    /// Map `graph` onto tiles under `cfg` (Fig. 7 sequential placement:
+    /// tiles are numbered layer by layer; a layer never shares a tile).
+    pub fn build(graph: &DnnGraph, cfg: &ArchConfig) -> Self {
+        let per_tile = cfg.pes_per_tile();
+        let mut layers = Vec::new();
+        let mut next_tile = 0usize;
+        let mut total_crossbars = 0usize;
+        for li in graph.weight_layers() {
+            let xbars = crossbars_for_layer(graph, li, cfg);
+            let count = xbars.div_ceil(per_tile).max(1);
+            layers.push(LayerTiles {
+                layer: li,
+                start: next_tile,
+                count,
+                crossbars: xbars,
+            });
+            next_tile += count;
+            total_crossbars += xbars;
+        }
+        Mapping {
+            layers,
+            total_tiles: next_tile,
+            total_crossbars,
+        }
+    }
+
+    /// Tile range of the weight layer with graph index `li`.
+    pub fn tiles_of(&self, li: usize) -> Option<&LayerTiles> {
+        self.layers.iter().find(|lt| lt.layer == li)
+    }
+
+    /// Crossbar utilization: fraction of allocated crossbar slots that hold
+    /// weights (paper §1 notes VGG-19's high PE utilization).
+    pub fn utilization(&self, cfg: &ArchConfig) -> f64 {
+        let slots = self.total_tiles * cfg.pes_per_tile();
+        if slots == 0 {
+            0.0
+        } else {
+            self.total_crossbars as f64 / slots as f64
+        }
+    }
+
+    /// Invariants used by property tests.
+    pub fn validate(&self, cfg: &ArchConfig) -> Result<(), String> {
+        let mut expected_start = 0usize;
+        for lt in &self.layers {
+            if lt.start != expected_start {
+                return Err(format!(
+                    "layer {} tiles not contiguous: start {} expected {}",
+                    lt.layer, lt.start, expected_start
+                ));
+            }
+            if lt.count == 0 {
+                return Err(format!("layer {} has zero tiles", lt.layer));
+            }
+            if lt.crossbars > lt.count * cfg.pes_per_tile() {
+                return Err(format!(
+                    "layer {} crossbars {} exceed tile capacity {}",
+                    lt.layer,
+                    lt.crossbars,
+                    lt.count * cfg.pes_per_tile()
+                ));
+            }
+            expected_start += lt.count;
+        }
+        if expected_start != self.total_tiles {
+            return Err("total_tiles mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    #[test]
+    fn eq2_worked_example() {
+        // VGG-19 conv3_1: 3x3x128 -> 256, 8-bit weights, 256x256 PEs:
+        // rows = ceil(1152/256) = 5; cols = ceil(256*8/256) = 8 -> 40.
+        let g = models::vgg(19);
+        let cfg = ArchConfig::default();
+        let li = g
+            .layers
+            .iter()
+            .position(|l| l.name == "conv3_1")
+            .unwrap();
+        assert_eq!(crossbars_for_layer(&g, li, &cfg), 5 * 8);
+    }
+
+    #[test]
+    fn eq2_fc_example() {
+        // MLP fc1: 784x512, 8-bit: ceil(784/256)*ceil(4096/256) = 4*16 = 64.
+        let g = models::mlp();
+        let cfg = ArchConfig::default();
+        let li = g.weight_layers()[0];
+        assert_eq!(crossbars_for_layer(&g, li, &cfg), 4 * 16);
+    }
+
+    #[test]
+    fn mapping_invariants_on_zoo() {
+        let cfg = ArchConfig::default();
+        for g in crate::dnn::model_zoo() {
+            let m = Mapping::build(&g, &cfg);
+            m.validate(&cfg).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert_eq!(m.layers.len(), g.num_weight_layers());
+            assert!(m.utilization(&cfg) <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn vgg19_scale_sanity() {
+        // VGG-19 at 256x256/8-bit needs thousands of crossbars and >100 tiles.
+        let cfg = ArchConfig::default();
+        let m = Mapping::build(&models::vgg(19), &cfg);
+        assert!(m.total_crossbars > 2_000, "{}", m.total_crossbars);
+        assert!(m.total_tiles > 100, "{}", m.total_tiles);
+    }
+
+    #[test]
+    fn smaller_pe_needs_more_crossbars() {
+        let g = models::lenet5();
+        let big = ArchConfig {
+            pe_size: 256,
+            ..ArchConfig::default()
+        };
+        let small = ArchConfig {
+            pe_size: 64,
+            ..ArchConfig::default()
+        };
+        let cb_big = Mapping::build(&g, &big).total_crossbars;
+        let cb_small = Mapping::build(&g, &small).total_crossbars;
+        assert!(cb_small > cb_big);
+    }
+}

@@ -1,0 +1,95 @@
+//! Tile placement (paper Fig. 7): tiles are numbered sequentially, layer by
+//! layer, and placed row-major on a near-square grid. The injection matrix
+//! incorporates placement through per-pair hop counts, so any placement
+//! plugs in here.
+
+/// Physical positions of `n` tiles on a `cols`-wide row-major grid.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub n: usize,
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl Placement {
+    /// Near-square grid: `cols = ceil(sqrt(n))`.
+    pub fn square(n: usize) -> Self {
+        assert!(n > 0);
+        let cols = (n as f64).sqrt().ceil() as usize;
+        let rows = n.div_ceil(cols);
+        Self { n, cols, rows }
+    }
+
+    /// Grid coordinates (x = column, y = row) of tile `t`.
+    #[inline]
+    pub fn coords(&self, t: usize) -> (usize, usize) {
+        debug_assert!(t < self.n);
+        (t % self.cols, t / self.cols)
+    }
+
+    /// Tile id at (x, y), if occupied.
+    pub fn at(&self, x: usize, y: usize) -> Option<usize> {
+        if x >= self.cols || y >= self.rows {
+            return None;
+        }
+        let t = y * self.cols + x;
+        (t < self.n).then_some(t)
+    }
+
+    /// Manhattan hop distance between two tiles (the X-Y route length).
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Average hop count over a set of (src, dst) pairs.
+    pub fn mean_hops(&self, pairs: &[(usize, usize)]) -> f64 {
+        if pairs.is_empty() {
+            return 0.0;
+        }
+        pairs.iter().map(|&(a, b)| self.hops(a, b) as f64).sum::<f64>() / pairs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_grid_shapes() {
+        let p = Placement::square(16);
+        assert_eq!((p.cols, p.rows), (4, 4));
+        let p = Placement::square(17);
+        assert_eq!((p.cols, p.rows), (5, 4));
+        let p = Placement::square(1);
+        assert_eq!((p.cols, p.rows), (1, 1));
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let p = Placement::square(12);
+        for t in 0..12 {
+            let (x, y) = p.coords(t);
+            assert_eq!(p.at(x, y), Some(t));
+        }
+        assert_eq!(p.at(99, 0), None);
+    }
+
+    #[test]
+    fn hops_manhattan() {
+        let p = Placement::square(16); // 4x4
+        assert_eq!(p.hops(0, 0), 0);
+        assert_eq!(p.hops(0, 3), 3); // same row
+        assert_eq!(p.hops(0, 15), 6); // corner to corner
+        assert_eq!(p.hops(5, 10), p.hops(10, 5)); // symmetric
+    }
+
+    #[test]
+    fn mean_hops_basic() {
+        let p = Placement::square(4); // 2x2
+        let pairs = [(0, 1), (0, 3)];
+        assert!((p.mean_hops(&pairs) - 1.5).abs() < 1e-12);
+        assert_eq!(p.mean_hops(&[]), 0.0);
+    }
+}

@@ -1,0 +1,468 @@
+//! Analytical NoC performance model — the paper's Algorithm 2.
+//!
+//! Per router `r` we build the port-to-port injection matrix `Λʳ` from the
+//! deterministic routes of all flows, derive the forwarding-probability
+//! matrix `Fʳ` (Eq. 7), the contention matrix `Cʳ` (`c_ij = Σ_k f_ik f_jk`),
+//! and solve the queueing fixed point
+//!
+//! ```text
+//! Nʳ = (I − t·Λʳ·Cʳ)⁻¹ · Λʳ · R           (Eq. 8)
+//! Wʳ = Nʳ (Λʳ)⁻¹                           (per-port waiting, Little)
+//! ```
+//!
+//! with deterministic unit service time `t = 1` and the discrete-time
+//! residual `R = 1/2` (packets arrive on clock edges — the correction of
+//! the paper's ref. [21]). Per-flit end-to-end latency adds the pipeline
+//! transit along the route; per-layer latency is the rate-weighted mean,
+//! and `L_comm` sums layers (Eq. 9–11).
+
+use std::collections::HashMap;
+
+use super::sim::FlowSpec;
+use super::topology::Network;
+use crate::config::NocConfig;
+use crate::util::Matrix;
+
+/// Result of evaluating one layer's flow set.
+#[derive(Clone, Debug)]
+pub struct LayerEstimate {
+    /// Rate-weighted average per-flit latency, cycles.
+    pub avg_latency: f64,
+    /// Sum of average waiting times across routers (Eq. 10, reported for
+    /// comparison with the paper's aggregate form).
+    pub total_waiting: f64,
+    /// True when some router is past its stability point (ρ ≥ 1); latency
+    /// is then a lower bound.
+    pub saturated: bool,
+}
+
+/// Analytical model over a fixed network.
+pub struct AnalyticalModel<'a> {
+    net: &'a Network,
+    cfg: &'a NocConfig,
+}
+
+/// Per-router accumulated port-to-port rates.
+struct RouterTraffic {
+    /// lambda[in][out] in flits/cycle.
+    lambda: Matrix,
+}
+
+impl<'a> AnalyticalModel<'a> {
+    pub fn new(net: &'a Network, cfg: &'a NocConfig) -> Self {
+        Self { net, cfg }
+    }
+
+    /// Router service time in cycles: 1 for pipelined NoC routers, 2 for
+    /// the half-duplex P2P store-and-forward nodes.
+    fn service_time(&self) -> f64 {
+        if self.net.topology.has_routers() {
+            1.0
+        } else {
+            2.0
+        }
+    }
+
+    /// Zero-load transit latency of a route with `hops` links (calibrated
+    /// against the cycle-accurate router model: each of the `hops + 1`
+    /// routers on the path costs its pipeline depth, plus one ejection
+    /// cycle; P2P nodes cost one store-and-forward cycle each).
+    fn transit(&self, hops: usize) -> f64 {
+        let per_router = if self.net.topology.has_routers() {
+            self.cfg.pipeline_stages as f64
+        } else {
+            1.0
+        };
+        (hops as f64 + 1.0) * per_router + 1.0
+    }
+
+    /// Rate-weighted zero-load latency over a flow set (denominator of the
+    /// congestion factor used by the architecture evaluator).
+    pub fn zero_load(&self, flows: &[FlowSpec]) -> f64 {
+        let mut weighted = 0.0;
+        let mut total = 0.0;
+        for f in flows {
+            if f.src == f.dst {
+                continue;
+            }
+            let hops = self.net.hops(f.src, f.dst);
+            let w = if f.rate > 0.0 { f.rate } else { f.flits as f64 };
+            weighted += w * self.transit(hops);
+            total += w;
+        }
+        if total > 0.0 {
+            weighted / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Accumulate every flow's route into per-router Λ matrices. Returns
+    /// the traffic map and, per flow, its route as (router, in_port) steps.
+    fn build_traffic(
+        &self,
+        flows: &[FlowSpec],
+    ) -> (HashMap<usize, RouterTraffic>, Vec<Vec<(usize, usize)>>) {
+        let mut traffic: HashMap<usize, RouterTraffic> = HashMap::new();
+        let mut flow_steps = Vec::with_capacity(flows.len());
+        for f in flows {
+            let mut steps = Vec::new();
+            if f.src == f.dst {
+                flow_steps.push(steps);
+                continue;
+            }
+            let path = self.net.route_path(f.src, f.dst);
+            // Input port at the first router is the terminal's local port.
+            let mut in_port = self.net.attach_port[f.src];
+            for (k, &r) in path.iter().enumerate() {
+                let out_port = if k + 1 < path.len() {
+                    self.net.route(r, f.dst)
+                } else {
+                    self.net.attach_port[f.dst] // ejection
+                };
+                let ports = self.net.ports(r);
+                let t = traffic.entry(r).or_insert_with(|| RouterTraffic {
+                    lambda: Matrix::zeros(ports, ports),
+                });
+                t.lambda[(in_port, out_port)] += f.rate;
+                steps.push((r, in_port));
+                if k + 1 < path.len() {
+                    // Find the input port on the next router.
+                    let slot = out_port - self.net.local_ports;
+                    let next = self.net.neighbors[r][slot];
+                    in_port = self.net.local_ports
+                        + self.net.neighbors[next]
+                            .iter()
+                            .position(|&m| m == r)
+                            .expect("asymmetric link");
+                }
+            }
+            flow_steps.push(steps);
+        }
+        (traffic, flow_steps)
+    }
+
+    /// Solve the per-router queueing model; returns per-(router, in_port)
+    /// expected waiting time and a saturation flag.
+    fn solve_waiting(
+        &self,
+        traffic: &HashMap<usize, RouterTraffic>,
+    ) -> (HashMap<(usize, usize), f64>, bool, f64) {
+        let t_service = self.service_time();
+        let mut waiting = HashMap::new();
+        let mut saturated = false;
+        let mut total_waiting = 0.0;
+
+        for (&r, tr) in traffic {
+            let ports = tr.lambda.rows();
+            // Port arrival rates λ_i = Σ_j λ_ij.
+            let lam: Vec<f64> = (0..ports).map(|i| tr.lambda.row(i).iter().sum()).collect();
+            // Forwarding probabilities F (Eq. 7).
+            let mut f = Matrix::zeros(ports, ports);
+            for i in 0..ports {
+                if lam[i] > 0.0 {
+                    for j in 0..ports {
+                        f[(i, j)] = tr.lambda[(i, j)] / lam[i];
+                    }
+                }
+            }
+            // Contention matrix C: c_ij = Σ_k f_ik · f_jk.
+            let ft = f.transpose();
+            let c = &f * &ft;
+            // N = (I - t·diag(λ)·C)^{-1} · diag(λ) · R   (Eq. 8)
+            // Discrete-time deterministic service (paper ref. [21]): the
+            // mean residual service seen by an arrival is R_i = λ_i·t²/2,
+            // which vanishes at zero load (M/D/1 behaviour).
+            let lam_diag = Matrix::diag(&lam);
+            let a = &Matrix::identity(ports) - &(&lam_diag * &c).scale(t_service);
+            let rhs: Vec<f64> = lam
+                .iter()
+                .map(|l| l * (l * t_service * t_service / 2.0))
+                .collect();
+            let n = match a.solve(&rhs) {
+                Some(n) if n.iter().all(|v| v.is_finite() && *v >= -1e-9) => n,
+                _ => {
+                    saturated = true;
+                    // Fall back to a large-but-finite waiting estimate.
+                    vec![self.cfg.buffer_depth as f64; ports]
+                }
+            };
+            // Per-port waiting W_i = N_i / λ_i (Little's law). Also check
+            // the utilization stability condition.
+            let mut w_sum = 0.0;
+            let mut active = 0usize;
+            for i in 0..ports {
+                let w = if lam[i] > 0.0 { (n[i] / lam[i]).max(0.0) } else { 0.0 };
+                if lam[i] * t_service >= 1.0 {
+                    saturated = true;
+                }
+                if lam[i] > 0.0 {
+                    w_sum += w;
+                    active += 1;
+                }
+                waiting.insert((r, i), w);
+            }
+            // Eq. 9: average over ports; Eq. 10 accumulates over routers.
+            if active > 0 {
+                total_waiting += w_sum / ports as f64;
+            }
+        }
+        (waiting, saturated, total_waiting)
+    }
+
+    /// Estimate one layer's average per-flit communication latency.
+    pub fn layer_latency(&self, flows: &[FlowSpec]) -> LayerEstimate {
+        let (traffic, flow_steps) = self.build_traffic(flows);
+        if traffic.is_empty() {
+            return LayerEstimate {
+                avg_latency: 0.0,
+                total_waiting: 0.0,
+                saturated: false,
+            };
+        }
+        let (waiting, saturated, total_waiting) = self.solve_waiting(&traffic);
+
+        let mut weighted = 0.0;
+        let mut total_rate = 0.0;
+        for (f, steps) in flows.iter().zip(&flow_steps) {
+            if f.src == f.dst || steps.is_empty() {
+                continue;
+            }
+            let hops = steps.len() - 1;
+            let mut lat = self.transit(hops);
+            for &(r, p) in steps {
+                lat += waiting.get(&(r, p)).copied().unwrap_or(0.0);
+            }
+            let rate = if f.rate > 0.0 { f.rate } else { f.flits as f64 };
+            weighted += rate * lat;
+            total_rate += rate;
+        }
+        LayerEstimate {
+            avg_latency: if total_rate > 0.0 { weighted / total_rate } else { 0.0 },
+            total_waiting,
+            saturated,
+        }
+    }
+}
+
+impl<'a> AnalyticalModel<'a> {
+    /// Fast analytical estimate of the *makespan* (cycles to complete one
+    /// frame's transfers, cf. drain-mode simulation): the busiest resource
+    /// — a directed link or an ejection port — bounds the transfer, plus
+    /// the zero-load transit of the average route and the queueing wait.
+    ///
+    /// This is the model behind the optimal-topology guidance (Fig. 20):
+    /// it captures exactly the ρ/μ dependence of Eq. 16 (flits per
+    /// bottleneck resource ∝ ρ·μ / (tiles per layer)).
+    pub fn layer_makespan(&self, flows: &[FlowSpec]) -> f64 {
+        let (bottleneck, transit) = self.layer_bottleneck(flows);
+        if bottleneck == 0.0 && transit == 0.0 {
+            return 0.0;
+        }
+        bottleneck + transit
+    }
+
+    /// Bandwidth-bound analysis: returns `(bottleneck_load, mean_transit)`
+    /// where `bottleneck_load` is the heaviest per-frame load (in flits, or
+    /// in flits/cycle when rates are given) on any directed link, ejection
+    /// port, injection port — or whole node for half-duplex P2P.
+    pub fn layer_bottleneck(&self, flows: &[FlowSpec]) -> (f64, f64) {
+        self.layer_bottleneck_with_eject(flows, 1.0)
+    }
+
+    /// Like [`AnalyticalModel::layer_bottleneck`], with ejection/injection
+    /// ports draining at `eject_capacity` flits/cycle (wide tile-local
+    /// ports feeding several CE lanes in parallel, Fig. 10).
+    pub fn layer_bottleneck_with_eject(
+        &self,
+        flows: &[FlowSpec],
+        eject_capacity: f64,
+    ) -> (f64, f64) {
+        // flits through each directed link (router, slot) and ejection port.
+        let mut link_load: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut eject_load: HashMap<(usize, usize), f64> = HashMap::new();
+        let mut inject_load: HashMap<usize, f64> = HashMap::new();
+        let mut transit_weighted = 0.0;
+        let mut total_flits = 0.0;
+        for f in flows {
+            if f.src == f.dst {
+                continue;
+            }
+            let flits = if f.flits > 0 { f.flits as f64 } else { f.rate };
+            let path = self.net.route_path(f.src, f.dst);
+            for (k, &r) in path.iter().enumerate() {
+                if k + 1 < path.len() {
+                    let out = self.net.route(r, f.dst);
+                    *link_load.entry((r, out)).or_default() += flits;
+                }
+            }
+            let last = *path.last().unwrap();
+            *eject_load
+                .entry((last, self.net.attach_port[f.dst]))
+                .or_default() += flits;
+            *inject_load.entry(f.src).or_default() += flits;
+            transit_weighted += flits * self.transit(path.len() - 1);
+            total_flits += flits;
+        }
+        if total_flits == 0.0 {
+            return (0.0, 0.0);
+        }
+        let cap = eject_capacity.max(1.0);
+        let mut max_load = link_load.values().fold(0.0f64, |m, &v| m.max(v));
+        for &v in eject_load.values().chain(inject_load.values()) {
+            max_load = max_load.max(v / cap);
+        }
+        // P2P shares one half-duplex switch slot per node across all
+        // ports: the node's total forwarded traffic serializes at 2
+        // cycles/flit.
+        if !self.net.topology.has_routers() {
+            let mut node_load: HashMap<usize, f64> = HashMap::new();
+            for ((r, _), v) in &link_load {
+                *node_load.entry(*r).or_default() += v;
+            }
+            for ((r, _), v) in &eject_load {
+                *node_load.entry(*r).or_default() += v;
+            }
+            let node_max = node_load.values().fold(0.0f64, |m, &v| m.max(v));
+            max_load = max_load.max(node_max * self.service_time());
+        }
+        (max_load, transit_weighted / total_flits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::sim::{uniform_random_flows, Mode, NocSim};
+    use crate::noc::topology::Topology;
+
+    #[test]
+    fn zero_load_matches_transit() {
+        let net = Network::build(Topology::Mesh, 16);
+        let cfg = NocConfig::default();
+        let model = AnalyticalModel::new(&net, &cfg);
+        let flows = [FlowSpec {
+            src: 0,
+            dst: 15,
+            rate: 1e-6,
+            flits: 0,
+        }];
+        let est = model.layer_latency(&flows);
+        // 6 hops, 7 routers x 3 pipeline stages + eject -> 22 cycles,
+        // negligible waiting at 1e-6 load.
+        assert!(
+            (21.5..23.5).contains(&est.avg_latency),
+            "{}",
+            est.avg_latency
+        );
+        assert!(!est.saturated);
+    }
+
+    #[test]
+    fn waiting_grows_with_load() {
+        let net = Network::build(Topology::Mesh, 16);
+        let cfg = NocConfig::default();
+        let model = AnalyticalModel::new(&net, &cfg);
+        let lo = model.layer_latency(&uniform_random_flows(16, 0.02));
+        let hi = model.layer_latency(&uniform_random_flows(16, 0.30));
+        assert!(hi.avg_latency > lo.avg_latency);
+        assert!(hi.total_waiting > lo.total_waiting);
+    }
+
+    #[test]
+    fn saturation_detected() {
+        let net = Network::build(Topology::Mesh, 16);
+        let cfg = NocConfig::default();
+        let model = AnalyticalModel::new(&net, &cfg);
+        // Hotspot at 4 flits/cycle into one node: far past capacity.
+        let flows: Vec<FlowSpec> = (1..16)
+            .map(|s| FlowSpec {
+                src: s,
+                dst: 0,
+                rate: 0.3,
+                flits: 0,
+            })
+            .collect();
+        let est = model.layer_latency(&flows);
+        assert!(est.saturated);
+    }
+
+    #[test]
+    fn accuracy_against_cycle_accurate_low_load() {
+        // Paper Fig. 11: accuracy > 85% vs BookSim. Check at a low,
+        // DNN-realistic load on a 64-node mesh.
+        let cfg = NocConfig::default();
+        let flows = uniform_random_flows(64, 0.05);
+        let net = Network::build(Topology::Mesh, 64);
+        let est = AnalyticalModel::new(&net, &cfg).layer_latency(&flows);
+        let sim = NocSim::new(
+            Topology::Mesh,
+            64,
+            &cfg,
+            &flows,
+            Mode::Steady {
+                warmup: 1_000,
+                measure: 10_000,
+            },
+            21,
+        )
+        .run();
+        let acc = 1.0 - (est.avg_latency - sim.avg_latency).abs() / sim.avg_latency;
+        assert!(
+            acc > 0.8,
+            "analytical {} vs sim {} (accuracy {acc})",
+            est.avg_latency,
+            sim.avg_latency
+        );
+    }
+
+    #[test]
+    fn makespan_tracks_drain_sim() {
+        // The bandwidth-bound estimate must land within 2x of the
+        // cycle-accurate drain makespan for a hotspot transfer.
+        let cfg = NocConfig::default();
+        let net = Network::build(Topology::Mesh, 16);
+        let flows: Vec<FlowSpec> = (1..8)
+            .map(|s| FlowSpec {
+                src: s,
+                dst: 0,
+                rate: 0.0,
+                flits: 100,
+            })
+            .collect();
+        let est = AnalyticalModel::new(&net, &cfg).layer_makespan(&flows);
+        let sim = NocSim::new(
+            Topology::Mesh,
+            16,
+            &cfg,
+            &flows,
+            Mode::Drain {
+                max_cycles: 1_000_000,
+            },
+            31,
+        )
+        .run();
+        assert!(sim.drained);
+        let ratio = est / sim.makespan as f64;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "estimate {est} vs sim {} (ratio {ratio})",
+            sim.makespan
+        );
+    }
+
+    #[test]
+    fn tree_estimates_work() {
+        let cfg = NocConfig::default();
+        let net = Network::build(Topology::Tree, 64);
+        let flows = [FlowSpec {
+            src: 0,
+            dst: 63,
+            rate: 0.01,
+            flits: 0,
+        }];
+        let est = AnalyticalModel::new(&net, &cfg).layer_latency(&flows);
+        // 4 hops, 5 routers x 3 stages + eject -> 16 cycles transit.
+        assert!((15.0..19.0).contains(&est.avg_latency), "{}", est.avg_latency);
+    }
+}

@@ -1,0 +1,29 @@
+//! On-chip interconnect: a BookSim-class cycle-accurate simulator plus the
+//! analytical performance model of the paper's Algorithm 2.
+//!
+//! * [`topology`] — P2P, NoC-tree, NoC-mesh, c-mesh, torus, hypercube link
+//!   graphs with deterministic routing (X-Y on mesh/c-mesh/torus, up-down on
+//!   tree, dimension-order on hypercube, neighbor-forwarding on P2P).
+//! * [`router`] — 5-port input-buffered router with virtual channels,
+//!   credit-based flow control and a 3-stage pipeline (paper Table 2).
+//! * [`sim`] — the cycle-accurate event loop with non-uniform per-pair
+//!   injection (the paper's BookSim customization, §3.2), queue-occupancy
+//!   and worst-case-latency statistics (§6.3).
+//! * [`power`] — router/link area and energy macro-models (Orion-class).
+//! * [`analytical`] — Algorithm 2: per-router injection matrix, forwarding
+//!   and contention matrices, queue lengths `N = (I − tΛC)⁻¹ΛR`, end-to-end
+//!   per-layer latency.
+//! * [`latency`] — Algorithm 1: end-to-end communication latency of a DNN
+//!   by per-layer simulation (Eq. 4/5).
+
+pub mod analytical;
+pub mod latency;
+pub mod power;
+pub mod router;
+pub mod sim;
+pub mod topology;
+
+pub use analytical::AnalyticalModel;
+pub use power::NocPower;
+pub use sim::{NocSim, SimStats};
+pub use topology::{Network, Topology};

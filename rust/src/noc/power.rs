@@ -1,0 +1,183 @@
+//! Interconnect area and energy macro-models (Orion-class), replacing the
+//! interconnect estimates the paper strips out of NeuroSim (§3.1).
+//!
+//! Router cost scales with radix, virtual channels, buffer depth and flit
+//! width; link cost with width and length. Constants are 32 nm-calibrated
+//! and follow the same F-scaling as [`crate::circuit::device`].
+
+use super::topology::{Network, Topology};
+use crate::config::NocConfig;
+
+/// Per-network interconnect cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct NocPower {
+    /// Total interconnect area, mm².
+    pub area_mm2: f64,
+    /// Energy per flit per router hop, J.
+    pub energy_per_hop_j: f64,
+    /// Energy per flit per link traversal, J.
+    pub energy_per_link_j: f64,
+    /// Static/leakage power of the whole fabric, W.
+    pub leakage_w: f64,
+    /// Routers and links in the fabric (for reporting).
+    pub routers: usize,
+    pub links: usize,
+}
+
+/// 32 nm base constants.
+const BUFFER_AREA_PER_BIT_UM2: f64 = 0.45; // FIFO cell + control
+const XBAR_AREA_PER_BIT_UM2: f64 = 0.12; // per port² bit
+const ALLOC_AREA_UM2: f64 = 400.0; // VC + switch allocators per VC
+const BUFFER_ENERGY_PER_BIT_J: f64 = 12.0e-15; // write + read
+const XBAR_ENERGY_PER_BIT_J: f64 = 5.0e-15;
+const ARB_ENERGY_J: f64 = 80.0e-15;
+const LINK_ENERGY_PER_BIT_MM_J: f64 = 60.0e-15;
+const LINK_AREA_PER_BIT_MM_UM2: f64 = 1.8; // repeated wire + repeaters
+const ROUTER_LEAKAGE_PER_BIT_W: f64 = 0.9e-9; // buffer-dominated
+/// P2P per-tile forwarding latch (no router): latch + mux per bit.
+const P2P_NODE_AREA_PER_BIT_UM2: f64 = 0.9;
+const P2P_NODE_ENERGY_PER_BIT_J: f64 = 8.0e-15;
+
+impl NocPower {
+    /// Build the cost model for `net` under `cfg`, with `link_mm` average
+    /// link length (≈ tile edge for mesh/tree at tile pitch).
+    pub fn new(net: &Network, cfg: &NocConfig, tech_nm: f64, link_mm: f64) -> Self {
+        let f1 = tech_nm / 32.0;
+        let f2 = f1 * f1;
+        let w = cfg.bus_width as f64;
+        let links = net.link_count();
+
+        if !net.topology.has_routers() {
+            // P2P: forwarding latches at every tile + neighbor links.
+            let node_area = P2P_NODE_AREA_PER_BIT_UM2 * w * 4.0 * f2; // 4 directions
+            let area_mm2 = (net.routers as f64 * node_area
+                + links as f64 * LINK_AREA_PER_BIT_MM_UM2 * w * link_mm * f2)
+                / 1e6;
+            return Self {
+                area_mm2,
+                energy_per_hop_j: P2P_NODE_ENERGY_PER_BIT_J * w * f1,
+                energy_per_link_j: LINK_ENERGY_PER_BIT_MM_J * w * link_mm * f1,
+                leakage_w: net.routers as f64 * ROUTER_LEAKAGE_PER_BIT_W * w * 0.25 * f1,
+                routers: 0,
+                links,
+            };
+        }
+
+        // Average radix over routers.
+        let radix: f64 = (0..net.routers).map(|r| net.ports(r) as f64).sum::<f64>()
+            / net.routers as f64;
+        let vcs = cfg.virtual_channels as f64;
+        let depth = cfg.buffer_depth as f64;
+
+        // Per-router components.
+        let buffer_bits = radix * vcs * depth * w;
+        let buf_area = buffer_bits * BUFFER_AREA_PER_BIT_UM2;
+        let xbar_area = radix * radix * w * XBAR_AREA_PER_BIT_UM2;
+        let alloc_area = ALLOC_AREA_UM2 * vcs;
+        let cmesh_factor = if net.topology == Topology::CMesh { 6.0 } else { 1.0 };
+        let router_area_um2 = (buf_area + xbar_area + alloc_area) * f2 * cmesh_factor;
+
+        let link_area_um2 = LINK_AREA_PER_BIT_MM_UM2 * w * link_mm * f2;
+        // c-mesh: express links span 2 tiles AND the fabric is replicated
+        // (express + local planes with wide double-pumped datapaths) — the
+        // paper finds its EDAP orders of magnitude above mesh/tree.
+        let link_len_factor = if net.topology == Topology::CMesh { 6.0 } else { 1.0 };
+
+        let area_mm2 = (net.routers as f64 * router_area_um2
+            + links as f64 * link_area_um2 * link_len_factor)
+            / 1e6;
+
+        // Per-flit dynamic energy.
+        let energy_per_hop_j = (BUFFER_ENERGY_PER_BIT_J * w
+            + XBAR_ENERGY_PER_BIT_J * w * (radix / 5.0)
+            + ARB_ENERGY_J)
+            * f1
+            * cmesh_factor;
+        let energy_per_link_j = LINK_ENERGY_PER_BIT_MM_J * w * link_mm * link_len_factor * f1;
+
+        let leakage_w =
+            net.routers as f64 * buffer_bits * ROUTER_LEAKAGE_PER_BIT_W * f1 * cmesh_factor;
+
+        Self {
+            area_mm2,
+            energy_per_hop_j,
+            energy_per_link_j,
+            leakage_w,
+            routers: net.routers,
+            links,
+        }
+    }
+
+    /// Dynamic energy for a flit traversing `hops` routers (+hops links).
+    pub fn flit_energy_j(&self, hops: usize) -> f64 {
+        // hops router traversals + hops links + final ejection ≈ hops+1 hops.
+        (hops + 1) as f64 * self.energy_per_hop_j + hops as f64 * self.energy_per_link_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn power(topo: Topology, n: usize, cfg: &NocConfig) -> NocPower {
+        let net = Network::build(topo, n);
+        NocPower::new(&net, cfg, 32.0, 1.0)
+    }
+
+    #[test]
+    fn mesh_costs_more_than_tree() {
+        let cfg = NocConfig::default();
+        let mesh = power(Topology::Mesh, 64, &cfg);
+        let tree = power(Topology::Tree, 64, &cfg);
+        // 64 mesh routers vs 21 tree routers.
+        assert!(mesh.area_mm2 > 2.0 * tree.area_mm2);
+        assert!(mesh.leakage_w > tree.leakage_w);
+    }
+
+    #[test]
+    fn cmesh_costs_more_than_mesh_per_router() {
+        let cfg = NocConfig::default();
+        let mesh = power(Topology::Mesh, 64, &cfg);
+        let cmesh = power(Topology::CMesh, 64, &cfg);
+        // Fewer routers but much higher radix (8 ports) + doubled, longer
+        // express links: per-flit energy must be higher.
+        assert!(cmesh.energy_per_hop_j > mesh.energy_per_hop_j);
+        assert!(cmesh.energy_per_link_j > mesh.energy_per_link_j);
+    }
+
+    #[test]
+    fn p2p_cheap_fabric() {
+        let cfg = NocConfig::default();
+        let p2p = power(Topology::P2P, 64, &cfg);
+        let mesh = power(Topology::Mesh, 64, &cfg);
+        assert!(p2p.area_mm2 < mesh.area_mm2);
+        assert_eq!(p2p.routers, 0);
+    }
+
+    #[test]
+    fn area_scales_with_vcs_and_width() {
+        let base = NocConfig::default();
+        let wide = NocConfig {
+            bus_width: 64,
+            ..base.clone()
+        };
+        let vc4 = NocConfig {
+            virtual_channels: 4,
+            ..base.clone()
+        };
+        let b = power(Topology::Mesh, 64, &base);
+        let w = power(Topology::Mesh, 64, &wide);
+        let v = power(Topology::Mesh, 64, &vc4);
+        assert!(w.area_mm2 > 1.5 * b.area_mm2);
+        assert!(v.area_mm2 > 1.5 * b.area_mm2);
+        assert!(w.energy_per_hop_j > b.energy_per_hop_j);
+    }
+
+    #[test]
+    fn flit_energy_grows_with_hops() {
+        let cfg = NocConfig::default();
+        let p = power(Topology::Mesh, 64, &cfg);
+        assert!(p.flit_energy_j(6) > p.flit_energy_j(1));
+        assert!(p.flit_energy_j(0) > 0.0); // injection+ejection still costs
+    }
+}

@@ -1,0 +1,902 @@
+//! Cycle-accurate NoC simulation (the customized-BookSim substrate,
+//! paper §3.2).
+//!
+//! Two operating modes:
+//!
+//! * **Steady** — every source–destination pair injects with an independent
+//!   Bernoulli process at its Eq.-3 rate; statistics (average/worst flit
+//!   latency, queue occupancy at arrival) are collected after warm-up.
+//!   Used for Fig. 5, Fig. 11, Fig. 13/14/15 and Table 3.
+//! * **Drain** — each pair injects a fixed number of flits (one frame's
+//!   worth) as fast as flow control allows; the simulator runs until the
+//!   network is empty and reports the makespan. Used for the end-to-end
+//!   per-layer communication latency of Algorithm 1 (Eq. 4/5).
+//!
+//! The engine is flit-level with single-cycle links, credit-based
+//! backpressure, round-robin arbitration, and a configurable router
+//! pipeline depth. P2P "networks" are modeled on the same grid but without
+//! routers: every tile advances at most one flit per cycle across all of
+//! its ports (store-and-forward over a shared medium), which is what makes
+//! P2P collapse under high connection density.
+
+use std::collections::HashMap;
+
+use super::router::{Flit, RouterState};
+use super::topology::{Network, Topology, NONE};
+use crate::config::NocConfig;
+use crate::util::Pcg32;
+
+/// One source→destination traffic specification.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowSpec {
+    pub src: usize,
+    pub dst: usize,
+    /// Injection rate in flits/cycle (steady mode).
+    pub rate: f64,
+    /// Total flits to send (drain mode); ignored in steady mode.
+    pub flits: u64,
+}
+
+/// Simulation mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Bernoulli injection; warm up, then measure for a fixed window.
+    Steady { warmup: u64, measure: u64 },
+    /// Inject `FlowSpec::flits` per pair, run until drained (or `max_cycles`).
+    Drain { max_cycles: u64 },
+}
+
+/// Aggregated results of one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Cycles simulated.
+    pub cycles: u64,
+    /// Flits injected into source FIFOs.
+    pub injected: u64,
+    /// Flits delivered to their destination terminal.
+    pub delivered: u64,
+    /// Mean flit latency (generation → ejection), cycles.
+    pub avg_latency: f64,
+    /// Worst flit latency, cycles.
+    pub max_latency: u64,
+    /// Drain mode: cycle at which the last flit ejected.
+    pub makespan: u64,
+    /// Drain mode: did the network fully drain within the cycle budget?
+    pub drained: bool,
+    /// Router-buffer arrivals observed (occupancy sampling, Fig. 13).
+    pub arrivals: u64,
+    /// Arrivals that found the target queue empty.
+    pub arrivals_zero: u64,
+    /// Sum/count of occupancies for arrivals at non-empty queues (Fig. 14).
+    pub nonzero_occ_sum: f64,
+    pub nonzero_occ_count: u64,
+    /// Per-pair latency stats, keyed by `(src << 32) | dst` (Fig. 15 /
+    /// Table 3). Only filled when `track_pairs` is enabled.
+    pub per_pair: HashMap<u64, PairStat>,
+}
+
+/// Latency statistics for one source–destination pair.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairStat {
+    pub count: u64,
+    pub sum_latency: u64,
+    pub max_latency: u64,
+}
+
+impl PairStat {
+    pub fn avg(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_latency as f64 / self.count as f64
+        }
+    }
+}
+
+impl SimStats {
+    /// Fraction of buffer arrivals that found the queue empty (Fig. 13).
+    pub fn zero_occupancy_fraction(&self) -> f64 {
+        if self.arrivals == 0 {
+            1.0
+        } else {
+            self.arrivals_zero as f64 / self.arrivals as f64
+        }
+    }
+
+    /// Mean occupancy of non-empty queues at arrival (Fig. 14).
+    pub fn mean_nonzero_occupancy(&self) -> f64 {
+        if self.nonzero_occ_count == 0 {
+            0.0
+        } else {
+            self.nonzero_occ_sum / self.nonzero_occ_count as f64
+        }
+    }
+}
+
+/// Per-source injection state: either a Bernoulli process over a dst
+/// distribution (steady) or a finite interleaved flit list (drain).
+struct SourceState {
+    /// Aggregate injection rate (steady).
+    rate: f64,
+    /// Destination CDF for steady mode: (cumulative rate, dst).
+    dst_cdf: Vec<(f64, u32)>,
+    /// Remaining (dst, count) entries for drain mode, drawn round-robin.
+    pending: Vec<(u32, u64)>,
+    next_pending: usize,
+    /// Generated-but-not-yet-injected flits (unbounded source FIFO),
+    /// stored as (dst, born).
+    fifo: std::collections::VecDeque<(u32, u64)>,
+}
+
+/// The cycle-accurate simulator.
+pub struct NocSim {
+    net: Network,
+    cfg: NocConfig,
+    mode: Mode,
+    routers: Vec<RouterState>,
+    sources: Vec<SourceState>,
+    /// Routers with queued flits (worklist).
+    active: Vec<usize>,
+    active_flag: Vec<bool>,
+    /// reverse[r][slot] = input port index on the neighbor reached via slot.
+    reverse: Vec<Vec<usize>>,
+    rng: Pcg32,
+    track_pairs: bool,
+    stats: SimStats,
+    now: u64,
+    in_warmup: bool,
+    /// Terminals that still generate or hold traffic (worklist).
+    live_sources: Vec<usize>,
+    /// P2P only: earliest cycle each node may forward again (store-and-
+    /// forward is half-duplex: receive cycle + transmit cycle, so a node
+    /// sustains at most one flit every 2 cycles).
+    node_free: Vec<u64>,
+    /// Flits generated but not yet delivered (drain-mode bookkeeping).
+    in_flight: u64,
+    /// Flits not yet generated (drain mode).
+    ungenerated: u64,
+    /// Reusable per-cycle move buffer: (router, in_port, vc, out_port).
+    /// Kept across cycles to avoid one allocation per simulated cycle.
+    moves: Vec<(u32, u8, u8, u8)>,
+    /// Spare worklist buffer swapped with `active` each cycle (allocation
+    /// reuse for the same reason).
+    spare: Vec<usize>,
+    /// Earliest cycle at which router r can have a ready head flit — lets
+    /// the switch loop skip routers whose flits are all mid-pipeline with
+    /// one compare instead of a 5-port queue scan.
+    next_ready: Vec<u64>,
+}
+
+impl NocSim {
+    pub fn new(
+        topology: Topology,
+        terminals: usize,
+        cfg: &NocConfig,
+        flows: &[FlowSpec],
+        mode: Mode,
+        seed: u64,
+    ) -> Self {
+        let net = Network::build(topology, terminals);
+        let routers: Vec<RouterState> = (0..net.routers)
+            .map(|r| {
+                RouterState::new(
+                    net.ports(r),
+                    cfg.virtual_channels,
+                    cfg.buffer_depth.div_ceil(cfg.virtual_channels).max(1),
+                )
+            })
+            .collect();
+
+        // Build reverse port map: slot k of r leads to neighbor n; find the
+        // slot on n that points back to r.
+        let reverse: Vec<Vec<usize>> = (0..net.routers)
+            .map(|r| {
+                net.neighbors[r]
+                    .iter()
+                    .map(|&n| {
+                        if n == NONE {
+                            NONE
+                        } else {
+                            let back = net.neighbors[n]
+                                .iter()
+                                .position(|&m| m == r)
+                                .expect("asymmetric link");
+                            net.local_ports + back
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // Group flows by source.
+        let mut sources: Vec<SourceState> = (0..terminals)
+            .map(|_| SourceState {
+                rate: 0.0,
+                dst_cdf: Vec::new(),
+                pending: Vec::new(),
+                next_pending: 0,
+                fifo: std::collections::VecDeque::new(),
+            })
+            .collect();
+        for f in flows {
+            assert!(f.src < terminals && f.dst < terminals, "flow out of range");
+            if f.src == f.dst {
+                continue; // intra-tile traffic never enters the NoC
+            }
+            let s = &mut sources[f.src];
+            s.rate += f.rate;
+            s.dst_cdf.push((s.rate, f.dst as u32));
+            if f.flits > 0 {
+                s.pending.push((f.dst as u32, f.flits));
+            }
+        }
+
+        let steady = matches!(mode, Mode::Steady { .. });
+        let live_sources: Vec<usize> = (0..terminals)
+            .filter(|&t| {
+                if steady {
+                    sources[t].rate > 0.0
+                } else {
+                    !sources[t].pending.is_empty()
+                }
+            })
+            .collect();
+        let ungenerated: u64 = sources
+            .iter()
+            .flat_map(|s| s.pending.iter().map(|&(_, c)| c))
+            .sum();
+
+        let net_routers = net.routers;
+        let mut sim = Self {
+            active: Vec::with_capacity(net.routers),
+            active_flag: vec![false; net.routers],
+            routers,
+            reverse,
+            net,
+            cfg: cfg.clone(),
+            mode,
+            sources,
+            rng: Pcg32::seeded(seed),
+            track_pairs: false,
+            stats: SimStats::default(),
+            now: 0,
+            in_warmup: steady,
+            live_sources,
+            node_free: vec![0; net_routers],
+            in_flight: 0,
+            ungenerated,
+            moves: Vec::with_capacity(256),
+            spare: Vec::with_capacity(64),
+            next_ready: vec![0; net_routers],
+        };
+        // Saturation guard: clamp aggregate per-source rate at 1 flit/cycle.
+        for s in &mut sim.sources {
+            if s.rate > 1.0 {
+                let scale = 1.0 / s.rate;
+                for e in &mut s.dst_cdf {
+                    e.0 *= scale;
+                }
+                s.rate = 1.0;
+            }
+        }
+        sim
+    }
+
+    /// Enable per-pair latency tracking (Fig. 15 / Table 3).
+    pub fn track_pairs(mut self, on: bool) -> Self {
+        self.track_pairs = on;
+        self
+    }
+
+    #[inline]
+    fn mark_active(&mut self, r: usize) {
+        if !self.active_flag[r] {
+            self.active_flag[r] = true;
+            self.active.push(r);
+        }
+    }
+
+    /// Push a flit into router `r` input port `port`, sampling occupancy.
+    /// Returns false when the buffer is full.
+    fn push_router(&mut self, r: usize, port: usize, mut flit: Flit, sample: bool) -> bool {
+        let occ = self.routers[r].inputs[port].occupancy();
+        flit.ready = self.now + self.pipeline_delay();
+        if !self.routers[r].inputs[port].push(flit) {
+            return false;
+        }
+        if flit.ready < self.next_ready[r] {
+            self.next_ready[r] = flit.ready;
+        }
+        if sample && !self.in_warmup {
+            self.stats.arrivals += 1;
+            if occ == 0 {
+                self.stats.arrivals_zero += 1;
+            } else {
+                self.stats.nonzero_occ_sum += occ as f64;
+                self.stats.nonzero_occ_count += 1;
+            }
+        }
+        self.mark_active(r);
+        true
+    }
+
+    #[inline]
+    fn pipeline_delay(&self) -> u64 {
+        if self.net.topology.has_routers() {
+            self.cfg.pipeline_stages as u64
+        } else {
+            0 // P2P: store-and-forward latch, no router pipeline
+        }
+    }
+
+    /// Injection phase: generate per-mode traffic and move source-FIFO
+    /// heads into the attached router's local input port. Only terminals on
+    /// the `live_sources` worklist are visited; a terminal retires once it
+    /// has nothing left to generate or inject (drain mode).
+    fn inject(&mut self) {
+        let steady = matches!(self.mode, Mode::Steady { .. });
+        let mut i = 0;
+        while i < self.live_sources.len() {
+            let t = self.live_sources[i];
+            // Generate.
+            if steady {
+                let s = &mut self.sources[t];
+                if s.rate > 0.0 && self.rng.bernoulli(s.rate) {
+                    let u = self.rng.next_f64() * s.rate;
+                    let dst = match s
+                        .dst_cdf
+                        .binary_search_by(|probe| probe.0.partial_cmp(&u).unwrap())
+                    {
+                        Ok(i) => s.dst_cdf[(i + 1).min(s.dst_cdf.len() - 1)].1,
+                        Err(i) => s.dst_cdf[i.min(s.dst_cdf.len() - 1)].1,
+                    };
+                    s.fifo.push_back((dst, self.now));
+                    self.stats.injected += 1;
+                    self.in_flight += 1;
+                }
+            } else if self.sources[t].fifo.is_empty() && !self.sources[t].pending.is_empty() {
+                // Drain mode: keep the FIFO primed with the next flit,
+                // round-robin across destination entries.
+                let s = &mut self.sources[t];
+                let k = s.next_pending % s.pending.len();
+                let (dst, remaining) = s.pending[k];
+                s.fifo.push_back((dst, self.now));
+                self.stats.injected += 1;
+                self.in_flight += 1;
+                self.ungenerated -= 1;
+                if remaining <= 1 {
+                    s.pending.swap_remove(k);
+                } else {
+                    s.pending[k].1 = remaining - 1;
+                }
+                s.next_pending = s.next_pending.wrapping_add(1);
+            }
+            // Inject FIFO head into the router if there is buffer space.
+            if let Some(&(dst, born)) = self.sources[t].fifo.front() {
+                let r = self.net.attach[t];
+                let port = self.net.attach_port[t];
+                if self.routers[r].inputs[port].has_space() {
+                    let flit = Flit {
+                        src: t as u32,
+                        dst,
+                        born,
+                        ready: 0,
+                    };
+                    let ok = self.push_router(r, port, flit, false);
+                    debug_assert!(ok);
+                    self.sources[t].fifo.pop_front();
+                }
+            }
+            // Retire exhausted drain-mode sources.
+            if !steady
+                && self.sources[t].fifo.is_empty()
+                && self.sources[t].pending.is_empty()
+            {
+                self.live_sources.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One switching cycle over all active routers (two-phase).
+    fn switch(&mut self) {
+        // Phase A: collect moves (router, in_port, vc, out_port) into the
+        // reusable buffer; claims live in a fixed stack array (no per-router
+        // heap allocation — this path dominates whole-framework runtime).
+        self.moves.clear();
+        let p2p = !self.net.topology.has_routers();
+        // Swap in the spare buffer so `mark_active` pushes reuse capacity.
+        let old_active = std::mem::replace(&mut self.active, std::mem::take(&mut self.spare));
+        for &r in &old_active {
+            self.active_flag[r] = false;
+            if p2p && self.node_free[r] > self.now {
+                // Half-duplex P2P node still busy with the previous flit.
+                self.mark_active(r);
+                continue;
+            }
+            if self.next_ready[r] > self.now {
+                // All heads still in the router pipeline: skip the scan.
+                self.mark_active(r);
+                continue;
+            }
+            let ports = self.routers[r].inputs.len();
+            debug_assert!(ports <= 16, "claim buffer sized for <=16 ports");
+            // claims: (out, in, vc), first-come round-robin, one per output.
+            let mut claims = [(0u8, 0u8, 0u8); 16];
+            let mut n_claims = 0usize;
+            let mut occupied = false;
+            let mut min_unready = u64::MAX;
+            let rr_base = self.routers[r].rr[0];
+            for k in 0..ports {
+                let ip = (rr_base + k) % ports;
+                let port = &self.routers[r].inputs[ip];
+                // Pick the first ready VC head (round-robin start).
+                let nvc = port.vcs.len();
+                for dv in 0..nvc {
+                    let vc = (port.next_vc + dv) % nvc;
+                    if let Some(head) = port.vcs[vc].front() {
+                        occupied = true;
+                        if head.ready <= self.now {
+                            let out = self.net.route(r, head.dst as usize);
+                            if !claims[..n_claims].iter().any(|&(o, _, _)| o as usize == out)
+                            {
+                                claims[n_claims] = (out as u8, ip as u8, vc as u8);
+                                n_claims += 1;
+                            }
+                            break;
+                        } else if head.ready < min_unready {
+                            min_unready = head.ready;
+                        }
+                    }
+                }
+                if p2p && n_claims > 0 {
+                    break; // P2P: one flit per node per cycle, full stop
+                }
+            }
+            // Advance output RR pointer so ports take turns winning; while
+            // anything moved (or might move next cycle), rescan next cycle,
+            // otherwise sleep until the earliest pipeline exit.
+            if n_claims > 0 {
+                self.routers[r].rr[0] = (rr_base + 1) % ports;
+                if p2p {
+                    self.node_free[r] = self.now + 2;
+                }
+                self.next_ready[r] = self.now; // moved: rescan next cycle
+            } else if occupied {
+                self.next_ready[r] = min_unready;
+            }
+            for &(out, ip, vc) in &claims[..n_claims] {
+                self.moves.push((r as u32, ip, vc, out));
+            }
+            // Keep occupied routers on the worklist even if no head was
+            // ready this cycle (pipeline delay) or no move was possible.
+            if occupied || self.routers[r].total_occupancy() > 0 {
+                self.mark_active(r);
+            }
+        }
+        // Phase B: apply moves.
+        let moves = std::mem::take(&mut self.moves);
+        for &(r, ip, vc, out) in &moves {
+            let (r, ip, vc, out) = (r as usize, ip as usize, vc as usize, out as usize);
+            // Ejection?
+            if out < self.net.local_ports {
+                let flit = self.routers[r].inputs[ip].vcs[vc].pop_front().unwrap();
+                self.routers[r].inputs[ip].next_vc = (vc + 1) % self.cfg.virtual_channels;
+                self.deliver(flit);
+                if self.routers[r].total_occupancy() > 0 {
+                    self.mark_active(r);
+                }
+                continue;
+            }
+            let slot = out - self.net.local_ports;
+            let next = self.net.neighbors[r][slot];
+            debug_assert_ne!(next, NONE);
+            let in_port = self.reverse[r][slot];
+            if self.routers[next].inputs[in_port].has_space() {
+                let mut flit = self.routers[r].inputs[ip].vcs[vc].pop_front().unwrap();
+                self.routers[r].inputs[ip].next_vc = (vc + 1) % self.cfg.virtual_channels;
+                flit.ready = 0; // set by push_router
+                // +1 cycle link traversal is folded into arrival at now+pipe.
+                let ok = self.push_router(next, in_port, flit, true);
+                debug_assert!(ok);
+            }
+            if self.routers[r].total_occupancy() > 0 {
+                self.mark_active(r);
+            }
+        }
+        self.moves = moves;
+        let mut spare = old_active;
+        spare.clear();
+        self.spare = spare;
+    }
+
+    fn deliver(&mut self, flit: Flit) {
+        let latency = self.now - flit.born + 1;
+        self.in_flight -= 1;
+        if self.in_warmup {
+            return;
+        }
+        self.stats.delivered += 1;
+        self.stats.avg_latency += latency as f64; // running sum; divided at end
+        self.stats.max_latency = self.stats.max_latency.max(latency);
+        self.stats.makespan = self.now + 1;
+        if self.track_pairs {
+            let key = ((flit.src as u64) << 32) | flit.dst as u64;
+            let p = self.stats.per_pair.entry(key).or_default();
+            p.count += 1;
+            p.sum_latency += latency;
+            p.max_latency = p.max_latency.max(latency);
+        }
+    }
+
+    /// Any flits anywhere (source FIFOs, pending lists, router buffers)?
+    #[inline]
+    fn busy(&self) -> bool {
+        self.in_flight > 0 || self.ungenerated > 0
+    }
+
+    /// Run to completion per the configured mode.
+    pub fn run(mut self) -> SimStats {
+        match self.mode {
+            Mode::Steady { warmup, measure } => {
+                while self.now < warmup {
+                    self.inject();
+                    self.switch();
+                    self.now += 1;
+                }
+                self.in_warmup = false;
+                let end = warmup + measure;
+                while self.now < end {
+                    self.inject();
+                    self.switch();
+                    self.now += 1;
+                }
+            }
+            Mode::Drain { max_cycles } => {
+                self.in_warmup = false;
+                while self.busy() && self.now < max_cycles {
+                    self.inject();
+                    self.switch();
+                    self.now += 1;
+                }
+                self.stats.drained = !self.busy();
+            }
+        }
+        self.stats.cycles = self.now;
+        if self.stats.delivered > 0 {
+            self.stats.avg_latency /= self.stats.delivered as f64;
+        }
+        self.stats
+    }
+}
+
+/// Convenience: uniform-random traffic at a given per-node injection rate
+/// (flits/node/cycle) — the classic BookSim benchmark behind Fig. 5.
+pub fn uniform_random_flows(terminals: usize, rate_per_node: f64) -> Vec<FlowSpec> {
+    let mut flows = Vec::new();
+    if terminals < 2 {
+        return flows;
+    }
+    let pair_rate = rate_per_node / (terminals - 1) as f64;
+    for s in 0..terminals {
+        for d in 0..terminals {
+            if s != d {
+                flows.push(FlowSpec {
+                    src: s,
+                    dst: d,
+                    rate: pair_rate,
+                    flits: 0,
+                });
+            }
+        }
+    }
+    flows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NocConfig {
+        NocConfig::default()
+    }
+
+    #[test]
+    fn single_flit_zero_load_latency() {
+        // One flit across a 4x4 mesh, 0 -> 15 (6 hops): latency must be
+        // hops * (pipeline + 1) + small constant, deterministic.
+        let flows = [FlowSpec {
+            src: 0,
+            dst: 15,
+            rate: 0.0,
+            flits: 1,
+        }];
+        let stats = NocSim::new(
+            Topology::Mesh,
+            16,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 1000 },
+            1,
+        )
+        .run();
+        assert!(stats.drained);
+        assert_eq!(stats.delivered, 1);
+        // 7 routers traversed, each adds pipeline(3); plus ejection.
+        let lat = stats.avg_latency;
+        assert!(
+            (20.0..40.0).contains(&lat),
+            "zero-load latency {lat} out of expected band"
+        );
+    }
+
+    #[test]
+    fn neighbor_delivery_fast() {
+        let flows = [FlowSpec {
+            src: 0,
+            dst: 1,
+            rate: 0.0,
+            flits: 1,
+        }];
+        let s = NocSim::new(
+            Topology::Mesh,
+            4,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 100 },
+            1,
+        )
+        .run();
+        assert_eq!(s.delivered, 1);
+        assert!(s.avg_latency <= 12.0, "{}", s.avg_latency);
+    }
+
+    #[test]
+    fn drain_conserves_flits() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 5,
+                rate: 0.0,
+                flits: 100,
+            },
+            FlowSpec {
+                src: 3,
+                dst: 1,
+                rate: 0.0,
+                flits: 57,
+            },
+        ];
+        let s = NocSim::new(
+            Topology::Mesh,
+            9,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 100_000 },
+            7,
+        )
+        .run();
+        assert!(s.drained);
+        assert_eq!(s.injected, 157);
+        assert_eq!(s.delivered, 157);
+        assert!(s.makespan >= 100);
+    }
+
+    #[test]
+    fn steady_latency_grows_with_rate() {
+        let run = |rate: f64| {
+            let flows = uniform_random_flows(16, rate);
+            NocSim::new(
+                Topology::Mesh,
+                16,
+                &cfg(),
+                &flows,
+                Mode::Steady {
+                    warmup: 500,
+                    measure: 3_000,
+                },
+                42,
+            )
+            .run()
+        };
+        let lo = run(0.01);
+        let hi = run(0.30);
+        assert!(lo.delivered > 0 && hi.delivered > lo.delivered);
+        assert!(
+            hi.avg_latency > lo.avg_latency,
+            "latency must grow with load: {} vs {}",
+            lo.avg_latency,
+            hi.avg_latency
+        );
+    }
+
+    #[test]
+    fn p2p_slower_than_mesh_under_load() {
+        let flows = |_n: usize| {
+            // All-to-one hotspot: classic P2P killer.
+            (1..16)
+                .map(|s| FlowSpec {
+                    src: s,
+                    dst: 0,
+                    rate: 0.0,
+                    flits: 50,
+                })
+                .collect::<Vec<_>>()
+        };
+        let mesh = NocSim::new(
+            Topology::Mesh,
+            16,
+            &cfg(),
+            &flows(16),
+            Mode::Drain { max_cycles: 1_000_000 },
+            3,
+        )
+        .run();
+        let p2p = NocSim::new(
+            Topology::P2P,
+            16,
+            &cfg(),
+            &flows(16),
+            Mode::Drain { max_cycles: 1_000_000 },
+            3,
+        )
+        .run();
+        assert!(mesh.drained && p2p.drained);
+        assert!(
+            p2p.makespan > mesh.makespan,
+            "P2P {} should exceed mesh {}",
+            p2p.makespan,
+            mesh.makespan
+        );
+    }
+
+    #[test]
+    fn tree_root_bottleneck_vs_mesh() {
+        // Cross-subtree all-to-all: the tree root serializes everything.
+        let mut flows = Vec::new();
+        for s in 0..8 {
+            for d in 56..64 {
+                flows.push(FlowSpec {
+                    src: s,
+                    dst: d,
+                    rate: 0.0,
+                    flits: 20,
+                });
+            }
+        }
+        let mesh = NocSim::new(
+            Topology::Mesh,
+            64,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 1_000_000 },
+            9,
+        )
+        .run();
+        let tree = NocSim::new(
+            Topology::Tree,
+            64,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 1_000_000 },
+            9,
+        )
+        .run();
+        assert!(mesh.drained && tree.drained);
+        assert!(
+            tree.makespan > mesh.makespan,
+            "tree {} vs mesh {}",
+            tree.makespan,
+            mesh.makespan
+        );
+    }
+
+    #[test]
+    fn per_pair_tracking() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 3,
+                rate: 0.0,
+                flits: 10,
+            },
+            FlowSpec {
+                src: 1,
+                dst: 2,
+                rate: 0.0,
+                flits: 5,
+            },
+        ];
+        let s = NocSim::new(
+            Topology::Mesh,
+            4,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 10_000 },
+            5,
+        )
+        .track_pairs(true)
+        .run();
+        assert_eq!(s.per_pair.len(), 2);
+        let p03 = &s.per_pair[&3u64];
+        assert_eq!(p03.count, 10);
+        assert!(p03.max_latency >= p03.avg() as u64);
+    }
+
+    #[test]
+    fn occupancy_stats_mostly_empty_at_low_load() {
+        let flows = uniform_random_flows(16, 0.02);
+        let s = NocSim::new(
+            Topology::Mesh,
+            16,
+            &cfg(),
+            &flows,
+            Mode::Steady {
+                warmup: 500,
+                measure: 5_000,
+            },
+            11,
+        )
+        .run();
+        // Paper Fig. 13: 64-100% of queues empty at arrival; at 2% load it
+        // must be near the top of that band.
+        assert!(
+            s.zero_occupancy_fraction() > 0.8,
+            "{}",
+            s.zero_occupancy_fraction()
+        );
+    }
+
+    #[test]
+    fn all_topologies_drain_small_workload() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 7,
+                rate: 0.0,
+                flits: 25,
+            },
+            FlowSpec {
+                src: 5,
+                dst: 2,
+                rate: 0.0,
+                flits: 25,
+            },
+        ];
+        for topo in Topology::all() {
+            let s = NocSim::new(
+                topo,
+                8,
+                &cfg(),
+                &flows,
+                Mode::Drain { max_cycles: 100_000 },
+                13,
+            )
+            .run();
+            assert!(s.drained, "{topo:?} failed to drain");
+            assert_eq!(s.delivered, 50, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn self_flows_are_ignored() {
+        let flows = [FlowSpec {
+            src: 2,
+            dst: 2,
+            rate: 0.5,
+            flits: 10,
+        }];
+        let s = NocSim::new(
+            Topology::Mesh,
+            4,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 1000 },
+            1,
+        )
+        .run();
+        assert_eq!(s.injected, 0);
+        assert!(s.drained);
+    }
+}

@@ -1,0 +1,487 @@
+//! Interconnect topologies and deterministic routing.
+//!
+//! A [`Network`] is built for `n` *terminals* (IMC tiles). Depending on the
+//! topology there may be additional internal routers (NoC-tree junctions).
+//! Every router exposes up to [`Network::MAX_PORTS`] ports; port 0 is always
+//! the local/self port (injection + ejection for the attached terminal).
+//! Routing is deterministic and minimal, returning the output port a flit
+//! at router `r` destined for terminal `dst` must take.
+
+/// Topology of the tile-level interconnect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Point-to-point neighbor links, no routers (Fig. 4a): tiles forward
+    /// flits themselves, one flit per tile per cycle (shared medium).
+    P2P,
+    /// NoC-tree (Fig. 4b): 4-ary tree with routers at junctions, tiles at
+    /// leaves.
+    Tree,
+    /// NoC-mesh (Fig. 4c): 2-D mesh, one router per tile, X-Y routing.
+    Mesh,
+    /// Concentrated mesh: 4 tiles per router, higher-radix routers and
+    /// doubled (express) links — used only in the Fig. 9 EDAP study.
+    CMesh,
+    /// 2-D torus (topology exploration, §2.3).
+    Torus,
+    /// Hypercube (topology exploration, §2.3).
+    Hypercube,
+}
+
+impl Topology {
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::P2P => "P2P",
+            Topology::Tree => "NoC-tree",
+            Topology::Mesh => "NoC-mesh",
+            Topology::CMesh => "c-mesh",
+            Topology::Torus => "torus",
+            Topology::Hypercube => "hypercube",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace("noc-", "").as_str() {
+            "p2p" => Some(Topology::P2P),
+            "tree" => Some(Topology::Tree),
+            "mesh" => Some(Topology::Mesh),
+            "cmesh" | "c-mesh" => Some(Topology::CMesh),
+            "torus" => Some(Topology::Torus),
+            "hypercube" | "cube" => Some(Topology::Hypercube),
+            _ => None,
+        }
+    }
+
+    /// Does this topology use pipelined routers (vs. raw tile forwarding)?
+    pub fn has_routers(self) -> bool {
+        !matches!(self, Topology::P2P)
+    }
+
+    pub fn all() -> [Topology; 6] {
+        [
+            Topology::P2P,
+            Topology::Tree,
+            Topology::Mesh,
+            Topology::CMesh,
+            Topology::Torus,
+            Topology::Hypercube,
+        ]
+    }
+}
+
+/// A built network: routers, links, and a routing function.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub topology: Topology,
+    /// Number of terminals (tiles).
+    pub terminals: usize,
+    /// Number of routers (= terminals for mesh/torus/P2P/hypercube; more
+    /// for tree; fewer for c-mesh).
+    pub routers: usize,
+    /// Router each terminal attaches to.
+    pub attach: Vec<usize>,
+    /// Local port used by each terminal at its router (0 unless several
+    /// terminals share a router, as in c-mesh).
+    pub attach_port: Vec<usize>,
+    /// neighbors[r][p] = router reached from router r via port p
+    /// (`usize::MAX` = unconnected / local port).
+    pub neighbors: Vec<Vec<usize>>,
+    /// Mesh-like dimensions when applicable (cols, rows) over routers.
+    pub dims: (usize, usize),
+    /// Number of local ports on each router (1, or 4 for c-mesh).
+    pub local_ports: usize,
+}
+
+pub const NONE: usize = usize::MAX;
+
+impl Network {
+    /// Build a network of `n` terminals with the given topology.
+    pub fn build(topology: Topology, n: usize) -> Self {
+        assert!(n > 0, "network needs at least one terminal");
+        match topology {
+            Topology::Mesh | Topology::Torus | Topology::P2P => Self::grid(topology, n),
+            Topology::Tree => Self::tree(n),
+            Topology::CMesh => Self::cmesh(n),
+            Topology::Hypercube => Self::hypercube(n),
+        }
+    }
+
+    /// Ports on router `r` (including local port(s)).
+    pub fn ports(&self, r: usize) -> usize {
+        self.local_ports + self.neighbors[r].len()
+    }
+
+    /// Map a neighbor index to its port id (ports [0, local_ports) are
+    /// local; neighbor k uses port local_ports + k).
+    #[inline]
+    pub fn neighbor_port(&self, k: usize) -> usize {
+        self.local_ports + k
+    }
+
+    /// 2-D grid used by mesh/torus/P2P: routers on a near-square grid.
+    fn grid(topology: Topology, n: usize) -> Self {
+        let cols = (n as f64).sqrt().ceil() as usize;
+        let rows = n.div_ceil(cols);
+        let rn = cols * rows; // grid positions; routers beyond n-1 are unused
+        let mut neighbors = vec![vec![NONE; 4]; rn];
+        let idx = |x: usize, y: usize| y * cols + x;
+        for y in 0..rows {
+            for x in 0..cols {
+                let r = idx(x, y);
+                // ports: 0=local (implicit), neighbor slots: 0=N,1=E,2=S,3=W
+                let wrap = topology == Topology::Torus;
+                neighbors[r][0] = if y > 0 {
+                    idx(x, y - 1)
+                } else if wrap && rows > 1 {
+                    idx(x, rows - 1)
+                } else {
+                    NONE
+                };
+                neighbors[r][1] = if x + 1 < cols {
+                    idx(x + 1, y)
+                } else if wrap && cols > 1 {
+                    idx(0, y)
+                } else {
+                    NONE
+                };
+                neighbors[r][2] = if y + 1 < rows {
+                    idx(x, y + 1)
+                } else if wrap && rows > 1 {
+                    idx(x, 0)
+                } else {
+                    NONE
+                };
+                neighbors[r][3] = if x > 0 {
+                    idx(x - 1, y)
+                } else if wrap && cols > 1 {
+                    idx(cols - 1, y)
+                } else {
+                    NONE
+                };
+            }
+        }
+        Self {
+            topology,
+            terminals: n,
+            routers: rn,
+            attach: (0..n).collect(),
+            attach_port: vec![0; n],
+            neighbors,
+            dims: (cols, rows),
+            local_ports: 1,
+        }
+    }
+
+    /// 4-ary tree: terminals at leaves, routers at junctions. Router ids:
+    /// leaves' parents first (level above tiles), then upward to the root.
+    /// Terminal t attaches to leaf-router t/4... built level by level.
+    fn tree(n: usize) -> Self {
+        // Level sizes: l0 = ceil(n/4) routers over terminals, then /4 up to 1.
+        let mut level_sizes = vec![n.div_ceil(4).max(1)];
+        while *level_sizes.last().unwrap() > 1 {
+            level_sizes.push(level_sizes.last().unwrap().div_ceil(4));
+        }
+        let routers: usize = level_sizes.iter().sum();
+        // Router layout: level 0 (closest to tiles) occupies [0, l0), level 1
+        // next, etc. Each router's neighbor slot 0..3 = children, 4 = parent.
+        let mut neighbors = vec![vec![NONE; 5]; routers];
+        let mut level_start = vec![0usize; level_sizes.len()];
+        for i in 1..level_sizes.len() {
+            level_start[i] = level_start[i - 1] + level_sizes[i - 1];
+        }
+        for lvl in 0..level_sizes.len() {
+            for i in 0..level_sizes[lvl] {
+                let r = level_start[lvl] + i;
+                if lvl + 1 < level_sizes.len() {
+                    let parent = level_start[lvl + 1] + i / 4;
+                    neighbors[r][4] = parent;
+                    neighbors[parent][i % 4] = r;
+                }
+            }
+        }
+        // Level-0 routers' child slots connect to terminals, not routers —
+        // they stay NONE in `neighbors` (terminals are not routers); the
+        // terminal attach table captures them.
+        let attach: Vec<usize> = (0..n).map(|t| t / 4).collect();
+        let attach_port: Vec<usize> = (0..n).map(|t| t % 4).collect();
+        Self {
+            topology: Topology::Tree,
+            terminals: n,
+            routers,
+            attach,
+            attach_port,
+            neighbors,
+            dims: (0, 0),
+            local_ports: 4, // up to 4 terminals per leaf router
+        }
+    }
+
+    /// Concentrated mesh: 4 terminals per router on a near-square grid.
+    fn cmesh(n: usize) -> Self {
+        let rn = n.div_ceil(4).max(1);
+        let base = Self::grid(Topology::Mesh, rn);
+        Self {
+            topology: Topology::CMesh,
+            terminals: n,
+            routers: base.routers,
+            attach: (0..n).map(|t| t / 4).collect(),
+            attach_port: (0..n).map(|t| t % 4).collect(),
+            neighbors: base.neighbors,
+            dims: base.dims,
+            local_ports: 4,
+        }
+    }
+
+    /// Hypercube over the next power of two ≥ n.
+    fn hypercube(n: usize) -> Self {
+        let size = n.next_power_of_two();
+        let dim = size.trailing_zeros() as usize;
+        let mut neighbors = vec![vec![NONE; dim.max(1)]; size];
+        for r in 0..size {
+            for d in 0..dim {
+                neighbors[r][d] = r ^ (1 << d);
+            }
+        }
+        Self {
+            topology: Topology::Hypercube,
+            terminals: n,
+            routers: size,
+            attach: (0..n).collect(),
+            attach_port: vec![0; n],
+            neighbors,
+            dims: (size, 1),
+            local_ports: 1,
+        }
+    }
+
+    /// Deterministic minimal route: output port (see port numbering in
+    /// [`Network::neighbor_port`]) for a flit at router `r` destined for
+    /// terminal `dst`. Returns the local/ejection port if `dst` attaches
+    /// here.
+    pub fn route(&self, r: usize, dst: usize) -> usize {
+        let dr = self.attach[dst];
+        if dr == r {
+            return self.attach_port[dst]; // eject on the terminal's local port
+        }
+        match self.topology {
+            Topology::Mesh | Topology::P2P | Topology::CMesh => {
+                // X-Y routing on the grid.
+                let cols = self.dims.0;
+                let (x, y) = (r % cols, r / cols);
+                let (dx, dy) = (dr % cols, dr / cols);
+                let slot = if x < dx {
+                    1 // E
+                } else if x > dx {
+                    3 // W
+                } else if y < dy {
+                    2 // S
+                } else {
+                    0 // N
+                };
+                self.neighbor_port(slot)
+            }
+            Topology::Torus => {
+                let (cols, rows) = self.dims;
+                let (x, y) = (r % cols, r / cols);
+                let (dx, dy) = (dr % cols, dr / cols);
+                let slot = if x != dx {
+                    // shortest wrap-aware direction in X
+                    let right = (dx + cols - x) % cols;
+                    let left = (x + cols - dx) % cols;
+                    if right <= left {
+                        1
+                    } else {
+                        3
+                    }
+                } else {
+                    let down = (dy + rows - y) % rows;
+                    let up = (y + rows - dy) % rows;
+                    if down <= up {
+                        2
+                    } else {
+                        0
+                    }
+                };
+                self.neighbor_port(slot)
+            }
+            Topology::Tree => {
+                // Up-down: descend if dst is in this subtree, else go up.
+                if let Some(child_slot) = self.tree_descend_slot(r, dr) {
+                    self.neighbor_port(child_slot)
+                } else {
+                    self.neighbor_port(4) // parent
+                }
+            }
+            Topology::Hypercube => {
+                // Dimension-order: fix the lowest differing bit.
+                let diff = r ^ dr;
+                let d = diff.trailing_zeros() as usize;
+                self.neighbor_port(d)
+            }
+        }
+    }
+
+    /// For tree routing: the child slot (0..4) leading toward router `dr`,
+    /// or `None` if `dr` is not in `r`'s subtree.
+    fn tree_descend_slot(&self, r: usize, dr: usize) -> Option<usize> {
+        // Walk up from dr; if we reach r, the previous router tells the slot.
+        let mut cur = dr;
+        loop {
+            let parent = self.neighbors[cur][4];
+            if parent == NONE {
+                return None;
+            }
+            if parent == r {
+                return self.neighbors[r][..4].iter().position(|&c| c == cur);
+            }
+            cur = parent;
+        }
+    }
+
+    /// Full route as a router list from terminal `src` to terminal `dst`
+    /// (inclusive of both attach routers).
+    pub fn route_path(&self, src: usize, dst: usize) -> Vec<usize> {
+        let mut path = vec![self.attach[src]];
+        let mut guard = 0;
+        while *path.last().unwrap() != self.attach[dst] {
+            let r = *path.last().unwrap();
+            let port = self.route(r, dst);
+            let next = self.neighbors[r][port - self.local_ports];
+            assert_ne!(next, NONE, "route hit unconnected port");
+            path.push(next);
+            guard += 1;
+            assert!(guard <= 4 * self.routers, "routing loop {src}->{dst}");
+        }
+        path
+    }
+
+    /// Hop count between two terminals (router-to-router links traversed).
+    pub fn hops(&self, src: usize, dst: usize) -> usize {
+        self.route_path(src, dst).len() - 1
+    }
+
+    /// Total unidirectional router-to-router links (for the power model).
+    pub fn link_count(&self) -> usize {
+        let inter: usize = self
+            .neighbors
+            .iter()
+            .map(|ns| ns.iter().filter(|&&n| n != NONE).count())
+            .sum();
+        // c-mesh express links double the fabric (paper §1: "more links").
+        if self.topology == Topology::CMesh {
+            inter * 2
+        } else {
+            inter
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Topology::parse("mesh"), Some(Topology::Mesh));
+        assert_eq!(Topology::parse("NoC-tree"), Some(Topology::Tree));
+        assert_eq!(Topology::parse("C-MESH"), Some(Topology::CMesh));
+        assert_eq!(Topology::parse("ring"), None);
+    }
+
+    #[test]
+    fn mesh_routing_is_xy_and_minimal() {
+        let net = Network::build(Topology::Mesh, 16); // 4x4
+        // 0 -> 15: 3 east + 3 south = 6 hops.
+        assert_eq!(net.hops(0, 15), 6);
+        let path = net.route_path(0, 15);
+        // X first: 0,1,2,3 then 7,11,15.
+        assert_eq!(path, vec![0, 1, 2, 3, 7, 11, 15]);
+        assert_eq!(net.hops(5, 5), 0);
+    }
+
+    #[test]
+    fn torus_uses_wraparound() {
+        let mesh = Network::build(Topology::Mesh, 16);
+        let torus = Network::build(Topology::Torus, 16);
+        // 0 -> 3 on a 4-wide row: mesh 3 hops, torus 1 hop (wrap W).
+        assert_eq!(mesh.hops(0, 3), 3);
+        assert_eq!(torus.hops(0, 3), 1);
+    }
+
+    #[test]
+    fn tree_routes_through_common_ancestor() {
+        let net = Network::build(Topology::Tree, 16);
+        // 16 terminals -> 4 leaf routers + 1 root = 5 routers.
+        assert_eq!(net.routers, 5);
+        // Terminals 0 and 3 share leaf router 0: 0 hops between routers.
+        assert_eq!(net.hops(0, 3), 0);
+        // Terminals 0 and 15 are under different leaves: up to root, down.
+        assert_eq!(net.hops(0, 15), 2);
+        let p = net.route_path(0, 15);
+        assert_eq!(p, vec![0, 4, 3]);
+    }
+
+    #[test]
+    fn tree_deep_hierarchy() {
+        let net = Network::build(Topology::Tree, 64);
+        // 16 leaves + 4 + 1 = 21 routers.
+        assert_eq!(net.routers, 21);
+        assert_eq!(net.hops(0, 63), 4); // leaf -> l1 -> root -> l1 -> leaf
+    }
+
+    #[test]
+    fn cmesh_concentrates() {
+        let net = Network::build(Topology::CMesh, 16);
+        assert_eq!(net.routers, 4); // 2x2 of concentration-4 routers
+        assert_eq!(net.local_ports, 4);
+        // Terminals 0..3 share router 0.
+        assert_eq!(net.hops(0, 3), 0);
+        assert_eq!(net.hops(0, 15), 2);
+        // Express links double the count.
+        let mesh4 = Network::build(Topology::Mesh, 4);
+        assert_eq!(net.link_count(), 2 * mesh4.link_count());
+    }
+
+    #[test]
+    fn hypercube_dimension_routing() {
+        let net = Network::build(Topology::Hypercube, 8);
+        assert_eq!(net.routers, 8);
+        assert_eq!(net.hops(0, 7), 3); // 3 differing bits
+        assert_eq!(net.hops(0, 4), 1);
+    }
+
+    #[test]
+    fn p2p_same_grid_as_mesh() {
+        let p2p = Network::build(Topology::P2P, 16);
+        let mesh = Network::build(Topology::Mesh, 16);
+        assert_eq!(p2p.hops(0, 15), mesh.hops(0, 15));
+        assert!(!Topology::P2P.has_routers());
+    }
+
+    #[test]
+    fn all_pairs_route_on_all_topologies() {
+        for topo in Topology::all() {
+            for n in [1usize, 3, 7, 16, 33] {
+                let net = Network::build(topo, n);
+                for s in 0..n {
+                    for d in 0..n {
+                        let path = net.route_path(s, d);
+                        assert_eq!(*path.first().unwrap(), net.attach[s]);
+                        assert_eq!(*path.last().unwrap(), net.attach[d]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_square_grid_routes() {
+        // 7 terminals -> 3x3 grid with 2 unused positions.
+        let net = Network::build(Topology::Mesh, 7);
+        assert_eq!(net.dims, (3, 3));
+        for s in 0..7 {
+            for d in 0..7 {
+                net.route_path(s, d);
+            }
+        }
+    }
+}

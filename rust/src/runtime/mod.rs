@@ -1,0 +1,122 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes the
+//! rust binary self-contained afterwards. The interchange format is **HLO
+//! text** — jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, LoadedModel>,
+}
+
+/// One compiled model artifact.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (for reporting).
+    pub path: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&LoadedModel> {
+        let path = path.as_ref().to_path_buf();
+        if !self.cache.contains_key(&path) {
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert(
+                path.clone(),
+                LoadedModel {
+                    exe,
+                    path: path.clone(),
+                },
+            );
+        }
+        Ok(&self.cache[&path])
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 tensor inputs `(data, dims)`. The jax lowering uses
+    /// `return_tuple=True`, so the single output literal is a tuple; all
+    /// tuple elements are returned as flat f32 vectors.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let expected: i64 = dims.iter().product();
+                if expected as usize != data.len() {
+                    bail!("input length {} != shape {:?}", data.len(), dims);
+                }
+                Ok(xla::Literal::vec1(data).reshape(dims)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// Conventional artifact locations (`make artifacts` output).
+pub fn artifact_path(name: &str) -> PathBuf {
+    let base = std::env::var("IMCNOC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Path::new(&base).join(format!("{name}.hlo.txt"))
+}
+
+/// True when the artifact exists (tests skip PJRT paths when artifacts have
+/// not been built yet).
+pub fn artifact_available(name: &str) -> bool {
+    artifact_path(name).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_layout() {
+        let p = artifact_path("mlp");
+        assert!(p.to_string_lossy().ends_with("artifacts/mlp.hlo.txt"));
+    }
+
+    #[test]
+    fn client_boots() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform().is_empty());
+    }
+}

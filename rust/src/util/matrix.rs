@@ -1,0 +1,351 @@
+//! Minimal dense f64 matrix with the operations the analytical NoC model
+//! needs: multiply, add/sub, scalar scale, LU decomposition with partial
+//! pivoting, inverse, and linear solve. Row-major storage.
+//!
+//! Eq. 8 of the paper, `N = (I - tΛC)^{-1} Λ R`, requires a 5×5 inverse per
+//! router; we keep the implementation general (n×n) so the same code backs
+//! unit tests and larger aggregate systems.
+
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Self::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Self {
+        let mut m = Self::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let mut out = self.clone();
+        for v in &mut out.data {
+            *v *= s;
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// LU decomposition with partial pivoting. Returns (LU, perm, sign) or
+    /// `None` if the matrix is singular to working precision.
+    fn lu(&self) -> Option<(Matrix, Vec<usize>, f64)> {
+        assert_eq!(self.rows, self.cols, "LU requires square matrix");
+        let n = self.rows;
+        let mut lu = self.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // Pivot selection.
+            let mut pivot = k;
+            let mut maxval = lu[(k, k)].abs();
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > maxval {
+                    maxval = v;
+                    pivot = i;
+                }
+            }
+            if maxval < 1e-300 {
+                return None;
+            }
+            if pivot != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(pivot, j)];
+                    lu[(pivot, j)] = tmp;
+                }
+                perm.swap(k, pivot);
+                sign = -sign;
+            }
+            let pivval = lu[(k, k)];
+            for i in (k + 1)..n {
+                let f = lu[(i, k)] / pivval;
+                lu[(i, k)] = f;
+                for j in (k + 1)..n {
+                    lu[(i, j)] -= f * lu[(k, j)];
+                }
+            }
+        }
+        Some((lu, perm, sign))
+    }
+
+    /// Solve `self * x = b` for x. `None` if singular.
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let n = self.rows;
+        assert_eq!(b.len(), n);
+        let (lu, perm, _) = self.lu()?;
+        // Forward substitution with permuted b.
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = b[perm[i]];
+            for j in 0..i {
+                acc -= lu[(i, j)] * y[j];
+            }
+            y[i] = acc;
+        }
+        // Back substitution.
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for j in (i + 1)..n {
+                acc -= lu[(i, j)] * x[j];
+            }
+            x[i] = acc / lu[(i, i)];
+        }
+        Some(x)
+    }
+
+    /// Matrix inverse via LU. `None` if singular.
+    pub fn inverse(&self) -> Option<Matrix> {
+        let n = self.rows;
+        let (lu, perm, _) = self.lu()?;
+        let mut inv = Matrix::zeros(n, n);
+        let mut col = vec![0.0; n];
+        for c in 0..n {
+            // Solve A x = e_c reusing the factorization.
+            for i in 0..n {
+                let mut acc = if perm[i] == c { 1.0 } else { 0.0 };
+                for j in 0..i {
+                    acc -= lu[(i, j)] * col[j];
+                }
+                col[i] = acc;
+            }
+            for i in (0..n).rev() {
+                let mut acc = col[i];
+                for j in (i + 1)..n {
+                    acc -= lu[(i, j)] * inv[(j, c)];
+                }
+                inv[(i, c)] = acc / lu[(i, i)];
+            }
+        }
+        Some(inv)
+    }
+
+    pub fn determinant(&self) -> f64 {
+        match self.lu() {
+            None => 0.0,
+            Some((lu, _, sign)) => {
+                let mut det = sign;
+                for i in 0..self.rows {
+                    det *= lu[(i, i)];
+                }
+                det
+            }
+        }
+    }
+
+    /// Max absolute entry — convenient for convergence/validity checks.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Spectral-radius upper bound via the infinity norm (max row sum).
+    /// Used to check the stability condition of the queueing fixed point.
+    pub fn inf_norm(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0f64, f64::max)
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Mul<&Matrix> for &Matrix {
+    type Output = Matrix;
+    fn mul(self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "dimension mismatch");
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out[(i, j)] += a * rhs[(k, j)];
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Add<&Matrix> for &Matrix {
+    type Output = Matrix;
+    fn add(self, rhs: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&rhs.data) {
+            *a += b;
+        }
+        out
+    }
+}
+
+impl Sub<&Matrix> for &Matrix {
+    type Output = Matrix;
+    fn sub(self, rhs: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&rhs.data) {
+            *a -= b;
+        }
+        out
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            writeln!(f, "  {:?}", self.row(i))?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Matrix, b: &Matrix, tol: f64) -> bool {
+        (a - b).max_abs() < tol
+    }
+
+    #[test]
+    fn multiply_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = &a * &b;
+        assert_eq!(c, Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = Matrix::from_rows(&[&[4.0, 7.0, 2.0], &[2.0, 6.0, 1.0], &[1.0, 1.0, 9.0]]);
+        let inv = a.inverse().unwrap();
+        assert!(approx(&(&a * &inv), &Matrix::identity(3), 1e-10));
+        assert!(approx(&(&inv * &a), &Matrix::identity(3), 1e-10));
+    }
+
+    #[test]
+    fn inverse_with_pivoting_needed() {
+        // Leading zero forces a row swap.
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let inv = a.inverse().unwrap();
+        assert!(approx(&inv, &a, 1e-12));
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(a.inverse().is_none());
+        assert_eq!(a.determinant(), 0.0);
+    }
+
+    #[test]
+    fn solve_matches_inverse() {
+        let a = Matrix::from_rows(&[&[3.0, 1.0], &[1.0, 2.0]]);
+        let x = a.solve(&[9.0, 8.0]).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn determinant_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert!((a.determinant() + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn diag_and_norms() {
+        let d = Matrix::diag(&[1.0, -3.0]);
+        assert_eq!(d.max_abs(), 3.0);
+        assert_eq!(d.inf_norm(), 3.0);
+        assert_eq!(d.transpose(), d);
+    }
+}

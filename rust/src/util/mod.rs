@@ -1,0 +1,44 @@
+//! Small self-contained utilities: deterministic PRNGs, statistics helpers,
+//! a dense-matrix type with LU inversion (needed by the analytical NoC model,
+//! Eq. 8 of the paper), table rendering for experiment output, and a tiny
+//! hand-rolled property-testing harness (no external crates are available in
+//! the offline build environment).
+
+pub mod matrix;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+
+pub use matrix::Matrix;
+pub use prng::{Pcg32, SplitMix64};
+pub use stats::{geomean, mean, percentile, stddev};
+pub use table::Table;
+
+/// Format a float with engineering-friendly precision for experiment tables.
+pub fn fmt_sig(v: f64, sig: usize) -> String {
+    if v == 0.0 || !v.is_finite() {
+        return format!("{v}");
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let dec = (sig as i32 - 1 - mag).max(0) as usize;
+    if mag >= 6 || mag <= -4 {
+        format!("{v:.prec$e}", prec = sig.saturating_sub(1))
+    } else {
+        format!("{v:.dec$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_sig_magnitudes() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(1234.5, 3), "1234"); // mag 3 < 6 -> fixed, 0 decimals
+        assert_eq!(fmt_sig(0.0123, 3), "0.0123");
+        assert!(fmt_sig(1.0e9, 3).contains('e'));
+        assert!(fmt_sig(1.0e-7, 3).contains('e'));
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny hand-rolled property-testing harness (the offline environment ships
+//! no `proptest`/`quickcheck`). A property is a closure over a [`Gen`]
+//! source; we run it for a configurable number of deterministic cases and,
+//! on failure, report the case index and seed so it can be replayed exactly.
+//!
+//! There is no shrinking — cases are seeded independently, so re-running a
+//! single failing seed is cheap and deterministic.
+
+use super::prng::Pcg32;
+
+/// Random value source handed to each property case.
+pub struct Gen {
+    rng: Pcg32,
+    pub case: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` deterministic property cases. The property returns
+/// `Err(message)` to fail. Panics with a replayable report on failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, 0xC0FFEE, cases, &mut prop);
+}
+
+/// Like [`check`] but with an explicit base seed (used to replay failures).
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: usize, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut gen = Gen {
+            rng: Pcg32::seeded(seed),
+            case,
+            seed,
+        };
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay: check_seeded(\"{name}\", {seed:#x}, 1, ..)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("sum-commutes", 64, |g| {
+            n += 1;
+            let a = g.f64_in(-1e3, 1e3);
+            let b = g.f64_in(-1e3, 1e3);
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 8, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        check("gen-ranges", 128, |g| {
+            let u = g.usize_in(3, 9);
+            if !(3..=9).contains(&u) {
+                return Err(format!("usize_in out of range: {u}"));
+            }
+            let f = g.f64_in(-2.0, 2.0);
+            if !(-2.0..2.0).contains(&f) {
+                return Err(format!("f64_in out of range: {f}"));
+            }
+            let v = g.vec_f64(4, 0.0, 1.0);
+            if v.len() != 4 || v.iter().any(|x| !(0.0..1.0).contains(x)) {
+                return Err("vec_f64 broken".into());
+            }
+            Ok(())
+        });
+    }
+}

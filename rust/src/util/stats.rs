@@ -1,0 +1,149 @@
+//! Descriptive statistics used by the simulators and experiment harness.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Geometric mean of strictly positive samples; 0.0 for empty input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Mean absolute percentage deviation of `worst` from `avg` over pairs with
+/// non-zero `avg` — Eq. 12 of the paper (used by Table 3).
+pub fn mapd(avg: &[f64], worst: &[f64]) -> f64 {
+    assert_eq!(avg.len(), worst.len());
+    let mut n = 0usize;
+    let mut acc = 0.0;
+    for (&a, &w) in avg.iter().zip(worst) {
+        if a > 0.0 {
+            acc += (w - a) / a;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * acc / n as f64
+    }
+}
+
+/// Online accumulator for mean/max/count without storing samples.
+#[derive(Clone, Debug, Default)]
+pub struct Accum {
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+            min: f64::INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mapd_matches_eq12() {
+        // avg = [2, 4], worst = [3, 4] -> deviations 50% and 0% -> 25%.
+        let v = mapd(&[2.0, 4.0], &[3.0, 4.0]);
+        assert!((v - 25.0).abs() < 1e-12);
+        // zero-average pairs are excluded.
+        let v = mapd(&[0.0, 4.0], &[9.0, 5.0]);
+        assert!((v - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accum_tracks_extremes() {
+        let mut a = Accum::new();
+        for x in [3.0, 1.0, 2.0] {
+            a.add(x);
+        }
+        assert_eq!(a.count, 3);
+        assert_eq!(a.max, 3.0);
+        assert_eq!(a.min, 1.0);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+}

