@@ -1,0 +1,63 @@
+//! Chiplet scale-out: shard a large DNN across a 2.5D package of IMC
+//! chiplets and compare package-level (NoP) topologies.
+//!
+//! ```sh
+//! cargo run --release --example chiplet_scaleout
+//! ```
+
+use imcnoc::arch::{recommend_scaleout, recommend_topology, CommBackend};
+use imcnoc::config::{ArchConfig, NocConfig, NopConfig, SimConfig};
+use imcnoc::dnn::models;
+use imcnoc::nop::{evaluate_package, NopTopology};
+
+fn main() {
+    // 1. A package-scale workload: VGG-19 needs hundreds of tiles — more
+    //    than a single reticle-friendly chiplet comfortably holds.
+    let vgg = models::vgg(19);
+    let arch = ArchConfig::reram();
+    let base_noc = NocConfig::default();
+
+    // 2. Per-chiplet NoC chosen by the paper's single-chip advisor.
+    let noc_topo = recommend_topology(&vgg, &arch, &base_noc).topology;
+    let noc = NocConfig {
+        topology: noc_topo,
+        ..base_noc.clone()
+    };
+    println!("{}: per-chiplet NoC = {}", vgg.name, noc_topo.name());
+
+    // 3. Evaluate a 4-chiplet package under each NoP topology.
+    for nop_topo in NopTopology::all() {
+        let nop = NopConfig {
+            topology: nop_topo,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let e = evaluate_package(
+            &vgg,
+            &arch,
+            &noc,
+            &nop,
+            &SimConfig::default(),
+            CommBackend::Analytical,
+        );
+        println!(
+            "NoP {:>5}: latency {:.3} ms  energy {:.3} mJ  area {:.1} mm2  EDAP {:.3}  ({} kbit/frame cross-chiplet)",
+            nop_topo.name(),
+            e.latency_s() * 1e3,
+            e.energy_j() * 1e3,
+            e.area_mm2(),
+            e.edap(),
+            e.cross_bits / 1000,
+        );
+    }
+
+    // 4. The joint advisor searches (chiplets x NoP x NoC) by EDAP.
+    let rec = recommend_scaleout(&vgg, &arch, &base_noc, &NopConfig::default());
+    println!(
+        "joint recommendation: {} chiplet(s), NoP {}, per-chiplet {} (EDAP {:.3})",
+        rec.chiplets,
+        rec.nop_topology.name(),
+        rec.noc_topology.name(),
+        rec.best.edap(),
+    );
+}

@@ -1,0 +1,58 @@
+//! Multi-chiplet scale-out benchmarks: hierarchical NoC+NoP evaluation
+//! cost (analytical vs cycle-accurate per-chiplet backends) and the joint
+//! (chiplets, NoP, NoC) advisor sweep.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, observe};
+use imcnoc::arch::{recommend_scaleout, CommBackend};
+use imcnoc::config::{ArchConfig, NocConfig, NopConfig, SimConfig};
+use imcnoc::dnn::models;
+use imcnoc::nop::evaluator::evaluate_package;
+use imcnoc::nop::topology::NopTopology;
+
+fn main() {
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+
+    // Hierarchical evaluation, analytical per-chiplet backend.
+    for (name, g) in [
+        ("lenet5", models::lenet5()),
+        ("resnet50", models::resnet(50)),
+        ("vgg19", models::vgg(19)),
+    ] {
+        for k in [2usize, 4, 8] {
+            let nop = NopConfig {
+                topology: NopTopology::Mesh,
+                chiplets: k,
+                ..NopConfig::default()
+            };
+            bench(&format!("package_analytical_{name}_k{k}"), 1, 5, || {
+                let e = evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Analytical);
+                observe(&e.edap());
+            });
+        }
+    }
+
+    // Cycle-accurate per-chiplet backend (small DNN only).
+    let g = models::lenet5();
+    let nop = NopConfig {
+        chiplets: 4,
+        ..NopConfig::default()
+    };
+    bench("package_simulate_lenet5_k4", 1, 3, || {
+        let e = evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Simulate);
+        observe(&e.edap());
+    });
+
+    // Joint advisor: the full (chiplets x NoP x NoC) EDAP search.
+    let nop = NopConfig::default();
+    for (name, g) in [("nin", models::nin()), ("resnet50", models::resnet(50))] {
+        bench(&format!("recommend_scaleout_{name}"), 0, 3, || {
+            let rec = recommend_scaleout(&g, &arch, &noc, &nop);
+            observe(&rec.chiplets);
+        });
+    }
+}

@@ -7,9 +7,13 @@ mod harness;
 
 use harness::{bench, observe};
 use imcnoc::coordinator::server::synthetic_requests;
-use imcnoc::runtime::{artifact_available, artifact_path, Runtime};
+use imcnoc::runtime::{artifact_available, artifact_path, pjrt_enabled, Runtime};
 
 fn main() {
+    if !pjrt_enabled() {
+        println!("runtime_pjrt: built without the `pjrt` feature (skipping)");
+        return;
+    }
     if !artifact_available("mlp") || !artifact_available("mlp_float") {
         println!("runtime_pjrt: artifacts missing, run `make artifacts` (skipping)");
         return;

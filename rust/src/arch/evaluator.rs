@@ -7,7 +7,7 @@ use crate::config::{ArchConfig, NocConfig, SimConfig};
 use crate::dnn::DnnGraph;
 use crate::mapping::{InjectionMatrix, Mapping};
 use crate::noc::analytical::AnalyticalModel;
-use crate::noc::latency::layer_flows;
+use crate::noc::latency::{flits_per_pair, layer_flows};
 use crate::noc::sim::{FlowSpec, Mode, NocSim};
 use crate::noc::topology::{Network, Topology};
 use crate::noc::NocPower;
@@ -184,16 +184,15 @@ pub fn evaluate(
     let power = NocPower::new(&net, noc, arch.tech_nm, tile_edge_mm.max(0.1));
     let mut comm_energy_j = 0.0;
     for f in &inj.flows {
-        let flits_per_pair = (f.activations as f64 * arch.n_bits as f64
-            / ((f.src_tiles.len() * f.dst_tiles.len()) as f64 * noc.bus_width as f64))
-            .ceil();
+        let pairs = f.src_tiles.len() * f.dst_tiles.len();
+        let flits = flits_per_pair(f.activations, arch.n_bits, pairs, noc.bus_width) as f64;
         for s in f.src_tiles.clone() {
             for d in f.dst_tiles.clone() {
                 if s == d {
                     continue;
                 }
                 let hops = net.hops(s, d);
-                comm_energy_j += flits_per_pair * power.flit_energy_j(hops);
+                comm_energy_j += flits * power.flit_energy_j(hops);
             }
         }
     }

@@ -1,8 +1,9 @@
 //! End-to-end architecture evaluation: compute fabric (circuit model) +
 //! interconnect (NoC simulation or analytical model) composed into the
 //! latency / energy / area / EDAP / FPS numbers every paper figure uses,
-//! plus the heterogeneous-interconnect architecture of Fig. 10 and the
-//! optimal-topology advisor of Fig. 20.
+//! plus the heterogeneous-interconnect architecture of Fig. 10, the
+//! optimal-topology advisor of Fig. 20, and the joint multi-chiplet
+//! (chiplets, NoP, NoC) scale-out advisor.
 
 pub mod evaluator;
 pub mod hetero;
@@ -10,4 +11,6 @@ pub mod optimizer;
 
 pub use evaluator::{evaluate, ArchEvaluation, CommBackend};
 pub use hetero::HeteroArchitecture;
-pub use optimizer::{recommend_topology, Recommendation};
+pub use optimizer::{
+    recommend_scaleout, recommend_topology, Recommendation, ScaleoutRecommendation,
+};

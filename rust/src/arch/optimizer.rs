@@ -2,11 +2,18 @@
 //! NoC-mesh for a DNN from the analytical model, and expose the paper's
 //! closed-form rule (Eq. 16: injection load ∝ ρ/μ — synaptic density over
 //! neurons — with density thresholds around 1–2 × 10³).
+//!
+//! The scale-out extension ([`recommend_scaleout`]) lifts the advisor to
+//! the package level: it jointly searches (chiplet count, NoP topology,
+//! per-chiplet NoC topology) with the hierarchical evaluator and returns
+//! the EDAP-optimal design point.
 
 use super::evaluator::{evaluate, CommBackend};
-use crate::config::{ArchConfig, NocConfig, SimConfig};
+use crate::config::{ArchConfig, NocConfig, NopConfig, SimConfig};
 use crate::dnn::DnnGraph;
 use crate::noc::topology::Topology;
+use crate::nop::evaluator::{evaluate_package, NopEvaluation};
+use crate::nop::topology::NopTopology;
 
 /// Advisor output.
 #[derive(Clone, Debug)]
@@ -90,6 +97,75 @@ pub fn recommend_topology(
     }
 }
 
+/// The joint scale-out advisor's output.
+#[derive(Clone, Debug)]
+pub struct ScaleoutRecommendation {
+    /// The EDAP-optimal design point's evaluation.
+    pub best: NopEvaluation,
+    /// Chiplet count of the winner (1 = single chip).
+    pub chiplets: usize,
+    pub nop_topology: NopTopology,
+    pub noc_topology: Topology,
+    /// Every candidate evaluated, as (chiplets, NoP, NoC, EDAP), in search
+    /// order — for reporting the full design-space slice.
+    pub candidates: Vec<(usize, NopTopology, Topology, f64)>,
+}
+
+/// Chiplet counts the joint advisor explores (1 = stay on a single chip).
+pub const SCALEOUT_CHIPLET_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Per-chiplet NoC topologies the joint advisor explores (the two the
+/// paper's single-chip guidance ever picks).
+pub const SCALEOUT_NOC_CHOICES: [Topology; 2] = [Topology::Tree, Topology::Mesh];
+
+/// Jointly recommend (chiplet count, NoP topology, per-chiplet NoC
+/// topology) for `graph` by exhaustive EDAP search over the (small)
+/// hierarchical design space with the analytical backend. `base_nop`
+/// supplies the SerDes link parameters; its `topology`/`chiplets` fields
+/// are overridden by the search.
+pub fn recommend_scaleout(
+    graph: &DnnGraph,
+    arch: &ArchConfig,
+    base_noc: &NocConfig,
+    base_nop: &NopConfig,
+) -> ScaleoutRecommendation {
+    let sim = SimConfig::default();
+    let mut best: Option<NopEvaluation> = None;
+    let mut candidates = Vec::new();
+    let all_nops = NopTopology::all();
+    let single_chip = [NopTopology::P2p];
+    for &k in &SCALEOUT_CHIPLET_COUNTS {
+        // NoP topology is irrelevant on a single chip; evaluate once.
+        let nop_choices: &[NopTopology] = if k == 1 { &single_chip } else { &all_nops };
+        for &nop_topo in nop_choices {
+            for &noc_topo in &SCALEOUT_NOC_CHOICES {
+                let noc = NocConfig {
+                    topology: noc_topo,
+                    ..base_noc.clone()
+                };
+                let nop = NopConfig {
+                    topology: nop_topo,
+                    chiplets: k,
+                    ..base_nop.clone()
+                };
+                let e = evaluate_package(graph, arch, &noc, &nop, &sim, CommBackend::Analytical);
+                candidates.push((k, nop_topo, noc_topo, e.edap()));
+                if best.as_ref().map_or(true, |b| e.edap() < b.edap()) {
+                    best = Some(e);
+                }
+            }
+        }
+    }
+    let best = best.expect("non-empty search space");
+    ScaleoutRecommendation {
+        chiplets: best.chiplets,
+        nop_topology: best.nop_topology,
+        noc_topology: best.noc_topology,
+        best,
+        candidates,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +200,42 @@ mod tests {
     fn lenet_density_in_tree_band() {
         let d = models::lenet5().density_report().connection_density();
         assert!(d < DENSITY_TREE_THRESHOLD, "LeNet-5 density {d}");
+    }
+
+    #[test]
+    fn scaleout_advisor_covers_the_space_and_picks_the_min() {
+        let rec = recommend_scaleout(
+            &models::lenet5(),
+            &ArchConfig::default(),
+            &NocConfig::default(),
+            &NopConfig::default(),
+        );
+        // 1 chiplet x 1 NoP x 2 NoCs + 3 counts x 3 NoPs x 2 NoCs = 20.
+        assert_eq!(rec.candidates.len(), 2 + 3 * 3 * 2);
+        let min = rec
+            .candidates
+            .iter()
+            .map(|&(_, _, _, edap)| edap)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(rec.best.edap(), min);
+        assert_eq!(rec.chiplets, rec.best.chiplets);
+        assert_eq!(rec.nop_topology, rec.best.nop_topology);
+        assert_eq!(rec.noc_topology, rec.best.noc_topology);
+    }
+
+    #[test]
+    fn scaleout_advisor_runs_on_every_zoo_model() {
+        // The acceptance bar: a (chiplets, NoP, NoC) recommendation exists
+        // for every model in the zoo. Keep the sweep cheap by reusing the
+        // default SerDes parameters.
+        let arch = ArchConfig::default();
+        let noc = NocConfig::default();
+        let nop = NopConfig::default();
+        for g in crate::dnn::model_zoo() {
+            let rec = recommend_scaleout(&g, &arch, &noc, &nop);
+            assert!(rec.best.edap().is_finite() && rec.best.edap() > 0.0, "{}", g.name);
+            assert!(SCALEOUT_CHIPLET_COUNTS.contains(&rec.chiplets), "{}", g.name);
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! repro all         [--exact] [--fast] [--csv]
 //! repro eval <dnn> [--tech sram|reram] [--topology mesh|tree|p2p|cmesh] [--exact]
 //! repro advise <dnn>
+//! repro chiplet [--model <dnn>] [--chiplets N] [--noc t] [--nop t] [--advise]
 //! repro serve <artifact> [--requests N] [--batch N] [--in-dim N]
 //! repro config [--show] [--load path]
 //! repro list
@@ -13,12 +14,14 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::arch::{evaluate, recommend_topology, CommBackend};
-use crate::config::{ArchConfig, Config, MemTech, NocConfig, SimConfig};
+use crate::arch::{evaluate, recommend_scaleout, recommend_topology, CommBackend};
+use crate::config::{ArchConfig, Config, MemTech, NocConfig, NopConfig, SimConfig};
 use crate::coordinator::server::{synthetic_requests, InferenceServer};
 use crate::dnn::by_name;
 use crate::experiments::{find, registry, Options};
 use crate::noc::topology::Topology;
+use crate::nop::evaluator::evaluate_package;
+use crate::nop::topology::NopTopology;
 use crate::util::{fmt_sig, Table};
 
 /// Parsed flag set: positionals + `--key value` / `--flag` options.
@@ -78,8 +81,55 @@ impl Args {
 fn flag_takes_value(name: &str) -> bool {
     matches!(
         name,
-        "seed" | "tech" | "topology" | "requests" | "batch" | "in-dim" | "load" | "threads"
+        "seed"
+            | "tech"
+            | "topology"
+            | "requests"
+            | "batch"
+            | "in-dim"
+            | "load"
+            | "threads"
+            | "model"
+            | "chiplets"
+            | "noc"
+            | "nop"
     )
+}
+
+/// Parse a tile-level NoC topology, listing the valid names on failure.
+fn parse_noc_topology(s: &str) -> Result<Topology> {
+    Topology::parse(s).ok_or_else(|| {
+        anyhow!(
+            "unknown NoC topology '{s}' (valid: {})",
+            Topology::valid_names()
+        )
+    })
+}
+
+/// Parse a package-level NoP topology, listing the valid names on failure.
+fn parse_nop_topology(s: &str) -> Result<NopTopology> {
+    NopTopology::parse(s).ok_or_else(|| {
+        anyhow!(
+            "unknown NoP topology '{s}' (valid: {})",
+            NopTopology::valid_names()
+        )
+    })
+}
+
+/// One-line winner summary shared by every `chiplet` view.
+fn print_scaleout_recommendation(rec: &crate::arch::ScaleoutRecommendation, dnn: &str) {
+    println!(
+        "joint recommendation for {}: {} chiplet(s){} with per-chiplet {} (EDAP {})",
+        dnn,
+        rec.chiplets,
+        if rec.chiplets == 1 {
+            String::new()
+        } else {
+            format!(" over NoP-{}", rec.nop_topology.name())
+        },
+        rec.noc_topology.name(),
+        fmt_sig(rec.best.edap(), 4),
+    );
 }
 
 fn options_from(args: &Args) -> Result<Options> {
@@ -154,7 +204,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             let topo = match args.get("topology") {
                 None => recommend_topology(&g, &ArchConfig::default(), &NocConfig::default())
                     .topology,
-                Some(t) => Topology::parse(t).ok_or_else(|| anyhow!("bad --topology '{t}'"))?,
+                Some(t) => parse_noc_topology(t)?,
             };
             let arch = ArchConfig {
                 tech,
@@ -228,6 +278,144 @@ pub fn run(argv: &[String]) -> Result<()> {
                 rec.edap_mesh,
                 rec.rule_of_thumb.name(),
             );
+        }
+        "chiplet" => {
+            let base_noc = NocConfig::default();
+            let base_nop = NopConfig::default();
+            let arch = ArchConfig {
+                tech: match args.get("tech") {
+                    None => MemTech::Reram,
+                    Some(t) => MemTech::parse(t).ok_or_else(|| anyhow!("bad --tech '{t}'"))?,
+                },
+                ..ArchConfig::default()
+            };
+            let backend = if args.has("exact") {
+                CommBackend::Simulate
+            } else {
+                CommBackend::Analytical
+            };
+            if args.has("advise") && args.get("model").is_none() {
+                // Joint recommendation for the whole zoo.
+                for conflicting in ["chiplets", "noc", "nop", "exact"] {
+                    if args.has(conflicting) {
+                        bail!(
+                            "--advise searches the full (chiplets x NoP x NoC) space; \
+                             drop --{conflicting} or drop --advise"
+                        );
+                    }
+                }
+                let mut t = Table::new(
+                    "Joint scale-out recommendation per zoo model",
+                    &["dnn", "chiplets", "NoP", "NoC", "latency_ms", "EDAP"],
+                );
+                for g in crate::dnn::model_zoo() {
+                    let rec = recommend_scaleout(&g, &arch, &base_noc, &base_nop);
+                    t.add_row(vec![
+                        g.name.clone(),
+                        rec.chiplets.to_string(),
+                        if rec.chiplets == 1 {
+                            "-".into()
+                        } else {
+                            rec.nop_topology.name().into()
+                        },
+                        rec.noc_topology.name().into(),
+                        fmt_sig(rec.best.latency_s() * 1e3, 4),
+                        fmt_sig(rec.best.edap(), 3),
+                    ]);
+                }
+                print_tables(&[t], args.has("csv"));
+                return Ok(());
+            }
+            let name = args
+                .get("model")
+                .ok_or_else(|| anyhow!("usage: repro chiplet --model <dnn> [--chiplets N] (or `repro chiplet --advise` for the whole zoo)"))?;
+            let g = by_name(name).ok_or_else(|| anyhow!("unknown DNN '{name}'"))?;
+            if args.has("advise") {
+                // Joint advise view scoped to one model: the search covers
+                // the full (chiplets x NoP x NoC) space, so point-fixing
+                // flags contradict it.
+                for conflicting in ["chiplets", "noc", "nop", "exact"] {
+                    if args.has(conflicting) {
+                        bail!(
+                            "--advise searches the full (chiplets x NoP x NoC) space; \
+                             drop --{conflicting} or drop --advise"
+                        );
+                    }
+                }
+                let rec = recommend_scaleout(&g, &arch, &base_noc, &base_nop);
+                let mut t = Table::new(
+                    format!("Scale-out design space for {}", g.name),
+                    &["chiplets", "NoP", "NoC", "EDAP_J.ms.mm2"],
+                );
+                for &(k, nop_topo, noc_topo, edap) in &rec.candidates {
+                    t.add_row(vec![
+                        k.to_string(),
+                        if k == 1 { "-".into() } else { nop_topo.name().into() },
+                        noc_topo.name().into(),
+                        fmt_sig(edap, 4),
+                    ]);
+                }
+                print_tables(&[t], args.has("csv"));
+                print_scaleout_recommendation(&rec, &g.name);
+                return Ok(());
+            }
+            let chiplets = args.get_usize("chiplets", base_nop.chiplets)?;
+            NopConfig {
+                chiplets,
+                ..base_nop.clone()
+            }
+            .validate()
+            .map_err(|e| anyhow!("--chiplets: {e}"))?;
+            let noc_topo = match args.get("noc") {
+                None => recommend_topology(&g, &arch, &base_noc).topology,
+                Some(t) => parse_noc_topology(t)?,
+            };
+            let noc = NocConfig {
+                topology: noc_topo,
+                ..base_noc.clone()
+            };
+            let nop_choices: Vec<NopTopology> = match args.get("nop") {
+                None => NopTopology::all().to_vec(),
+                Some(t) => vec![parse_nop_topology(t)?],
+            };
+            let mut t = Table::new(
+                format!(
+                    "{} on {} chiplets ({} IMC, per-chiplet {})",
+                    g.name,
+                    chiplets,
+                    arch.tech.name(),
+                    noc_topo.name()
+                ),
+                &[
+                    "NoP",
+                    "latency_ms",
+                    "energy_mJ",
+                    "area_mm2",
+                    "EDAP_J.ms.mm2",
+                    "FPS",
+                    "cross_kbits",
+                ],
+            );
+            for nop_topo in nop_choices {
+                let nop = NopConfig {
+                    topology: nop_topo,
+                    chiplets,
+                    ..base_nop.clone()
+                };
+                let e = evaluate_package(&g, &arch, &noc, &nop, &SimConfig::default(), backend);
+                t.add_row(vec![
+                    nop_topo.name().into(),
+                    fmt_sig(e.latency_s() * 1e3, 4),
+                    fmt_sig(e.energy_j() * 1e3, 4),
+                    fmt_sig(e.area_mm2(), 4),
+                    fmt_sig(e.edap(), 4),
+                    fmt_sig(e.fps(), 4),
+                    fmt_sig(e.cross_bits as f64 / 1e3, 4),
+                ]);
+            }
+            print_tables(&[t], args.has("csv"));
+            let rec = recommend_scaleout(&g, &arch, &base_noc, &base_nop);
+            print_scaleout_recommendation(&rec, &g.name);
         }
         "serve" => {
             let artifact = args
@@ -324,6 +512,11 @@ USAGE:
   repro all [--fast] [--csv]                                run every experiment
   repro eval <dnn> [--tech sram|reram] [--topology ...]     evaluate one design point
   repro advise <dnn>                                        optimal-topology advisor
+  repro chiplet --model <dnn> [--chiplets N] [--noc t]      multi-chiplet NoC+NoP evaluation
+               [--nop p2p|ring|mesh] [--exact]              (all NoP topologies by default)
+  repro chiplet --advise [--model <dnn>]                    joint (chiplets, NoP, NoC)
+                                                            recommendation: whole zoo, or the
+                                                            full design space of one model
   repro serve <artifact> [--requests N] [--batch N]         serve inference via PJRT
   repro sweep [--tech sram|reram] [--exact]                 parallel zoo sweep
   repro config [--load path]                                show/parse configuration
@@ -378,5 +571,64 @@ mod tests {
     fn run_small_figure() {
         run(&["figure".into(), "1".into()]).unwrap();
         run(&["advise".into(), "MLP".into()]).unwrap();
+    }
+
+    #[test]
+    fn run_chiplet_eval() {
+        run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "lenet5".into(),
+            "--chiplets".into(),
+            "2".into(),
+        ])
+        .unwrap();
+        run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--nop".into(),
+            "ring".into(),
+        ])
+        .unwrap();
+        // --advise scoped to one model prints its design-space slice.
+        run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--advise".into(),
+        ])
+        .unwrap();
+        assert!(run(&["chiplet".into()]).is_err()); // needs --model or --advise
+        // Out-of-range chiplet counts error cleanly instead of panicking.
+        assert!(run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--chiplets".into(),
+            "0".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn topology_errors_list_valid_names() {
+        let err = run(&[
+            "eval".into(),
+            "MLP".into(),
+            "--topology".into(),
+            "star".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("hypercube"), "{err}");
+        let err = run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--nop".into(),
+            "star".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("ring"), "{err}");
     }
 }

@@ -7,6 +7,7 @@ mod parse;
 pub use parse::{parse_ini, IniDoc, ParseError};
 
 use crate::noc::topology::Topology;
+use crate::nop::topology::NopTopology;
 
 /// Memory technology of the IMC processing elements (crossbars).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -177,6 +178,80 @@ impl NocConfig {
     }
 }
 
+/// Network-on-Package parameters for multi-chiplet scale-out.
+///
+/// Package links are SerDes lanes over the interposer: compared to on-chip
+/// wires they are narrower, clocked slower (effective parallel rate after
+/// serialization), have a large fixed per-hop latency (TX + trace + RX),
+/// and cost an order of magnitude more energy per bit — SIMBA-class 2.5D
+/// numbers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NopConfig {
+    /// Package-level topology.
+    pub topology: NopTopology,
+    /// IMC chiplets in the package.
+    pub chiplets: usize,
+    /// Bits per NoP flit (parallel lane-bundle width). Default: 32.
+    pub link_width: usize,
+    /// Effective per-link flit clock in Hz (post-SerDes). Default: 0.5 GHz
+    /// — half the on-chip clock.
+    pub freq_hz: f64,
+    /// Fixed per-hop latency in NoP cycles (SerDes TX + package trace +
+    /// RX + relay). Default: 20.
+    pub hop_latency_cycles: u64,
+    /// Transfer energy per bit per hop, pJ. Default: 1.5 (vs ~0.1 pJ/bit
+    /// for an on-chip link traversal).
+    pub energy_pj_per_bit: f64,
+    /// SerDes PHY area per chiplet port bundle, mm². Default: 0.3.
+    pub phy_area_mm2: f64,
+}
+
+impl Default for NopConfig {
+    fn default() -> Self {
+        Self {
+            topology: NopTopology::Mesh,
+            chiplets: 4,
+            link_width: 32,
+            freq_hz: 0.5e9,
+            hop_latency_cycles: 20,
+            energy_pj_per_bit: 1.5,
+            phy_area_mm2: 0.3,
+        }
+    }
+}
+
+impl NopConfig {
+    pub fn with_topology(topology: NopTopology) -> Self {
+        Self {
+            topology,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_chiplets(chiplets: usize) -> Self {
+        Self {
+            chiplets,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.chiplets == 0 || self.chiplets > 256 {
+            return Err("chiplets must be in [1, 256]".into());
+        }
+        if self.link_width == 0 || self.link_width > 1024 {
+            return Err("link_width must be in [1, 1024]".into());
+        }
+        if self.freq_hz <= 0.0 {
+            return Err("nop freq_hz must be positive".into());
+        }
+        if self.energy_pj_per_bit < 0.0 || self.phy_area_mm2 < 0.0 {
+            return Err("nop energy/area must be non-negative".into());
+        }
+        Ok(())
+    }
+}
+
 /// Simulation-control parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -201,11 +276,12 @@ impl Default for SimConfig {
     }
 }
 
-/// Bundle of all three configs, loadable from an INI file.
+/// Bundle of all configs, loadable from an INI file.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
     pub arch: ArchConfig,
     pub noc: NocConfig,
+    pub nop: NopConfig,
     pub sim: SimConfig,
 }
 
@@ -256,6 +332,25 @@ impl Config {
                 ("noc", "flits_per_packet") => {
                     cfg.noc.flits_per_packet = v.parse().map_err(|_| parse_err(key))?
                 }
+                ("nop", "topology") => {
+                    cfg.nop.topology = NopTopology::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("nop", "chiplets") => {
+                    cfg.nop.chiplets = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("nop", "link_width") => {
+                    cfg.nop.link_width = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("nop", "freq_hz") => cfg.nop.freq_hz = v.parse().map_err(|_| parse_err(key))?,
+                ("nop", "hop_latency_cycles") => {
+                    cfg.nop.hop_latency_cycles = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("nop", "energy_pj_per_bit") => {
+                    cfg.nop.energy_pj_per_bit = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("nop", "phy_area_mm2") => {
+                    cfg.nop.phy_area_mm2 = v.parse().map_err(|_| parse_err(key))?
+                }
                 ("sim", "seed") => cfg.sim.seed = v.parse().map_err(|_| parse_err(key))?,
                 ("sim", "warmup_cycles") => {
                     cfg.sim.warmup_cycles = v.parse().map_err(|_| parse_err(key))?
@@ -271,6 +366,7 @@ impl Config {
         }
         cfg.arch.validate()?;
         cfg.noc.validate()?;
+        cfg.nop.validate()?;
         Ok(cfg)
     }
 
@@ -287,8 +383,10 @@ impl Config {
              tech_nm = {}\nfreq_hz = {}\npes_per_ce = {}\nces_per_tile = {}\n\
              tech = {}\nfps = {}\n\n[noc]\ntopology = {}\nbus_width = {}\n\
              virtual_channels = {}\nbuffer_depth = {}\npipeline_stages = {}\n\
-             flits_per_packet = {}\n\n[sim]\nseed = {}\nwarmup_cycles = {}\n\
-             measure_cycles = {}\ndrain_cycles = {}\n",
+             flits_per_packet = {}\n\n[nop]\ntopology = {}\nchiplets = {}\n\
+             link_width = {}\nfreq_hz = {}\nhop_latency_cycles = {}\n\
+             energy_pj_per_bit = {}\nphy_area_mm2 = {}\n\n[sim]\nseed = {}\n\
+             warmup_cycles = {}\nmeasure_cycles = {}\ndrain_cycles = {}\n",
             self.arch.pe_size,
             self.arch.cell_bits,
             self.arch.n_bits,
@@ -305,6 +403,13 @@ impl Config {
             self.noc.buffer_depth,
             self.noc.pipeline_stages,
             self.noc.flits_per_packet,
+            self.nop.topology.name(),
+            self.nop.chiplets,
+            self.nop.link_width,
+            self.nop.freq_hz,
+            self.nop.hop_latency_cycles,
+            self.nop.energy_pj_per_bit,
+            self.nop.phy_area_mm2,
             self.sim.seed,
             self.sim.warmup_cycles,
             self.sim.measure_cycles,
@@ -355,6 +460,18 @@ mod tests {
         assert!(Config::from_ini("[arch]\npe_size = 100\n").is_err()); // not pow2
         assert!(Config::from_ini("[noc]\nbus_width = 0\n").is_err());
         assert!(Config::from_ini("[noc]\nvirtual_channels = 99\n").is_err());
+    }
+
+    #[test]
+    fn nop_section_parses_and_validates() {
+        let cfg = Config::from_ini("[nop]\ntopology = ring\nchiplets = 8\nlink_width = 16\n")
+            .unwrap();
+        assert_eq!(cfg.nop.topology, NopTopology::Ring);
+        assert_eq!(cfg.nop.chiplets, 8);
+        assert_eq!(cfg.nop.link_width, 16);
+        assert!(Config::from_ini("[nop]\ntopology = star\n").is_err());
+        assert!(Config::from_ini("[nop]\nchiplets = 0\n").is_err());
+        assert!(Config::from_ini("[nop]\nfreq_hz = -1\n").is_err());
     }
 
     #[test]

@@ -82,12 +82,17 @@ pub fn model_zoo() -> Vec<DnnGraph> {
     ]
 }
 
-/// Look a zoo model up by (case-insensitive) name, e.g. "vgg-19".
+/// Look a zoo model up by name, ignoring case and separators — "VGG-19",
+/// "vgg_19" and "vgg19" all resolve.
 pub fn by_name(name: &str) -> Option<DnnGraph> {
-    let want = name.to_ascii_lowercase().replace(['_', ' '], "-");
-    model_zoo()
-        .into_iter()
-        .find(|m| m.name.to_ascii_lowercase() == want)
+    let canon = |s: &str| -> String {
+        s.chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .map(|c| c.to_ascii_lowercase())
+            .collect()
+    };
+    let want = canon(name);
+    model_zoo().into_iter().find(|m| canon(&m.name) == want)
 }
 
 #[cfg(test)]
@@ -115,6 +120,8 @@ mod tests {
     fn by_name_variants() {
         assert!(by_name("VGG-19").is_some());
         assert!(by_name("vgg_19").is_some());
+        assert!(by_name("vgg19").is_some());
+        assert!(by_name("DenseNet100").is_some());
         assert!(by_name("densenet-100").is_some());
         assert!(by_name("nonexistent-net").is_none());
     }

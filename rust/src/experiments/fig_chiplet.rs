@@ -1,0 +1,132 @@
+//! Beyond-the-paper experiment: multi-chiplet scale-out. Sweeps the
+//! hierarchical (chiplet count × NoP topology) space for the eval-set DNNs
+//! and reports the joint (chiplets, NoP, NoC) recommendation per model —
+//! the package-level analogue of Fig. 20.
+
+use super::Options;
+use crate::arch::{recommend_scaleout, recommend_topology};
+use crate::config::{ArchConfig, NocConfig, NopConfig, SimConfig};
+use crate::dnn::{eval_set, DnnGraph};
+use crate::nop::evaluator::evaluate_package;
+use crate::nop::topology::NopTopology;
+use crate::util::{fmt_sig, Table};
+
+fn eval_dnns(opts: &Options) -> Vec<DnnGraph> {
+    if opts.fast {
+        eval_set()
+            .into_iter()
+            .filter(|g| g.total_macs() < 1_000_000_000)
+            .collect()
+    } else {
+        eval_set()
+    }
+}
+
+/// The scale-out sweep: per DNN, end-to-end latency and EDAP for packages
+/// of 2/4/8 chiplets under each NoP topology (per-chiplet NoC chosen by
+/// the single-chip advisor), plus the joint recommendation table.
+pub fn chiplet(opts: &Options) -> Vec<Table> {
+    let arch = ArchConfig::reram();
+    let base_noc = NocConfig::default();
+    let base_nop = NopConfig::default();
+    let sim = SimConfig {
+        seed: opts.seed,
+        ..SimConfig::default()
+    };
+
+    let dnns = eval_dnns(opts);
+    let mut sweep = Table::new(
+        "Chiplet scale-out — end-to-end latency (ms) / EDAP (J·ms·mm²) per NoP topology",
+        &[
+            "dnn", "chiplets", "NoC", "P2P", "ring", "mesh", "best NoP",
+        ],
+    );
+    for g in &dnns {
+        let noc_topo = recommend_topology(g, &arch, &base_noc).topology;
+        let noc = NocConfig {
+            topology: noc_topo,
+            ..base_noc.clone()
+        };
+        for k in [2usize, 4, 8] {
+            let evals: Vec<_> = NopTopology::all()
+                .into_iter()
+                .map(|t| {
+                    let nop = NopConfig {
+                        topology: t,
+                        chiplets: k,
+                        ..base_nop.clone()
+                    };
+                    evaluate_package(g, &arch, &noc, &nop, &sim, opts.backend)
+                })
+                .collect();
+            let best = evals
+                .iter()
+                .min_by(|a, b| a.edap().total_cmp(&b.edap()))
+                .unwrap();
+            let cell = |i: usize| {
+                format!(
+                    "{} / {}",
+                    fmt_sig(evals[i].latency_s() * 1e3, 3),
+                    fmt_sig(evals[i].edap(), 3)
+                )
+            };
+            sweep.add_row(vec![
+                g.name.clone(),
+                k.to_string(),
+                noc_topo.name().into(),
+                cell(0),
+                cell(1),
+                cell(2),
+                best.nop_topology.name().into(),
+            ]);
+        }
+    }
+
+    let mut rec_table = Table::new(
+        "Joint scale-out recommendation (EDAP-optimal chiplets × NoP × NoC)",
+        &[
+            "dnn",
+            "chiplets",
+            "NoP",
+            "NoC",
+            "latency_ms",
+            "EDAP",
+            "cross_kbits",
+        ],
+    );
+    for g in &dnns {
+        let rec = recommend_scaleout(g, &arch, &base_noc, &base_nop);
+        rec_table.add_row(vec![
+            g.name.clone(),
+            rec.chiplets.to_string(),
+            if rec.chiplets == 1 {
+                "-".into()
+            } else {
+                rec.nop_topology.name().into()
+            },
+            rec.noc_topology.name().into(),
+            fmt_sig(rec.best.latency_s() * 1e3, 4),
+            fmt_sig(rec.best.edap(), 3),
+            fmt_sig(rec.best.cross_bits as f64 / 1e3, 3),
+        ]);
+    }
+
+    vec![sweep, rec_table]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chiplet_experiment_runs_fast() {
+        let opts = Options {
+            fast: true,
+            ..Options::default()
+        };
+        let tables = chiplet(&opts);
+        assert_eq!(tables.len(), 2);
+        assert!(!tables[0].rows.is_empty());
+        assert!(!tables[1].rows.is_empty());
+    }
+}

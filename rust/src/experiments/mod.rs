@@ -7,6 +7,7 @@
 
 pub mod ablations;
 pub mod fig_analytical;
+pub mod fig_chiplet;
 pub mod fig_congestion;
 pub mod fig_density;
 pub mod fig_edap;
@@ -148,6 +149,11 @@ pub fn registry() -> Vec<Experiment> {
             id: "topologies",
             title: "Topology exploration: all six interconnects",
             run: ablations::topology_exploration,
+        },
+        Experiment {
+            id: "chiplet",
+            title: "Multi-chiplet scale-out: NoC+NoP sweep and joint recommendation",
+            run: fig_chiplet::chiplet,
         },
         Experiment {
             id: "table2",

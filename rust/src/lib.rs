@@ -18,8 +18,12 @@
 //!   * [`circuit`] — NeuroSim-class circuit-level estimator for SRAM/ReRAM tiles,
 //!   * [`noc`] — BookSim-class cycle-accurate NoC simulator (P2P, tree, mesh,
 //!     c-mesh, torus, hypercube) plus the analytical model of Algorithm 2,
-//!   * [`arch`] — end-to-end architecture evaluation (latency/energy/area/EDAP)
-//!     and the heterogeneous-interconnect architecture of Fig. 10,
+//!   * [`nop`] — network-on-package scale-out: packages of IMC chiplets
+//!     (P2P / ring / mesh NoP) evaluated hierarchically, reusing the `noc`
+//!     machinery per chiplet,
+//!   * [`arch`] — end-to-end architecture evaluation (latency/energy/area/EDAP),
+//!     the heterogeneous-interconnect architecture of Fig. 10, and the joint
+//!     (chiplets, NoP, NoC) scale-out advisor,
 //!   * [`baselines`] — ISAAC / PipeLayer / AtomLayer / P2P-IMC comparators,
 //!   * [`runtime`] — PJRT loader executing the AOT artifacts from rust,
 //!   * [`coordinator`] — parallel sweep driver + batched inference serving loop,
@@ -38,10 +42,12 @@ pub mod dnn;
 pub mod experiments;
 pub mod mapping;
 pub mod noc;
+pub mod nop;
 pub mod runtime;
 pub mod util;
 
 pub use arch::evaluator::{evaluate, ArchEvaluation};
-pub use config::{ArchConfig, MemTech, NocConfig, SimConfig};
+pub use config::{ArchConfig, MemTech, NocConfig, NopConfig, SimConfig};
 pub use dnn::{model_zoo, DnnGraph};
 pub use noc::topology::Topology;
+pub use nop::{evaluate_package, NopEvaluation, NopTopology};

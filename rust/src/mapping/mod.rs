@@ -3,11 +3,15 @@
 //! * Eq. 2 — crossbars per layer from kernel/channel shapes and PE size,
 //! * tiles per layer (no layer split across tiles, tiles not shared),
 //! * Fig. 7 — sequential tile numbering/placement,
-//! * Eq. 3 — per source–destination injection-rate matrix.
+//! * Eq. 3 — per source–destination injection-rate matrix,
+//! * chiplet sharding — layer→chiplet partition + inter-chiplet injection
+//!   matrix for the NoP scale-out path ([`chiplet`]).
 
+pub mod chiplet;
 pub mod injection;
 pub mod placement;
 
+pub use chiplet::{ChipletPartition, LayerEdge};
 pub use injection::{InjectionMatrix, TrafficFlow};
 pub use placement::Placement;
 

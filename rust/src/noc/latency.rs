@@ -44,6 +44,18 @@ impl DnnCommSim {
     }
 }
 
+/// Flits each (source, destination) pair carries per frame when
+/// `activations` elements of `n_bits` each are spread over `pairs`
+/// tile pairs on a `bus_width`-bit fabric: `ceil(A·N_bits / (pairs·W))`,
+/// floored at one flit. Shared by the single-chip evaluator
+/// ([`layer_flows`]) and the per-chiplet legs of
+/// [`crate::nop::evaluator::evaluate_package`].
+pub fn flits_per_pair(activations: usize, n_bits: usize, pairs: usize, bus_width: usize) -> u64 {
+    let per_pair = (activations as f64 * n_bits as f64 / (pairs as f64 * bus_width as f64))
+        .ceil() as u64;
+    per_pair.max(1)
+}
+
 /// Build the per-pair flow list for one consumer layer. `drain` decides
 /// whether Eq.-3 rates (steady) or per-frame flit counts (drain) are set.
 pub fn layer_flows(
@@ -55,18 +67,15 @@ pub fn layer_flows(
 ) -> Vec<FlowSpec> {
     let mut flows = Vec::new();
     for f in inj.flows_into(layer) {
-        let pairs = (f.src_tiles.len() * f.dst_tiles.len()) as f64;
-        // Flits per pair per frame: A·N_bits / (T_src·T_dst·W).
-        let flits_per_pair =
-            (f.activations as f64 * arch.n_bits as f64 / (pairs * noc.bus_width as f64)).ceil()
-                as u64;
+        let pairs = f.src_tiles.len() * f.dst_tiles.len();
+        let flits_per_pair = flits_per_pair(f.activations, arch.n_bits, pairs, noc.bus_width);
         for s in f.src_tiles.clone() {
             for d in f.dst_tiles.clone() {
                 flows.push(FlowSpec {
                     src: s,
                     dst: d,
                     rate: if drain { 0.0 } else { f.rate },
-                    flits: if drain { flits_per_pair.max(1) } else { 0 },
+                    flits: if drain { flits_per_pair } else { 0 },
                 });
             }
         }

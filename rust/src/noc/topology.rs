@@ -66,6 +66,11 @@ impl Topology {
             Topology::Hypercube,
         ]
     }
+
+    /// The valid `parse` spellings, for CLI error messages.
+    pub fn valid_names() -> &'static str {
+        "P2P, tree (NoC-tree), mesh (NoC-mesh), c-mesh, torus, hypercube"
+    }
 }
 
 /// A built network: routers, links, and a routing function.

@@ -1,0 +1,524 @@
+//! Hierarchical package evaluation: per-chiplet NoC + package-level NoP.
+//!
+//! The single-chip evaluator ([`crate::arch::evaluator`]) rolls a DNN's
+//! mapping, compute fabric and one flat interconnect into latency / energy
+//! / area / EDAP. This module is the same composition one level up:
+//!
+//! * every populated chiplet runs the **unchanged** per-chip machinery —
+//!   [`AnalyticalModel`] or [`NocSim`] — over its *local* tiles,
+//! * traffic whose producer and consumer layers live on different chiplets
+//!   crosses the [`NopNetwork`] at SerDes cost ([`NopConfig`]) and is then
+//!   distributed from the consumer chiplet's gateway tile (local tile 0)
+//!   over the local NoC,
+//! * a layer's frame contribution is `max(compute, local_comm + nop_comm)`:
+//!   both interconnect levels overlap compute (outputs stream), but package
+//!   transit and local distribution serialize with each other.
+
+use crate::arch::evaluator::CommBackend;
+use crate::circuit::ChipCost;
+use crate::config::{ArchConfig, NocConfig, NopConfig, SimConfig};
+use crate::dnn::DnnGraph;
+use crate::mapping::{ChipletPartition, InjectionMatrix, Mapping};
+use crate::noc::analytical::AnalyticalModel;
+use crate::noc::latency::flits_per_pair;
+use crate::noc::sim::{FlowSpec, Mode, NocSim};
+use crate::noc::topology::{Network, Topology};
+use crate::noc::NocPower;
+use crate::nop::topology::{NopNetwork, NopTopology};
+
+/// Full evaluation result for one (DNN, chiplet count, NoP, NoC) point.
+#[derive(Clone, Debug)]
+pub struct NopEvaluation {
+    pub dnn: String,
+    pub noc_topology: Topology,
+    pub nop_topology: NopTopology,
+    /// Package size (requested chiplets) and how many hold layers.
+    pub chiplets: usize,
+    pub populated: usize,
+    pub tiles: usize,
+    pub tiles_per_chiplet: Vec<usize>,
+    /// Bits/frame crossing chiplet boundaries (the NoP load).
+    pub cross_bits: u64,
+    /// Compute fabric (circuit model), identical to the single-chip path.
+    pub compute_latency_s: f64,
+    pub compute_energy_j: f64,
+    pub compute_area_mm2: f64,
+    /// Exposed (non-overlapped) latency attributed to the on-chiplet NoCs
+    /// and to the package NoP, plus their energy/area.
+    pub noc_latency_s: f64,
+    pub noc_energy_j: f64,
+    pub noc_area_mm2: f64,
+    pub nop_latency_s: f64,
+    pub nop_energy_j: f64,
+    pub nop_area_mm2: f64,
+}
+
+impl NopEvaluation {
+    /// End-to-end inference latency per frame, seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.compute_latency_s + self.noc_latency_s + self.nop_latency_s
+    }
+
+    /// Total energy per frame, J.
+    pub fn energy_j(&self) -> f64 {
+        self.compute_energy_j + self.noc_energy_j + self.nop_energy_j
+    }
+
+    /// Total package silicon area, mm² (chiplets + NoCs + SerDes PHYs).
+    pub fn area_mm2(&self) -> f64 {
+        self.compute_area_mm2 + self.noc_area_mm2 + self.nop_area_mm2
+    }
+
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s()
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.energy_j() / self.latency_s()
+    }
+
+    /// Energy-delay-area product, J·ms·mm² (the paper's headline metric).
+    pub fn edap(&self) -> f64 {
+        self.energy_j() * (self.latency_s() * 1e3) * self.area_mm2()
+    }
+
+    /// Communication (NoC + NoP) share of end-to-end latency.
+    pub fn comm_fraction(&self) -> f64 {
+        (self.noc_latency_s + self.nop_latency_s) / self.latency_s()
+    }
+}
+
+/// Core-clock cycles to move `bits` across `hops` package links.
+///
+/// The transfer serializes into `ceil(bits / link_width)` NoP flits at one
+/// flit per NoP cycle, plus a fixed SerDes/trace latency per hop; NoP
+/// cycles are converted to core cycles by the clock ratio. This is the
+/// hand-checkable kernel of the hierarchical composition.
+pub fn nop_transfer_cycles(bits: u64, hops: usize, nop: &NopConfig, core_freq_hz: f64) -> f64 {
+    if bits == 0 || hops == 0 {
+        return 0.0;
+    }
+    nop_flit_cycles(
+        bits.div_ceil(nop.link_width as u64),
+        hops,
+        nop,
+        core_freq_hz,
+    )
+}
+
+/// Flit-level form of [`nop_transfer_cycles`]: `flits` is the load on the
+/// busiest package link (already serialized into NoP flits). The evaluator
+/// uses this directly so the per-layer package term and the hand-checked
+/// kernel cannot drift apart.
+fn nop_flit_cycles(flits: u64, hops: usize, nop: &NopConfig, core_freq_hz: f64) -> f64 {
+    if flits == 0 {
+        return 0.0;
+    }
+    let nop_cycles = flits as f64 + (hops as u64 * nop.hop_latency_cycles) as f64;
+    nop_cycles * (core_freq_hz / nop.freq_hz)
+}
+
+/// Evaluate `graph` on a package of `nop.chiplets` IMC chiplets.
+///
+/// Each chiplet runs `noc.topology` over its local tiles; the package runs
+/// `nop.topology`. `backend` selects the per-chiplet interconnect engine
+/// exactly as in the single-chip path.
+pub fn evaluate_package(
+    graph: &DnnGraph,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    backend: CommBackend,
+) -> NopEvaluation {
+    let mapping = Mapping::build(graph, arch);
+    let chip = ChipCost::evaluate(graph, &mapping, arch);
+    let inj = InjectionMatrix::build(graph, &mapping, arch, noc);
+    let part = ChipletPartition::build(graph, &mapping, arch, nop.chiplets);
+    let nop_net = NopNetwork::build(nop.topology, nop.chiplets);
+
+    // Per-chiplet local networks (None for unpopulated chiplets).
+    let nets: Vec<Option<Network>> = part
+        .tiles_per_chiplet
+        .iter()
+        .map(|&t| (t > 0).then(|| Network::build(noc.topology, t)))
+        .collect();
+
+    // graph layer index -> mapping index (for producer chiplet lookups).
+    let mut midx = vec![usize::MAX; graph.layers.len()];
+    for (i, lt) in mapping.layers.iter().enumerate() {
+        midx[lt.layer] = i;
+    }
+
+    let eject_cap = if noc.topology.has_routers() {
+        arch.ces_per_tile as f64
+    } else {
+        0.5
+    };
+
+    let mut frame_cycles = 0.0f64;
+    let mut noc_exposed_cycles = 0.0f64;
+    let mut nop_exposed_cycles = 0.0f64;
+
+    for (i, lt) in mapping.layers.iter().enumerate() {
+        let compute_cycles = chip.per_layer[i].cycles as f64;
+        let c = part.chiplet_of_layer(i);
+        let net = nets[c].as_ref().expect("consumer chiplet is populated");
+        let model = AnalyticalModel::new(net, noc);
+
+        // Split this layer's inbound traffic into local flows (drain-style
+        // flit counts, local tile ids) and NoP transfers.
+        let mut dflows: Vec<FlowSpec> = Vec::new();
+        let mut nop_hop_max = 0usize;
+        let mut nop_link_load: std::collections::HashMap<(usize, usize), u64> =
+            std::collections::HashMap::new();
+        for f in inj.flows_into(lt.layer) {
+            let src_chiplet = part.chiplet_of_layer(midx[f.src_layer]);
+            let dst_count = f.dst_tiles.len();
+            if src_chiplet == c {
+                // Intra-chiplet: the usual all-pairs bundle, relocalized.
+                let pairs = f.src_tiles.len() * dst_count;
+                let flits = flits_per_pair(f.activations, arch.n_bits, pairs, noc.bus_width);
+                for s in f.src_tiles.clone() {
+                    for d in f.dst_tiles.clone() {
+                        dflows.push(FlowSpec {
+                            src: part.local_tile(s),
+                            dst: part.local_tile(d),
+                            rate: 0.0,
+                            flits,
+                        });
+                    }
+                }
+            } else {
+                // Cross-chiplet: the whole bundle crosses the NoP, then
+                // fans out from the gateway (local tile 0) over the NoC.
+                let bits = f.activations as u64 * arch.n_bits as u64;
+                let path = nop_net.route_path(src_chiplet, c);
+                let flits_nop = bits.div_ceil(nop.link_width as u64);
+                for w in path.windows(2) {
+                    *nop_link_load.entry((w[0], w[1])).or_default() += flits_nop;
+                }
+                nop_hop_max = nop_hop_max.max(path.len() - 1);
+                let flits_gw = flits_per_pair(f.activations, arch.n_bits, dst_count, noc.bus_width);
+                for d in f.dst_tiles.clone() {
+                    dflows.push(FlowSpec {
+                        src: 0,
+                        dst: part.local_tile(d),
+                        rate: 0.0,
+                        flits: flits_gw,
+                    });
+                }
+            }
+        }
+        // Drop degenerate self-flows (e.g. gateway -> gateway).
+        dflows.retain(|f| f.src != f.dst);
+
+        // Package transit: bandwidth bound on the busiest NoP link plus the
+        // per-hop SerDes latency, in core cycles.
+        let nop_bottleneck = nop_link_load.values().copied().max().unwrap_or(0);
+        let nop_cycles = nop_flit_cycles(nop_bottleneck, nop_hop_max, nop, arch.freq_hz);
+
+        // Local distribution: identical model to the single-chip path.
+        let noc_cycles = if dflows.is_empty() {
+            0.0
+        } else {
+            let (bottleneck, _) = model.layer_bottleneck_with_eject(&dflows, eject_cap);
+            let zero_load = model.zero_load(&dflows).max(1.0);
+            let window = compute_cycles.max(1.0);
+            let pflows: Vec<FlowSpec> = dflows
+                .iter()
+                .map(|f| FlowSpec {
+                    src: f.src,
+                    dst: f.dst,
+                    rate: (f.flits as f64 / window).min(1.0),
+                    flits: 0,
+                })
+                .collect();
+            let avg_latency = match backend {
+                CommBackend::Analytical => model.layer_latency(&pflows).avg_latency,
+                CommBackend::Simulate => {
+                    NocSim::new(
+                        noc.topology,
+                        part.tiles_per_chiplet[c],
+                        noc,
+                        &pflows,
+                        Mode::Steady {
+                            warmup: sim.warmup_cycles,
+                            measure: sim.measure_cycles,
+                        },
+                        sim.seed ^ lt.layer as u64,
+                    )
+                    .run()
+                    .avg_latency
+                }
+            };
+            bottleneck + avg_latency.max(zero_load).min(zero_load * 100.0)
+        };
+
+        let comm = noc_cycles + nop_cycles;
+        frame_cycles += compute_cycles.max(comm);
+        let exposed = (comm - compute_cycles).max(0.0);
+        if comm > 0.0 {
+            noc_exposed_cycles += exposed * (noc_cycles / comm);
+            nop_exposed_cycles += exposed * (nop_cycles / comm);
+        }
+    }
+
+    let noc_latency_s = noc_exposed_cycles / arch.freq_hz;
+    let nop_latency_s = nop_exposed_cycles / arch.freq_hz;
+
+    // --- Energy & area ---------------------------------------------------
+    let tile_edge_mm = (chip.area_mm2 / mapping.total_tiles.max(1) as f64)
+        .sqrt()
+        .max(0.1);
+    let powers: Vec<Option<NocPower>> = nets
+        .iter()
+        .map(|n| {
+            n.as_ref()
+                .map(|net| NocPower::new(net, noc, arch.tech_nm, tile_edge_mm))
+        })
+        .collect();
+
+    let mut noc_energy_j = 0.0f64;
+    let mut nop_energy_j = 0.0f64;
+    for f in &inj.flows {
+        let src_chiplet = part.chiplet_of_layer(midx[f.src_layer]);
+        let dst_chiplet = part.chiplet_of_layer(midx[f.dst_layer]);
+        let dst_count = f.dst_tiles.len();
+        if src_chiplet == dst_chiplet {
+            let net = nets[src_chiplet].as_ref().unwrap();
+            let power = powers[src_chiplet].as_ref().unwrap();
+            let pairs = f.src_tiles.len() * dst_count;
+            let flits = flits_per_pair(f.activations, arch.n_bits, pairs, noc.bus_width) as f64;
+            for s in f.src_tiles.clone() {
+                for d in f.dst_tiles.clone() {
+                    if s == d {
+                        continue;
+                    }
+                    let hops = net.hops(part.local_tile(s), part.local_tile(d));
+                    noc_energy_j += flits * power.flit_energy_j(hops);
+                }
+            }
+        } else {
+            // Package crossing + gateway fan-out on the destination chiplet.
+            let bits = f.activations as f64 * arch.n_bits as f64;
+            let hops = nop_net.hops(src_chiplet, dst_chiplet);
+            nop_energy_j += bits * hops as f64 * nop.energy_pj_per_bit * 1e-12;
+            let net = nets[dst_chiplet].as_ref().unwrap();
+            let power = powers[dst_chiplet].as_ref().unwrap();
+            let flits_gw =
+                flits_per_pair(f.activations, arch.n_bits, dst_count, noc.bus_width) as f64;
+            for d in f.dst_tiles.clone() {
+                let ld = part.local_tile(d);
+                if ld == 0 {
+                    continue; // destination is the gateway itself
+                }
+                noc_energy_j += flits_gw * power.flit_energy_j(net.hops(0, ld));
+            }
+        }
+    }
+    let comm_latency_s = noc_latency_s + nop_latency_s;
+    let noc_leakage_w: f64 = powers
+        .iter()
+        .flatten()
+        .map(|p| p.leakage_w)
+        .sum();
+    noc_energy_j += noc_leakage_w * comm_latency_s;
+
+    let noc_area_mm2: f64 = powers.iter().flatten().map(|p| p.area_mm2).sum();
+    let nop_area_mm2: f64 = (0..nop.chiplets)
+        .filter(|&c| part.tiles_per_chiplet[c] > 0)
+        .map(|c| nop_net.ports(c) as f64 * nop.phy_area_mm2)
+        .sum();
+
+    NopEvaluation {
+        dnn: graph.name.clone(),
+        noc_topology: noc.topology,
+        nop_topology: nop.topology,
+        chiplets: nop.chiplets,
+        populated: part.populated_chiplets(),
+        tiles: mapping.total_tiles,
+        tiles_per_chiplet: part.tiles_per_chiplet.clone(),
+        cross_bits: part.cut_bits(),
+        compute_latency_s: chip.latency_s,
+        compute_energy_j: chip.energy_j,
+        compute_area_mm2: chip.area_mm2,
+        noc_latency_s,
+        noc_energy_j,
+        noc_area_mm2,
+        nop_latency_s,
+        nop_energy_j,
+        nop_area_mm2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::evaluator::evaluate;
+    use crate::dnn::{models, Dataset, DnnGraph};
+    use crate::nop::topology::NopTopology;
+
+    fn defaults() -> (ArchConfig, NocConfig, SimConfig) {
+        (
+            ArchConfig::default(),
+            NocConfig::default(),
+            SimConfig::default(),
+        )
+    }
+
+    #[test]
+    fn transfer_cycles_hand_computed() {
+        let nop = NopConfig::default(); // width 32, hop 20 cycles, 0.5 GHz
+        // 4096 bits / 32 = 128 flits; 2 hops -> 128 + 40 = 168 NoP cycles;
+        // core at 1 GHz = 2x the NoP clock -> 336 core cycles.
+        assert_eq!(nop_transfer_cycles(4096, 2, &nop, 1.0e9), 336.0);
+        // Zero traffic or zero hops cost nothing.
+        assert_eq!(nop_transfer_cycles(0, 3, &nop, 1.0e9), 0.0);
+        assert_eq!(nop_transfer_cycles(4096, 0, &nop, 1.0e9), 0.0);
+        // Partial flits round up: 33 bits -> 2 flits.
+        let one_hop = nop_transfer_cycles(33, 1, &nop, 1.0e9);
+        assert_eq!(one_hop, (2.0 + 20.0) * 2.0);
+    }
+
+    #[test]
+    fn single_chiplet_matches_single_chip_evaluator() {
+        // A 1-chiplet package is exactly the single-chip architecture: the
+        // hierarchical path must reproduce the flat evaluator's numbers.
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            chiplets: 1,
+            ..NopConfig::default()
+        };
+        for g in [models::lenet5(), models::mlp()] {
+            let pkg = evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Analytical);
+            let flat = evaluate(
+                &g,
+                noc.topology,
+                &arch,
+                &noc,
+                &sim,
+                CommBackend::Analytical,
+            );
+            assert_eq!(pkg.cross_bits, 0, "{}", g.name);
+            assert_eq!(pkg.nop_latency_s, 0.0);
+            assert_eq!(pkg.nop_energy_j, 0.0);
+            let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-30);
+            assert!(
+                rel(pkg.latency_s(), flat.latency_s()) < 1e-9,
+                "{}: {} vs {}",
+                g.name,
+                pkg.latency_s(),
+                flat.latency_s()
+            );
+            assert!(rel(pkg.compute_energy_j, flat.compute_energy_j) < 1e-12);
+            assert!(rel(pkg.noc_area_mm2, flat.noc_area_mm2) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn two_chiplet_composition_hand_computed() {
+        // fc1 784->128 (1 tile, chiplet 0) feeds fc2 128->64 (1 tile,
+        // chiplet 1). The only traffic is the 128x8 = 1024-bit package
+        // transfer: 32 NoP flits + 20 hop cycles = 52 NoP cycles = 104 core
+        // cycles (2x clock ratio). The gateway IS the destination tile, so
+        // local NoC cost is zero.
+        let mut g = DnnGraph::new("two-fc-2chiplet", Dataset::Mnist);
+        let f1 = g.fc("fc1", 0, 128);
+        g.fc("fc2", f1, 64);
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 2,
+            ..NopConfig::default()
+        };
+        let pkg = evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Analytical);
+        assert_eq!(pkg.tiles_per_chiplet, vec![1, 1]);
+        assert_eq!(pkg.cross_bits, 128 * 8);
+
+        let mapping = Mapping::build(&g, &arch);
+        let chip = ChipCost::evaluate(&g, &mapping, &arch);
+        let c1 = chip.per_layer[0].cycles as f64;
+        let c2 = chip.per_layer[1].cycles as f64;
+        let nop_cycles = nop_transfer_cycles(128 * 8, 1, &nop, arch.freq_hz);
+        assert_eq!(nop_cycles, (32.0 + 20.0) * 2.0);
+        let expected_frame = c1 + c2.max(nop_cycles);
+        let expected_latency_s = expected_frame / arch.freq_hz;
+        assert!(
+            (pkg.latency_s() - expected_latency_s).abs() < 1e-15,
+            "latency {} vs expected {}",
+            pkg.latency_s(),
+            expected_latency_s
+        );
+        assert_eq!(pkg.noc_latency_s, 0.0, "gateway==dst means no local leg");
+        // NoP energy: 1024 bits x 1 hop x 1.5 pJ/bit.
+        let expected_nop_j = 1024.0 * 1.5e-12;
+        assert!((pkg.nop_energy_j - expected_nop_j).abs() < 1e-20);
+    }
+
+    #[test]
+    fn vgg_package_reports_all_nop_topologies() {
+        let (arch, noc, sim) = defaults();
+        for topo in NopTopology::all() {
+            let nop = NopConfig {
+                topology: topo,
+                chiplets: 4,
+                ..NopConfig::default()
+            };
+            let e = evaluate_package(
+                &models::vgg(19),
+                &arch,
+                &noc,
+                &nop,
+                &sim,
+                CommBackend::Analytical,
+            );
+            assert_eq!(e.populated, 4);
+            assert!(e.cross_bits > 0);
+            assert!(e.latency_s() > 0.0 && e.latency_s().is_finite());
+            assert!(e.energy_j() > 0.0 && e.edap() > 0.0);
+            assert!(e.nop_area_mm2 > 0.0);
+            assert!(e.comm_fraction() >= 0.0 && e.comm_fraction() < 1.0);
+        }
+    }
+
+    #[test]
+    fn more_chiplets_add_package_cost() {
+        // Same DNN, same NoC: an 8-chiplet package must carry at least as
+        // much NoP energy as a 2-chiplet one (more cut edges), and a
+        // 1-chiplet package carries none.
+        let (arch, noc, sim) = defaults();
+        let g = models::resnet(50);
+        let e = |k: usize| {
+            let nop = NopConfig {
+                chiplets: k,
+                ..NopConfig::default()
+            };
+            evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Analytical)
+        };
+        let e1 = e(1);
+        let e2 = e(2);
+        let e8 = e(8);
+        assert_eq!(e1.nop_energy_j, 0.0);
+        assert!(e2.nop_energy_j > 0.0);
+        assert!(e8.cross_bits >= e2.cross_bits);
+        assert!(e8.nop_area_mm2 > e2.nop_area_mm2);
+    }
+
+    #[test]
+    fn cycle_accurate_backend_agrees_roughly() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            chiplets: 2,
+            ..NopConfig::default()
+        };
+        let g = models::lenet5();
+        let ana = evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Analytical);
+        let cyc = evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Simulate);
+        // Same structure and compute; comm within a loose band.
+        assert_eq!(ana.cross_bits, cyc.cross_bits);
+        assert_eq!(ana.compute_latency_s, cyc.compute_latency_s);
+        let ratio = ana.latency_s() / cyc.latency_s();
+        assert!((0.3..3.0).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Network-on-Package (NoP): the second interconnect hierarchy level.
+//!
+//! The paper studies the *on-chip* interconnect of a single IMC chip. Its
+//! own scaling argument — connection density drives communication cost —
+//! bites hardest when a DNN no longer fits on one chip: 2.5D packages of
+//! IMC chiplets (SIMBA-class) move the bottleneck to the package-level
+//! links. This subsystem models exactly that:
+//!
+//! * [`topology`] — chiplet-level link graphs (dedicated P2P links, ring,
+//!   2-D mesh on the interposer) with deterministic routing, mirroring
+//!   [`crate::noc::topology`] one level up.
+//! * [`evaluator`] — hierarchical evaluation: every chiplet runs the
+//!   *existing* per-chip NoC machinery (analytical model or cycle-accurate
+//!   simulator, unchanged) over its local tiles, and cross-chiplet traffic
+//!   — derived from [`crate::mapping::ChipletPartition`] — rides the NoP
+//!   with SerDes-class latency/energy ([`crate::config::NopConfig`]).
+//!
+//! The joint (chiplet count, NoP topology, per-chiplet NoC topology)
+//! advisor lives in [`crate::arch::optimizer`].
+
+pub mod evaluator;
+pub mod topology;
+
+pub use evaluator::{evaluate_package, nop_transfer_cycles, NopEvaluation};
+pub use topology::{NopNetwork, NopTopology};

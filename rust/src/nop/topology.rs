@@ -1,0 +1,294 @@
+//! Package-level (chiplet-to-chiplet) interconnect topologies with
+//! deterministic routing — the NoP mirror of [`crate::noc::topology`].
+//!
+//! A [`NopNetwork`] connects `k` chiplets sitting on a 2.5D interposer.
+//! Unlike on-chip wires, package links are SerDes lanes: few, narrow,
+//! higher-latency and costlier per bit ([`crate::config::NopConfig`]), so
+//! the interesting topologies are sparse ones.
+
+/// Topology of the package-level (chiplet) interconnect.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NopTopology {
+    /// A dedicated link between every chiplet pair (full point-to-point
+    /// crossbar of package traces). One hop everywhere, but the lane count
+    /// grows as k·(k−1) — viable only for small packages.
+    P2p,
+    /// Bidirectional ring around the package perimeter; shortest-direction
+    /// routing. Two lanes per chiplet regardless of k.
+    Ring,
+    /// 2-D mesh of chiplets on the interposer, X-Y routing — the NoP used
+    /// by SIMBA-class 2.5D packages. Grid sites without a chiplet carry a
+    /// passive relay (redistribution-layer switch).
+    Mesh,
+}
+
+impl NopTopology {
+    pub fn name(self) -> &'static str {
+        match self {
+            NopTopology::P2p => "P2P",
+            NopTopology::Ring => "ring",
+            NopTopology::Mesh => "mesh",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().replace("nop-", "").as_str() {
+            "p2p" => Some(NopTopology::P2p),
+            "ring" => Some(NopTopology::Ring),
+            "mesh" => Some(NopTopology::Mesh),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [NopTopology; 3] {
+        [NopTopology::P2p, NopTopology::Ring, NopTopology::Mesh]
+    }
+
+    /// The valid `parse` spellings, for CLI error messages.
+    pub fn valid_names() -> &'static str {
+        "P2P, ring, mesh"
+    }
+}
+
+/// A built package network over `k` chiplets (chiplet ids are router ids;
+/// mesh grids may contain passive relay sites beyond `k - 1`).
+#[derive(Clone, Debug)]
+pub struct NopNetwork {
+    pub topology: NopTopology,
+    /// Chiplets in the package.
+    pub chiplets: usize,
+    /// Routing nodes (== chiplets, except mesh grids with relay sites).
+    pub nodes: usize,
+    /// Mesh dimensions (cols, rows); (0, 0) otherwise.
+    pub dims: (usize, usize),
+}
+
+impl NopNetwork {
+    pub fn build(topology: NopTopology, k: usize) -> Self {
+        assert!(k > 0, "package needs at least one chiplet");
+        let (nodes, dims) = match topology {
+            NopTopology::P2p | NopTopology::Ring => (k, (0, 0)),
+            NopTopology::Mesh => {
+                let cols = (k as f64).sqrt().ceil() as usize;
+                let rows = k.div_ceil(cols);
+                (cols * rows, (cols, rows))
+            }
+        };
+        Self {
+            topology,
+            chiplets: k,
+            nodes,
+            dims,
+        }
+    }
+
+    /// Deterministic next node from `cur` toward chiplet `dst`.
+    /// `cur == dst` is a caller error (no self-route).
+    pub fn route_next(&self, cur: usize, dst: usize) -> usize {
+        debug_assert_ne!(cur, dst);
+        match self.topology {
+            NopTopology::P2p => dst,
+            NopTopology::Ring => {
+                let k = self.chiplets;
+                let cw = (dst + k - cur) % k;
+                let ccw = (cur + k - dst) % k;
+                if cw <= ccw {
+                    (cur + 1) % k
+                } else {
+                    (cur + k - 1) % k
+                }
+            }
+            NopTopology::Mesh => {
+                let cols = self.dims.0;
+                let (x, y) = (cur % cols, cur / cols);
+                let (dx, dy) = (dst % cols, dst / cols);
+                if x < dx {
+                    cur + 1
+                } else if x > dx {
+                    cur - 1
+                } else if y < dy {
+                    cur + cols
+                } else {
+                    cur - cols
+                }
+            }
+        }
+    }
+
+    /// Full deterministic route as a node list, inclusive of both ends.
+    pub fn route_path(&self, src: usize, dst: usize) -> Vec<usize> {
+        assert!(src < self.chiplets && dst < self.chiplets);
+        let mut path = vec![src];
+        while *path.last().unwrap() != dst {
+            let next = self.route_next(*path.last().unwrap(), dst);
+            path.push(next);
+            assert!(
+                path.len() <= self.nodes + 1,
+                "NoP routing loop {src}->{dst} on {:?}",
+                self.topology
+            );
+        }
+        path
+    }
+
+    /// Package hops (links traversed) between two chiplets.
+    pub fn hops(&self, src: usize, dst: usize) -> usize {
+        if src == dst {
+            return 0;
+        }
+        match self.topology {
+            NopTopology::P2p => 1,
+            NopTopology::Ring => {
+                let k = self.chiplets;
+                let cw = (dst + k - src) % k;
+                cw.min(k - cw)
+            }
+            NopTopology::Mesh => {
+                let cols = self.dims.0;
+                let (x, y) = (src % cols, src / cols);
+                let (dx, dy) = (dst % cols, dst / cols);
+                x.abs_diff(dx) + y.abs_diff(dy)
+            }
+        }
+    }
+
+    /// Worst-case hop count — the bound the property tests assert.
+    pub fn hop_bound(&self) -> usize {
+        match self.topology {
+            NopTopology::P2p => 1,
+            NopTopology::Ring => self.chiplets / 2,
+            NopTopology::Mesh => {
+                let (cols, rows) = self.dims;
+                cols.saturating_sub(1) + rows.saturating_sub(1)
+            }
+        }
+        .max(1)
+    }
+
+    /// Unidirectional package links (SerDes lane bundles).
+    pub fn link_count(&self) -> usize {
+        let k = self.chiplets;
+        match self.topology {
+            NopTopology::P2p => k * (k - 1),
+            NopTopology::Ring => {
+                if k > 2 {
+                    2 * k
+                } else {
+                    // 1 or 2 chiplets: a single (pair of) link(s), no cycle.
+                    2 * (k - 1)
+                }
+            }
+            NopTopology::Mesh => {
+                let (cols, rows) = self.dims;
+                // Horizontal + vertical grid links, both directions.
+                2 * (rows * cols.saturating_sub(1) + cols * rows.saturating_sub(1))
+            }
+        }
+    }
+
+    /// SerDes port bundles on chiplet `c` (for PHY area accounting).
+    pub fn ports(&self, c: usize) -> usize {
+        let k = self.chiplets;
+        match self.topology {
+            NopTopology::P2p => k - 1,
+            NopTopology::Ring => 2.min(k - 1),
+            NopTopology::Mesh => {
+                let (cols, rows) = self.dims;
+                let (x, y) = (c % cols, c / cols);
+                let mut p = 0;
+                if x > 0 {
+                    p += 1;
+                }
+                if x + 1 < cols {
+                    p += 1;
+                }
+                if y > 0 {
+                    p += 1;
+                }
+                if y + 1 < rows {
+                    p += 1;
+                }
+                p
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for t in NopTopology::all() {
+            assert_eq!(NopTopology::parse(t.name()), Some(t), "{t:?}");
+        }
+        assert_eq!(NopTopology::parse("NoP-mesh"), Some(NopTopology::Mesh));
+        assert_eq!(NopTopology::parse("hypertorus"), None);
+    }
+
+    #[test]
+    fn p2p_is_single_hop() {
+        let net = NopNetwork::build(NopTopology::P2p, 8);
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    assert_eq!(net.hops(s, d), 1);
+                    assert_eq!(net.route_path(s, d), vec![s, d]);
+                }
+            }
+        }
+        assert_eq!(net.link_count(), 8 * 7);
+    }
+
+    #[test]
+    fn ring_takes_shortest_direction() {
+        let net = NopNetwork::build(NopTopology::Ring, 6);
+        assert_eq!(net.hops(0, 1), 1);
+        assert_eq!(net.hops(0, 5), 1); // wrap
+        assert_eq!(net.hops(0, 3), 3); // diameter
+        assert_eq!(net.route_path(0, 5), vec![0, 5]);
+        assert_eq!(net.route_path(1, 4), vec![1, 2, 3, 4]);
+        assert!(net.hops(2, 5) <= net.hop_bound());
+    }
+
+    #[test]
+    fn mesh_xy_routes() {
+        let net = NopNetwork::build(NopTopology::Mesh, 4); // 2x2
+        assert_eq!(net.dims, (2, 2));
+        assert_eq!(net.hops(0, 3), 2);
+        assert_eq!(net.route_path(0, 3), vec![0, 1, 3]); // X then Y
+        assert_eq!(net.link_count(), 2 * (2 + 2));
+    }
+
+    #[test]
+    fn mesh_partial_grid_routes_through_relays() {
+        // 7 chiplets on a 3x3 grid: sites 7, 8 are passive relays.
+        let net = NopNetwork::build(NopTopology::Mesh, 7);
+        assert_eq!(net.dims, (3, 3));
+        for s in 0..7 {
+            for d in 0..7 {
+                let path = net.route_path(s, d);
+                assert_eq!(*path.first().unwrap(), s);
+                assert_eq!(*path.last().unwrap(), d);
+                assert_eq!(path.len() - 1, net.hops(s, d));
+                assert!(net.hops(s, d) <= net.hop_bound());
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_packages_build() {
+        for t in NopTopology::all() {
+            for k in [1usize, 2, 3] {
+                let net = NopNetwork::build(t, k);
+                assert!(net.hop_bound() >= 1);
+                if k == 1 {
+                    assert_eq!(net.hops(0, 0), 0);
+                } else {
+                    assert!(net.hops(0, k - 1) >= 1);
+                }
+            }
+        }
+    }
+}

@@ -4,91 +4,21 @@
 //! Python runs only at build time (`make artifacts`); this module makes the
 //! rust binary self-contained afterwards. The interchange format is **HLO
 //! text** — jax ≥ 0.5 serialized protos carry 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects, while the text parser reassigns ids (see
-//! /opt/xla-example/README.md).
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
+//!
+//! The PJRT binding is optional: the offline build image has no native XLA
+//! plugin, so the crate compiles by default with a stub [`Runtime`] whose
+//! constructor returns a descriptive error (serving paths degrade cleanly,
+//! tests skip). Build with `--features pjrt` once a real `xla` binding is
+//! installed (see DESIGN.md §Runtime).
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
-/// A PJRT CPU client plus a cache of compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<PathBuf, LoadedModel>,
-}
-
-/// One compiled model artifact.
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Artifact path (for reporting).
-    pub path: PathBuf,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            cache: HashMap::new(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
-    }
-
-    /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&LoadedModel> {
-        let path = path.as_ref().to_path_buf();
-        if !self.cache.contains_key(&path) {
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            self.cache.insert(
-                path.clone(),
-                LoadedModel {
-                    exe,
-                    path: path.clone(),
-                },
-            );
-        }
-        Ok(&self.cache[&path])
-    }
-}
-
-impl LoadedModel {
-    /// Execute with f32 tensor inputs `(data, dims)`. The jax lowering uses
-    /// `return_tuple=True`, so the single output literal is a tuple; all
-    /// tuple elements are returned as flat f32 vectors.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let expected: i64 = dims.iter().product();
-                if expected as usize != data.len() {
-                    bail!("input length {} != shape {:?}", data.len(), dims);
-                }
-                Ok(xla::Literal::vec1(data).reshape(dims)?)
-            })
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let out = result[0][0].to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        parts
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(Into::into))
-            .collect()
-    }
+/// True when this binary was built with the `pjrt` feature. Tests and
+/// benches use this (together with [`artifact_available`]) to skip PJRT
+/// paths on stub builds instead of failing.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 /// Conventional artifact locations (`make artifacts` output).
@@ -103,6 +33,147 @@ pub fn artifact_available(name: &str) -> bool {
     artifact_path(name).exists()
 }
 
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! Real PJRT backend (compiled with `--features pjrt`).
+
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Context, Result};
+
+    /// A PJRT CPU client plus a cache of compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: HashMap<PathBuf, LoadedModel>,
+    }
+
+    /// One compiled model artifact.
+    pub struct LoadedModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact path (for reporting).
+        pub path: PathBuf,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self {
+                client,
+                cache: HashMap::new(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn device_count(&self) -> usize {
+            self.client.device_count()
+        }
+
+        /// Load + compile an HLO-text artifact (cached by path).
+        pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&LoadedModel> {
+            let path = path.as_ref().to_path_buf();
+            if !self.cache.contains_key(&path) {
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+                self.cache.insert(
+                    path.clone(),
+                    LoadedModel {
+                        exe,
+                        path: path.clone(),
+                    },
+                );
+            }
+            Ok(&self.cache[&path])
+        }
+    }
+
+    impl LoadedModel {
+        /// Execute with f32 tensor inputs `(data, dims)`. The jax lowering
+        /// uses `return_tuple=True`, so the single output literal is a
+        /// tuple; all tuple elements are returned as flat f32 vectors.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let expected: i64 = dims.iter().product();
+                    if expected as usize != data.len() {
+                        bail!("input length {} != shape {:?}", data.len(), dims);
+                    }
+                    Ok(xla::Literal::vec1(data).reshape(dims)?)
+                })
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let out = result[0][0].to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(Into::into))
+                .collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend (default offline build): identical API, constructor
+    //! fails with an actionable message.
+
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: this binary was built without the \
+         `pjrt` feature (offline stub). Rebuild with `cargo build --features pjrt` \
+         after installing an xla-rs binding.";
+
+    /// Stub runtime: carries no client; [`Runtime::cpu`] always errors.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    /// Stub loaded model (never constructed; kept so signatures match).
+    pub struct LoadedModel {
+        /// Artifact path (for reporting).
+        pub path: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            bail!(UNAVAILABLE);
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".into()
+        }
+
+        pub fn device_count(&self) -> usize {
+            0
+        }
+
+        pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&LoadedModel> {
+            let _ = path.as_ref();
+            bail!(UNAVAILABLE);
+        }
+    }
+
+    impl LoadedModel {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            bail!(UNAVAILABLE);
+        }
+    }
+}
+
+pub use backend::{LoadedModel, Runtime};
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,7 +184,20 @@ mod tests {
         assert!(p.to_string_lossy().ends_with("artifacts/mlp.hlo.txt"));
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
+    fn stub_runtime_reports_unavailable() {
+        assert!(!pjrt_enabled());
+        let err = Runtime::cpu().err().expect("stub must error");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    /// Requires a real xla binding + native PJRT CPU plugin; the vendored
+    /// stub crate intentionally fails here, so the test is ignored by
+    /// default even under `--features pjrt`.
+    #[cfg(feature = "pjrt")]
+    #[test]
+    #[ignore = "requires a native PJRT plugin (vendor/xla is an API stub)"]
     fn client_boots() {
         let rt = Runtime::cpu().expect("PJRT CPU client");
         assert!(rt.device_count() >= 1);

@@ -43,6 +43,15 @@ fn eval_and_advise() {
 }
 
 #[test]
+fn chiplet_subcommand_and_experiment() {
+    // The acceptance-criteria surface: one model across all NoP topologies,
+    // and the registered scale-out experiment through the figure runner.
+    run(&argv(&["chiplet", "--model", "lenet5", "--chiplets", "4"])).unwrap();
+    run(&argv(&["figure", "chiplet", "--fast"])).unwrap();
+    assert!(run(&argv(&["chiplet", "--model", "lenet5", "--nop", "torus"])).is_err());
+}
+
+#[test]
 fn unknown_inputs_error_cleanly() {
     assert!(run(&argv(&["figure", "99"])).is_err());
     assert!(run(&argv(&["table"])).is_err());

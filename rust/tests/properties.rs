@@ -3,12 +3,13 @@
 //! latency monotonicity, mapping soundness, queueing-model sanity, EDAP
 //! positivity, and config round-trips.
 
-use imcnoc::config::{ArchConfig, Config, NocConfig};
+use imcnoc::config::{ArchConfig, Config, NocConfig, NopConfig};
 use imcnoc::dnn::model_zoo;
-use imcnoc::mapping::{InjectionMatrix, Mapping};
+use imcnoc::mapping::{ChipletPartition, InjectionMatrix, Mapping};
 use imcnoc::noc::sim::{FlowSpec, Mode, NocSim};
 use imcnoc::noc::topology::{Network, Topology};
 use imcnoc::noc::AnalyticalModel;
+use imcnoc::nop::topology::{NopNetwork, NopTopology};
 use imcnoc::util::proptest::check;
 
 fn random_flows(g: &mut imcnoc::util::proptest::Gen, terminals: usize, max_flits: u64) -> Vec<FlowSpec> {
@@ -86,6 +87,117 @@ fn prop_route_paths_minimal_and_symmetric_hops() {
         // Paths never exceed the router count.
         if hops >= net.routers.max(1) * 2 {
             return Err(format!("path too long: {hops}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_noc_routing_reaches_without_cycles_within_bound() {
+    // For every NoC topology and any size, deterministic routing from any
+    // source reaches the destination, never revisits a router (no cycles),
+    // and stays within a topology-size hop bound.
+    check("noc-routing-reachability", 120, |g| {
+        let topo = *g.pick(&Topology::all());
+        let n = g.usize_in(1, 70);
+        let net = Network::build(topo, n);
+        let s = g.usize_in(0, n - 1);
+        let d = g.usize_in(0, n - 1);
+        let path = net.route_path(s, d);
+        if *path.first().unwrap() != net.attach[s] || *path.last().unwrap() != net.attach[d] {
+            return Err(format!("{topo:?}: path endpoints wrong for {s}->{d}"));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &r in &path {
+            if !seen.insert(r) {
+                return Err(format!("{topo:?}: router {r} revisited on {s}->{d}"));
+            }
+        }
+        if path.len() - 1 > net.routers {
+            return Err(format!(
+                "{topo:?}: {} hops exceeds router count {}",
+                path.len() - 1,
+                net.routers
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nop_routing_reaches_without_cycles_within_bound() {
+    // Same contract one hierarchy level up, for every NoP topology.
+    check("nop-routing-reachability", 120, |g| {
+        let topo = *g.pick(&NopTopology::all());
+        let k = g.usize_in(1, 24);
+        let net = NopNetwork::build(topo, k);
+        let s = g.usize_in(0, k - 1);
+        let d = g.usize_in(0, k - 1);
+        let path = net.route_path(s, d);
+        if *path.first().unwrap() != s || *path.last().unwrap() != d {
+            return Err(format!("{topo:?}: path endpoints wrong for {s}->{d}"));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &c in &path {
+            if !seen.insert(c) {
+                return Err(format!("{topo:?}: chiplet {c} revisited on {s}->{d}"));
+            }
+        }
+        let hops = path.len() - 1;
+        if hops != net.hops(s, d) {
+            return Err(format!("{topo:?}: path length {hops} != hops()"));
+        }
+        if hops > net.hop_bound() {
+            return Err(format!(
+                "{topo:?}: {hops} hops exceeds bound {}",
+                net.hop_bound()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topology_names_roundtrip_through_parse() {
+    // Satellite contract: `parse(t.name())` is identity for both the NoC
+    // and the NoP topology enums.
+    for t in Topology::all() {
+        assert_eq!(Topology::parse(t.name()), Some(t), "NoC {t:?}");
+    }
+    for t in NopTopology::all() {
+        assert_eq!(NopTopology::parse(t.name()), Some(t), "NoP {t:?}");
+    }
+}
+
+#[test]
+fn prop_chiplet_partition_invariants() {
+    let zoo = model_zoo();
+    check("chiplet-partition-invariants", 30, |g| {
+        let graph = g.pick(&zoo);
+        let arch = ArchConfig::default();
+        let m = Mapping::build(graph, &arch);
+        let k = g.usize_in(1, 12);
+        let p = ChipletPartition::build(graph, &m, &arch, k);
+        p.validate(&m).map_err(|e| format!("{} k={k}: {e}", graph.name))?;
+        // Cross-traffic matrix agrees with the cut accounting and has an
+        // empty diagonal.
+        let x = p.cross_traffic();
+        let mut total = 0u64;
+        for (i, row) in x.iter().enumerate() {
+            if row[i] != 0 {
+                return Err(format!("{}: self-traffic on chiplet {i}", graph.name));
+            }
+            total += row.iter().sum::<u64>();
+        }
+        if total != p.cut_bits() {
+            return Err(format!(
+                "{}: cross matrix {total} != cut bits {}",
+                graph.name,
+                p.cut_bits()
+            ));
+        }
+        if k == 1 && total != 0 {
+            return Err("single chiplet must have no cross traffic".into());
         }
         Ok(())
     });
@@ -224,6 +336,14 @@ fn prop_config_ini_roundtrip() {
                 buffer_depth: g.usize_in(1, 32),
                 pipeline_stages: g.usize_in(1, 8),
                 ..NocConfig::default()
+            },
+            nop: NopConfig {
+                topology: *g.pick(&NopTopology::all()),
+                chiplets: g.usize_in(1, 64),
+                link_width: *g.pick(&[8usize, 16, 32, 64]),
+                hop_latency_cycles: g.usize_in(1, 64) as u64,
+                energy_pj_per_bit: g.f64_in(0.1, 8.0).round(),
+                ..NopConfig::default()
             },
             sim: Default::default(),
         };

@@ -4,12 +4,17 @@
 //!
 //! Tests skip (pass vacuously, with a note) when artifacts are missing so
 //! `cargo test` works before the first `make artifacts`; the Makefile
-//! always builds artifacts first.
+//! always builds artifacts first. They also skip on default (stub) builds
+//! without the `pjrt` feature — see `imcnoc::runtime::pjrt_enabled`.
 
 use imcnoc::coordinator::server::{argmax, synthetic_requests, InferenceServer};
-use imcnoc::runtime::{artifact_available, artifact_path, Runtime};
+use imcnoc::runtime::{artifact_available, artifact_path, pjrt_enabled, Runtime};
 
 fn need_artifacts(names: &[&str]) -> bool {
+    if !pjrt_enabled() {
+        eprintln!("skipping: built without the `pjrt` feature (stub runtime)");
+        return false;
+    }
     for n in names {
         if !artifact_available(n) {
             eprintln!("skipping: artifact '{n}' missing (run `make artifacts`)");
