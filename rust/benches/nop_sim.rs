@@ -1,0 +1,75 @@
+//! Flit-level NoP simulator benchmarks: steady-state uniform traffic at
+//! low and near-saturation load, a saturation-point search, and the full
+//! hierarchical co-simulation (`mode = sim`) against the analytical
+//! package leg it replaces.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, observe};
+use imcnoc::arch::CommBackend;
+use imcnoc::config::{ArchConfig, NocConfig, NopConfig, NopMode, SimConfig};
+use imcnoc::dnn::models;
+use imcnoc::noc::sim::Mode;
+use imcnoc::nop::evaluator::evaluate_package;
+use imcnoc::nop::sim::{saturation_rate, uniform_nop_flows, NopSim};
+use imcnoc::nop::topology::NopTopology;
+
+fn main() {
+    let nop = NopConfig::default();
+
+    // Steady-state simulation cost across package sizes and load points.
+    for topo in NopTopology::all() {
+        for k in [8usize, 16, 25] {
+            for rate in [0.05f64, 0.5] {
+                let flows = uniform_nop_flows(k, rate);
+                bench(
+                    &format!("nop_steady_{}_k{k}_r{rate}", topo.name()),
+                    1,
+                    5,
+                    || {
+                        let stats = NopSim::new(
+                            topo,
+                            k,
+                            &nop,
+                            &flows,
+                            Mode::Steady {
+                                warmup: 500,
+                                measure: 5_000,
+                            },
+                            42,
+                        )
+                        .run();
+                        observe(&stats.avg_latency);
+                    },
+                );
+            }
+        }
+    }
+
+    // The saturation sweep the congestion experiment runs per point.
+    bench("nop_saturation_search_mesh_k16", 0, 3, || {
+        let sat = saturation_rate(NopTopology::Mesh, 16, &nop, 7);
+        observe(&sat);
+    });
+
+    // Hierarchical co-simulation vs the analytical package leg.
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let g = models::resnet(50);
+    for (label, mode) in [
+        ("analytical", NopMode::Analytical),
+        ("sim", NopMode::Sim),
+    ] {
+        let cfg = NopConfig {
+            chiplets: 8,
+            mode,
+            ..NopConfig::default()
+        };
+        bench(&format!("package_resnet50_k8_nop_{label}"), 1, 3, || {
+            let e = evaluate_package(&g, &arch, &noc, &cfg, &sim, CommBackend::Analytical);
+            observe(&e.edap());
+        });
+    }
+}

@@ -15,7 +15,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::arch::{evaluate, recommend_scaleout, recommend_topology, CommBackend};
-use crate::config::{ArchConfig, Config, MemTech, NocConfig, NopConfig, SimConfig};
+use crate::config::{ArchConfig, Config, MemTech, NocConfig, NopConfig, NopMode, SimConfig};
 use crate::coordinator::server::{synthetic_requests, InferenceServer};
 use crate::dnn::by_name;
 use crate::experiments::{find, registry, Options};
@@ -180,14 +180,14 @@ pub fn run(argv: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow!("unknown experiment '{full_id}' (try `repro list`)"))?;
             let opts = options_from(&args)?;
             eprintln!("== {} — {} ==", exp.id, exp.title);
-            let tables = (exp.run)(&opts);
+            let tables = (exp.run)(&opts).map_err(|e| anyhow!(e))?;
             print_tables(&tables, args.has("csv"));
         }
         "all" => {
             let opts = options_from(&args)?;
             for exp in registry() {
                 eprintln!("== {} — {} ==", exp.id, exp.title);
-                let tables = (exp.run)(&opts);
+                let tables = (exp.run)(&opts).map_err(|e| anyhow!(e))?;
                 print_tables(&tables, args.has("csv"));
             }
         }
@@ -281,7 +281,15 @@ pub fn run(argv: &[String]) -> Result<()> {
         }
         "chiplet" => {
             let base_noc = NocConfig::default();
-            let base_nop = NopConfig::default();
+            let sim_mode = args.has("sim");
+            let base_nop = NopConfig {
+                mode: if sim_mode {
+                    NopMode::Sim
+                } else {
+                    NopMode::Analytical
+                },
+                ..NopConfig::default()
+            };
             let arch = ArchConfig {
                 tech: match args.get("tech") {
                     None => MemTech::Reram,
@@ -296,7 +304,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             };
             if args.has("advise") && args.get("model").is_none() {
                 // Joint recommendation for the whole zoo.
-                for conflicting in ["chiplets", "noc", "nop", "exact"] {
+                for conflicting in ["chiplets", "noc", "nop", "exact", "sim"] {
                     if args.has(conflicting) {
                         bail!(
                             "--advise searches the full (chiplets x NoP x NoC) space; \
@@ -334,7 +342,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                 // Joint advise view scoped to one model: the search covers
                 // the full (chiplets x NoP x NoC) space, so point-fixing
                 // flags contradict it.
-                for conflicting in ["chiplets", "noc", "nop", "exact"] {
+                for conflicting in ["chiplets", "noc", "nop", "exact", "sim"] {
                     if args.has(conflicting) {
                         bail!(
                             "--advise searches the full (chiplets x NoP x NoC) space; \
@@ -378,23 +386,30 @@ pub fn run(argv: &[String]) -> Result<()> {
                 None => NopTopology::all().to_vec(),
                 Some(t) => vec![parse_nop_topology(t)?],
             };
+            let mut cols = vec![
+                "NoP",
+                "latency_ms",
+                "energy_mJ",
+                "area_mm2",
+                "EDAP_J.ms.mm2",
+                "FPS",
+                "cross_kbits",
+            ];
+            if sim_mode {
+                // Flit-level co-simulation also measures where each package
+                // topology saturates under uniform injection.
+                cols.push("sat_rate_flit/chiplet/cyc");
+            }
             let mut t = Table::new(
                 format!(
-                    "{} on {} chiplets ({} IMC, per-chiplet {})",
+                    "{} on {} chiplets ({} IMC, per-chiplet {}{})",
                     g.name,
                     chiplets,
                     arch.tech.name(),
-                    noc_topo.name()
+                    noc_topo.name(),
+                    if sim_mode { ", NoP flit-level sim" } else { "" }
                 ),
-                &[
-                    "NoP",
-                    "latency_ms",
-                    "energy_mJ",
-                    "area_mm2",
-                    "EDAP_J.ms.mm2",
-                    "FPS",
-                    "cross_kbits",
-                ],
+                &cols,
             );
             for nop_topo in nop_choices {
                 let nop = NopConfig {
@@ -403,7 +418,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                     ..base_nop.clone()
                 };
                 let e = evaluate_package(&g, &arch, &noc, &nop, &SimConfig::default(), backend);
-                t.add_row(vec![
+                let mut row = vec![
                     nop_topo.name().into(),
                     fmt_sig(e.latency_s() * 1e3, 4),
                     fmt_sig(e.energy_j() * 1e3, 4),
@@ -411,10 +426,25 @@ pub fn run(argv: &[String]) -> Result<()> {
                     fmt_sig(e.edap(), 4),
                     fmt_sig(e.fps(), 4),
                     fmt_sig(e.cross_bits as f64 / 1e3, 4),
-                ]);
+                ];
+                if sim_mode {
+                    let sat = crate::nop::sim::saturation_rate(
+                        nop_topo,
+                        chiplets,
+                        &nop,
+                        SimConfig::default().seed,
+                    );
+                    row.push(match sat {
+                        Some(rate) => fmt_sig(rate, 3),
+                        None => ">1.0".into(),
+                    });
+                }
+                t.add_row(row);
             }
             print_tables(&[t], args.has("csv"));
-            let rec = recommend_scaleout(&g, &arch, &base_noc, &base_nop);
+            // The joint recommendation sweep stays analytical: it covers
+            // ~20 (chiplets x NoP x NoC) points and only ranks designs.
+            let rec = recommend_scaleout(&g, &arch, &base_noc, &NopConfig::default());
             print_scaleout_recommendation(&rec, &g.name);
         }
         "serve" => {
@@ -474,7 +504,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                 })
                 .collect();
             let driver = crate::coordinator::Driver::new();
-            let results = driver.evaluate_many(&points);
+            let results = driver.evaluate_many(&points).map_err(|e| anyhow!(e))?;
             let mut t = Table::new(
                 format!("Sweep: zoo x {{tree, mesh}} on {} IMC", tech.name()),
                 &["dnn", "topology", "latency_ms", "FPS", "EDAP"],
@@ -513,7 +543,7 @@ USAGE:
   repro eval <dnn> [--tech sram|reram] [--topology ...]     evaluate one design point
   repro advise <dnn>                                        optimal-topology advisor
   repro chiplet --model <dnn> [--chiplets N] [--noc t]      multi-chiplet NoC+NoP evaluation
-               [--nop p2p|ring|mesh] [--exact]              (all NoP topologies by default)
+               [--nop p2p|ring|mesh] [--exact] [--sim]      (all NoP topologies by default)
   repro chiplet --advise [--model <dnn>]                    joint (chiplets, NoP, NoC)
                                                             recommendation: whole zoo, or the
                                                             full design space of one model
@@ -524,6 +554,8 @@ USAGE:
 
 FLAGS:
   --exact   use the cycle-accurate NoC simulator (default: analytical model)
+  --sim     chiplet: run the package leg through the flit-level NoP
+            co-simulation and report per-topology saturation rates
   --fast    restrict sweeps to the small-DNN subset
   --csv     emit CSV instead of ASCII tables"
 }
@@ -599,6 +631,25 @@ mod tests {
             "--advise".into(),
         ])
         .unwrap();
+        // Flit-level NoP co-simulation with saturation reporting.
+        run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "lenet5".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--sim".into(),
+        ])
+        .unwrap();
+        // --sim contradicts the (analytical) design-space search.
+        assert!(run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--advise".into(),
+            "--sim".into(),
+        ])
+        .is_err());
         assert!(run(&["chiplet".into()]).is_err()); // needs --model or --advise
         // Out-of-range chiplet counts error cleanly instead of panicking.
         assert!(run(&[

@@ -178,6 +178,39 @@ impl NocConfig {
     }
 }
 
+/// Package-leg evaluation engine for [`crate::nop::evaluator`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NopMode {
+    /// Bandwidth + fixed-latency estimate (`nop_transfer_cycles`): fast,
+    /// load-independent — blind to SerDes congestion.
+    Analytical,
+    /// Flit-level event-driven NoP simulation ([`crate::nop::sim::NopSim`])
+    /// with credit-based flow control: sees queueing and saturation.
+    Sim,
+}
+
+impl NopMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            NopMode::Analytical => "analytical",
+            NopMode::Sim => "sim",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "analytical" | "ana" => Some(NopMode::Analytical),
+            "sim" | "simulate" | "cycle-accurate" => Some(NopMode::Sim),
+            _ => None,
+        }
+    }
+
+    /// The valid `parse` spellings, for CLI error messages.
+    pub fn valid_names() -> &'static str {
+        "analytical, sim"
+    }
+}
+
 /// Network-on-Package parameters for multi-chiplet scale-out.
 ///
 /// Package links are SerDes lanes over the interposer: compared to on-chip
@@ -189,6 +222,8 @@ impl NocConfig {
 pub struct NopConfig {
     /// Package-level topology.
     pub topology: NopTopology,
+    /// Package-leg engine: analytical estimate or flit-level simulation.
+    pub mode: NopMode,
     /// IMC chiplets in the package.
     pub chiplets: usize,
     /// Bits per NoP flit (parallel lane-bundle width). Default: 32.
@@ -199,6 +234,12 @@ pub struct NopConfig {
     /// Fixed per-hop latency in NoP cycles (SerDes TX + package trace +
     /// RX + relay). Default: 20.
     pub hop_latency_cycles: u64,
+    /// Receive-buffer depth per directed package link (and per injection
+    /// lane) in NoP flits — the credit count of the simulated flow
+    /// control. Must cover the credit round-trip
+    /// (~`hop_latency_cycles` + 2) or links starve below their
+    /// serialization rate, as in real SerDes RX FIFOs. Default: 64.
+    pub buffer_flits: usize,
     /// Transfer energy per bit per hop, pJ. Default: 1.5 (vs ~0.1 pJ/bit
     /// for an on-chip link traversal).
     pub energy_pj_per_bit: f64,
@@ -210,10 +251,12 @@ impl Default for NopConfig {
     fn default() -> Self {
         Self {
             topology: NopTopology::Mesh,
+            mode: NopMode::Analytical,
             chiplets: 4,
             link_width: 32,
             freq_hz: 0.5e9,
             hop_latency_cycles: 20,
+            buffer_flits: 64,
             energy_pj_per_bit: 1.5,
             phy_area_mm2: 0.3,
         }
@@ -244,6 +287,11 @@ impl NopConfig {
         }
         if self.freq_hz <= 0.0 {
             return Err("nop freq_hz must be positive".into());
+        }
+        if !(2..=1024).contains(&self.buffer_flits) {
+            // The simulator's bubble flow control keeps one slot free per
+            // receive buffer, so a depth of 1 could never accept traffic.
+            return Err("nop buffer_flits must be in [2, 1024]".into());
         }
         if self.energy_pj_per_bit < 0.0 || self.phy_area_mm2 < 0.0 {
             return Err("nop energy/area must be non-negative".into());
@@ -335,6 +383,12 @@ impl Config {
                 ("nop", "topology") => {
                     cfg.nop.topology = NopTopology::parse(v).ok_or_else(|| parse_err(key))?
                 }
+                ("nop", "mode") => {
+                    cfg.nop.mode = NopMode::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("nop", "buffer_flits") => {
+                    cfg.nop.buffer_flits = v.parse().map_err(|_| parse_err(key))?
+                }
                 ("nop", "chiplets") => {
                     cfg.nop.chiplets = v.parse().map_err(|_| parse_err(key))?
                 }
@@ -383,8 +437,9 @@ impl Config {
              tech_nm = {}\nfreq_hz = {}\npes_per_ce = {}\nces_per_tile = {}\n\
              tech = {}\nfps = {}\n\n[noc]\ntopology = {}\nbus_width = {}\n\
              virtual_channels = {}\nbuffer_depth = {}\npipeline_stages = {}\n\
-             flits_per_packet = {}\n\n[nop]\ntopology = {}\nchiplets = {}\n\
-             link_width = {}\nfreq_hz = {}\nhop_latency_cycles = {}\n\
+             flits_per_packet = {}\n\n[nop]\ntopology = {}\nmode = {}\n\
+             chiplets = {}\nlink_width = {}\nfreq_hz = {}\n\
+             hop_latency_cycles = {}\nbuffer_flits = {}\n\
              energy_pj_per_bit = {}\nphy_area_mm2 = {}\n\n[sim]\nseed = {}\n\
              warmup_cycles = {}\nmeasure_cycles = {}\ndrain_cycles = {}\n",
             self.arch.pe_size,
@@ -404,10 +459,12 @@ impl Config {
             self.noc.pipeline_stages,
             self.noc.flits_per_packet,
             self.nop.topology.name(),
+            self.nop.mode.name(),
             self.nop.chiplets,
             self.nop.link_width,
             self.nop.freq_hz,
             self.nop.hop_latency_cycles,
+            self.nop.buffer_flits,
             self.nop.energy_pj_per_bit,
             self.nop.phy_area_mm2,
             self.sim.seed,
@@ -472,6 +529,19 @@ mod tests {
         assert!(Config::from_ini("[nop]\ntopology = star\n").is_err());
         assert!(Config::from_ini("[nop]\nchiplets = 0\n").is_err());
         assert!(Config::from_ini("[nop]\nfreq_hz = -1\n").is_err());
+    }
+
+    #[test]
+    fn nop_mode_and_buffer_parse() {
+        let cfg = Config::from_ini("[nop]\nmode = sim\nbuffer_flits = 16\n").unwrap();
+        assert_eq!(cfg.nop.mode, NopMode::Sim);
+        assert_eq!(cfg.nop.buffer_flits, 16);
+        assert_eq!(Config::default().nop.mode, NopMode::Analytical);
+        assert_eq!(NopMode::parse("Simulate"), Some(NopMode::Sim));
+        assert_eq!(NopMode::parse("guess"), None);
+        // Bubble flow control needs at least two buffer slots.
+        assert!(Config::from_ini("[nop]\nbuffer_flits = 1\n").is_err());
+        assert!(Config::from_ini("[nop]\nmode = psychic\n").is_err());
     }
 
     #[test]

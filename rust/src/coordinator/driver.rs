@@ -6,12 +6,54 @@
 //! and memoizes completed points for the lifetime of the process.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::arch::{evaluate, ArchEvaluation, CommBackend};
 use crate::config::{ArchConfig, MemTech, NocConfig, SimConfig};
 use crate::dnn::{by_name, DnnGraph};
 use crate::noc::topology::Topology;
+
+/// Order-preserving parallel map over OS threads: every item is handed to
+/// `f` on one of up to `threads` workers (default `available_parallelism`)
+/// and the results come back in input order. This is the fan-out primitive
+/// behind [`Driver::evaluate_many`] and the driver-parallelized experiment
+/// sweeps (e.g. `fig_nop_congestion`).
+pub fn par_map<T, R, F>(items: &[T], threads: Option<usize>, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+        .clamp(1, items.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                *results[i].lock().unwrap() = Some(f(&items[i]));
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("par_map worker skipped an item")
+        })
+        .collect()
+}
 
 /// Cache key for one evaluation point.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -81,53 +123,26 @@ impl Driver {
         result
     }
 
-    /// Evaluate a batch of points in parallel. Points are specified by DNN
-    /// name so they can cross thread boundaries cheaply; unknown names
-    /// panic (they indicate an experiment bug, not user input).
+    /// Evaluate a batch of points in parallel ([`par_map`] underneath).
+    /// Points are specified by DNN name so they can cross thread boundaries
+    /// cheaply; an unknown name fails the whole sweep with an error listing
+    /// the valid model names (no worker panics).
     pub fn evaluate_many(
         &self,
         points: &[(String, ArchConfig, NocConfig, CommBackend)],
-    ) -> Vec<ArchEvaluation> {
-        let threads = self
-            .threads
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(4)
-            })
-            .max(1);
+    ) -> Result<Vec<ArchEvaluation>, String> {
         let sim = SimConfig::default();
-        let work: Vec<(usize, (String, ArchConfig, NocConfig, CommBackend))> =
-            points.iter().cloned().enumerate().collect();
-        let work = Arc::new(Mutex::new(work));
-        let results: Arc<Mutex<Vec<Option<ArchEvaluation>>>> =
-            Arc::new(Mutex::new(vec![None; points.len()]));
-
-        std::thread::scope(|scope| {
-            for _ in 0..threads.min(points.len().max(1)) {
-                let work = Arc::clone(&work);
-                let results = Arc::clone(&results);
-                let driver = self.clone();
-                let sim = sim.clone();
-                scope.spawn(move || loop {
-                    let item = work.lock().unwrap().pop();
-                    let Some((idx, (dnn, arch, noc, backend))) = item else {
-                        break;
-                    };
-                    let graph = by_name(&dnn)
-                        .unwrap_or_else(|| panic!("unknown DNN in sweep: {dnn}"));
-                    let eval = driver.evaluate(&graph, &arch, &noc, &sim, backend);
-                    results.lock().unwrap()[idx] = Some(eval);
-                });
-            }
-        });
-        Arc::try_unwrap(results)
-            .unwrap_or_else(|_| panic!("worker leaked results handle"))
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.expect("sweep point not evaluated"))
-            .collect()
+        par_map(points, self.threads, |(dnn, arch, noc, backend)| {
+            let graph = by_name(dnn).ok_or_else(|| {
+                format!(
+                    "unknown DNN in sweep: '{dnn}' (valid: {})",
+                    crate::dnn::valid_names()
+                )
+            })?;
+            Ok(self.evaluate(&graph, arch, noc, &sim, *backend))
+        })
+        .into_iter()
+        .collect()
     }
 
     pub fn cache_len(&self) -> usize {
@@ -170,7 +185,7 @@ mod tests {
                 })
             })
             .collect();
-        let results = d.evaluate_many(&points);
+        let results = d.evaluate_many(&points).unwrap();
         assert_eq!(results.len(), 6);
         for (r, (name, _, noc, _)) in results.iter().zip(&points) {
             assert_eq!(&r.dnn, name);
@@ -180,14 +195,30 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "a scoped thread panicked")]
-    fn unknown_dnn_panics() {
+    fn unknown_dnn_errors_with_valid_names() {
         let d = Driver { threads: Some(1), ..Driver::new() };
-        d.evaluate_many(&[(
-            "NotANet".into(),
-            ArchConfig::default(),
-            NocConfig::default(),
-            CommBackend::Analytical,
-        )]);
+        let err = d
+            .evaluate_many(&[(
+                "NotANet".into(),
+                ArchConfig::default(),
+                NocConfig::default(),
+                CommBackend::Analytical,
+            )])
+            .unwrap_err();
+        assert!(err.contains("NotANet"), "{err}");
+        assert!(err.contains("VGG-19"), "error must list valid names: {err}");
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_covers_all_items() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, Some(7), |&x| x * x);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        // Degenerate shapes: empty input and a single worker.
+        assert!(par_map(&Vec::<usize>::new(), None, |&x| x).is_empty());
+        assert_eq!(par_map(&[3usize], Some(1), |&x| x + 1), vec![4]);
     }
 }

@@ -7,5 +7,5 @@
 pub mod driver;
 pub mod server;
 
-pub use driver::{Driver, EvalKey};
+pub use driver::{par_map, Driver, EvalKey};
 pub use server::{InferenceServer, ServeReport};

@@ -82,6 +82,16 @@ pub fn model_zoo() -> Vec<DnnGraph> {
     ]
 }
 
+/// The zoo model names, comma-joined, for "unknown DNN" error messages
+/// (mirrors `Topology::valid_names` for topologies).
+pub fn valid_names() -> String {
+    model_zoo()
+        .iter()
+        .map(|m| m.name.as_str())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
 /// Look a zoo model up by name, ignoring case and separators — "VGG-19",
 /// "vgg_19" and "vgg19" all resolve.
 pub fn by_name(name: &str) -> Option<DnnGraph> {
@@ -114,6 +124,14 @@ mod tests {
             names,
             vec!["MLP", "LeNet-5", "NiN", "ResNet-50", "VGG-19", "DenseNet-100"]
         );
+    }
+
+    #[test]
+    fn valid_names_lists_whole_zoo() {
+        let names = valid_names();
+        for m in model_zoo() {
+            assert!(names.contains(&m.name), "{} missing from {names}", m.name);
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ fn sim(opts: &Options) -> SimConfig {
 
 /// ADC-resolution ablation: area/energy grow exponentially with bits while
 /// compute latency is unchanged — EDAP has an interior optimum.
-pub fn ablation_adc(opts: &Options) -> Vec<Table> {
+pub fn ablation_adc(opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Ablation — flash-ADC resolution (ReRAM, advisor topology)",
         &["dnn", "adc_bits", "latency_ms", "power_W", "area_mm2", "EDAP"],
@@ -56,12 +56,12 @@ pub fn ablation_adc(opts: &Options) -> Vec<Table> {
             ]);
         }
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Buffer-depth ablation: NoC area/leakage grow with depth; DNN traffic is
 /// too sparse to use it (ties to Fig. 13's near-empty queues).
-pub fn ablation_buffers(opts: &Options) -> Vec<Table> {
+pub fn ablation_buffers(opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Ablation — router buffer depth (ReRAM, mesh)",
         &["dnn", "buffer_depth", "noc_area_mm2", "comm_cycles", "EDAP"],
@@ -86,11 +86,11 @@ pub fn ablation_buffers(opts: &Options) -> Vec<Table> {
             ]);
         }
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Crossbar-size ablation (paper §5.2): EDAP by PE size per DNN.
-pub fn ablation_pe(opts: &Options) -> Vec<Table> {
+pub fn ablation_pe(opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Ablation — crossbar (PE) size (ReRAM, advisor topology)",
         &["dnn", "pe_size", "tiles", "latency_ms", "EDAP"],
@@ -123,12 +123,12 @@ pub fn ablation_pe(opts: &Options) -> Vec<Table> {
             ]);
         }
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// All six topologies (paper §2.3): torus/hypercube/c-mesh cost more for
 /// marginal latency gains over mesh.
-pub fn topology_exploration(opts: &Options) -> Vec<Table> {
+pub fn topology_exploration(opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Topology exploration — all interconnects (ReRAM)",
         &["dnn", "topology", "latency_ms", "noc_area_mm2", "comm_energy_mJ", "EDAP"],
@@ -158,7 +158,7 @@ pub fn topology_exploration(opts: &Options) -> Vec<Table> {
             ]);
         }
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 #[cfg(test)]
@@ -176,7 +176,7 @@ mod tests {
 
     #[test]
     fn adc_area_grows_with_bits() {
-        let t = &ablation_adc(&fast_opts())[0];
+        let t = &ablation_adc(&fast_opts()).unwrap()[0];
         // For each DNN, area must be monotone non-decreasing in adc_bits.
         let mut prev: Option<(String, f64)> = None;
         for row in &t.rows {
@@ -192,7 +192,7 @@ mod tests {
 
     #[test]
     fn buffers_grow_noc_area_not_latency() {
-        let t = &ablation_buffers(&fast_opts())[0];
+        let t = &ablation_buffers(&fast_opts()).unwrap()[0];
         // Depth 16 vs depth 2 for the same DNN: area up, comm cycles equal
         // or better (queues are near-empty, Fig. 13).
         for g in ["MLP", "LeNet-5", "NiN"] {
@@ -208,7 +208,7 @@ mod tests {
 
     #[test]
     fn topology_exploration_runs_all() {
-        let t = &topology_exploration(&fast_opts())[0];
+        let t = &topology_exploration(&fast_opts()).unwrap()[0];
         assert_eq!(t.rows.len() % 6, 0);
     }
 }

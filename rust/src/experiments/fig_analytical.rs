@@ -13,7 +13,7 @@ use crate::util::{fmt_sig, Table};
 
 /// Fig. 11: per-DNN accuracy of the analytical per-flit latency against the
 /// cycle-accurate simulator, for NoC-tree and NoC-mesh.
-pub fn fig11(opts: &Options) -> Vec<Table> {
+pub fn fig11(opts: &Options) -> Result<Vec<Table>, String> {
     let arch = ArchConfig::reram();
     let noc_base = NocConfig::default();
     let sim_cfg = SimConfig {
@@ -63,12 +63,12 @@ pub fn fig11(opts: &Options) -> Vec<Table> {
         "min_accuracy_%".into(),
         fmt_sig(accs.iter().cloned().fold(f64::INFINITY, f64::min), 3),
     ]);
-    vec![t, summary]
+    Ok(vec![t, summary])
 }
 
 /// Fig. 12: wall-clock speed-up of the analytical model over cycle-accurate
 /// simulation, mesh NoC.
-pub fn fig12(opts: &Options) -> Vec<Table> {
+pub fn fig12(opts: &Options) -> Result<Vec<Table>, String> {
     let arch = ArchConfig::reram();
     let noc = NocConfig::default();
     let sim_cfg = SimConfig {
@@ -102,7 +102,7 @@ pub fn fig12(opts: &Options) -> Vec<Table> {
             fmt_sig(sim_ms / ana_ms.max(1e-6), 4),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 #[cfg(test)]
@@ -120,7 +120,7 @@ mod tests {
 
     #[test]
     fn fig11_mean_accuracy_above_paper_floor() {
-        let tables = fig11(&fast_opts());
+        let tables = fig11(&fast_opts()).unwrap();
         let summary = &tables[1];
         let mean: f64 = summary.rows[0][1].parse().unwrap();
         // Paper: always >85%, average 93%. Require >80% on the fast set.
@@ -129,7 +129,7 @@ mod tests {
 
     #[test]
     fn fig12_speedup_large() {
-        let t = &fig12(&fast_opts())[0];
+        let t = &fig12(&fast_opts()).unwrap()[0];
         for row in &t.rows {
             let speedup: f64 = row[3].parse().unwrap();
             assert!(speedup > 2.0, "{}: speed-up only {speedup}x", row[0]);

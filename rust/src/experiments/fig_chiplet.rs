@@ -25,7 +25,7 @@ fn eval_dnns(opts: &Options) -> Vec<DnnGraph> {
 /// The scale-out sweep: per DNN, end-to-end latency and EDAP for packages
 /// of 2/4/8 chiplets under each NoP topology (per-chiplet NoC chosen by
 /// the single-chip advisor), plus the joint recommendation table.
-pub fn chiplet(opts: &Options) -> Vec<Table> {
+pub fn chiplet(opts: &Options) -> Result<Vec<Table>, String> {
     let arch = ArchConfig::reram();
     let base_noc = NocConfig::default();
     let base_nop = NopConfig::default();
@@ -111,7 +111,7 @@ pub fn chiplet(opts: &Options) -> Vec<Table> {
         ]);
     }
 
-    vec![sweep, rec_table]
+    Ok(vec![sweep, rec_table])
 }
 
 #[cfg(test)]
@@ -124,7 +124,7 @@ mod tests {
             fast: true,
             ..Options::default()
         };
-        let tables = chiplet(&opts);
+        let tables = chiplet(&opts).unwrap();
         assert_eq!(tables.len(), 2);
         assert!(!tables[0].rows.is_empty());
         assert!(!tables[1].rows.is_empty());

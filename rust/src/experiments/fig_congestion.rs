@@ -23,13 +23,18 @@ fn run_steady(
     name: &str,
     opts: &Options,
     track_pairs: bool,
-) -> crate::noc::latency::DnnCommSim {
-    let g = by_name(name).unwrap_or_else(|| panic!("unknown DNN {name}"));
+) -> Result<crate::noc::latency::DnnCommSim, String> {
+    let g = by_name(name).ok_or_else(|| {
+        format!(
+            "unknown DNN '{name}' (valid: {})",
+            crate::dnn::valid_names()
+        )
+    })?;
     let arch = ArchConfig::reram();
     let noc = NocConfig::default(); // mesh, Table 2 parameters
     let mapping = Mapping::build(&g, &arch);
     let inj = InjectionMatrix::build(&g, &mapping, &arch, &noc);
-    simulate_dnn(
+    Ok(simulate_dnn(
         &inj,
         Topology::Mesh,
         &arch,
@@ -37,11 +42,11 @@ fn run_steady(
         &sim_cfg(opts),
         false,
         track_pairs,
-    )
+    ))
 }
 
 /// Fig. 13: percentage of queues with zero occupancy when a flit arrives.
-pub fn fig13(opts: &Options) -> Vec<Table> {
+pub fn fig13(opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Fig. 13 — % of queues with zero occupancy at flit arrival (mesh)",
         &["dnn", "arrivals", "zero_occupancy_%"],
@@ -50,7 +55,7 @@ pub fn fig13(opts: &Options) -> Vec<Table> {
         if opts.fast && g.total_macs() >= 1_000_000_000 {
             continue;
         }
-        let r = run_steady(&g.name, opts, false);
+        let r = run_steady(&g.name, opts, false)?;
         let (mut arrivals, mut zero) = (0u64, 0u64);
         for l in &r.per_layer {
             arrivals += l.stats.arrivals;
@@ -63,11 +68,11 @@ pub fn fig13(opts: &Options) -> Vec<Table> {
         };
         t.add_row(vec![g.name.clone(), arrivals.to_string(), fmt_sig(pct, 3)]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Fig. 14: average occupancy of non-empty queues for NiN and VGG-19.
-pub fn fig14(opts: &Options) -> Vec<Table> {
+pub fn fig14(opts: &Options) -> Result<Vec<Table>, String> {
     let mut tables = Vec::new();
     let nets: &[&str] = if opts.fast {
         &["NiN"]
@@ -75,7 +80,7 @@ pub fn fig14(opts: &Options) -> Vec<Table> {
         &["NiN", "VGG-19"]
     };
     for name in nets {
-        let r = run_steady(name, opts, false);
+        let r = run_steady(name, opts, false)?;
         let mut t = Table::new(
             format!("Fig. 14 — avg occupancy of non-empty queues, {name} (per layer)"),
             &["layer", "nonzero_arrivals", "avg_occupancy"],
@@ -89,15 +94,15 @@ pub fn fig14(opts: &Options) -> Vec<Table> {
         }
         tables.push(t);
     }
-    tables
+    Ok(tables)
 }
 
 /// Fig. 15: average vs worst-case latency per source-destination pair for
 /// LeNet-5 and NiN (pairs with non-zero traffic).
-pub fn fig15(opts: &Options) -> Vec<Table> {
+pub fn fig15(opts: &Options) -> Result<Vec<Table>, String> {
     let mut tables = Vec::new();
     for name in ["LeNet-5", "NiN"] {
-        let r = run_steady(name, opts, true);
+        let r = run_steady(name, opts, true)?;
         let mut t = Table::new(
             format!("Fig. 15 — avg vs worst-case latency per pair, {name}"),
             &["src", "dst", "flits", "avg_cycles", "worst_cycles", "diff"],
@@ -121,11 +126,11 @@ pub fn fig15(opts: &Options) -> Vec<Table> {
         }
         tables.push(t);
     }
-    tables
+    Ok(tables)
 }
 
 /// Table 3: MAPD of worst-case latency from average latency per DNN.
-pub fn table3(opts: &Options) -> Vec<Table> {
+pub fn table3(opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Table 3 — MAPD of worst-case vs average NoC latency (%)",
         &["dnn", "pairs", "MAPD_%"],
@@ -134,7 +139,7 @@ pub fn table3(opts: &Options) -> Vec<Table> {
         if opts.fast && g.total_macs() >= 1_000_000_000 {
             continue;
         }
-        let r = run_steady(&g.name, opts, true);
+        let r = run_steady(&g.name, opts, true)?;
         let (mut avg, mut worst) = (Vec::new(), Vec::new());
         for l in &r.per_layer {
             for p in l.stats.per_pair.values() {
@@ -151,7 +156,7 @@ pub fn table3(opts: &Options) -> Vec<Table> {
             fmt_sig(mapd, 3),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 #[cfg(test)]
@@ -168,9 +173,16 @@ mod tests {
     }
 
     #[test]
+    fn unknown_dnn_is_a_clean_error_listing_valid_names() {
+        let err = run_steady("NotANet", &fast_opts(), false).unwrap_err();
+        assert!(err.contains("NotANet"), "{err}");
+        assert!(err.contains("LeNet-5"), "error must list valid names: {err}");
+    }
+
+    #[test]
     fn fig13_zero_occupancy_in_paper_band() {
         // Paper: 64-100% of queues empty at arrival.
-        let t = &fig13(&fast_opts())[0];
+        let t = &fig13(&fast_opts()).unwrap()[0];
         for row in &t.rows {
             let pct: f64 = row[2].parse().unwrap();
             assert!(pct > 50.0, "{}: only {pct}% empty", row[0]);
@@ -180,7 +192,7 @@ mod tests {
     #[test]
     fn fig14_occupancies_are_small() {
         // Paper: average non-zero queue length 0.004-0.5 (plus margin).
-        for t in fig14(&fast_opts()) {
+        for t in fig14(&fast_opts()).unwrap() {
             for row in &t.rows {
                 let occ: f64 = row[2].parse().unwrap();
                 assert!(occ < 8.0, "occupancy {occ} out of band");
@@ -191,7 +203,7 @@ mod tests {
     #[test]
     fn table3_mapd_small() {
         // Paper Table 3: 0-21%. Allow headroom but catch blow-ups.
-        let t = &table3(&fast_opts())[0];
+        let t = &table3(&fast_opts()).unwrap()[0];
         for row in &t.rows {
             let mapd: f64 = row[2].parse().unwrap();
             assert!(

@@ -8,7 +8,7 @@ use crate::dnn::model_zoo;
 use crate::util::{fmt_sig, Table};
 
 /// Fig. 1: density/neuron scatter for the full zoo.
-pub fn fig1(_opts: &Options) -> Vec<Table> {
+pub fn fig1(_opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Fig. 1 — connection density of DNNs (per dataset)",
         &[
@@ -40,11 +40,11 @@ pub fn fig1(_opts: &Options) -> Vec<Table> {
             class.into(),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Fig. 20: advisor decision for every zoo model on the (ρ, μ) plane.
-pub fn fig20(_opts: &Options) -> Vec<Table> {
+pub fn fig20(_opts: &Options) -> Result<Vec<Table>, String> {
     let arch = ArchConfig::default();
     let noc = NocConfig::default();
     let mut t = Table::new(
@@ -75,7 +75,7 @@ pub fn fig20(_opts: &Options) -> Vec<Table> {
             fmt_sig(rec.edap_mesh, 3),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 #[cfg(test)]
@@ -84,7 +84,7 @@ mod tests {
 
     #[test]
     fn fig1_rows_cover_zoo() {
-        let t = &fig1(&Options::default())[0];
+        let t = &fig1(&Options::default()).unwrap()[0];
         assert_eq!(t.rows.len(), model_zoo().len());
         // Every class present.
         let classes: Vec<&str> = t.rows.iter().map(|r| r[6].as_str()).collect();
@@ -95,7 +95,7 @@ mod tests {
 
     #[test]
     fn fig20_compact_vs_dense_split() {
-        let t = &fig20(&Options::default())[0];
+        let t = &fig20(&Options::default()).unwrap()[0];
         let row = |name: &str| t.rows.iter().find(|r| r[0] == name).unwrap();
         assert_eq!(row("MLP")[4], "NoC-tree");
         assert_eq!(row("LeNet-5")[4], "NoC-tree");

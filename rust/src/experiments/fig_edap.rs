@@ -30,7 +30,7 @@ fn sim_cfg(opts: &Options) -> SimConfig {
 /// Fig. 9: EDAP of tree / mesh / c-mesh NoCs. Like the paper, this is the
 /// EDAP of the *interconnect* (NoC energy × NoC latency × NoC area), not
 /// of the whole chip — that is where c-mesh's resource overhead explodes.
-pub fn fig9(opts: &Options) -> Vec<Table> {
+pub fn fig9(opts: &Options) -> Result<Vec<Table>, String> {
     let arch = ArchConfig::reram();
     let sim = sim_cfg(opts);
     let mut t = Table::new(
@@ -61,7 +61,7 @@ pub fn fig9(opts: &Options) -> Vec<Table> {
             fmt_sig(edap[2] / edap[1], 3),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Shared shape of Fig. 16/17: tree vs mesh normalized throughput & EDAP.
@@ -117,35 +117,35 @@ fn tree_vs_mesh(opts: &Options, arch: ArchConfig, fig: &str) -> Vec<Table> {
 }
 
 /// Fig. 16: SRAM-based IMC, tree vs mesh.
-pub fn fig16(opts: &Options) -> Vec<Table> {
-    tree_vs_mesh(opts, ArchConfig::sram(), "Fig. 16")
+pub fn fig16(opts: &Options) -> Result<Vec<Table>, String> {
+    Ok(tree_vs_mesh(opts, ArchConfig::sram(), "Fig. 16"))
 }
 
 /// Fig. 17: ReRAM-based IMC, tree vs mesh.
-pub fn fig17(opts: &Options) -> Vec<Table> {
-    tree_vs_mesh(opts, ArchConfig::reram(), "Fig. 17")
+pub fn fig17(opts: &Options) -> Result<Vec<Table>, String> {
+    Ok(tree_vs_mesh(opts, ArchConfig::reram(), "Fig. 17"))
 }
 
 /// Fig. 18: virtual-channel sweep (ReRAM): the guidance must not change.
-pub fn fig18(opts: &Options) -> Vec<Table> {
-    sweep(
+pub fn fig18(opts: &Options) -> Result<Vec<Table>, String> {
+    Ok(sweep(
         opts,
         "Fig. 18",
         &[1usize, 2, 4],
         |noc, vcs| noc.virtual_channels = *vcs,
         "virtual_channels",
-    )
+    ))
 }
 
 /// Fig. 19: bus-width sweep (ReRAM): the guidance must not change.
-pub fn fig19(opts: &Options) -> Vec<Table> {
-    sweep(
+pub fn fig19(opts: &Options) -> Result<Vec<Table>, String> {
+    Ok(sweep(
         opts,
         "Fig. 19",
         &[16usize, 32, 64],
         |noc, w| noc.bus_width = *w,
         "bus_width",
-    )
+    ))
 }
 
 fn sweep(
@@ -207,7 +207,7 @@ mod tests {
 
     #[test]
     fn fig9_cmesh_edap_dominates() {
-        let t = &fig9(&fast_opts())[0];
+        let t = &fig9(&fast_opts()).unwrap()[0];
         for row in &t.rows {
             let ratio: f64 = row[4].parse().unwrap();
             assert!(ratio > 1.0, "{}: c-mesh/mesh EDAP ratio {ratio}", row[0]);
@@ -216,7 +216,7 @@ mod tests {
 
     #[test]
     fn fig16_compact_nets_prefer_tree_edap() {
-        let tables = fig16(&fast_opts());
+        let tables = fig16(&fast_opts()).unwrap();
         let edap = &tables[1];
         for row in &edap.rows {
             if row[0] == "MLP" || row[0] == "LeNet-5" {
@@ -229,7 +229,7 @@ mod tests {
     fn fig18_guidance_consistent_across_vcs() {
         // Paper §6.4.1: the preferred topology per DNN is the same for all
         // VC counts.
-        let tables = fig18(&fast_opts());
+        let tables = fig18(&fast_opts()).unwrap();
         let edap = &tables[1];
         use std::collections::HashMap;
         let mut pref: HashMap<&str, &str> = HashMap::new();

@@ -1,0 +1,181 @@
+//! Beyond-the-paper experiment: package-level (NoP) congestion.
+//!
+//! The analytical package model (bandwidth bound + fixed SerDes latency) is
+//! load-independent, so it cannot see queueing on the interposer — exactly
+//! where scale-out studies report analytical models diverging from flit
+//! simulation at k ≥ 16 chiplets. This experiment quantifies both sides:
+//!
+//! 1. **Uniform steady sweep** — for k ∈ {4, 8, 16, 25} and each package
+//!    topology, the low-load average latency of the flit-level simulator
+//!    against the analytical prediction (they must agree within ~15%), and
+//!    the uniform injection rate at which the package saturates (where they
+//!    cannot agree — the analytical column would never move).
+//! 2. **DNN-driven drain** — one frame of a real model's inter-chiplet
+//!    traffic (the [`ChipletPartition`] injection matrix lowered to NoP
+//!    flows) drained through the simulator per topology.
+//!
+//! The (k × topology) points fan out over OS threads via the coordinator's
+//! [`par_map`] — the same driver primitive the evaluation sweeps use.
+
+use super::Options;
+use crate::config::{ArchConfig, NopConfig};
+use crate::coordinator::par_map;
+use crate::dnn::by_name;
+use crate::mapping::{ChipletPartition, Mapping};
+use crate::noc::sim::{FlowSpec, Mode};
+use crate::nop::sim::{analytical_latency, saturation_rate, uniform_nop_flows, NopSim};
+use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::util::{fmt_sig, Table};
+
+/// The `nop-congestion` experiment generator.
+pub fn nop_congestion(opts: &Options) -> Result<Vec<Table>, String> {
+    let nop = NopConfig::default();
+    let ks: Vec<usize> = if opts.fast {
+        vec![4]
+    } else {
+        vec![4, 8, 16, 25]
+    };
+    let measure: u64 = if opts.fast { 3_000 } else { 6_000 };
+    let seed = opts.seed;
+
+    // --- 1. Uniform steady sweep, driver-parallelized over (k, topo) -----
+    let points: Vec<(usize, NopTopology)> = ks
+        .iter()
+        .flat_map(|&k| NopTopology::all().into_iter().map(move |t| (k, t)))
+        .collect();
+    let rows = par_map(&points, None, |&(k, topo)| {
+        let net = NopNetwork::build(topo, k);
+        let flows = uniform_nop_flows(k, 0.02);
+        let ana = analytical_latency(&net, &nop, &flows);
+        let sim = NopSim::new(
+            topo,
+            k,
+            &nop,
+            &flows,
+            Mode::Steady {
+                warmup: 500,
+                measure,
+            },
+            seed,
+        )
+        .run();
+        let sat = saturation_rate(topo, k, &nop, seed);
+        (k, topo, ana, sim.avg_latency, sat)
+    });
+    let mut sweep = Table::new(
+        "NoP congestion — low-load latency (NoP cycles) and saturation rate, uniform traffic",
+        &[
+            "chiplets",
+            "NoP",
+            "analytical",
+            "sim_low_load",
+            "err_%",
+            "sat_rate_flit/chiplet/cyc",
+        ],
+    );
+    for (k, topo, ana, sim_lat, sat) in rows {
+        let err = 100.0 * (sim_lat - ana).abs() / ana.max(1e-9);
+        sweep.add_row(vec![
+            k.to_string(),
+            topo.name().into(),
+            fmt_sig(ana, 4),
+            fmt_sig(sim_lat, 4),
+            fmt_sig(err, 3),
+            match sat {
+                Some(rate) => fmt_sig(rate, 3),
+                None => ">1.0".into(),
+            },
+        ]);
+    }
+
+    // --- 2. DNN-driven drain: a real partition's package traffic ---------
+    let model = if opts.fast { "NiN" } else { "VGG-19" };
+    let g = by_name(model).ok_or_else(|| {
+        format!(
+            "unknown DNN '{model}' (valid: {})",
+            crate::dnn::valid_names()
+        )
+    })?;
+    let arch = ArchConfig::reram();
+    let mapping = Mapping::build(&g, &arch);
+    let mut drain = Table::new(
+        format!("NoP drain — one frame of {model}'s inter-chiplet traffic (NoP cycles)"),
+        &["chiplets", "NoP", "flows", "flits", "makespan", "drained"],
+    );
+    for &k in &ks {
+        let part = ChipletPartition::build(&g, &mapping, &arch, k);
+        let flows: Vec<FlowSpec> = part
+            .nop_flows(nop.link_width)
+            .into_iter()
+            .map(|(s, d, flits)| FlowSpec {
+                src: s,
+                dst: d,
+                rate: 0.0,
+                flits,
+            })
+            .collect();
+        let total: u64 = flows.iter().map(|f| f.flits).sum();
+        for topo in NopTopology::all() {
+            let stats = NopSim::new(
+                topo,
+                k,
+                &nop,
+                &flows,
+                Mode::Drain {
+                    max_cycles: 10_000 + total.saturating_mul(64),
+                },
+                seed,
+            )
+            .run();
+            drain.add_row(vec![
+                k.to_string(),
+                topo.name().into(),
+                flows.len().to_string(),
+                total.to_string(),
+                stats.makespan.to_string(),
+                stats.drained.to_string(),
+            ]);
+        }
+    }
+
+    Ok(vec![sweep, drain])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CommBackend;
+
+    fn fast_opts() -> Options {
+        Options {
+            fast: true,
+            backend: CommBackend::Analytical,
+            ..Options::default()
+        }
+    }
+
+    #[test]
+    fn low_load_rows_agree_with_analytical_within_15pct() {
+        let tables = nop_congestion(&fast_opts()).unwrap();
+        let sweep = &tables[0];
+        assert_eq!(sweep.rows.len(), 3); // k = 4 x three topologies
+        for row in &sweep.rows {
+            let err: f64 = row[4].parse().unwrap();
+            assert!(err < 15.0, "{} k={}: {err}% off analytical", row[1], row[0]);
+        }
+    }
+
+    #[test]
+    fn dnn_drain_terminates_on_every_topology() {
+        let tables = nop_congestion(&fast_opts()).unwrap();
+        let drain = &tables[1];
+        assert_eq!(drain.rows.len(), 3);
+        for row in &drain.rows {
+            assert_eq!(row[5], "true", "{} k={} did not drain", row[1], row[0]);
+            let makespan: u64 = row[4].parse().unwrap();
+            let flits: u64 = row[3].parse().unwrap();
+            assert!(flits > 0, "partition produced no package traffic");
+            assert!(makespan > 0);
+        }
+    }
+}

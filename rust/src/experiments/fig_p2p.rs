@@ -22,7 +22,7 @@ fn eval_dnns(opts: &Options) -> Vec<crate::dnn::DnnGraph> {
 }
 
 /// Fig. 3: routing latency share on the P2P IMC architecture.
-pub fn fig3(opts: &Options) -> Vec<Table> {
+pub fn fig3(opts: &Options) -> Result<Vec<Table>, String> {
     let arch = ArchConfig::sram();
     let noc = NocConfig::with_topology(Topology::P2P);
     let sim = SimConfig {
@@ -43,12 +43,12 @@ pub fn fig3(opts: &Options) -> Vec<Table> {
             fmt_sig(100.0 * e.routing_fraction(), 3),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Fig. 5: average latency vs injection bandwidth for 64-node P2P,
 /// NoC-tree, and 8×8 NoC-mesh under uniform-random traffic.
-pub fn fig5(opts: &Options) -> Vec<Table> {
+pub fn fig5(opts: &Options) -> Result<Vec<Table>, String> {
     let cfg = NocConfig::default();
     let rates = if opts.fast {
         vec![0.02, 0.10, 0.25]
@@ -81,12 +81,12 @@ pub fn fig5(opts: &Options) -> Vec<Table> {
         }
         t.add_row(row);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Fig. 8: throughput of the SRAM IMC architecture with P2P / tree / mesh,
 /// normalized to P2P.
-pub fn fig8(opts: &Options) -> Vec<Table> {
+pub fn fig8(opts: &Options) -> Result<Vec<Table>, String> {
     let arch = ArchConfig::sram();
     let sim = SimConfig {
         seed: opts.seed,
@@ -118,12 +118,12 @@ pub fn fig8(opts: &Options) -> Vec<Table> {
             fmt_sig(fps[2] / fps[0], 3),
         ]);
     }
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Fig. 21: total inference latency vs connection density for P2P vs the
 /// advisor-chosen NoC, both technologies.
-pub fn fig21(opts: &Options) -> Vec<Table> {
+pub fn fig21(opts: &Options) -> Result<Vec<Table>, String> {
     let sim = SimConfig {
         seed: opts.seed,
         ..SimConfig::default()
@@ -176,7 +176,7 @@ pub fn fig21(opts: &Options) -> Vec<Table> {
         }
         tables.push(t);
     }
-    tables
+    Ok(tables)
 }
 
 #[cfg(test)]
@@ -196,7 +196,7 @@ mod tests {
     fn fig3_routing_dominates_p2p_at_high_density() {
         // Paper: the routing share reaches up to 94% as connection density
         // grows (their own Fig. 3 is non-monotone — VGG-19 dips).
-        let t = &fig3(&fast_opts())[0];
+        let t = &fig3(&fast_opts()).unwrap()[0];
         assert!(t.rows.len() >= 3);
         let last: f64 = t.rows.last().unwrap()[4].parse().unwrap();
         assert!(last > 80.0, "densest DNN share {last}% too low");
@@ -208,7 +208,7 @@ mod tests {
 
     #[test]
     fn fig5_mesh_wins_at_high_rate() {
-        let t = &fig5(&fast_opts())[0];
+        let t = &fig5(&fast_opts()).unwrap()[0];
         let last = t.rows.last().unwrap();
         let p2p: f64 = last[1].parse().unwrap();
         let mesh: f64 = last[3].parse().unwrap();
@@ -220,7 +220,7 @@ mod tests {
 
     #[test]
     fn fig8_noc_never_slower_than_p2p_on_dense() {
-        let t = &fig8(&fast_opts())[0];
+        let t = &fig8(&fast_opts()).unwrap()[0];
         let dense_rows: Vec<_> = t
             .rows
             .iter()

@@ -11,6 +11,7 @@ pub mod fig_chiplet;
 pub mod fig_congestion;
 pub mod fig_density;
 pub mod fig_edap;
+pub mod fig_nop_congestion;
 pub mod fig_p2p;
 pub mod tables;
 
@@ -39,12 +40,14 @@ impl Default for Options {
     }
 }
 
-/// One registered experiment.
+/// One registered experiment. Generators return `Err` with a descriptive
+/// message (e.g. an unknown DNN name listing the valid ones) instead of
+/// panicking; the CLI surfaces it as a normal command error.
 pub struct Experiment {
     /// Canonical id: "fig1" … "fig21", "table2" … "table4".
     pub id: &'static str,
     pub title: &'static str,
-    pub run: fn(&Options) -> Vec<Table>,
+    pub run: fn(&Options) -> Result<Vec<Table>, String>,
 }
 
 /// All experiments, in paper order.
@@ -154,6 +157,11 @@ pub fn registry() -> Vec<Experiment> {
             id: "chiplet",
             title: "Multi-chiplet scale-out: NoC+NoP sweep and joint recommendation",
             run: fig_chiplet::chiplet,
+        },
+        Experiment {
+            id: "nop-congestion",
+            title: "NoP congestion: flit-level package simulation vs analytical model",
+            run: fig_nop_congestion::nop_congestion,
         },
         Experiment {
             id: "table2",

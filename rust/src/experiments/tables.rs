@@ -6,7 +6,7 @@ use crate::config::Config;
 use crate::util::{fmt_sig, Table};
 
 /// Table 2: the configured design parameters.
-pub fn table2(_opts: &Options) -> Vec<Table> {
+pub fn table2(_opts: &Options) -> Result<Vec<Table>, String> {
     let cfg = Config::default();
     let mut t = Table::new("Table 2 — design parameters", &["parameter", "value"]);
     t.add_row(vec![
@@ -47,11 +47,11 @@ pub fn table2(_opts: &Options) -> Vec<Table> {
         "Router pipeline stages".into(),
         cfg.noc.pipeline_stages.to_string(),
     ]);
-    vec![t]
+    Ok(vec![t])
 }
 
 /// Table 4: VGG-19 inference comparison against published accelerators.
-pub fn table4(opts: &Options) -> Vec<Table> {
+pub fn table4(opts: &Options) -> Result<Vec<Table>, String> {
     let mut t = Table::new(
         "Table 4 — VGG-19 inference vs state-of-the-art (\"*\" = published numbers)",
         &["architecture", "latency_ms", "power_W", "FPS", "EDAP_J.ms.mm2"],
@@ -98,7 +98,7 @@ pub fn table4(opts: &Options) -> Vec<Table> {
         "2.2x".into(),
         fmt_sig(ours.latency_ms / rows[0].latency_ms, 3),
     ]);
-    vec![t, h]
+    Ok(vec![t, h])
 }
 
 #[cfg(test)]
@@ -108,7 +108,7 @@ mod tests {
 
     #[test]
     fn table2_matches_paper_defaults() {
-        let t = &table2(&Options::default())[0];
+        let t = &table2(&Options::default()).unwrap()[0];
         let get = |k: &str| {
             t.rows
                 .iter()
@@ -130,7 +130,7 @@ mod tests {
             backend: CommBackend::Analytical,
             ..Options::default()
         };
-        let tables = table4(&opts);
+        let tables = table4(&opts).unwrap();
         let h = &tables[1];
         for row in &h.rows {
             let measured: f64 = row[2].parse().unwrap();

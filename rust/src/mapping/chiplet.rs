@@ -183,6 +183,24 @@ impl ChipletPartition {
         m
     }
 
+    /// The inter-chiplet injection matrix lowered to package drain flows:
+    /// one `(src_chiplet, dst_chiplet, flits)` entry per directed chiplet
+    /// pair with traffic, the bits/frame serialized into `link_width`-bit
+    /// NoP flits. This is the bridge from the partition to the flit-level
+    /// package simulator ([`crate::nop::sim::NopSim`]).
+    pub fn nop_flows(&self, link_width: usize) -> Vec<(usize, usize, u64)> {
+        assert!(link_width > 0, "link_width must be positive");
+        let mut flows = Vec::new();
+        for (s, row) in self.cross_traffic().iter().enumerate() {
+            for (d, &bits) in row.iter().enumerate() {
+                if bits > 0 {
+                    flows.push((s, d, bits.div_ceil(link_width as u64)));
+                }
+            }
+        }
+        flows
+    }
+
     /// Invariants used by unit and property tests.
     pub fn validate(&self, mapping: &Mapping) -> Result<(), String> {
         if self.assignment.len() != mapping.layers.len() {
@@ -410,6 +428,21 @@ mod tests {
             "refinement should move fc2 across the cut"
         );
         assert_eq!(p.cut_bits(), 512 * 8);
+    }
+
+    #[test]
+    fn nop_flows_serialize_cut_bits() {
+        // two-fc at k=2 cuts one 4096-bit edge: with 32-bit NoP flits that
+        // is exactly one 0->1 flow of 128 flits.
+        let mut g = DnnGraph::new("two-fc", Dataset::Mnist);
+        let f1 = g.fc("fc1", 0, 512);
+        g.fc("fc2", f1, 256);
+        let (_, p) = part(&g, 2);
+        assert_eq!(p.nop_flows(32), vec![(0, 1, 128)]);
+        // Partial flits round up; a single chiplet has no flows at all.
+        assert_eq!(p.nop_flows(4096), vec![(0, 1, 1)]);
+        let (_, p1) = part(&g, 1);
+        assert!(p1.nop_flows(32).is_empty());
     }
 
     #[test]

@@ -9,17 +9,23 @@
 //! * [`topology`] — chiplet-level link graphs (dedicated P2P links, ring,
 //!   2-D mesh on the interposer) with deterministic routing, mirroring
 //!   [`crate::noc::topology`] one level up.
+//! * [`sim`] — an event-driven, flit-level simulator for the package graph
+//!   (SerDes serialization, fixed hop latency, credit-based flow control),
+//!   sharing the [`crate::noc::sim`] vocabulary so both levels compose.
 //! * [`evaluator`] — hierarchical evaluation: every chiplet runs the
 //!   *existing* per-chip NoC machinery (analytical model or cycle-accurate
 //!   simulator, unchanged) over its local tiles, and cross-chiplet traffic
 //!   — derived from [`crate::mapping::ChipletPartition`] — rides the NoP
-//!   with SerDes-class latency/energy ([`crate::config::NopConfig`]).
+//!   either analytically or through the flit-level simulator
+//!   (`[nop] mode = sim`, [`crate::config::NopConfig`]).
 //!
 //! The joint (chiplet count, NoP topology, per-chiplet NoC topology)
 //! advisor lives in [`crate::arch::optimizer`].
 
 pub mod evaluator;
+pub mod sim;
 pub mod topology;
 
 pub use evaluator::{evaluate_package, nop_transfer_cycles, NopEvaluation};
+pub use sim::{saturation_rate, uniform_nop_flows, NopAudit, NopSim};
 pub use topology::{NopNetwork, NopTopology};

@@ -1,0 +1,892 @@
+//! Event-driven, flit-level Network-on-Package simulation — the package
+//! mirror of [`crate::noc::sim`], specialized for SerDes-class channels.
+//!
+//! Package links differ from on-chip NoC links in three ways the analytical
+//! model of [`crate::nop::evaluator`] cannot see under load:
+//!
+//! * **Serialization** — a link moves one `link_width`-bit NoP flit per NoP
+//!   cycle, so a bundle of `F` flits occupies its first link for `F` cycles
+//!   and competing bundles queue behind it.
+//! * **Fixed hop latency** — every traversal adds `hop_latency_cycles`
+//!   (SerDes TX + package trace + RX). The engine is event-driven: when all
+//!   traffic is mid-flight the clock jumps straight to the next arrival
+//!   instead of stepping through the latency gap cycle by cycle.
+//! * **Credit-based flow control** — every directed link owns a
+//!   `buffer_flits`-deep virtual receive buffer at its downstream node
+//!   (plus one injection buffer per chiplet). A sender consumes one
+//!   downstream credit per flit — returned when the flit leaves that
+//!   buffer, so credits also cover in-flight traffic — and stalls at zero.
+//!   Flits *entering* a directional chain (injection, X→Y turns) must
+//!   leave one slot free in the target buffer; straight-through transit
+//!   needs a single credit. This is bubble flow control: each directional
+//!   ring/row/column keeps a circulating bubble, which makes
+//!   shortest-direction rings and X-Y meshes deadlock-free without
+//!   virtual channels.
+//!
+//! The simulator deliberately reuses the [`FlowSpec`]/[`Mode`]/[`SimStats`]
+//! vocabulary of the per-chip simulator so `nop::evaluator` can compose the
+//! two engines into one hierarchical co-simulation: per-chiplet `NocSim`
+//! runs below, `NopSim` runs the package graph above, fed by the
+//! inter-chiplet injection matrix of [`crate::mapping::ChipletPartition`].
+//! All times are **NoP cycles**; callers convert with the clock ratio.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::config::NopConfig;
+use crate::noc::sim::{FlowSpec, Mode, SimStats};
+use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::util::Pcg32;
+
+/// Upstream marker for injection buffers (no inbound link).
+const LOCAL: usize = usize::MAX;
+
+/// One NoP flit in flight. `born` is the NoP cycle the flit was generated
+/// at its source chiplet (source-queue wait counts toward latency).
+#[derive(Clone, Copy, Debug)]
+struct NopFlit {
+    src: u32,
+    dst: u32,
+    born: u64,
+}
+
+/// Per-chiplet traffic generator (same shape as the NoC simulator's).
+struct SourceState {
+    /// Aggregate injection rate in flits/cycle (steady mode).
+    rate: f64,
+    /// Destination CDF for steady mode: (cumulative rate, dst).
+    dst_cdf: Vec<(f64, u32)>,
+    /// Remaining (dst, count) entries for drain mode, drawn round-robin.
+    pending: Vec<(u32, u64)>,
+    next_pending: usize,
+    /// Generated-but-not-yet-injected flits (unbounded source FIFO).
+    fifo: VecDeque<(u32, u64)>,
+}
+
+/// Post-run flow-control audit, for the credit-invariant property tests.
+#[derive(Clone, Debug)]
+pub struct NopAudit {
+    /// Credits each virtual receive buffer started with (`buffer_flits`).
+    pub capacity: i64,
+    /// Credits left per buffer after the run (== `capacity` after a drain).
+    pub credits: Vec<i64>,
+    /// Lowest credit count observed anywhere at any time (never < 0).
+    pub min_credit: i64,
+}
+
+/// The flit-level package simulator.
+pub struct NopSim {
+    net: NopNetwork,
+    cfg: NopConfig,
+    mode: Mode,
+    /// Virtual receive buffers: one per directed link, then one injection
+    /// buffer per node (id = `injection_base + node`).
+    bufs: Vec<VecDeque<NopFlit>>,
+    /// Free slots per buffer. Signed so the audit can prove non-negativity
+    /// instead of relying on unsigned wrap-around panics.
+    credits: Vec<i64>,
+    min_credit: i64,
+    /// Directed link (from, to) → its buffer id. Lookup only — iteration
+    /// always goes through the deterministic `in_bufs` lists.
+    link_buf: HashMap<(usize, usize), usize>,
+    /// (upstream, node) per buffer; upstream == LOCAL for injection bufs.
+    buf_edge: Vec<(usize, usize)>,
+    /// Buffers feeding each node, in deterministic order.
+    in_bufs: Vec<Vec<usize>>,
+    /// Round-robin scan offset per node (arbitration fairness).
+    rr: Vec<usize>,
+    /// Earliest cycle each link buffer may start another flit (per-link
+    /// serialization; unused for injection buffers).
+    link_free: Vec<u64>,
+    /// Earliest cycle each node's local SerDes RX may eject another flit.
+    eject_free: Vec<u64>,
+    /// In-flight flits as (arrival cycle, buffer id, flit). Hop latency is
+    /// uniform, so send order == arrival order and a FIFO replaces a heap.
+    arrivals: VecDeque<(u64, usize, NopFlit)>,
+    sources: Vec<SourceState>,
+    rng: Pcg32,
+    track_pairs: bool,
+    stats: SimStats,
+    now: u64,
+    in_warmup: bool,
+    /// Flits generated but not yet delivered.
+    in_flight: u64,
+    /// Drain mode: flits not yet generated.
+    ungenerated: u64,
+}
+
+impl NopSim {
+    /// Build a simulator for `k` chiplets on `topology`. Flow endpoints are
+    /// chiplet ids (`< k`); self-flows never enter the package network.
+    pub fn new(
+        topology: NopTopology,
+        k: usize,
+        cfg: &NopConfig,
+        flows: &[FlowSpec],
+        mode: Mode,
+        seed: u64,
+    ) -> Self {
+        let net = NopNetwork::build(topology, k);
+
+        // Enumerate every directed link deterministic routing can use, in
+        // sorted order (deterministic buffer ids).
+        let mut links: Vec<(usize, usize)> = Vec::new();
+        let mut seen: HashSet<(usize, usize)> = HashSet::new();
+        for a in 0..net.nodes {
+            for d in 0..net.chiplets {
+                if d == a {
+                    continue;
+                }
+                let b = net.route_next(a, d);
+                if seen.insert((a, b)) {
+                    links.push((a, b));
+                }
+            }
+        }
+        links.sort_unstable();
+        let injection_base = links.len();
+        let n_bufs = links.len() + net.nodes;
+
+        let mut link_buf = HashMap::new();
+        let mut buf_edge = vec![(LOCAL, 0usize); n_bufs];
+        let mut in_bufs: Vec<Vec<usize>> = vec![Vec::new(); net.nodes];
+        for (id, &(a, b)) in links.iter().enumerate() {
+            link_buf.insert((a, b), id);
+            buf_edge[id] = (a, b);
+            in_bufs[b].push(id);
+        }
+        for n in 0..net.nodes {
+            buf_edge[injection_base + n] = (LOCAL, n);
+            in_bufs[n].push(injection_base + n);
+        }
+
+        let mut sources: Vec<SourceState> = (0..k)
+            .map(|_| SourceState {
+                rate: 0.0,
+                dst_cdf: Vec::new(),
+                pending: Vec::new(),
+                next_pending: 0,
+                fifo: VecDeque::new(),
+            })
+            .collect();
+        for f in flows {
+            assert!(f.src < k && f.dst < k, "NoP flow endpoint out of range");
+            if f.src == f.dst {
+                continue; // intra-chiplet traffic rides the local NoC
+            }
+            let s = &mut sources[f.src];
+            s.rate += f.rate;
+            s.dst_cdf.push((s.rate, f.dst as u32));
+            if f.flits > 0 {
+                s.pending.push((f.dst as u32, f.flits));
+            }
+        }
+        // Saturation guard: a chiplet injects at most one flit per cycle.
+        for s in &mut sources {
+            if s.rate > 1.0 {
+                let scale = 1.0 / s.rate;
+                for e in &mut s.dst_cdf {
+                    e.0 *= scale;
+                }
+                s.rate = 1.0;
+            }
+        }
+        let ungenerated: u64 = sources
+            .iter()
+            .flat_map(|s| s.pending.iter().map(|&(_, c)| c))
+            .sum();
+        let steady = matches!(mode, Mode::Steady { .. });
+        let nodes = net.nodes;
+        Self {
+            net,
+            cfg: cfg.clone(),
+            mode,
+            bufs: vec![VecDeque::new(); n_bufs],
+            credits: vec![cfg.buffer_flits as i64; n_bufs],
+            min_credit: cfg.buffer_flits as i64,
+            link_buf,
+            buf_edge,
+            in_bufs,
+            rr: vec![0; nodes],
+            link_free: vec![0; n_bufs],
+            eject_free: vec![0; nodes],
+            arrivals: VecDeque::new(),
+            sources,
+            rng: Pcg32::seeded(seed),
+            track_pairs: false,
+            stats: SimStats::default(),
+            now: 0,
+            in_warmup: steady,
+            in_flight: 0,
+            ungenerated,
+        }
+    }
+
+    /// Enable per-pair latency tracking.
+    pub fn track_pairs(mut self, on: bool) -> Self {
+        self.track_pairs = on;
+        self
+    }
+
+    /// Does a flit that entered `node` from `upstream` keep its direction
+    /// when forwarded to `next`? Straight-through transit rides an existing
+    /// directional chain and needs a single credit; everything else
+    /// (injection, turns) enters a chain and must preserve its bubble.
+    fn same_direction(&self, upstream: usize, node: usize, next: usize) -> bool {
+        match self.net.topology {
+            NopTopology::P2p => false, // single-hop: transit never happens
+            NopTopology::Ring => {
+                let k = self.net.chiplets;
+                (node + k - upstream) % k == (next + k - node) % k
+            }
+            NopTopology::Mesh => {
+                // X-Y routing never wraps a row/column, so the node-index
+                // displacement (±1 in-row, ±cols in-column) is the direction.
+                (node as i64 - upstream as i64) == (next as i64 - node as i64)
+            }
+        }
+    }
+
+    /// Move due arrivals into their receive buffers (credits were reserved
+    /// at send time, so the push can never overflow). Occupancy is sampled
+    /// here, matching the NoC simulator's arrival statistics.
+    fn process_arrivals(&mut self) {
+        while let Some(&(t, buf, flit)) = self.arrivals.front() {
+            if t > self.now {
+                break;
+            }
+            self.arrivals.pop_front();
+            let occ = self.bufs[buf].len();
+            if !self.in_warmup {
+                self.stats.arrivals += 1;
+                if occ == 0 {
+                    self.stats.arrivals_zero += 1;
+                } else {
+                    self.stats.nonzero_occ_sum += occ as f64;
+                    self.stats.nonzero_occ_count += 1;
+                }
+            }
+            self.bufs[buf].push_back(flit);
+        }
+    }
+
+    /// Generate per-mode traffic and move one source-FIFO head per chiplet
+    /// into its injection buffer when a credit is available.
+    fn inject(&mut self) {
+        let steady = matches!(self.mode, Mode::Steady { .. });
+        let injection_base = self.bufs.len() - self.net.nodes;
+        for t in 0..self.sources.len() {
+            if steady {
+                let s = &mut self.sources[t];
+                if s.rate > 0.0 && self.rng.bernoulli(s.rate) {
+                    let u = self.rng.next_f64() * s.rate;
+                    let dst = match s
+                        .dst_cdf
+                        .binary_search_by(|probe| probe.0.partial_cmp(&u).unwrap())
+                    {
+                        Ok(i) => s.dst_cdf[(i + 1).min(s.dst_cdf.len() - 1)].1,
+                        Err(i) => s.dst_cdf[i.min(s.dst_cdf.len() - 1)].1,
+                    };
+                    s.fifo.push_back((dst, self.now));
+                    self.stats.injected += 1;
+                    self.in_flight += 1;
+                }
+            } else if self.sources[t].fifo.is_empty() && !self.sources[t].pending.is_empty() {
+                // Drain mode: keep the FIFO primed, round-robin over the
+                // destination entries.
+                let s = &mut self.sources[t];
+                let idx = s.next_pending % s.pending.len();
+                let (dst, remaining) = s.pending[idx];
+                s.fifo.push_back((dst, self.now));
+                self.stats.injected += 1;
+                self.in_flight += 1;
+                self.ungenerated -= 1;
+                if remaining <= 1 {
+                    s.pending.swap_remove(idx);
+                } else {
+                    s.pending[idx].1 = remaining - 1;
+                }
+                s.next_pending = s.next_pending.wrapping_add(1);
+            }
+            // The injection buffer is a dedicated lane into the network:
+            // nothing routes through it, so one free slot suffices.
+            let ib = injection_base + t;
+            if self.credits[ib] >= 1 {
+                if let Some((dst, born)) = self.sources[t].fifo.pop_front() {
+                    self.credits[ib] -= 1;
+                    self.min_credit = self.min_credit.min(self.credits[ib]);
+                    self.bufs[ib].push_back(NopFlit {
+                        src: t as u32,
+                        dst,
+                        born,
+                    });
+                }
+            }
+        }
+    }
+
+    /// One switching cycle: every node scans its input buffers (round-robin
+    /// start) and moves each flit whose output resource is free — at most
+    /// one flit per directed link and one local ejection per node per
+    /// cycle, bubble rule on chain entry.
+    fn forward(&mut self) {
+        for b in 0..self.net.nodes {
+            let n_in = self.in_bufs[b].len();
+            let start = self.rr[b] % n_in;
+            self.rr[b] = self.rr[b].wrapping_add(1);
+            for i in 0..n_in {
+                let buf = self.in_bufs[b][(start + i) % n_in];
+                if self.bufs[buf].is_empty() {
+                    continue;
+                }
+                let q = std::mem::take(&mut self.bufs[buf]);
+                let mut kept: VecDeque<NopFlit> = VecDeque::with_capacity(q.len());
+                let upstream = self.buf_edge[buf].0;
+                for flit in q {
+                    let dst = flit.dst as usize;
+                    if dst == b {
+                        if self.eject_free[b] <= self.now {
+                            self.eject_free[b] = self.now + 1;
+                            self.credits[buf] += 1;
+                            self.deliver(flit);
+                        } else {
+                            kept.push_back(flit);
+                        }
+                        continue;
+                    }
+                    let next = self.net.route_next(b, dst);
+                    let target = self.link_buf[&(b, next)];
+                    // Bubble rule: a flit that will leave `next`'s buffer
+                    // independently (ejection there) or that continues its
+                    // directional chain needs one credit; a flit entering a
+                    // chain (injection, turn) must leave a slot free.
+                    let needed = if dst == next
+                        || (upstream != LOCAL && self.same_direction(upstream, b, next))
+                    {
+                        1
+                    } else {
+                        2
+                    };
+                    if self.link_free[target] <= self.now && self.credits[target] >= needed {
+                        self.link_free[target] = self.now + 1;
+                        self.credits[target] -= 1;
+                        self.min_credit = self.min_credit.min(self.credits[target]);
+                        self.credits[buf] += 1;
+                        self.arrivals.push_back((
+                            self.now + 1 + self.cfg.hop_latency_cycles,
+                            target,
+                            flit,
+                        ));
+                    } else {
+                        kept.push_back(flit);
+                    }
+                }
+                self.bufs[buf] = kept;
+            }
+        }
+    }
+
+    fn deliver(&mut self, flit: NopFlit) {
+        let latency = self.now - flit.born + 1;
+        self.in_flight -= 1;
+        if self.in_warmup {
+            return;
+        }
+        self.stats.delivered += 1;
+        self.stats.avg_latency += latency as f64; // running sum; divided at end
+        self.stats.max_latency = self.stats.max_latency.max(latency);
+        self.stats.makespan = self.now + 1;
+        if self.track_pairs {
+            let key = ((flit.src as u64) << 32) | flit.dst as u64;
+            let p = self.stats.per_pair.entry(key).or_default();
+            p.count += 1;
+            p.sum_latency += latency;
+            p.max_latency = p.max_latency.max(latency);
+        }
+    }
+
+    #[inline]
+    fn busy(&self) -> bool {
+        self.in_flight > 0 || self.ungenerated > 0
+    }
+
+    /// Is any flit sitting in a buffer or source queue (i.e. work may be
+    /// possible next cycle, as opposed to everything being mid-flight)?
+    fn queued_work(&self) -> bool {
+        self.bufs.iter().any(|q| !q.is_empty())
+            || self
+                .sources
+                .iter()
+                .any(|s| !s.fifo.is_empty() || !s.pending.is_empty())
+    }
+
+    /// Run to completion per the configured mode.
+    pub fn run(self) -> SimStats {
+        self.run_audited().0
+    }
+
+    /// Like [`run`](Self::run), also returning the flow-control audit.
+    pub fn run_audited(mut self) -> (SimStats, NopAudit) {
+        match self.mode {
+            Mode::Steady { warmup, measure } => {
+                let end = warmup + measure;
+                while self.now < end {
+                    if self.now >= warmup {
+                        self.in_warmup = false;
+                    }
+                    self.process_arrivals();
+                    self.inject();
+                    self.forward();
+                    self.now += 1;
+                }
+            }
+            Mode::Drain { max_cycles } => {
+                self.in_warmup = false;
+                while self.busy() && self.now < max_cycles {
+                    self.process_arrivals();
+                    self.inject();
+                    self.forward();
+                    if self.queued_work() {
+                        self.now += 1;
+                    } else if let Some(&(t, _, _)) = self.arrivals.front() {
+                        // Everything is mid-flight: jump to the next event.
+                        self.now = t.max(self.now + 1);
+                    } else {
+                        break;
+                    }
+                }
+                self.stats.drained = !self.busy();
+            }
+        }
+        self.stats.cycles = self.now;
+        if self.stats.delivered > 0 {
+            self.stats.avg_latency /= self.stats.delivered as f64;
+        }
+        let audit = NopAudit {
+            capacity: self.cfg.buffer_flits as i64,
+            credits: self.credits,
+            min_credit: self.min_credit,
+        };
+        (self.stats, audit)
+    }
+}
+
+/// Uniform-random chiplet-to-chiplet traffic at `rate_per_chiplet`
+/// flits/chiplet/cycle — the package analogue of
+/// [`crate::noc::sim::uniform_random_flows`].
+pub fn uniform_nop_flows(k: usize, rate_per_chiplet: f64) -> Vec<FlowSpec> {
+    let mut flows = Vec::new();
+    if k < 2 {
+        return flows;
+    }
+    let pair_rate = rate_per_chiplet / (k - 1) as f64;
+    for s in 0..k {
+        for d in 0..k {
+            if s != d {
+                flows.push(FlowSpec {
+                    src: s,
+                    dst: d,
+                    rate: pair_rate,
+                    flits: 0,
+                });
+            }
+        }
+    }
+    flows
+}
+
+/// Zero-load NoP latency of one flit from `src` to `dst`, in NoP cycles:
+/// each of the `h` hops costs one serialization cycle plus the fixed SerDes
+/// latency, and ejection adds one cycle. The simulator reproduces this
+/// exactly on an otherwise idle package (unit-tested below), which anchors
+/// the sim-vs-analytical agreement checks.
+pub fn zero_load_cycles(net: &NopNetwork, cfg: &NopConfig, src: usize, dst: usize) -> f64 {
+    if src == dst {
+        return 0.0;
+    }
+    net.hops(src, dst) as f64 * (1.0 + cfg.hop_latency_cycles as f64) + 1.0
+}
+
+/// The analytical (load-independent) average latency for a flow set: the
+/// rate-weighted zero-load latency. This is exactly what the bandwidth +
+/// fixed-latency package model predicts at any injection rate — comparing
+/// it against [`NopSim`] steady measurements is what exposes SerDes
+/// congestion.
+pub fn analytical_latency(net: &NopNetwork, cfg: &NopConfig, flows: &[FlowSpec]) -> f64 {
+    let mut weighted = 0.0;
+    let mut weight = 0.0;
+    for f in flows {
+        if f.src == f.dst {
+            continue;
+        }
+        // Steady flows weight by rate; drain flows by flit count.
+        let w = if f.rate > 0.0 { f.rate } else { f.flits as f64 };
+        weighted += w * zero_load_cycles(net, cfg, f.src, f.dst);
+        weight += w;
+    }
+    if weight > 0.0 {
+        weighted / weight
+    } else {
+        0.0
+    }
+}
+
+/// Average latency exceeding this multiple of zero-load marks saturation.
+pub const SATURATION_FACTOR: f64 = 3.0;
+
+/// Smallest uniform injection rate (flits/chiplet/cycle, swept in 0.04
+/// steps up to 1.0) at which the package saturates: measured average
+/// latency exceeds [`SATURATION_FACTOR`] × the zero-load average (or the
+/// network stops delivering). `None` means no saturation up to rate 1.0 —
+/// the topology sustains full per-chiplet injection bandwidth.
+pub fn saturation_rate(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    seed: u64,
+) -> Option<f64> {
+    if k < 2 {
+        return None;
+    }
+    let net = NopNetwork::build(topology, k);
+    for step in 1..=25usize {
+        let rate = step as f64 * 0.04;
+        let flows = uniform_nop_flows(k, rate);
+        let zero_load = analytical_latency(&net, cfg, &flows).max(1.0);
+        let stats = NopSim::new(
+            topology,
+            k,
+            cfg,
+            &flows,
+            Mode::Steady {
+                warmup: 500,
+                measure: 2_000,
+            },
+            seed,
+        )
+        .run();
+        if stats.delivered == 0 || stats.avg_latency > SATURATION_FACTOR * zero_load {
+            return Some(rate);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NopConfig {
+        NopConfig::default() // link 32 bits, 20-cycle hops, 64-flit buffers
+    }
+
+    fn drain(flows: &[FlowSpec], topology: NopTopology, k: usize, seed: u64) -> SimStats {
+        NopSim::new(
+            topology,
+            k,
+            &cfg(),
+            flows,
+            Mode::Drain {
+                max_cycles: 1_000_000,
+            },
+            seed,
+        )
+        .run()
+    }
+
+    #[test]
+    fn zero_load_latency_matches_formula_exactly() {
+        // One lone flit on an idle package must hit the closed form on
+        // every topology: hops x (1 + hop_latency) + 1.
+        for topo in NopTopology::all() {
+            let net = NopNetwork::build(topo, 6);
+            for dst in 1..6 {
+                let flows = [FlowSpec {
+                    src: 0,
+                    dst,
+                    rate: 0.0,
+                    flits: 1,
+                }];
+                let stats = drain(&flows, topo, 6, 1);
+                assert!(stats.drained, "{topo:?} 0->{dst}");
+                assert_eq!(stats.delivered, 1);
+                let want = zero_load_cycles(&net, &cfg(), 0, dst);
+                assert_eq!(
+                    stats.avg_latency, want,
+                    "{topo:?} 0->{dst}: {} vs {want}",
+                    stats.avg_latency
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drain_conserves_flits() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 5,
+                rate: 0.0,
+                flits: 300,
+            },
+            FlowSpec {
+                src: 3,
+                dst: 1,
+                rate: 0.0,
+                flits: 170,
+            },
+            FlowSpec {
+                src: 5,
+                dst: 0,
+                rate: 0.0,
+                flits: 44,
+            },
+        ];
+        for topo in NopTopology::all() {
+            let s = drain(&flows, topo, 8, 7);
+            assert!(s.drained, "{topo:?}");
+            assert_eq!(s.injected, 514, "{topo:?}");
+            assert_eq!(s.delivered, 514, "{topo:?}");
+            assert!(s.makespan >= 300, "{topo:?} makespan {}", s.makespan);
+        }
+    }
+
+    #[test]
+    fn link_serialization_bounds_makespan() {
+        // 200 flits over the single 1-hop P2P link: the link moves one flit
+        // per cycle, so the makespan is ~200 plus pipeline fill, far below
+        // what 200 independent zero-load flits would suggest if the link
+        // were parallel.
+        let flows = [FlowSpec {
+            src: 0,
+            dst: 1,
+            rate: 0.0,
+            flits: 200,
+        }];
+        let s = drain(&flows, NopTopology::P2p, 2, 3);
+        assert!(s.drained);
+        assert!(
+            (200..=280).contains(&(s.makespan as i64)),
+            "makespan {}",
+            s.makespan
+        );
+    }
+
+    #[test]
+    fn ejection_serializes_hotspot() {
+        // P2P all-to-one: every flit is one dedicated link away, but the
+        // destination's RX ejects one flit per cycle — the drain cannot
+        // beat the 4 x 50 = 200-cycle ejection bound.
+        let flows: Vec<FlowSpec> = (1..5)
+            .map(|s| FlowSpec {
+                src: s,
+                dst: 0,
+                rate: 0.0,
+                flits: 50,
+            })
+            .collect();
+        let s = drain(&flows, NopTopology::P2p, 5, 9);
+        assert!(s.drained);
+        assert_eq!(s.delivered, 200);
+        assert!(s.makespan >= 200, "makespan {}", s.makespan);
+    }
+
+    #[test]
+    fn heavy_opposed_transit_drains_on_ring_and_mesh() {
+        // Saturating bidirectional transit through shared middles — the
+        // pattern that deadlocks naive credit flow control. The bubble rule
+        // must keep both directional chains moving.
+        let mut flows = Vec::new();
+        for (s, d) in [(0usize, 7usize), (7, 0), (1, 6), (6, 1), (2, 5), (5, 2)] {
+            flows.push(FlowSpec {
+                src: s,
+                dst: d,
+                rate: 0.0,
+                flits: 400,
+            });
+        }
+        for topo in [NopTopology::Ring, NopTopology::Mesh] {
+            let s = drain(&flows, topo, 8, 21);
+            assert!(s.drained, "{topo:?} wedged");
+            assert_eq!(s.delivered, 2_400, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn steady_latency_grows_with_load() {
+        let run = |rate: f64| {
+            let flows = uniform_nop_flows(16, rate);
+            NopSim::new(
+                NopTopology::Ring,
+                16,
+                &cfg(),
+                &flows,
+                Mode::Steady {
+                    warmup: 500,
+                    measure: 3_000,
+                },
+                42,
+            )
+            .run()
+        };
+        let lo = run(0.02);
+        let hi = run(0.8);
+        assert!(lo.delivered > 0 && hi.delivered > lo.delivered);
+        assert!(
+            hi.avg_latency > lo.avg_latency,
+            "latency must grow with load: {} vs {}",
+            lo.avg_latency,
+            hi.avg_latency
+        );
+    }
+
+    #[test]
+    fn low_load_sim_matches_analytical_within_15pct() {
+        for topo in NopTopology::all() {
+            let k = 8;
+            let net = NopNetwork::build(topo, k);
+            let flows = uniform_nop_flows(k, 0.02);
+            let ana = analytical_latency(&net, &cfg(), &flows);
+            let sim = NopSim::new(
+                topo,
+                k,
+                &cfg(),
+                &flows,
+                Mode::Steady {
+                    warmup: 500,
+                    measure: 6_000,
+                },
+                11,
+            )
+            .run();
+            assert!(sim.delivered > 0, "{topo:?}");
+            let err = (sim.avg_latency - ana).abs() / ana;
+            assert!(
+                err < 0.15,
+                "{topo:?}: sim {} vs analytical {ana} ({:.1}% off)",
+                sim.avg_latency,
+                100.0 * err
+            );
+        }
+    }
+
+    #[test]
+    fn ring_saturates_before_mesh_at_16_chiplets() {
+        // The k >= 16 congestion story: a 16-chiplet ring has a 2-link
+        // bisection vs the 4x4 mesh's 4 — uniform traffic saturates the
+        // ring at a visibly lower injection rate. The analytical model is
+        // load-independent and can never show this gap.
+        let ring = saturation_rate(NopTopology::Ring, 16, &cfg(), 5);
+        let mesh = saturation_rate(NopTopology::Mesh, 16, &cfg(), 5);
+        let ring_rate = ring.expect("16-chiplet ring must saturate below rate 1.0");
+        let mesh_rate = mesh.unwrap_or(1.04);
+        assert!(
+            ring_rate < mesh_rate,
+            "ring saturates at {ring_rate}, mesh at {mesh_rate}"
+        );
+    }
+
+    #[test]
+    fn credits_restored_and_never_negative_after_drain() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 3,
+                rate: 0.0,
+                flits: 120,
+            },
+            FlowSpec {
+                src: 2,
+                dst: 5,
+                rate: 0.0,
+                flits: 77,
+            },
+        ];
+        for topo in NopTopology::all() {
+            let (stats, audit) = NopSim::new(
+                topo,
+                7,
+                &cfg(),
+                &flows,
+                Mode::Drain {
+                    max_cycles: 1_000_000,
+                },
+                13,
+            )
+            .run_audited();
+            assert!(stats.drained, "{topo:?}");
+            assert!(audit.min_credit >= 0, "{topo:?}: {}", audit.min_credit);
+            for (n, &c) in audit.credits.iter().enumerate() {
+                assert_eq!(c, audit.capacity, "{topo:?}: buffer {n} leaked credits");
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_relay_sites_forward_traffic() {
+        // 7 chiplets on a 3x3 grid: routes may pass the passive relay
+        // sites 7/8; traffic must still drain and conserve.
+        let flows = [
+            FlowSpec {
+                src: 6,
+                dst: 2,
+                rate: 0.0,
+                flits: 40,
+            },
+            FlowSpec {
+                src: 1,
+                dst: 6,
+                rate: 0.0,
+                flits: 25,
+            },
+        ];
+        let s = drain(&flows, NopTopology::Mesh, 7, 17);
+        assert!(s.drained);
+        assert_eq!(s.delivered, 65);
+    }
+
+    #[test]
+    fn self_flows_are_ignored() {
+        let flows = [FlowSpec {
+            src: 2,
+            dst: 2,
+            rate: 0.5,
+            flits: 10,
+        }];
+        let s = drain(&flows, NopTopology::Ring, 4, 1);
+        assert_eq!(s.injected, 0);
+        assert!(s.drained);
+    }
+
+    #[test]
+    fn per_pair_tracking_counts_flits() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 3,
+                rate: 0.0,
+                flits: 10,
+            },
+            FlowSpec {
+                src: 1,
+                dst: 2,
+                rate: 0.0,
+                flits: 5,
+            },
+        ];
+        let s = NopSim::new(
+            NopTopology::Mesh,
+            4,
+            &cfg(),
+            &flows,
+            Mode::Drain {
+                max_cycles: 100_000,
+            },
+            5,
+        )
+        .track_pairs(true)
+        .run();
+        assert_eq!(s.per_pair.len(), 2);
+        assert_eq!(s.per_pair[&3u64].count, 10);
+        assert_eq!(s.per_pair[&((1u64 << 32) | 2)].count, 5);
+    }
+}

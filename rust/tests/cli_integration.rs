@@ -52,6 +52,14 @@ fn chiplet_subcommand_and_experiment() {
 }
 
 #[test]
+fn chiplet_sim_mode_and_nop_congestion_experiment() {
+    // `--sim` drives the flit-level NoP co-simulation end to end and the
+    // congestion experiment smoke-runs at k = 4 under --fast.
+    run(&argv(&["chiplet", "--model", "MLP", "--chiplets", "2", "--sim"])).unwrap();
+    run(&argv(&["figure", "nop-congestion", "--fast"])).unwrap();
+}
+
+#[test]
 fn unknown_inputs_error_cleanly() {
     assert!(run(&argv(&["figure", "99"])).is_err());
     assert!(run(&argv(&["table"])).is_err());

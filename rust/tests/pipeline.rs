@@ -137,7 +137,7 @@ fn driver_parallel_sweep_matches_serial() {
             })
         })
         .collect();
-    let par = driver.evaluate_many(&points);
+    let par = driver.evaluate_many(&points).unwrap();
     for (r, (name, arch, noc, backend)) in par.iter().zip(&points) {
         let g = by_name(name).unwrap();
         let serial = evaluate(

@@ -3,12 +3,13 @@
 //! latency monotonicity, mapping soundness, queueing-model sanity, EDAP
 //! positivity, and config round-trips.
 
-use imcnoc::config::{ArchConfig, Config, NocConfig, NopConfig};
+use imcnoc::config::{ArchConfig, Config, NocConfig, NopConfig, NopMode};
 use imcnoc::dnn::model_zoo;
 use imcnoc::mapping::{ChipletPartition, InjectionMatrix, Mapping};
 use imcnoc::noc::sim::{FlowSpec, Mode, NocSim};
 use imcnoc::noc::topology::{Network, Topology};
 use imcnoc::noc::AnalyticalModel;
+use imcnoc::nop::sim::{analytical_latency, saturation_rate, uniform_nop_flows, NopSim};
 use imcnoc::nop::topology::{NopNetwork, NopTopology};
 use imcnoc::util::proptest::check;
 
@@ -122,6 +123,116 @@ fn prop_noc_routing_reaches_without_cycles_within_bound() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_nop_sim_flit_conservation_and_credit_invariants() {
+    // The flit-level package simulator, over random topologies, sizes and
+    // drain workloads: everything injected is delivered, the network
+    // drains, credits never go negative, and every credit returns to its
+    // buffer once the network is empty.
+    check("nop-flit-conservation", 60, |g| {
+        let topo = *g.pick(&NopTopology::all());
+        let k = g.usize_in(2, 25);
+        let flows = random_flows(g, k, 60);
+        let expected: u64 = flows
+            .iter()
+            .filter(|f| f.src != f.dst)
+            .map(|f| f.flits)
+            .sum();
+        let cfg = NopConfig::default();
+        let (stats, audit) = NopSim::new(
+            topo,
+            k,
+            &cfg,
+            &flows,
+            Mode::Drain {
+                max_cycles: 50_000 + expected * 256,
+            },
+            g.u64(),
+        )
+        .run_audited();
+        if !stats.drained {
+            return Err(format!("{topo:?} k={k} did not drain"));
+        }
+        if stats.injected != expected || stats.delivered != expected {
+            return Err(format!(
+                "{topo:?} k={k}: injected {} delivered {} expected {expected}",
+                stats.injected, stats.delivered
+            ));
+        }
+        if audit.min_credit < 0 {
+            return Err(format!("credit went negative: {}", audit.min_credit));
+        }
+        if audit.credits.iter().any(|&c| c != audit.capacity) {
+            return Err(format!(
+                "credits leaked after drain: {:?} (capacity {})",
+                audit.credits, audit.capacity
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nop_sim_low_load_matches_analytical_within_15pct() {
+    // At low load the flit simulator must track the analytical package
+    // model on every NoP topology — the calibration contract that makes
+    // the congestion gap at high load meaningful.
+    check("nop-low-load-agreement", 9, |g| {
+        let topo = *g.pick(&NopTopology::all());
+        let k = g.usize_in(4, 20);
+        let cfg = NopConfig::default();
+        let net = NopNetwork::build(topo, k);
+        let flows = uniform_nop_flows(k, 0.02);
+        let ana = analytical_latency(&net, &cfg, &flows);
+        let stats = NopSim::new(
+            topo,
+            k,
+            &cfg,
+            &flows,
+            Mode::Steady {
+                warmup: 500,
+                measure: 6_000,
+            },
+            g.u64(),
+        )
+        .run();
+        if stats.delivered == 0 {
+            return Err(format!("{topo:?} k={k}: nothing delivered"));
+        }
+        let err = (stats.avg_latency - ana).abs() / ana;
+        if err > 0.15 {
+            return Err(format!(
+                "{topo:?} k={k}: sim {} vs analytical {ana} ({:.1}% off)",
+                stats.avg_latency,
+                100.0 * err
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nop_congestion_gap_appears_only_in_sim_mode() {
+    // Acceptance contract: at k = 16 the ring-vs-mesh congestion gap is a
+    // sim-only phenomenon. The analytical package latency is injection-rate
+    // independent by construction; the flit simulator saturates the
+    // 2-link-bisection ring strictly before the 4x4 mesh.
+    let cfg = NopConfig::default();
+    for topo in [NopTopology::Ring, NopTopology::Mesh] {
+        let net = NopNetwork::build(topo, 16);
+        let lo = analytical_latency(&net, &cfg, &uniform_nop_flows(16, 0.02));
+        let hi = analytical_latency(&net, &cfg, &uniform_nop_flows(16, 0.8));
+        assert!(
+            (lo - hi).abs() < 1e-9,
+            "{topo:?}: analytical latency moved with load ({lo} vs {hi})"
+        );
+    }
+    let ring = saturation_rate(NopTopology::Ring, 16, &cfg, 3)
+        .expect("16-chiplet ring must saturate below rate 1.0");
+    let mesh = saturation_rate(NopTopology::Mesh, 16, &cfg, 3).unwrap_or(1.04);
+    assert!(ring < mesh, "ring saturates at {ring}, mesh at {mesh}");
 }
 
 #[test]
@@ -339,9 +450,11 @@ fn prop_config_ini_roundtrip() {
             },
             nop: NopConfig {
                 topology: *g.pick(&NopTopology::all()),
+                mode: *g.pick(&[NopMode::Analytical, NopMode::Sim]),
                 chiplets: g.usize_in(1, 64),
                 link_width: *g.pick(&[8usize, 16, 32, 64]),
                 hop_latency_cycles: g.usize_in(1, 64) as u64,
+                buffer_flits: g.usize_in(2, 128),
                 energy_pj_per_bit: g.f64_in(0.1, 8.0).round(),
                 ..NopConfig::default()
             },
