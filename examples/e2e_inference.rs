@@ -42,14 +42,14 @@ fn main() -> anyhow::Result<()> {
     let imc = server.serve(&imc_path, &requests, IN_DIM)?;
     println!(
         "IMC-quantized MLP : {} reqs, {:.2} ms/batch (p50 {:.2}, p99 {:.2}), {:.1} req/s",
-        imc.requests, imc.mean_batch_ms, imc.p50_batch_ms, imc.p99_batch_ms, imc.throughput_rps
+        imc.requests, imc.mean_ms, imc.p50_ms, imc.p99_ms, imc.throughput_rps
     );
 
     // --- Serve the float twin and compare classifications. ---
     let flt = server.serve(&float_path, &requests, IN_DIM)?;
     println!(
         "float MLP         : {:.2} ms/batch, {:.1} req/s",
-        flt.mean_batch_ms, flt.throughput_rps
+        flt.mean_ms, flt.throughput_rps
     );
     let agree = imc
         .outputs

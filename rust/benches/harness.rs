@@ -3,8 +3,19 @@
 //! Each bench target is a `harness = false` binary that times closures with
 //! warmup + repeated measurement and prints mean/min/max per iteration —
 //! the format EXPERIMENTS.md records.
+//!
+//! For CI regression tracking, a [`Reporter`] collects per-bench samples
+//! and, when the `BENCH_JSON` environment variable names a file, writes
+//! (or merges into) a JSON array with the schema
+//! `{"name": …, "mean_ns": …, "p50": …, "p99": …}` — the artifact the
+//! bench workflow uploads and gates against a checked-in baseline.
+//! `BENCH_QUICK=1` asks bench mains for their reduced CI workload.
+
+#![allow(dead_code)]
 
 use std::time::Instant;
+
+use imcnoc::util::{mean, percentile};
 
 /// Time `f` for `iters` iterations after `warmup` runs; prints a row.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
@@ -28,4 +39,129 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f
 #[inline]
 pub fn observe<T>(value: &T) {
     std::hint::black_box(value);
+}
+
+/// Is the reduced CI workload requested (`BENCH_QUICK=1`)?
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok_and(|v| v != "0")
+}
+
+/// One recorded bench result, all times in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+/// Collects bench results and serializes them for the CI bench gate.
+#[derive(Default)]
+pub struct Reporter {
+    entries: Vec<BenchEntry>,
+}
+
+impl Reporter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Like [`bench`], additionally recording mean/p50/p99 (ns).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples_ns = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_secs_f64() * 1e9);
+        }
+        let entry = BenchEntry {
+            name: name.to_string(),
+            mean_ns: mean(&samples_ns),
+            p50: percentile(&samples_ns, 50.0),
+            p99: percentile(&samples_ns, 99.0),
+        };
+        let ms = entry.mean_ns / 1e6;
+        println!("bench {name:<42} mean {ms:>10.3} ms  (n={iters})");
+        self.entries.push(entry);
+    }
+
+    /// Write (or merge into) the `BENCH_JSON` file, if requested. Entries
+    /// with the same name are replaced, so several bench binaries can
+    /// share one artifact; the result is sorted by name.
+    pub fn finish(self) {
+        let Ok(path) = std::env::var("BENCH_JSON") else {
+            return;
+        };
+        let mut merged = match std::fs::read_to_string(&path) {
+            Ok(text) => parse_entries(&text),
+            Err(_) => Vec::new(),
+        };
+        for e in self.entries {
+            merged.retain(|m| m.name != e.name);
+            merged.push(e);
+        }
+        merged.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut out = String::from("[\n");
+        for (i, e) in merged.iter().enumerate() {
+            let sep = if i + 1 == merged.len() { "" } else { "," };
+            out.push_str(&format!(
+                "  {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50\": {:.1}, \"p99\": {:.1}}}{}\n",
+                e.name, e.mean_ns, e.p50, e.p99, sep
+            ));
+        }
+        out.push_str("]\n");
+        if let Err(e) = std::fs::write(&path, out) {
+            eprintln!("bench: failed to write {path}: {e}");
+        } else {
+            println!("bench: wrote {path}");
+        }
+    }
+}
+
+/// Tolerant reader for the JSON this harness writes (no serde offline):
+/// scans `{…}` objects for the four known fields.
+fn parse_entries(text: &str) -> Vec<BenchEntry> {
+    let mut out = Vec::new();
+    for obj in text.split('{').skip(1) {
+        let obj = obj.split('}').next().unwrap_or("");
+        let name = extract_str(obj, "name");
+        let mean_ns = extract_num(obj, "mean_ns");
+        let p50 = extract_num(obj, "p50");
+        let p99 = extract_num(obj, "p99");
+        if let (Some(name), Some(mean_ns), Some(p50), Some(p99)) = (name, mean_ns, p50, p99) {
+            out.push(BenchEntry {
+                name,
+                mean_ns,
+                p50,
+                p99,
+            });
+        }
+    }
+    out
+}
+
+fn extract_str(obj: &str, key: &str) -> Option<String> {
+    let rest = field_value(obj, key)?;
+    let rest = rest.strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn extract_num(obj: &str, key: &str) -> Option<f64> {
+    let rest = field_value(obj, key)?;
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// The text right after `"key":` (whitespace skipped).
+fn field_value<'a>(obj: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\"");
+    let after = &obj[obj.find(&pat)? + pat.len()..];
+    let after = after.trim_start();
+    let after = after.strip_prefix(':')?;
+    Some(after.trim_start())
 }

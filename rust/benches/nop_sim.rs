@@ -1,12 +1,13 @@
 //! Flit-level NoP simulator benchmarks: steady-state uniform traffic at
 //! low and near-saturation load, a saturation-point search, and the full
 //! hierarchical co-simulation (`mode = sim`) against the analytical
-//! package leg it replaces.
+//! package leg it replaces. `BENCH_QUICK=1` runs the reduced CI workload;
+//! `BENCH_JSON=<path>` records results for the bench regression gate.
 
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, observe};
+use harness::{observe, quick, Reporter};
 use imcnoc::arch::CommBackend;
 use imcnoc::config::{ArchConfig, NocConfig, NopConfig, NopMode, SimConfig};
 use imcnoc::dnn::models;
@@ -16,40 +17,44 @@ use imcnoc::nop::sim::{saturation_rate, uniform_nop_flows, NopSim};
 use imcnoc::nop::topology::NopTopology;
 
 fn main() {
+    let mut r = Reporter::new();
+    let quick = quick();
     let nop = NopConfig::default();
+    let ks: &[usize] = if quick { &[8] } else { &[8, 16, 25] };
+    let rates: &[f64] = if quick { &[0.05] } else { &[0.05, 0.5] };
+    let measure: u64 = if quick { 2_000 } else { 5_000 };
+    let iters = if quick { 3 } else { 5 };
 
     // Steady-state simulation cost across package sizes and load points.
     for topo in NopTopology::all() {
-        for k in [8usize, 16, 25] {
-            for rate in [0.05f64, 0.5] {
+        for &k in ks {
+            for &rate in rates {
                 let flows = uniform_nop_flows(k, rate);
-                bench(
-                    &format!("nop_steady_{}_k{k}_r{rate}", topo.name()),
-                    1,
-                    5,
-                    || {
-                        let stats = NopSim::new(
-                            topo,
-                            k,
-                            &nop,
-                            &flows,
-                            Mode::Steady {
-                                warmup: 500,
-                                measure: 5_000,
-                            },
-                            42,
-                        )
-                        .run();
-                        observe(&stats.avg_latency);
-                    },
-                );
+                let name = format!("nop_steady_{}_k{k}_r{rate}", topo.name());
+                r.bench(&name, 1, iters, || {
+                    let stats = NopSim::new(
+                        topo,
+                        k,
+                        &nop,
+                        &flows,
+                        Mode::Steady {
+                            warmup: 500,
+                            measure,
+                        },
+                        42,
+                    )
+                    .run();
+                    observe(&stats.avg_latency);
+                });
             }
         }
     }
 
     // The saturation sweep the congestion experiment runs per point.
-    bench("nop_saturation_search_mesh_k16", 0, 3, || {
-        let sat = saturation_rate(NopTopology::Mesh, 16, &nop, 7);
+    let sat_k = if quick { 8 } else { 16 };
+    let sat_name = format!("nop_saturation_search_mesh_k{sat_k}");
+    r.bench(&sat_name, 0, 3, || {
+        let sat = saturation_rate(NopTopology::Mesh, sat_k, &nop, 7);
         observe(&sat);
     });
 
@@ -67,9 +72,12 @@ fn main() {
             mode,
             ..NopConfig::default()
         };
-        bench(&format!("package_resnet50_k8_nop_{label}"), 1, 3, || {
+        let name = format!("package_resnet50_k8_nop_{label}");
+        r.bench(&name, 1, 3, || {
             let e = evaluate_package(&g, &arch, &noc, &cfg, &sim, CommBackend::Analytical);
             observe(&e.edap());
         });
     }
+
+    r.finish();
 }

@@ -1,0 +1,73 @@
+//! Chiplet-aware serving benchmarks: model construction (including the
+//! NoP saturation sweep) and the discrete-event serving simulation per
+//! routing policy. `BENCH_QUICK=1` runs the reduced CI workload;
+//! `BENCH_JSON=<path>` records the results for the bench regression gate.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{observe, quick, Reporter};
+use imcnoc::config::{ArchConfig, NocConfig, NopConfig, ServingConfig, SimConfig};
+use imcnoc::coordinator::scheduler::{ChipletScheduler, Policy, ServingModel};
+use imcnoc::dnn::models;
+use imcnoc::nop::topology::NopTopology;
+
+fn main() {
+    let mut r = Reporter::new();
+    let quick = quick();
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let g = models::squeezenet();
+    let requests = if quick { 128 } else { 1024 };
+    let iters = if quick { 3 } else { 10 };
+
+    // Model construction cost (dominated by the NoP saturation sweep).
+    let nop = NopConfig {
+        topology: NopTopology::Mesh,
+        chiplets: 8,
+        ..NopConfig::default()
+    };
+    r.bench("serve_model_build_squeezenet_k8_mesh", 0, 2, || {
+        let built = ServingModel::build(&g, &arch, &noc, &nop, &sim);
+        observe(&built.0.sat_link_util);
+    });
+
+    // The serving simulation per policy, reusing one built model.
+    let (model, part) = ServingModel::build(&g, &arch, &noc, &nop, &sim);
+    for policy in Policy::all() {
+        let cfg = ServingConfig {
+            policy,
+            requests,
+            ..ServingConfig::default()
+        };
+        let name = format!("serve_sim_squeezenet_k8_mesh_{}", policy.name());
+        r.bench(&name, 1, iters, || {
+            let mut sched = ChipletScheduler::new(model.clone(), part.clone(), &cfg);
+            let report = sched.run(&cfg, 42);
+            observe(&report.p99_ms);
+        });
+    }
+
+    // A larger package point for the congestion-aware policy only.
+    if !quick {
+        let nop16 = NopConfig {
+            topology: NopTopology::Mesh,
+            chiplets: 16,
+            ..NopConfig::default()
+        };
+        let (m16, p16) = ServingModel::build(&g, &arch, &noc, &nop16, &sim);
+        let cfg = ServingConfig {
+            policy: Policy::CongestionAware,
+            requests,
+            ..ServingConfig::default()
+        };
+        r.bench("serve_sim_squeezenet_k16_mesh_congestion-aware", 1, iters, || {
+            let mut sched = ChipletScheduler::new(m16.clone(), p16.clone(), &cfg);
+            let report = sched.run(&cfg, 42);
+            observe(&report.p99_ms);
+        });
+    }
+
+    r.finish();
+}

@@ -15,7 +15,10 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::arch::{evaluate, recommend_scaleout, recommend_topology, CommBackend};
-use crate::config::{ArchConfig, Config, MemTech, NocConfig, NopConfig, NopMode, SimConfig};
+use crate::config::{
+    ArchConfig, Config, MemTech, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig,
+};
+use crate::coordinator::scheduler::{serve_modeled, Policy};
 use crate::coordinator::server::{synthetic_requests, InferenceServer};
 use crate::dnn::by_name;
 use crate::experiments::{find, registry, Options};
@@ -76,6 +79,15 @@ impl Args {
                 .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
         }
     }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
 }
 
 fn flag_takes_value(name: &str) -> bool {
@@ -93,6 +105,9 @@ fn flag_takes_value(name: &str) -> bool {
             | "chiplets"
             | "noc"
             | "nop"
+            | "policy"
+            | "rate"
+            | "queue-depth"
     )
 }
 
@@ -448,27 +463,17 @@ pub fn run(argv: &[String]) -> Result<()> {
             print_scaleout_recommendation(&rec, &g.name);
         }
         "serve" => {
-            let artifact = args
-                .positional
-                .get(1)
-                .ok_or_else(|| anyhow!("usage: repro serve <artifact.hlo.txt>"))?;
-            let requests = args.get_usize("requests", 256)?;
-            let batch = args.get_usize("batch", 8)?;
-            let in_dim = args.get_usize("in-dim", 784)?;
-            let mut server = InferenceServer::new(batch)?;
-            eprintln!("platform: {}", server.platform());
-            let reqs = synthetic_requests(requests, in_dim, 42);
-            let report = server.serve(artifact, &reqs, in_dim)?;
-            println!(
-                "served {} requests in {} batches of {}: mean {:.3} ms/batch, p50 {:.3}, p99 {:.3}, {:.1} req/s",
-                report.requests,
-                report.batches,
-                report.batch_size,
-                report.mean_batch_ms,
-                report.p50_batch_ms,
-                report.p99_batch_ms,
-                report.throughput_rps
-            );
+            let fast = args.has("fast");
+            let model_flag = args.get("model").map(str::to_string).or_else(|| {
+                // `repro serve --fast` alone is the CI smoke run: the
+                // modeled path with its default small configuration.
+                (fast && args.positional.get(1).is_none()).then(|| "SqueezeNet".to_string())
+            });
+            if let Some(name) = model_flag {
+                serve_modeled_cmd(&args, &name, fast)?;
+            } else {
+                serve_pjrt_cmd(&args)?;
+            }
         }
         "config" => {
             if let Some(path) = args.get("load") {
@@ -533,6 +538,119 @@ pub fn run(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The modeled serving path: route synthetic requests over a chiplet
+/// package with the scheduler of [`crate::coordinator::scheduler`] and
+/// report per-chiplet queue utilization plus modeled p50/p99.
+fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
+    let g = by_name(name).ok_or_else(|| anyhow!("unknown DNN '{name}'"))?;
+    let defaults = ServingConfig::default();
+    let chiplets = args.get_usize("chiplets", 4)?;
+    let topo = match args.get("topology") {
+        None => NopTopology::Mesh,
+        Some(t) => parse_nop_topology(t)?,
+    };
+    let policy = match args.get("policy") {
+        None => defaults.policy,
+        Some(p) => Policy::parse(p)
+            .ok_or_else(|| anyhow!("unknown policy '{p}' (valid: {})", Policy::valid_names()))?,
+    };
+    let mut requests = args.get_usize("requests", defaults.requests)?;
+    if fast {
+        requests = requests.min(96);
+    }
+    let cfg = ServingConfig {
+        policy,
+        queue_depth: args.get_usize("queue-depth", defaults.queue_depth)?,
+        arrival_rps: args.get_f64("rate", defaults.arrival_rps)?,
+        requests,
+        batch: args.get_usize("batch", defaults.batch)?,
+    };
+    cfg.validate().map_err(|e| anyhow!("serving config: {e}"))?;
+    let nop = NopConfig {
+        topology: topo,
+        chiplets,
+        mode: if args.has("sim") {
+            NopMode::Sim
+        } else {
+            NopMode::Analytical
+        },
+        ..NopConfig::default()
+    };
+    nop.validate().map_err(|e| anyhow!("--chiplets: {e}"))?;
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let (model, report) = serve_modeled(&g, &arch, &noc, &nop, &sim, &cfg);
+
+    let mut t = Table::new(
+        format!(
+            "{} serving on {} chiplet(s) (NoP-{}, {} policy)",
+            g.name,
+            chiplets,
+            topo.name(),
+            policy.name()
+        ),
+        &["chiplet", "served", "utilization", "peak_queue"],
+    );
+    for s in &report.per_chiplet {
+        t.add_row(vec![
+            s.chiplet.to_string(),
+            s.served.to_string(),
+            fmt_sig(s.utilization, 3),
+            s.peak_queue.to_string(),
+        ]);
+    }
+    print_tables(&[t], args.has("csv"));
+    let ingress_max = model.ingress_s.iter().copied().fold(0.0f64, f64::max);
+    println!(
+        "served {}/{} requests ({} dropped) in {} batches of <= {}: modeled p50 {:.3} ms, p99 {:.3} ms, {:.1} req/s (offered {:.1})",
+        report.completed,
+        report.requests,
+        report.dropped,
+        report.batches,
+        report.batch_size,
+        report.p50_ms,
+        report.p99_ms,
+        report.throughput_rps,
+        report.offered_rps
+    );
+    println!(
+        "model: service {:.3} ms/frame, pipeline stage {:.4} ms, worst ingress {:.4} ms, partitioned alternative {:.3} ms, sat-link util {:.2}",
+        model.service_s * 1e3,
+        model.stage_s * 1e3,
+        ingress_max * 1e3,
+        model.partitioned_latency_s * 1e3,
+        model.sat_link_util
+    );
+    Ok(())
+}
+
+/// The PJRT-measured serving path (`repro serve <artifact.hlo.txt>`).
+fn serve_pjrt_cmd(args: &Args) -> Result<()> {
+    let artifact = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: repro serve <artifact> | repro serve --model <dnn>"))?;
+    let requests = args.get_usize("requests", 256)?;
+    let batch = args.get_usize("batch", 8)?;
+    let in_dim = args.get_usize("in-dim", 784)?;
+    let mut server = InferenceServer::new(batch)?;
+    eprintln!("platform: {}", server.platform());
+    let reqs = synthetic_requests(requests, in_dim, 42);
+    let report = server.serve(artifact, &reqs, in_dim)?;
+    println!(
+        "served {} requests in {} batches of {}: mean {:.3} ms/batch, p50 {:.3}, p99 {:.3}, {:.1} req/s",
+        report.requests,
+        report.batches,
+        report.batch_size,
+        report.mean_ms,
+        report.p50_ms,
+        report.p99_ms,
+        report.throughput_rps
+    );
+    Ok(())
+}
+
 fn usage() -> &'static str {
     "imcnoc repro — interconnect-aware IMC accelerator study (JETC'21 reproduction)
 
@@ -548,6 +666,10 @@ USAGE:
                                                             recommendation: whole zoo, or the
                                                             full design space of one model
   repro serve <artifact> [--requests N] [--batch N]         serve inference via PJRT
+  repro serve --model <dnn> [--chiplets N] [--topology t]   modeled chiplet-aware serving:
+              [--policy round-robin|least-latency|          per-chiplet queues, NoP-priced
+               congestion-aware] [--rate RPS] [--batch N]   routing, modeled p50/p99
+              [--queue-depth N] [--requests N] [--sim]      (--fast: small smoke config)
   repro sweep [--tech sram|reram] [--exact]                 parallel zoo sweep
   repro config [--load path]                                show/parse configuration
   repro list                                                list experiments
@@ -660,6 +782,57 @@ mod tests {
             "0".into(),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn run_serve_modeled() {
+        // The CI smoke configuration: SqueezeNet, 4 chiplets, mesh,
+        // congestion-aware — all defaults under --fast.
+        run(&["serve".into(), "--fast".into()]).unwrap();
+        // Explicit flags, small request count to stay quick.
+        run(&[
+            "serve".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--topology".into(),
+            "ring".into(),
+            "--policy".into(),
+            "round-robin".into(),
+            "--requests".into(),
+            "64".into(),
+            "--batch".into(),
+            "1".into(),
+        ])
+        .unwrap();
+        // Bad policy / topology / chiplet count error cleanly.
+        let err = run(&[
+            "serve".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--policy".into(),
+            "fifo".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("least-latency"), "{err}");
+        assert!(run(&[
+            "serve".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--topology".into(),
+            "torus".into(),
+        ])
+        .is_err());
+        assert!(run(&[
+            "serve".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--chiplets".into(),
+            "0".into(),
+        ])
+        .is_err());
+        assert!(run(&["serve".into(), "--model".into(), "NoSuchNet".into()]).is_err());
     }
 
     #[test]

@@ -300,6 +300,102 @@ impl NopConfig {
     }
 }
 
+/// Request-routing policy of the chiplet-aware serving scheduler
+/// ([`crate::coordinator::scheduler::ChipletScheduler`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Cycle through the chiplets in id order, skipping full queues.
+    RoundRobin,
+    /// Route to the chiplet with the lowest modeled completion time
+    /// (queue backlog + NoP ingress + service + egress).
+    LeastLatency,
+    /// [`Policy::LeastLatency`], but chiplets whose ingress path contains
+    /// a package link running near the measured saturation utilization
+    /// ([`crate::coordinator::scheduler::SATURATION_BACKOFF`] ×
+    /// [`crate::coordinator::scheduler::ServingModel::sat_link_util`])
+    /// are backed off — considered only when every chiplet is congested.
+    CongestionAware,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLatency => "least-latency",
+            Policy::CongestionAware => "congestion-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(Policy::RoundRobin),
+            "least-latency" | "least" | "ll" => Some(Policy::LeastLatency),
+            "congestion-aware" | "congestion" | "ca" => Some(Policy::CongestionAware),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Policy; 3] {
+        [
+            Policy::RoundRobin,
+            Policy::LeastLatency,
+            Policy::CongestionAware,
+        ]
+    }
+
+    /// The valid `parse` spellings, for CLI error messages.
+    pub fn valid_names() -> &'static str {
+        "round-robin, least-latency, congestion-aware"
+    }
+}
+
+/// Serving-scheduler parameters for the chiplet-aware serving loop
+/// ([`crate::coordinator::scheduler`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    /// Request-routing policy over the per-chiplet queues.
+    pub policy: Policy,
+    /// Per-chiplet queue capacity; admissions beyond it are dropped.
+    pub queue_depth: usize,
+    /// Poisson arrival rate in requests/s. 0 = auto: a fixed fraction of
+    /// the modeled package capacity (`AUTO_LOAD_FACTOR`).
+    pub arrival_rps: f64,
+    /// Requests per serving simulation.
+    pub requests: usize,
+    /// Per-chiplet serving batch (frames pipelined through one replica).
+    pub batch: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            policy: Policy::CongestionAware,
+            queue_depth: 16,
+            arrival_rps: 0.0,
+            requests: 512,
+            batch: 4,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.queue_depth == 0 || self.queue_depth > 4096 {
+            return Err("serving queue_depth must be in [1, 4096]".into());
+        }
+        if self.requests == 0 || self.requests > 1_000_000 {
+            return Err("serving requests must be in [1, 1000000]".into());
+        }
+        if self.batch == 0 || self.batch > 1024 {
+            return Err("serving batch must be in [1, 1024]".into());
+        }
+        if !self.arrival_rps.is_finite() || self.arrival_rps < 0.0 {
+            return Err("serving arrival_rps must be >= 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// Simulation-control parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -330,6 +426,7 @@ pub struct Config {
     pub arch: ArchConfig,
     pub noc: NocConfig,
     pub nop: NopConfig,
+    pub serving: ServingConfig,
     pub sim: SimConfig,
 }
 
@@ -405,6 +502,21 @@ impl Config {
                 ("nop", "phy_area_mm2") => {
                     cfg.nop.phy_area_mm2 = v.parse().map_err(|_| parse_err(key))?
                 }
+                ("serving", "policy") => {
+                    cfg.serving.policy = Policy::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("serving", "queue_depth") => {
+                    cfg.serving.queue_depth = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("serving", "arrival_rps") => {
+                    cfg.serving.arrival_rps = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("serving", "requests") => {
+                    cfg.serving.requests = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("serving", "batch") => {
+                    cfg.serving.batch = v.parse().map_err(|_| parse_err(key))?
+                }
                 ("sim", "seed") => cfg.sim.seed = v.parse().map_err(|_| parse_err(key))?,
                 ("sim", "warmup_cycles") => {
                     cfg.sim.warmup_cycles = v.parse().map_err(|_| parse_err(key))?
@@ -421,6 +533,7 @@ impl Config {
         cfg.arch.validate()?;
         cfg.noc.validate()?;
         cfg.nop.validate()?;
+        cfg.serving.validate()?;
         Ok(cfg)
     }
 
@@ -440,7 +553,9 @@ impl Config {
              flits_per_packet = {}\n\n[nop]\ntopology = {}\nmode = {}\n\
              chiplets = {}\nlink_width = {}\nfreq_hz = {}\n\
              hop_latency_cycles = {}\nbuffer_flits = {}\n\
-             energy_pj_per_bit = {}\nphy_area_mm2 = {}\n\n[sim]\nseed = {}\n\
+             energy_pj_per_bit = {}\nphy_area_mm2 = {}\n\n[serving]\n\
+             policy = {}\nqueue_depth = {}\narrival_rps = {}\n\
+             requests = {}\nbatch = {}\n\n[sim]\nseed = {}\n\
              warmup_cycles = {}\nmeasure_cycles = {}\ndrain_cycles = {}\n",
             self.arch.pe_size,
             self.arch.cell_bits,
@@ -467,6 +582,11 @@ impl Config {
             self.nop.buffer_flits,
             self.nop.energy_pj_per_bit,
             self.nop.phy_area_mm2,
+            self.serving.policy.name(),
+            self.serving.queue_depth,
+            self.serving.arrival_rps,
+            self.serving.requests,
+            self.serving.batch,
             self.sim.seed,
             self.sim.warmup_cycles,
             self.sim.measure_cycles,
@@ -542,6 +662,23 @@ mod tests {
         // Bubble flow control needs at least two buffer slots.
         assert!(Config::from_ini("[nop]\nbuffer_flits = 1\n").is_err());
         assert!(Config::from_ini("[nop]\nmode = psychic\n").is_err());
+    }
+
+    #[test]
+    fn serving_section_parses_and_validates() {
+        let text = "[serving]\npolicy = round-robin\nqueue_depth = 8\n\
+                    arrival_rps = 1200.5\nrequests = 64\nbatch = 2\n";
+        let cfg = Config::from_ini(text).unwrap();
+        assert_eq!(cfg.serving.policy, Policy::RoundRobin);
+        assert_eq!(cfg.serving.queue_depth, 8);
+        assert_eq!(cfg.serving.arrival_rps, 1200.5);
+        assert_eq!(cfg.serving.requests, 64);
+        assert_eq!(cfg.serving.batch, 2);
+        assert_eq!(Config::default().serving.policy, Policy::CongestionAware);
+        assert!(Config::from_ini("[serving]\npolicy = fifo\n").is_err());
+        assert!(Config::from_ini("[serving]\nqueue_depth = 0\n").is_err());
+        assert!(Config::from_ini("[serving]\nbatch = 0\n").is_err());
+        assert!(Config::from_ini("[serving]\narrival_rps = -2\n").is_err());
     }
 
     #[test]

@@ -18,7 +18,8 @@ use crate::noc::topology::Topology;
 /// `f` on one of up to `threads` workers (default `available_parallelism`)
 /// and the results come back in input order. This is the fan-out primitive
 /// behind [`Driver::evaluate_many`] and the driver-parallelized experiment
-/// sweeps (e.g. `fig_nop_congestion`).
+/// sweeps (e.g. `fig_nop_congestion`, and `fig_serving`'s per-point
+/// serving-model builds).
 pub fn par_map<T, R, F>(items: &[T], threads: Option<usize>, f: F) -> Vec<R>
 where
     T: Sync,

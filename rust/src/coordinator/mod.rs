@@ -1,11 +1,14 @@
 //! Layer-3 coordination: the simulation driver that orchestrates
 //! circuit-estimator + NoC-simulator runs across DNNs/topologies/configs
-//! in parallel (the paper's "simulation framework", Fig. 6), and the
-//! inference serving loop that batches requests through the PJRT-compiled
-//! artifacts.
+//! in parallel (the paper's "simulation framework", Fig. 6), the inference
+//! serving loop that batches requests through the PJRT-compiled artifacts,
+//! and the chiplet-aware serving scheduler that routes requests to
+//! per-chiplet queues priced by the NoP cost model.
 
 pub mod driver;
+pub mod scheduler;
 pub mod server;
 
 pub use driver::{par_map, Driver, EvalKey};
-pub use server::{InferenceServer, ServeReport};
+pub use scheduler::{serve_modeled, ChipletScheduler, Policy, ServingModel};
+pub use server::{ChipletQueueStats, InferenceServer, ServeReport};

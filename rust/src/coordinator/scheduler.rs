@@ -1,0 +1,728 @@
+//! Chiplet-aware batched serving: per-chiplet request queues priced by the
+//! NoP cost model.
+//!
+//! The PJRT serving loop ([`super::server`]) measures wall-clock latency of
+//! one compiled artifact on the host CPU. This module is its *modeled*
+//! counterpart for a 2.5D package of IMC chiplets: IMC crossbars are
+//! weight-stationary, so serving scale-out is data-parallel — every chiplet
+//! holds a replica of the DNN and whole requests are routed to per-chiplet
+//! queues. What makes routing non-trivial is the package interconnect:
+//! request inputs enter at the package I/O gateway and ride NoP SerDes
+//! links to the serving chiplet, so distant chiplets cost more per request
+//! and the gateway's few links congest first — the paper's
+//! interconnect-dominates argument, one hierarchy level up.
+//!
+//! The pieces:
+//!
+//! * [`ServingModel`] — all modeled costs for one (DNN, package) point:
+//!   per-replica service time from [`crate::nop::evaluate_package`] on a
+//!   1-chiplet package (regression-tested equal to the flat single-chip
+//!   evaluator), the layer-pipeline interval that batching amortizes
+//!   against, per-chiplet ingress/egress transfer times over the
+//!   [`NopNetwork`] route (analytical `nop_transfer_cycles`, or a
+//!   flit-level [`NopSim`] drain under `[nop] mode = sim`), the
+//!   model-parallel alternative (the same DNN partitioned over all
+//!   chiplets), and the per-link busy fraction at the package saturation
+//!   rate measured by [`crate::nop::sim::saturation_rate`].
+//! * [`ChipletScheduler`] — per-chiplet queues over a
+//!   [`ChipletPartition`] plus a discrete-event serving simulation:
+//!   Poisson arrivals, policy-driven admission, per-link ingress
+//!   serialization over shared link state (so congestion is real),
+//!   batched service, drop accounting. Emits a [`ServeReport`] — the same
+//!   report type the PJRT path produces.
+//! * [`Policy`] — round-robin, least-modeled-latency, and the
+//!   NoP-congestion-aware policy that backs off chiplets whose ingress
+//!   path runs near the measured saturation utilization.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::arch::evaluator::{evaluate, CommBackend};
+use crate::circuit::ChipCost;
+use crate::config::{ArchConfig, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig};
+use crate::coordinator::server::{ChipletQueueStats, ServeReport};
+use crate::dnn::DnnGraph;
+use crate::mapping::{ChipletPartition, Mapping};
+use crate::noc::sim::{FlowSpec, Mode};
+use crate::nop::evaluator::{evaluate_package, nop_transfer_cycles};
+use crate::nop::sim::{saturation_rate, NopSim};
+use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::util::Pcg32;
+
+pub use crate::config::Policy;
+
+/// Fraction of the measured saturation utilization at which the
+/// congestion-aware policy backs off a chiplet's ingress path.
+pub const SATURATION_BACKOFF: f64 = 0.9;
+
+/// Fraction of the modeled capacity offered when `[serving] arrival_rps`
+/// is 0 (auto): close enough to saturation that queueing is visible, far
+/// enough that the package stays stable under a balanced policy.
+pub const AUTO_LOAD_FACTOR: f64 = 0.85;
+
+/// Modeled serving costs for one (DNN, package) configuration.
+#[derive(Clone, Debug)]
+pub struct ServingModel {
+    pub dnn: String,
+    pub chiplets: usize,
+    pub topology: NopTopology,
+    pub mode: NopMode,
+    /// One frame through one chiplet replica, seconds (the single-chip
+    /// modeled latency, via `evaluate_package` on a 1-chiplet package).
+    pub service_s: f64,
+    /// Steady-state inter-frame interval when the frames of a batch
+    /// pipeline through the replica's layers, seconds (slowest stage).
+    pub stage_s: f64,
+    /// NoP flits of one request's input / output payload.
+    pub ingress_flits: u64,
+    pub egress_flits: u64,
+    /// Directed package links of the gateway→chiplet route, per chiplet.
+    pub paths: Vec<Vec<(usize, usize)>>,
+    /// Zero-load input transfer time gateway→chiplet, seconds.
+    pub ingress_s: Vec<f64>,
+    /// Zero-load result return time chiplet→gateway, seconds.
+    pub egress_s: Vec<f64>,
+    /// Seconds one package link is busy serializing one ingress payload.
+    pub link_busy_s: f64,
+    /// Fixed per-hop SerDes latency, seconds.
+    pub hop_s: f64,
+    /// Per-link busy fraction at the package saturation rate measured by
+    /// [`crate::nop::sim::saturation_rate`]; 1.0 when the topology
+    /// sustains full injection (or when k = 1).
+    pub sat_link_util: f64,
+    /// Package I/O entry chiplet (owns the first mapped layer).
+    pub gateway: usize,
+    /// SerDes port bundles on the gateway (its injection bandwidth).
+    pub gateway_ports: usize,
+    /// The model-parallel alternative: per-frame latency of the same DNN
+    /// partitioned over all `chiplets` (for context in reports).
+    pub partitioned_latency_s: f64,
+    /// Populated chiplets / cut bits of that partition.
+    pub partition_populated: usize,
+    pub partition_cut_bits: u64,
+}
+
+impl ServingModel {
+    /// Price every serving cost for `graph` on a `nop.chiplets`-chiplet
+    /// package, returning the model plus the [`ChipletPartition`] the
+    /// scheduler's queues sit over. The per-chiplet legs stay analytical
+    /// (the scheduler prices thousands of admissions); the *package* legs
+    /// honor `nop.mode` — ingress transfers are priced either by
+    /// `nop_transfer_cycles` or by a flit-level [`NopSim`] drain.
+    pub fn build(
+        graph: &DnnGraph,
+        arch: &ArchConfig,
+        noc: &NocConfig,
+        nop: &NopConfig,
+        sim: &SimConfig,
+    ) -> (Self, ChipletPartition) {
+        let k = nop.chiplets;
+        let solo = NopConfig {
+            chiplets: 1,
+            ..nop.clone()
+        };
+        let replica = evaluate_package(graph, arch, noc, &solo, sim, CommBackend::Analytical);
+        let service_s = replica.latency_s();
+
+        // Layer-pipeline interval: consecutive frames of a batch stream
+        // through the replica layer by layer, so the steady-state
+        // inter-frame gap is the slowest per-layer stage. comm_per_layer
+        // is sparse (layers with no inbound on-chip flows are skipped) and
+        // keyed by graph layer id, so join on that id rather than zipping.
+        let flat = evaluate(graph, noc.topology, arch, noc, sim, CommBackend::Analytical);
+        let mapping = Mapping::build(graph, arch);
+        let chip = ChipCost::evaluate(graph, &mapping, arch);
+        let comm_of: HashMap<usize, u64> = flat.comm_per_layer.iter().copied().collect();
+        let mut stage_cycles = 1.0f64;
+        for (i, lt) in mapping.layers.iter().enumerate() {
+            let compute = chip.per_layer[i].cycles as f64;
+            let comm = comm_of.get(&lt.layer).copied().unwrap_or(0) as f64;
+            stage_cycles = stage_cycles.max(compute.max(comm));
+        }
+        let stage_s = (stage_cycles / arch.freq_hz).min(service_s);
+
+        // The model-parallel alternative and the partition the queues sit
+        // over (which also fixes the package I/O gateway).
+        let part = ChipletPartition::build(graph, &mapping, arch, k);
+        let pkg = evaluate_package(graph, arch, noc, nop, sim, CommBackend::Analytical);
+        let gateway = part.gateway_chiplet();
+
+        let net = NopNetwork::build(nop.topology, k);
+        let ingress_bits = graph.input_bits(arch.n_bits);
+        let egress_bits = graph.output_bits(arch.n_bits);
+        let ingress_flits = ingress_bits.div_ceil(nop.link_width as u64).max(1);
+        let egress_flits = egress_bits.div_ceil(nop.link_width as u64).max(1);
+        let nop_cycle_s = 1.0 / nop.freq_hz;
+
+        let mut paths: Vec<Vec<(usize, usize)>> = Vec::with_capacity(k);
+        let mut ingress_s = Vec::with_capacity(k);
+        let mut egress_s = Vec::with_capacity(k);
+        for c in 0..k {
+            if c == gateway {
+                paths.push(Vec::new());
+                ingress_s.push(0.0);
+                egress_s.push(0.0);
+                continue;
+            }
+            let route = net.route_path(gateway, c);
+            paths.push(route.windows(2).map(|w| (w[0], w[1])).collect());
+            let hops = net.hops(gateway, c);
+            let ing = match nop.mode {
+                NopMode::Analytical => {
+                    nop_transfer_cycles(ingress_bits, hops, nop, arch.freq_hz) / arch.freq_hz
+                }
+                NopMode::Sim => {
+                    let flows = [FlowSpec {
+                        src: gateway,
+                        dst: c,
+                        rate: 0.0,
+                        flits: ingress_flits,
+                    }];
+                    let budget = 10_000
+                        + ingress_flits
+                            .saturating_mul(4)
+                            .saturating_mul(nop.hop_latency_cycles + 2);
+                    let stats = NopSim::new(
+                        nop.topology,
+                        k,
+                        nop,
+                        &flows,
+                        Mode::Drain { max_cycles: budget },
+                        sim.seed ^ c as u64,
+                    )
+                    .run();
+                    let cycles = if stats.drained { stats.makespan } else { budget };
+                    cycles as f64 * nop_cycle_s
+                }
+            };
+            ingress_s.push(ing);
+            let egr = nop_transfer_cycles(egress_bits, hops, nop, arch.freq_hz);
+            egress_s.push(egr / arch.freq_hz);
+        }
+
+        // Convert the measured package saturation rate (uniform flits per
+        // chiplet per NoP cycle) into the per-link busy fraction it
+        // implies: rate × k flit-hops spread over the link graph.
+        let sat_link_util = match saturation_rate(nop.topology, k, nop, sim.seed) {
+            None => 1.0,
+            Some(rate) => {
+                let mut hop_sum = 0usize;
+                let mut pairs = 0usize;
+                for s in 0..k {
+                    for d in 0..k {
+                        if s != d {
+                            hop_sum += net.hops(s, d);
+                            pairs += 1;
+                        }
+                    }
+                }
+                let avg_hops = hop_sum as f64 / pairs.max(1) as f64;
+                let load = rate * k as f64 * avg_hops / net.link_count().max(1) as f64;
+                load.min(1.0)
+            }
+        };
+
+        let model = Self {
+            dnn: graph.name.clone(),
+            chiplets: k,
+            topology: nop.topology,
+            mode: nop.mode,
+            service_s,
+            stage_s,
+            ingress_flits,
+            egress_flits,
+            paths,
+            ingress_s,
+            egress_s,
+            link_busy_s: ingress_flits as f64 * nop_cycle_s,
+            hop_s: nop.hop_latency_cycles as f64 * nop_cycle_s,
+            sat_link_util,
+            gateway,
+            gateway_ports: net.ports(gateway),
+            partitioned_latency_s: pkg.latency_s(),
+            partition_populated: pkg.populated,
+            partition_cut_bits: pkg.cross_bits,
+        };
+        (model, part)
+    }
+
+    /// Chiplet occupancy per request at full batches, seconds.
+    pub fn per_request_s(&self, batch: usize) -> f64 {
+        let b = batch.max(1) as f64;
+        (self.service_s + (b - 1.0) * self.stage_s) / b
+    }
+
+    /// Aggregate modeled request capacity: the smaller of the replicas'
+    /// service bandwidth and the gateway's NoP injection bandwidth.
+    pub fn capacity_rps(&self, batch: usize) -> f64 {
+        let svc = self.chiplets as f64 / self.per_request_s(batch);
+        if self.chiplets == 1 {
+            return svc;
+        }
+        let net = self.gateway_ports as f64 / self.link_busy_s;
+        svc.min(net)
+    }
+}
+
+/// Two-bucket sliding estimate of a package link's busy fraction.
+#[derive(Clone, Copy, Debug, Default)]
+struct LinkWindow {
+    bucket_start: f64,
+    cur: f64,
+    prev: f64,
+}
+
+impl LinkWindow {
+    fn add(&mut self, t: f64, busy_s: f64, window_s: f64) {
+        self.roll(t, window_s);
+        self.cur += busy_s;
+    }
+
+    fn roll(&mut self, t: f64, window_s: f64) {
+        if t >= self.bucket_start + 2.0 * window_s {
+            self.bucket_start = t;
+            self.prev = 0.0;
+            self.cur = 0.0;
+        } else if t >= self.bucket_start + window_s {
+            self.bucket_start += window_s;
+            self.prev = self.cur;
+            self.cur = 0.0;
+        }
+    }
+
+    fn utilization(&mut self, t: f64, window_s: f64) -> f64 {
+        self.roll(t, window_s);
+        let span = window_s + (t - self.bucket_start).max(0.0);
+        ((self.prev + self.cur) / span.max(1e-12)).min(1.0)
+    }
+}
+
+/// A request admitted to a chiplet queue: arrival time at the gateway and
+/// the time its input finishes streaming to the chiplet.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    arrival: f64,
+    ready: f64,
+}
+
+/// Per-chiplet request queues over a [`ChipletPartition`], plus the
+/// discrete-event serving simulation that drives them.
+pub struct ChipletScheduler {
+    pub model: ServingModel,
+    pub partition: ChipletPartition,
+    policy: Policy,
+    queue_depth: usize,
+    batch: usize,
+    // Dynamic state, owned by one `run`.
+    free_at: Vec<f64>,
+    queues: Vec<VecDeque<Pending>>,
+    link_free: HashMap<(usize, usize), f64>,
+    link_util: HashMap<(usize, usize), LinkWindow>,
+    window_s: f64,
+    rr_next: usize,
+    busy_s: Vec<f64>,
+    served: Vec<usize>,
+    peak_queue: Vec<usize>,
+    batches: usize,
+    latencies_ms: Vec<f64>,
+}
+
+impl ChipletScheduler {
+    pub fn new(model: ServingModel, partition: ChipletPartition, cfg: &ServingConfig) -> Self {
+        let k = model.chiplets;
+        // Utilization window: long enough to smooth tens of payloads on a
+        // link, short enough to track saturation as it builds.
+        let window_s = (32.0 * model.link_busy_s).max(16.0 * model.stage_s);
+        Self {
+            model,
+            partition,
+            policy: cfg.policy,
+            queue_depth: cfg.queue_depth.max(1),
+            batch: cfg.batch.max(1),
+            free_at: vec![0.0; k],
+            queues: (0..k).map(|_| VecDeque::new()).collect(),
+            link_free: HashMap::new(),
+            link_util: HashMap::new(),
+            window_s,
+            rr_next: 0,
+            busy_s: vec![0.0; k],
+            served: vec![0; k],
+            peak_queue: vec![0; k],
+            batches: 0,
+            latencies_ms: Vec::new(),
+        }
+    }
+
+    /// Reset every per-run accumulator so one scheduler can host several
+    /// independent runs.
+    fn reset(&mut self) {
+        let k = self.model.chiplets;
+        self.free_at = vec![0.0; k];
+        self.queues = (0..k).map(|_| VecDeque::new()).collect();
+        self.link_free.clear();
+        self.link_util.clear();
+        self.rr_next = 0;
+        self.busy_s = vec![0.0; k];
+        self.served = vec![0; k];
+        self.peak_queue = vec![0; k];
+        self.batches = 0;
+        self.latencies_ms.clear();
+    }
+
+    /// Modeled completion time of a request admitted to chiplet `c` at
+    /// `t` — the price the least-latency policies minimize.
+    fn price(&self, c: usize, t: f64) -> f64 {
+        let m = &self.model;
+        let backlog = (self.free_at[c] - t).max(0.0)
+            + self.queues[c].len() as f64 * m.per_request_s(self.batch);
+        backlog + m.ingress_s[c] + m.service_s + m.egress_s[c]
+    }
+
+    /// Worst busy fraction among the links of chiplet `c`'s ingress path.
+    fn path_utilization(&mut self, c: usize, t: f64) -> f64 {
+        let window_s = self.window_s;
+        let mut worst = 0.0f64;
+        for link in &self.model.paths[c] {
+            let win = self.link_util.entry(*link).or_default();
+            worst = worst.max(win.utilization(t, window_s));
+        }
+        worst
+    }
+
+    /// Pick the chiplet for a request arriving at `t`, or `None` when
+    /// every queue is at `queue_depth` (the request is dropped).
+    fn pick(&mut self, t: f64) -> Option<usize> {
+        let k = self.model.chiplets;
+        match self.policy {
+            Policy::RoundRobin => {
+                for i in 0..k {
+                    let c = (self.rr_next + i) % k;
+                    if self.queues[c].len() < self.queue_depth {
+                        self.rr_next = (c + 1) % k;
+                        return Some(c);
+                    }
+                }
+                None
+            }
+            Policy::LeastLatency | Policy::CongestionAware => {
+                let aware = self.policy == Policy::CongestionAware;
+                let threshold = SATURATION_BACKOFF * self.model.sat_link_util;
+                let mut best: Option<(bool, f64, usize)> = None;
+                for c in 0..k {
+                    if self.queues[c].len() >= self.queue_depth {
+                        continue;
+                    }
+                    let backed_off = aware && self.path_utilization(c, t) >= threshold;
+                    let price = self.price(c, t);
+                    let better = match &best {
+                        None => true,
+                        Some((bo, p, _)) => (backed_off, price) < (*bo, *p),
+                    };
+                    if better {
+                        best = Some((backed_off, price, c));
+                    }
+                }
+                best.map(|(_, _, c)| c)
+            }
+        }
+    }
+
+    /// Stream one request's input over the gateway→`c` package route
+    /// starting at `t`; returns when the payload is resident on `c`.
+    /// Links serialize (shared `link_free` state) and the head pipelines
+    /// hop by hop, matching `nop_transfer_cycles` at zero load.
+    fn ingress(&mut self, c: usize, t: f64) -> f64 {
+        let ser_s = self.model.link_busy_s;
+        let hop_s = self.model.hop_s;
+        let window_s = self.window_s;
+        let mut head = t;
+        let mut done = t;
+        for &link in &self.model.paths[c] {
+            let free = *self.link_free.get(&link).unwrap_or(&0.0);
+            let start = head.max(free);
+            let finish = (start + ser_s).max(done);
+            self.link_free.insert(link, finish);
+            let win = self.link_util.entry(link).or_default();
+            win.add(start, finish - start, window_s);
+            head = start + hop_s;
+            done = finish + hop_s;
+        }
+        done
+    }
+
+    /// Start every batch that can begin by `t` (work-conserving service:
+    /// a free chiplet takes up to `batch` input-resident requests).
+    fn advance(&mut self, t: f64) {
+        let service_s = self.model.service_s;
+        let stage_s = self.model.stage_s;
+        for c in 0..self.model.chiplets {
+            loop {
+                let head_ready = match self.queues[c].front() {
+                    None => break,
+                    Some(p) => p.ready,
+                };
+                let start = self.free_at[c].max(head_ready);
+                if start > t {
+                    break;
+                }
+                let mut taken = Vec::with_capacity(self.batch);
+                while taken.len() < self.batch {
+                    let ready = self.queues[c].front().is_some_and(|p| p.ready <= start);
+                    if !ready {
+                        break;
+                    }
+                    taken.push(self.queues[c].pop_front().unwrap());
+                }
+                self.batches += 1;
+                let egress = self.model.egress_s[c];
+                for (j, p) in taken.iter().enumerate() {
+                    let complete = start + service_s + j as f64 * stage_s + egress;
+                    self.latencies_ms.push((complete - p.arrival) * 1e3);
+                }
+                let occupied = service_s + (taken.len() - 1) as f64 * stage_s;
+                self.free_at[c] = start + occupied;
+                self.busy_s[c] += occupied;
+                self.served[c] += taken.len();
+            }
+        }
+    }
+
+    /// Run the serving simulation: `cfg.requests` Poisson arrivals at
+    /// `cfg.arrival_rps` (0 = [`AUTO_LOAD_FACTOR`] × modeled capacity),
+    /// routed by the configured policy. Deterministic for a given seed.
+    pub fn run(&mut self, cfg: &ServingConfig, seed: u64) -> ServeReport {
+        self.reset();
+        let rate = if cfg.arrival_rps > 0.0 {
+            cfg.arrival_rps
+        } else {
+            AUTO_LOAD_FACTOR * self.model.capacity_rps(self.batch)
+        };
+        let mut rng = Pcg32::seeded(seed);
+        let mut t = 0.0f64;
+        let mut dropped = 0usize;
+        for _ in 0..cfg.requests {
+            t += -(1.0 - rng.next_f64()).ln() / rate;
+            self.advance(t);
+            match self.pick(t) {
+                None => dropped += 1,
+                Some(c) => {
+                    let ready = self.ingress(c, t);
+                    self.queues[c].push_back(Pending { arrival: t, ready });
+                    self.peak_queue[c] = self.peak_queue[c].max(self.queues[c].len());
+                }
+            }
+        }
+        // Drain: jump past every outstanding ready/free horizon until the
+        // queues empty (each pass starts at least the head batches).
+        let mut horizon = t;
+        loop {
+            let pending: usize = self.queues.iter().map(|q| q.len()).sum();
+            if pending == 0 {
+                break;
+            }
+            for q in &self.queues {
+                for p in q {
+                    horizon = horizon.max(p.ready);
+                }
+            }
+            for &f in &self.free_at {
+                horizon = horizon.max(f);
+            }
+            horizon += self.model.service_s;
+            self.advance(horizon);
+        }
+        let end = self.free_at.iter().copied().fold(t, f64::max).max(1e-12);
+        let mut per_chiplet = Vec::with_capacity(self.model.chiplets);
+        for c in 0..self.model.chiplets {
+            per_chiplet.push(ChipletQueueStats {
+                chiplet: c,
+                served: self.served[c],
+                utilization: (self.busy_s[c] / end).min(1.0),
+                peak_queue: self.peak_queue[c],
+            });
+        }
+        let mut report = ServeReport::from_latencies_ms(
+            cfg.requests,
+            self.latencies_ms.len(),
+            dropped,
+            self.batch,
+            self.batches,
+            &self.latencies_ms,
+            end,
+        );
+        report.per_chiplet = per_chiplet;
+        report.offered_rps = rate;
+        report
+    }
+}
+
+/// Build the model and run one serving simulation in a single call (the
+/// CLI / experiment entry point).
+pub fn serve_modeled(
+    graph: &DnnGraph,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    cfg: &ServingConfig,
+) -> (ServingModel, ServeReport) {
+    let (model, part) = ServingModel::build(graph, arch, noc, nop, sim);
+    let mut sched = ChipletScheduler::new(model, part, cfg);
+    let report = sched.run(cfg, sim.seed);
+    (sched.model, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    fn defaults() -> (ArchConfig, NocConfig, SimConfig) {
+        (
+            ArchConfig::default(),
+            NocConfig::default(),
+            SimConfig::default(),
+        )
+    }
+
+    fn serving(policy: Policy, requests: usize) -> ServingConfig {
+        ServingConfig {
+            policy,
+            requests,
+            ..ServingConfig::default()
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip_and_errors() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("RR"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::parse("congestion"), Some(Policy::CongestionAware));
+        assert_eq!(Policy::parse("fifo"), None);
+        assert!(Policy::valid_names().contains("congestion-aware"));
+    }
+
+    #[test]
+    fn model_prices_far_chiplets_higher() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Mesh,
+            chiplets: 16,
+            ..NopConfig::default()
+        };
+        let g = models::squeezenet();
+        let (m, part) = ServingModel::build(&g, &arch, &noc, &nop, &sim);
+        let mapping = Mapping::build(&g, &arch);
+        part.validate(&mapping).unwrap();
+        assert_eq!(m.gateway, 0);
+        assert_eq!(m.ingress_s[0], 0.0);
+        // Chiplet 15 sits 6 mesh hops from the corner gateway; chiplet 1
+        // is adjacent — the NoP cost model must see the difference.
+        assert!(m.ingress_s[15] > m.ingress_s[1]);
+        assert!(m.ingress_s[1] > 0.0);
+        assert!(m.service_s > 0.0 && m.stage_s > 0.0);
+        assert!(m.stage_s <= m.service_s);
+        assert!(m.sat_link_util > 0.0 && m.sat_link_util <= 1.0);
+        assert!(m.partitioned_latency_s > 0.0);
+    }
+
+    #[test]
+    fn one_chiplet_run_matches_flat_single_chip_throughput() {
+        // A 1-chiplet scheduler is the flat single-chip server: saturate
+        // it (batch 1) and the modeled throughput must converge to the
+        // single-chip frame rate.
+        let (arch, noc, sim) = defaults();
+        let g = models::mlp();
+        let nop = NopConfig {
+            chiplets: 1,
+            ..NopConfig::default()
+        };
+        let flat = evaluate(&g, noc.topology, &arch, &noc, &sim, CommBackend::Analytical);
+        let (model, part) = ServingModel::build(&g, &arch, &noc, &nop, &sim);
+        let cfg = ServingConfig {
+            policy: Policy::RoundRobin,
+            queue_depth: 64,
+            arrival_rps: 10.0 * flat.fps(),
+            requests: 400,
+            batch: 1,
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        let report = sched.run(&cfg, 7);
+        assert!(report.completed > 80);
+        assert!(report.dropped > 0);
+        assert_eq!(report.completed + report.dropped, report.requests);
+        let rel = (report.throughput_rps - flat.fps()).abs() / flat.fps();
+        assert!(
+            rel < 0.03,
+            "modeled serving throughput {} vs flat fps {}",
+            report.throughput_rps,
+            flat.fps()
+        );
+        assert_eq!(report.per_chiplet.len(), 1);
+        assert!(report.per_chiplet[0].utilization > 0.9);
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let (model, part) = ServingModel::build(&models::lenet5(), &arch, &noc, &nop, &sim);
+        let cfg = ServingConfig {
+            arrival_rps: 0.2 * model.capacity_rps(1),
+            batch: 1,
+            ..serving(Policy::RoundRobin, 200)
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        let report = sched.run(&cfg, 11);
+        assert_eq!(report.dropped, 0);
+        let served: Vec<usize> = report.per_chiplet.iter().map(|s| s.served).collect();
+        assert_eq!(served.iter().sum::<usize>(), 200);
+        assert_eq!(served.iter().max(), served.iter().min());
+    }
+
+    #[test]
+    fn queue_depth_bounds_backlog_and_drops_surface() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 2,
+            ..NopConfig::default()
+        };
+        let (model, part) = ServingModel::build(&models::mlp(), &arch, &noc, &nop, &sim);
+        let cfg = ServingConfig {
+            policy: Policy::LeastLatency,
+            queue_depth: 1,
+            arrival_rps: 50.0 * model.capacity_rps(1),
+            requests: 300,
+            batch: 1,
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        let report = sched.run(&cfg, 3);
+        assert!(report.dropped > 0, "overload must surface as drops");
+        assert_eq!(report.completed + report.dropped, report.requests);
+        for s in &report.per_chiplet {
+            assert!(s.peak_queue <= 1, "peak {}", s.peak_queue);
+        }
+        assert!(report.p99_ms >= report.p50_ms);
+    }
+
+    #[test]
+    fn batching_amortizes_the_pipeline_stage() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            chiplets: 1,
+            ..NopConfig::default()
+        };
+        let (model, _) = ServingModel::build(&models::vgg(19), &arch, &noc, &nop, &sim);
+        // Per-request occupancy shrinks toward the stage interval as the
+        // batch grows, and capacity grows accordingly.
+        assert!(model.per_request_s(8) < model.per_request_s(1));
+        assert!(model.per_request_s(8) >= model.stage_s);
+        assert!(model.capacity_rps(8) > model.capacity_rps(1));
+    }
+}

@@ -1,36 +1,115 @@
-//! Inference serving loop: batches requests through a PJRT-compiled
-//! artifact and reports measured latency/throughput alongside what the
-//! modeled IMC chip would deliver for the same network.
+//! Inference serving: one report type for two serving paths.
 //!
-//! This is the functional end of the stack — the AOT artifacts compute the
-//! *quantized* IMC forward pass (bit-serial inputs + 4-bit ADC, Layer 1/2),
-//! while the architecture simulator prices the same computation on the
-//! modeled hardware. Python is never on this path.
+//! * [`InferenceServer`] batches requests through a PJRT-compiled artifact
+//!   and *measures* wall-clock latency (the functional end of the stack —
+//!   the AOT artifacts compute the quantized IMC forward pass, Layer 1/2,
+//!   and Python is never on this path).
+//! * [`crate::coordinator::scheduler::ChipletScheduler`] serves the same
+//!   workload against the *modeled* chiplet package (no PJRT needed).
+//!
+//! Both emit a [`ServeReport`]: requests/batches/drops, latency
+//! percentiles, throughput — plus per-chiplet queue statistics on the
+//! modeled path and raw output vectors on the measured path.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::runtime::{LoadedModel, Runtime};
-use crate::util::{percentile, Pcg32};
+use crate::util::{mean, percentile, Pcg32};
 
-/// Serving statistics for one run.
+/// Queue statistics for one chiplet of a modeled serving run.
+#[derive(Clone, Debug)]
+pub struct ChipletQueueStats {
+    pub chiplet: usize,
+    /// Requests this chiplet served.
+    pub served: usize,
+    /// Busy fraction over the whole run.
+    pub utilization: f64,
+    /// Deepest backlog its queue reached.
+    pub peak_queue: usize,
+}
+
+/// Serving statistics for one run (measured or modeled).
+///
+/// On the PJRT path the latency samples are per-*batch* wall-clock times;
+/// on the modeled path they are per-*request* modeled latencies. Fields
+/// that only one path produces are empty on the other.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub requests: usize,
+    /// Requests that produced a result (modeled runs can drop on full
+    /// queues; the PJRT path always completes everything).
+    pub completed: usize,
+    pub dropped: usize,
     pub batch_size: usize,
     pub batches: usize,
-    /// Wall-clock per batch, ms.
-    pub mean_batch_ms: f64,
-    pub p50_batch_ms: f64,
-    pub p99_batch_ms: f64,
-    /// Requests per second end to end.
+    /// Latency statistics over the run's samples, ms.
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Completed requests per second end to end.
     pub throughput_rps: f64,
-    /// Output vectors per request (argmax class for classifiers).
+    /// Arrival rate the run was driven at (modeled path only; the
+    /// scheduler records the auto-derived rate here so reports never
+    /// re-derive it). 0 on the PJRT path.
+    pub offered_rps: f64,
+    /// Per-chiplet queue statistics (modeled path only).
+    pub per_chiplet: Vec<ChipletQueueStats>,
+    /// Output vectors per request (PJRT path only).
     pub outputs: Vec<Vec<f32>>,
 }
 
-/// A batched single-model inference server.
+impl ServeReport {
+    /// Assemble a report from latency samples (ms) and the wall-clock /
+    /// modeled horizon of the whole run.
+    pub fn from_latencies_ms(
+        requests: usize,
+        completed: usize,
+        dropped: usize,
+        batch_size: usize,
+        batches: usize,
+        latencies_ms: &[f64],
+        horizon_s: f64,
+    ) -> Self {
+        Self {
+            requests,
+            completed,
+            dropped,
+            batch_size,
+            batches,
+            mean_ms: mean(latencies_ms),
+            p50_ms: percentile(latencies_ms, 50.0),
+            p99_ms: percentile(latencies_ms, 99.0),
+            throughput_rps: completed as f64 / horizon_s.max(1e-12),
+            offered_rps: 0.0,
+            per_chiplet: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+}
+
+/// Flatten `chunk` into one `[bs, in_dim]` batch, zero-padding the tail.
+/// `base` is the index of the chunk's first request in the full request
+/// list, so shape errors name the offending request.
+pub fn pad_batch(chunk: &[Vec<f32>], bs: usize, in_dim: usize, base: usize) -> Result<Vec<f32>> {
+    let mut flat = Vec::with_capacity(bs * in_dim);
+    for (i, r) in chunk.iter().enumerate() {
+        if r.len() != in_dim {
+            bail!(
+                "request {} has {} features, expected in_dim = {}",
+                base + i,
+                r.len(),
+                in_dim
+            );
+        }
+        flat.extend_from_slice(r);
+    }
+    flat.resize(bs * in_dim, 0.0);
+    Ok(flat)
+}
+
+/// A batched single-model inference server (the PJRT-measured path).
 pub struct InferenceServer {
     runtime: Runtime,
     batch_size: usize,
@@ -57,7 +136,9 @@ impl InferenceServer {
     /// Serve `requests` feature vectors of length `in_dim` through the
     /// loaded artifact at `path`. The artifact must accept a single
     /// `[batch, in_dim]` f32 input (the AOT models are lowered at a fixed
-    /// batch; requests are padded into full batches).
+    /// batch; requests are padded into full batches). A request whose
+    /// feature length is not `in_dim` fails the run with an error naming
+    /// its index.
     pub fn serve(
         &mut self,
         path: impl AsRef<std::path::Path>,
@@ -69,14 +150,8 @@ impl InferenceServer {
         let mut batch_times = Vec::new();
         let mut outputs = Vec::with_capacity(requests.len());
         let t0 = Instant::now();
-        for chunk in requests.chunks(bs) {
-            // Pad the final partial batch.
-            let mut flat = Vec::with_capacity(bs * in_dim);
-            for r in chunk {
-                assert_eq!(r.len(), in_dim, "request feature length mismatch");
-                flat.extend_from_slice(r);
-            }
-            flat.resize(bs * in_dim, 0.0);
+        for (chunk_idx, chunk) in requests.chunks(bs).enumerate() {
+            let flat = pad_batch(chunk, bs, in_dim, chunk_idx * bs)?;
             let tb = Instant::now();
             let result = model.run_f32(&[(&flat, &[bs as i64, in_dim as i64])])?;
             batch_times.push(tb.elapsed().as_secs_f64() * 1e3);
@@ -88,16 +163,17 @@ impl InferenceServer {
             }
         }
         let total_s = t0.elapsed().as_secs_f64();
-        Ok(ServeReport {
-            requests: requests.len(),
-            batch_size: bs,
-            batches: batch_times.len(),
-            mean_batch_ms: crate::util::mean(&batch_times),
-            p50_batch_ms: percentile(&batch_times, 50.0),
-            p99_batch_ms: percentile(&batch_times, 99.0),
-            throughput_rps: requests.len() as f64 / total_s.max(1e-12),
-            outputs,
-        })
+        let mut report = ServeReport::from_latencies_ms(
+            requests.len(),
+            requests.len(),
+            0,
+            bs,
+            batch_times.len(),
+            &batch_times,
+            total_s,
+        );
+        report.outputs = outputs;
+        Ok(report)
     }
 }
 
@@ -138,5 +214,53 @@ mod tests {
         assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
         assert_eq!(argmax(&[2.0]), 0);
         assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn pad_batch_zero_fills_partial_batches() {
+        let reqs = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let flat = pad_batch(&reqs, 4, 2, 0).unwrap();
+        assert_eq!(flat.len(), 8);
+        assert_eq!(&flat[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(flat[4..].iter().all(|&x| x == 0.0));
+        // A full batch is passed through unchanged.
+        let full = pad_batch(&reqs, 2, 2, 0).unwrap();
+        assert_eq!(full, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pad_batch_names_the_offending_request() {
+        // The mismatch sits at global index base + local offset; the error
+        // must say so instead of panicking (regression for the old
+        // assert_eq! in `serve`).
+        let reqs = vec![vec![0.0f32; 8], vec![0.0f32; 5]];
+        let err = pad_batch(&reqs, 8, 8, 16).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("request 17"), "{msg}");
+        assert!(msg.contains("5 features"), "{msg}");
+        assert!(msg.contains("in_dim = 8"), "{msg}");
+    }
+
+    #[test]
+    fn report_statistics_from_small_sample_counts() {
+        // One sample: every percentile is that sample.
+        let one = ServeReport::from_latencies_ms(1, 1, 0, 1, 1, &[4.0], 2.0);
+        assert_eq!(one.mean_ms, 4.0);
+        assert_eq!(one.p50_ms, 4.0);
+        assert_eq!(one.p99_ms, 4.0);
+        assert_eq!(one.throughput_rps, 0.5);
+        // Four samples: p50 interpolates, p99 approaches the max.
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let four = ServeReport::from_latencies_ms(5, 4, 1, 2, 2, &xs, 8.0);
+        assert_eq!(four.completed, 4);
+        assert_eq!(four.dropped, 1);
+        assert!((four.p50_ms - 2.5).abs() < 1e-12);
+        assert!(four.p99_ms > 3.9 && four.p99_ms <= 4.0);
+        assert_eq!(four.throughput_rps, 0.5);
+        // Empty samples degrade to zeros, not NaNs.
+        let none = ServeReport::from_latencies_ms(3, 0, 3, 1, 0, &[], 1.0);
+        assert_eq!(none.mean_ms, 0.0);
+        assert_eq!(none.p99_ms, 0.0);
+        assert_eq!(none.throughput_rps, 0.0);
     }
 }

@@ -204,6 +204,20 @@ impl DnnGraph {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// Bits of one inference request's input frame at `n_bits` precision
+    /// (the payload a serving gateway must ship to the chiplet that runs
+    /// the first layer).
+    pub fn input_bits(&self, n_bits: usize) -> u64 {
+        self.layers[0].output_elems() as u64 * n_bits as u64
+    }
+
+    /// Bits of one request's result (the last layer's activations) at
+    /// `n_bits` precision.
+    pub fn output_bits(&self, n_bits: usize) -> u64 {
+        let last = self.layers.last().expect("graph always has an input layer");
+        last.output_elems() as u64 * n_bits as u64
+    }
+
     /// Input activations consumed by weight layer `li` (paper `A_i`): the
     /// number of activation *elements* that must arrive at layer `li`'s
     /// tiles, i.e. the flattened outputs of its predecessors (transitively
@@ -370,6 +384,17 @@ mod tests {
         assert_eq!(g.input_activations(wl[0]), 28 * 28);
         // Second conv consumes c1's 28*28*16 output.
         assert_eq!(g.input_activations(wl[1]), 28 * 28 * 16);
+    }
+
+    #[test]
+    fn request_payload_bits_hand_computed() {
+        let g = tiny_linear();
+        // MNIST input frame: 28*28*1 activations at 8 bits each.
+        assert_eq!(g.input_bits(8), 28 * 28 * 8);
+        // Result payload: the last layer's output activations.
+        let last = g.layers.last().unwrap().output_elems() as u64;
+        assert_eq!(g.output_bits(8), last * 8);
+        assert!(g.output_bits(8) > 0);
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod fig_density;
 pub mod fig_edap;
 pub mod fig_nop_congestion;
 pub mod fig_p2p;
+pub mod fig_serving;
 pub mod tables;
 
 use crate::arch::CommBackend;
@@ -162,6 +163,11 @@ pub fn registry() -> Vec<Experiment> {
             id: "nop-congestion",
             title: "NoP congestion: flit-level package simulation vs analytical model",
             run: fig_nop_congestion::nop_congestion,
+        },
+        Experiment {
+            id: "serving",
+            title: "Chiplet-aware serving: policy x package sweep with modeled p50/p99",
+            run: fig_serving::serving,
         },
         Experiment {
             id: "table2",

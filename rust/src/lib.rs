@@ -47,7 +47,7 @@ pub mod runtime;
 pub mod util;
 
 pub use arch::evaluator::{evaluate, ArchEvaluation};
-pub use config::{ArchConfig, MemTech, NocConfig, NopConfig, NopMode, SimConfig};
+pub use config::{ArchConfig, MemTech, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig};
 pub use dnn::{model_zoo, DnnGraph};
 pub use noc::topology::Topology;
 pub use nop::{evaluate_package, NopEvaluation, NopTopology};

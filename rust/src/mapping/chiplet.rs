@@ -242,6 +242,14 @@ impl ChipletPartition {
     pub fn populated_chiplets(&self) -> usize {
         self.tiles_per_chiplet.iter().filter(|&&t| t > 0).count()
     }
+
+    /// The package I/O gateway: the chiplet owning the first mapped layer
+    /// (contiguity pins it to chiplet 0). Request inputs enter the
+    /// package here — the serving scheduler's NoP ingress routes start at
+    /// this chiplet.
+    pub fn gateway_chiplet(&self) -> usize {
+        self.assignment.first().copied().unwrap_or(0)
+    }
 }
 
 /// All on-chip inter-layer edges in mapping-index space, with bits/frame.
@@ -360,6 +368,7 @@ mod tests {
         let (m, p) = part(&g, 2);
         p.validate(&m).unwrap();
         assert_eq!(p.assignment, vec![0, 1]);
+        assert_eq!(p.gateway_chiplet(), 0);
         assert_eq!(p.tiles_per_chiplet, vec![4, 1]);
         assert_eq!(p.cut_bits(), 512 * 8);
         let x = p.cross_traffic();

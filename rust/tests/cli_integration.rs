@@ -60,6 +60,33 @@ fn chiplet_sim_mode_and_nop_congestion_experiment() {
 }
 
 #[test]
+fn serve_modeled_and_serving_experiment() {
+    // The CI smoke run: `repro serve --fast` = SqueezeNet on 4 mesh
+    // chiplets under the congestion-aware policy, no PJRT required.
+    run(&argv(&["serve", "--fast"])).unwrap();
+    // The registered serving experiment through the figure runner.
+    run(&argv(&["figure", "serving", "--fast"])).unwrap();
+    // A modeled run with explicit routing flags, including `--sim`
+    // (flit-level NoP ingress pricing).
+    run(&argv(&[
+        "serve",
+        "--model",
+        "MLP",
+        "--chiplets",
+        "2",
+        "--topology",
+        "ring",
+        "--policy",
+        "least-latency",
+        "--requests",
+        "32",
+        "--sim",
+    ]))
+    .unwrap();
+    assert!(run(&argv(&["serve", "--model", "MLP", "--policy", "psychic"])).is_err());
+}
+
+#[test]
 fn unknown_inputs_error_cleanly() {
     assert!(run(&argv(&["figure", "99"])).is_err());
     assert!(run(&argv(&["table"])).is_err());

@@ -3,8 +3,9 @@
 //! latency monotonicity, mapping soundness, queueing-model sanity, EDAP
 //! positivity, and config round-trips.
 
-use imcnoc::config::{ArchConfig, Config, NocConfig, NopConfig, NopMode};
-use imcnoc::dnn::model_zoo;
+use imcnoc::config::{ArchConfig, Config, NocConfig, NopConfig, NopMode, ServingConfig};
+use imcnoc::coordinator::scheduler::{ChipletScheduler, Policy, ServingModel};
+use imcnoc::dnn::{model_zoo, models};
 use imcnoc::mapping::{ChipletPartition, InjectionMatrix, Mapping};
 use imcnoc::noc::sim::{FlowSpec, Mode, NocSim};
 use imcnoc::noc::topology::{Network, Topology};
@@ -13,7 +14,11 @@ use imcnoc::nop::sim::{analytical_latency, saturation_rate, uniform_nop_flows, N
 use imcnoc::nop::topology::{NopNetwork, NopTopology};
 use imcnoc::util::proptest::check;
 
-fn random_flows(g: &mut imcnoc::util::proptest::Gen, terminals: usize, max_flits: u64) -> Vec<FlowSpec> {
+fn random_flows(
+    g: &mut imcnoc::util::proptest::Gen,
+    terminals: usize,
+    max_flits: u64,
+) -> Vec<FlowSpec> {
     let n_flows = g.usize_in(1, 12);
     (0..n_flows)
         .map(|_| {
@@ -458,11 +463,79 @@ fn prop_config_ini_roundtrip() {
                 energy_pj_per_bit: g.f64_in(0.1, 8.0).round(),
                 ..NopConfig::default()
             },
+            serving: ServingConfig {
+                policy: *g.pick(&Policy::all()),
+                queue_depth: g.usize_in(1, 256),
+                arrival_rps: g.f64_in(0.0, 10_000.0).round(),
+                requests: g.usize_in(1, 10_000),
+                batch: g.usize_in(1, 64),
+            },
             sim: Default::default(),
         };
         let parsed = Config::from_ini(&cfg.to_ini()).map_err(|e| e.to_string())?;
         if parsed != cfg {
             return Err("round-trip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serving_scheduler_conserves_requests() {
+    // The chiplet-aware serving scheduler over random policies, package
+    // sizes and loads: every request is either completed or dropped,
+    // per-chiplet served counts close the books, queues never exceed
+    // their depth, and utilization stays in [0, 1].
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = imcnoc::config::SimConfig::default();
+    // Model builds are expensive (each runs a NoP saturation sweep):
+    // prebuild two package sizes and randomize everything else.
+    let built: Vec<_> = [2usize, 5]
+        .iter()
+        .map(|&k| {
+            let nop = NopConfig {
+                topology: NopTopology::Ring,
+                chiplets: k,
+                ..NopConfig::default()
+            };
+            ServingModel::build(&models::lenet5(), &arch, &noc, &nop, &sim)
+        })
+        .collect();
+    check("serving-conservation", 12, |g| {
+        let (model, part) = g.pick(&built).clone();
+        let cfg = ServingConfig {
+            policy: *g.pick(&Policy::all()),
+            queue_depth: g.usize_in(1, 8),
+            arrival_rps: model.capacity_rps(1) * g.f64_in(0.2, 3.0),
+            requests: g.usize_in(10, 120),
+            batch: g.usize_in(1, 4),
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        let report = sched.run(&cfg, g.u64());
+        if report.completed + report.dropped != report.requests {
+            return Err(format!(
+                "requests {} != completed {} + dropped {}",
+                report.requests, report.completed, report.dropped
+            ));
+        }
+        let served: usize = report.per_chiplet.iter().map(|s| s.served).sum();
+        if served != report.completed {
+            return Err(format!("served {served} != completed {}", report.completed));
+        }
+        for s in &report.per_chiplet {
+            if s.peak_queue > cfg.queue_depth {
+                return Err(format!(
+                    "peak queue {} > depth {}",
+                    s.peak_queue, cfg.queue_depth
+                ));
+            }
+            if !(0.0..=1.0).contains(&s.utilization) {
+                return Err(format!("utilization {}", s.utilization));
+            }
+        }
+        if report.p99_ms < report.p50_ms {
+            return Err(format!("p99 {} < p50 {}", report.p99_ms, report.p50_ms));
         }
         Ok(())
     });

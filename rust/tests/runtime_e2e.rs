@@ -92,10 +92,12 @@ fn serving_reports_sane_statistics() {
         .serve(artifact_path("mlp_float"), &requests, 784)
         .expect("serve");
     assert_eq!(report.requests, 10);
+    assert_eq!(report.completed, 10);
+    assert_eq!(report.dropped, 0);
     assert_eq!(report.batches, 2); // 8 + 2(padded)
     assert_eq!(report.outputs.len(), 10);
-    assert!(report.mean_batch_ms > 0.0);
-    assert!(report.p99_batch_ms >= report.p50_batch_ms);
+    assert!(report.mean_ms > 0.0);
+    assert!(report.p99_ms >= report.p50_ms);
     assert!(report.throughput_rps > 0.0);
 }
 

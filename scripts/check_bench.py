@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Bench regression gate for CI.
+
+Usage: check_bench.py MEASURED.json BASELINE.json MAX_RATIO
+
+Compares mean_ns per bench name against the checked-in baseline and fails
+(exit 1) when any measured mean exceeds baseline * MAX_RATIO. Benches
+missing from the baseline are reported but do not fail the run (new
+benches land with a follow-up baseline update). The baseline values start
+deliberately generous — CI machines vary — and should be ratcheted down
+as real CI numbers accumulate; the script prints the measured file as a
+ready-to-commit baseline snippet to make that easy.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 4:
+        print(__doc__)
+        return 2
+    measured_path, baseline_path, max_ratio = sys.argv[1], sys.argv[2], float(sys.argv[3])
+    with open(measured_path) as f:
+        measured = {e["name"]: e for e in json.load(f)}
+    with open(baseline_path) as f:
+        baseline = {e["name"]: e for e in json.load(f)}
+
+    regressions = []
+    print(f"{'bench':<48} {'measured_ms':>12} {'baseline_ms':>12} {'ratio':>7}")
+    for name in sorted(measured):
+        m = measured[name]["mean_ns"]
+        b = baseline.get(name, {}).get("mean_ns")
+        if b is None:
+            print(f"{name:<48} {m / 1e6:>12.3f} {'(new)':>12} {'-':>7}")
+            continue
+        ratio = m / b if b > 0 else float("inf")
+        flag = " REGRESSION" if ratio > max_ratio else ""
+        print(f"{name:<48} {m / 1e6:>12.3f} {b / 1e6:>12.3f} {ratio:>7.2f}{flag}")
+        if ratio > max_ratio:
+            regressions.append((name, ratio))
+
+    missing = sorted(set(baseline) - set(measured))
+    for name in missing:
+        print(f"{name:<48} {'(not measured this run)':>12}")
+
+    print("\nmeasured snapshot (commit as the new baseline to ratchet):")
+    snapshot = sorted(measured.values(), key=lambda e: e["name"])
+    print(json.dumps(snapshot, indent=2))
+
+    if regressions:
+        worst = max(r for _, r in regressions)
+        print(
+            f"\nFAIL: {len(regressions)} bench(es) regressed more than "
+            f"{(max_ratio - 1) * 100:.0f}% vs baseline (worst ratio {worst:.2f})"
+        )
+        return 1
+    print(f"\nOK: no bench regressed more than {(max_ratio - 1) * 100:.0f}% vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
