@@ -1,0 +1,85 @@
+//! Multi-model workload benchmarks: mix-model construction (two replica
+//! pricings + placement search + NoP saturation sweep), arrival-trace
+//! generation per shape, and the multi-model serving simulation per
+//! admission control. `BENCH_QUICK=1` runs the reduced CI workload;
+//! `BENCH_JSON=<path>` records the results for the bench regression gate.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{observe, quick, Reporter};
+use imcnoc::config::{
+    Admission, ArchConfig, NocConfig, NopConfig, ServingConfig, SimConfig, WorkloadConfig,
+};
+use imcnoc::coordinator::mix::{MixScheduler, MixServingModel};
+use imcnoc::nop::topology::NopTopology;
+use imcnoc::workload::{ArrivalKind, PlacementPolicy, WorkloadMix};
+
+fn main() {
+    let mut r = Reporter::new();
+    let quick = quick();
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let mix = WorkloadMix::parse("SqueezeNet:1:0,MLP:3:0").unwrap();
+    let nop = NopConfig {
+        topology: NopTopology::Mesh,
+        chiplets: 8,
+        ..NopConfig::default()
+    };
+    let requests = if quick { 128 } else { 1024 };
+    let iters = if quick { 3 } else { 10 };
+
+    // Mix-model construction (dominated by the NoP saturation sweep).
+    r.bench("workload_model_build_sq+mlp_k8_mesh", 0, 2, || {
+        let model = MixServingModel::build(
+            &mix,
+            PlacementPolicy::NopAware,
+            &arch,
+            &noc,
+            &nop,
+            &sim,
+        )
+        .unwrap();
+        observe(&model.sat_link_util);
+    });
+
+    let model =
+        MixServingModel::build(&mix, PlacementPolicy::NopAware, &arch, &noc, &nop, &sim).unwrap();
+
+    // Arrival generation per shape (heavy-tailed frames on).
+    let wl = WorkloadConfig {
+        mix: mix.clone(),
+        frames_alpha: 1.5,
+        ..WorkloadConfig::default()
+    };
+    let rate = 0.85 * model.capacity_rps(wl.arrival_process().mean_frames());
+    for kind in ArrivalKind::all() {
+        let shaped = WorkloadConfig {
+            arrival: kind,
+            ..wl.clone()
+        };
+        let name = format!("workload_gen_{}", kind.name());
+        r.bench(&name, 1, iters, || {
+            let events = shaped.arrival_process().generate(&mix, rate, requests, 42);
+            observe(&events.len());
+        });
+    }
+
+    // The multi-model serving simulation per admission control.
+    let events = wl.arrival_process().generate(&mix, rate, requests, 42);
+    for admission in Admission::all() {
+        let cfg = ServingConfig {
+            requests,
+            ..ServingConfig::default()
+        };
+        let name = format!("workload_sim_sq+mlp_k8_mesh_{}", admission.name());
+        r.bench(&name, 1, iters, || {
+            let mut sched = MixScheduler::new(model.clone(), &cfg, admission);
+            let report = sched.run(&events);
+            observe(&report.deadline_hits);
+        });
+    }
+
+    r.finish();
+}

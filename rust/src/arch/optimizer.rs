@@ -8,11 +8,14 @@
 //! per-chiplet NoC topology) with the hierarchical evaluator and returns
 //! the EDAP-optimal design point.
 
+use std::collections::HashMap;
+
 use super::evaluator::{evaluate, CommBackend};
-use crate::config::{ArchConfig, NocConfig, NopConfig, SimConfig};
+use crate::config::{ArchConfig, NocConfig, NopConfig, NopMode, SimConfig};
 use crate::dnn::DnnGraph;
 use crate::noc::topology::Topology;
 use crate::nop::evaluator::{evaluate_package, NopEvaluation};
+use crate::nop::sim::saturation_rate;
 use crate::nop::topology::NopTopology;
 
 /// Advisor output.
@@ -102,13 +105,50 @@ pub fn recommend_topology(
 pub struct ScaleoutRecommendation {
     /// The EDAP-optimal design point's evaluation.
     pub best: NopEvaluation,
+    /// The winner's *ranking* EDAP: equals `best.edap()` in analytical
+    /// mode, but under sim calibration it is the saturation-derated value
+    /// the search actually minimized (report this one next to
+    /// `candidates`).
+    pub best_edap: f64,
     /// Chiplet count of the winner (1 = single chip).
     pub chiplets: usize,
     pub nop_topology: NopTopology,
     pub noc_topology: Topology,
     /// Every candidate evaluated, as (chiplets, NoP, NoC, EDAP), in search
-    /// order — for reporting the full design-space slice.
+    /// order — for reporting the full design-space slice. Under sim
+    /// calibration the EDAP is the saturation-derated ranking value.
     pub candidates: Vec<(usize, NopTopology, Topology, f64)>,
+    /// True when the ranking folded in `nop::sim` measured saturation
+    /// rates (`[nop] mode = sim` on the advisor's base config).
+    pub sim_calibrated: bool,
+}
+
+/// Derate a candidate's frame latency by the measured package saturation:
+/// when the per-frame NoP injection the analytical evaluation implies
+/// (cut flits spread over the package at the candidate's frame rate)
+/// exceeds the saturation rate measured by
+/// [`crate::nop::sim::saturation_rate`], the package actually sustains the
+/// measured rate — scale the frame latency by the overload factor. Below
+/// saturation (or with no measurement) the analytical latency stands.
+pub fn saturation_derated_latency_s(
+    e: &NopEvaluation,
+    nop: &NopConfig,
+    sat_rate: Option<f64>,
+) -> f64 {
+    let lat = e.latency_s();
+    let Some(rate) = sat_rate else {
+        return lat;
+    };
+    if e.chiplets < 2 || e.cross_bits == 0 || rate <= 0.0 {
+        return lat;
+    }
+    let flits = (e.cross_bits as f64 / nop.link_width as f64).ceil();
+    let offered = flits / (e.chiplets as f64 * lat * nop.freq_hz);
+    if offered > rate {
+        lat * offered / rate
+    } else {
+        lat
+    }
 }
 
 /// Chiplet counts the joint advisor explores (1 = stay on a single chip).
@@ -120,9 +160,17 @@ pub const SCALEOUT_NOC_CHOICES: [Topology; 2] = [Topology::Tree, Topology::Mesh]
 
 /// Jointly recommend (chiplet count, NoP topology, per-chiplet NoC
 /// topology) for `graph` by exhaustive EDAP search over the (small)
-/// hierarchical design space with the analytical backend. `base_nop`
-/// supplies the SerDes link parameters; its `topology`/`chiplets` fields
-/// are overridden by the search.
+/// hierarchical design space. `base_nop` supplies the SerDes link
+/// parameters; its `topology`/`chiplets` fields are overridden by the
+/// search.
+///
+/// Candidate evaluation always uses the fast analytical package model, but
+/// when `base_nop.mode` is `sim` the ranking folds in the *measured*
+/// saturation rate of each (NoP topology, k) from the flit-level package
+/// simulator: candidates whose per-frame NoP injection exceeds the
+/// measured rate have their latency derated before EDAP ranking
+/// ([`saturation_derated_latency_s`]), closing the ROADMAP gap where the
+/// advisor ranked purely analytically.
 pub fn recommend_scaleout(
     graph: &DnnGraph,
     arch: &ArchConfig,
@@ -130,7 +178,9 @@ pub fn recommend_scaleout(
     base_nop: &NopConfig,
 ) -> ScaleoutRecommendation {
     let sim = SimConfig::default();
-    let mut best: Option<NopEvaluation> = None;
+    let sim_calibrated = base_nop.mode == NopMode::Sim;
+    let mut sat_cache: HashMap<(NopTopology, usize), Option<f64>> = HashMap::new();
+    let mut best: Option<(f64, NopEvaluation)> = None;
     let mut candidates = Vec::new();
     let all_nops = NopTopology::all();
     let single_chip = [NopTopology::P2p];
@@ -146,23 +196,35 @@ pub fn recommend_scaleout(
                 let nop = NopConfig {
                     topology: nop_topo,
                     chiplets: k,
+                    mode: NopMode::Analytical,
                     ..base_nop.clone()
                 };
                 let e = evaluate_package(graph, arch, &noc, &nop, &sim, CommBackend::Analytical);
-                candidates.push((k, nop_topo, noc_topo, e.edap()));
-                if best.as_ref().map_or(true, |b| e.edap() < b.edap()) {
-                    best = Some(e);
+                let edap = if sim_calibrated && k > 1 {
+                    let sat = *sat_cache
+                        .entry((nop_topo, k))
+                        .or_insert_with(|| saturation_rate(nop_topo, k, &nop, sim.seed));
+                    let lat = saturation_derated_latency_s(&e, &nop, sat);
+                    e.edap_with_latency(lat)
+                } else {
+                    e.edap()
+                };
+                candidates.push((k, nop_topo, noc_topo, edap));
+                if best.as_ref().map_or(true, |(b, _)| edap < *b) {
+                    best = Some((edap, e));
                 }
             }
         }
     }
-    let best = best.expect("non-empty search space");
+    let (best_edap, best) = best.expect("non-empty search space");
     ScaleoutRecommendation {
         chiplets: best.chiplets,
         nop_topology: best.nop_topology,
         noc_topology: best.noc_topology,
         best,
+        best_edap,
         candidates,
+        sim_calibrated,
     }
 }
 
@@ -235,6 +297,91 @@ mod tests {
             let rec = recommend_scaleout(&g, &arch, &noc, &nop);
             assert!(rec.best.edap().is_finite() && rec.best.edap() > 0.0, "{}", g.name);
             assert!(SCALEOUT_CHIPLET_COUNTS.contains(&rec.chiplets), "{}", g.name);
+        }
+    }
+
+    fn synthetic_eval(chiplets: usize, cross_bits: u64, latency_s: f64) -> NopEvaluation {
+        NopEvaluation {
+            dnn: "synthetic".into(),
+            noc_topology: Topology::Mesh,
+            nop_topology: NopTopology::Ring,
+            chiplets,
+            populated: chiplets,
+            tiles: 4,
+            tiles_per_chiplet: vec![1; chiplets.max(1)],
+            cross_bits,
+            compute_latency_s: latency_s,
+            compute_energy_j: 1e-6,
+            compute_area_mm2: 10.0,
+            noc_latency_s: 0.0,
+            noc_energy_j: 0.0,
+            noc_area_mm2: 1.0,
+            nop_latency_s: 0.0,
+            nop_energy_j: 0.0,
+            nop_area_mm2: 1.0,
+        }
+    }
+
+    #[test]
+    fn saturation_derating_engages_only_above_the_measured_rate() {
+        let nop = NopConfig::default(); // 32-bit flits, 0.5 GHz
+        // 4 chiplets, 1 Mbit cut, 10 us frame: offered = 31250 flits /
+        // (4 x 1e-5 s x 0.5e9) = 1.5625 flits/chiplet/cycle.
+        let hot = synthetic_eval(4, 1_000_000, 1e-5);
+        let lat = hot.latency_s();
+        // Measured saturation below the offered rate: latency scales by
+        // offered/rate.
+        let derated = saturation_derated_latency_s(&hot, &nop, Some(0.5));
+        assert!((derated - lat * (1.5625 / 0.5)).abs() / derated < 1e-9);
+        // At or above the offered rate: analytical latency stands.
+        assert_eq!(saturation_derated_latency_s(&hot, &nop, Some(2.0)), lat);
+        // No measurement (topology never saturated): unchanged.
+        assert_eq!(saturation_derated_latency_s(&hot, &nop, None), lat);
+        // Single chip or no cut traffic: unchanged.
+        let solo = synthetic_eval(1, 0, 1e-5);
+        assert_eq!(
+            saturation_derated_latency_s(&solo, &nop, Some(0.1)),
+            solo.latency_s()
+        );
+    }
+
+    #[test]
+    fn scaleout_advisor_sim_mode_folds_in_measured_saturation() {
+        // `[nop] mode = sim`: the advisor measures saturation per (NoP, k)
+        // and derates saturating candidates. Structural contracts: the
+        // flag is set, the space is unchanged, ranking still picks the
+        // minimum, and derating can only *raise* a candidate's ranking
+        // EDAP relative to the analytical run (k = 1 rows are identical).
+        let arch = ArchConfig::default();
+        let noc = NocConfig::default();
+        let g = models::lenet5();
+        let ana = recommend_scaleout(&g, &arch, &noc, &NopConfig::default());
+        let cal = recommend_scaleout(
+            &g,
+            &arch,
+            &noc,
+            &NopConfig {
+                mode: crate::config::NopMode::Sim,
+                ..NopConfig::default()
+            },
+        );
+        assert!(!ana.sim_calibrated);
+        assert!(cal.sim_calibrated);
+        assert_eq!(ana.candidates.len(), cal.candidates.len());
+        let min = cal
+            .candidates
+            .iter()
+            .map(|&(_, _, _, edap)| edap)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(cal.best_edap, min);
+        // Analytical mode: the ranking EDAP is exactly the winner's EDAP.
+        assert_eq!(ana.best_edap, ana.best.edap());
+        for (a, c) in ana.candidates.iter().zip(&cal.candidates) {
+            assert_eq!((a.0, a.1, a.2), (c.0, c.1, c.2));
+            assert!(c.3 >= a.3 - 1e-12 * a.3.abs(), "derating lowered EDAP");
+            if a.0 == 1 {
+                assert_eq!(a.3, c.3, "k=1 must be untouched by calibration");
+            }
         }
     }
 

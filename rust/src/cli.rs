@@ -16,16 +16,19 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::arch::{evaluate, recommend_scaleout, recommend_topology, CommBackend};
 use crate::config::{
-    ArchConfig, Config, MemTech, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig,
+    Admission, ArchConfig, Config, MemTech, NocConfig, NopConfig, NopMode, ServingConfig,
+    SimConfig, WorkloadConfig,
 };
+use crate::coordinator::mix::{replay_mix, serve_mix, MixServingModel};
 use crate::coordinator::scheduler::{serve_modeled, Policy};
-use crate::coordinator::server::{synthetic_requests, InferenceServer};
+use crate::coordinator::server::{synthetic_requests, InferenceServer, ServeReport};
 use crate::dnn::by_name;
 use crate::experiments::{find, registry, Options};
 use crate::noc::topology::Topology;
 use crate::nop::evaluator::evaluate_package;
 use crate::nop::topology::NopTopology;
 use crate::util::{fmt_sig, Table};
+use crate::workload::{ArrivalKind, PlacementPolicy, Trace, WorkloadMix};
 
 /// Parsed flag set: positionals + `--key value` / `--flag` options.
 #[derive(Debug, Default)]
@@ -108,6 +111,12 @@ fn flag_takes_value(name: &str) -> bool {
             | "policy"
             | "rate"
             | "queue-depth"
+            | "mix"
+            | "placement"
+            | "admission"
+            | "arrival"
+            | "trace"
+            | "record-trace"
     )
 }
 
@@ -131,10 +140,12 @@ fn parse_nop_topology(s: &str) -> Result<NopTopology> {
     })
 }
 
-/// One-line winner summary shared by every `chiplet` view.
+/// One-line winner summary shared by every `chiplet` view. The EDAP shown
+/// is the *ranking* value (saturation-derated under `--sim`), so it always
+/// agrees with the candidates table.
 fn print_scaleout_recommendation(rec: &crate::arch::ScaleoutRecommendation, dnn: &str) {
     println!(
-        "joint recommendation for {}: {} chiplet(s){} with per-chiplet {} (EDAP {})",
+        "joint recommendation for {}: {} chiplet(s){} with per-chiplet {} (EDAP {}{})",
         dnn,
         rec.chiplets,
         if rec.chiplets == 1 {
@@ -143,7 +154,12 @@ fn print_scaleout_recommendation(rec: &crate::arch::ScaleoutRecommendation, dnn:
             format!(" over NoP-{}", rec.nop_topology.name())
         },
         rec.noc_topology.name(),
-        fmt_sig(rec.best.edap(), 4),
+        fmt_sig(rec.best_edap, 4),
+        if rec.sim_calibrated {
+            ", sim-calibrated"
+        } else {
+            ""
+        },
     );
 }
 
@@ -457,22 +473,36 @@ pub fn run(argv: &[String]) -> Result<()> {
                 t.add_row(row);
             }
             print_tables(&[t], args.has("csv"));
-            // The joint recommendation sweep stays analytical: it covers
-            // ~20 (chiplets x NoP x NoC) points and only ranks designs.
-            let rec = recommend_scaleout(&g, &arch, &base_noc, &NopConfig::default());
+            // The joint recommendation sweep evaluates analytically, but
+            // under --sim its ranking folds in the measured (NoP, k)
+            // saturation rates (see `recommend_scaleout`).
+            let rec = recommend_scaleout(&g, &arch, &base_noc, &base_nop);
             print_scaleout_recommendation(&rec, &g.name);
         }
         "serve" => {
             let fast = args.has("fast");
-            let model_flag = args.get("model").map(str::to_string).or_else(|| {
-                // `repro serve --fast` alone is the CI smoke run: the
-                // modeled path with its default small configuration.
-                (fast && args.positional.get(1).is_none()).then(|| "SqueezeNet".to_string())
-            });
-            if let Some(name) = model_flag {
-                serve_modeled_cmd(&args, &name, fast)?;
+            if args.has("mix") || args.has("trace") {
+                // Multi-model serving: a workload mix (or a recorded
+                // trace) over one package with per-model replica sets.
+                serve_mix_cmd(&args, fast)?;
             } else {
-                serve_pjrt_cmd(&args)?;
+                // Mirror the mix path's strictness: mix-only flags on the
+                // single-model/PJRT paths would be silent no-ops.
+                for mix_only in ["record-trace", "placement", "admission", "arrival"] {
+                    if args.has(mix_only) {
+                        bail!("--{mix_only} requires --mix (or --trace)");
+                    }
+                }
+                let model_flag = args.get("model").map(str::to_string).or_else(|| {
+                    // `repro serve --fast` alone is the CI smoke run: the
+                    // modeled path with its default small configuration.
+                    (fast && args.positional.get(1).is_none()).then(|| "SqueezeNet".to_string())
+                });
+                if let Some(name) = model_flag {
+                    serve_modeled_cmd(&args, &name, fast)?;
+                } else {
+                    serve_pjrt_cmd(&args)?;
+                }
             }
         }
         "config" => {
@@ -564,6 +594,7 @@ fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
         arrival_rps: args.get_f64("rate", defaults.arrival_rps)?,
         requests,
         batch: args.get_usize("batch", defaults.batch)?,
+        seed: args.get_usize("seed", defaults.seed as usize)? as u64,
     };
     cfg.validate().map_err(|e| anyhow!("serving config: {e}"))?;
     let nop = NopConfig {
@@ -625,6 +656,175 @@ fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
     Ok(())
 }
 
+/// The multi-model serving path (`repro serve --mix [spec]` /
+/// `repro serve --trace <file>`): a workload mix over one package, with
+/// per-model replica placement, deadline-aware admission, and optional
+/// trace record/replay.
+fn serve_mix_cmd(args: &Args, fast: bool) -> Result<()> {
+    // Flags that take a file must actually carry one: a bare `--trace`
+    // would otherwise silently fall through to generating a fresh
+    // workload, and a bare `--record-trace` would record nothing.
+    for file_flag in ["trace", "record-trace"] {
+        if args.has(file_flag) && args.get(file_flag).is_none() {
+            bail!("--{file_flag} requires a file path");
+        }
+    }
+    // Single-model flags are meaningless here; reject rather than ignore.
+    if args.has("model") {
+        bail!("--model conflicts with --mix/--trace (name models in the mix spec instead)");
+    }
+    if args.has("batch") {
+        bail!("--batch has no effect on the mix path (request frame counts come from the arrival process; see [workload] frames_alpha)");
+    }
+    let config = Config::default();
+    let mut wl: WorkloadConfig = config.workload.clone();
+    if let Some(spec) = args.get("mix") {
+        wl.mix = WorkloadMix::parse(spec).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(p) = args.get("placement") {
+        wl.placement = PlacementPolicy::parse(p).ok_or_else(|| {
+            anyhow!(
+                "unknown placement '{p}' (valid: {})",
+                PlacementPolicy::valid_names()
+            )
+        })?;
+    }
+    if let Some(a) = args.get("admission") {
+        wl.admission = Admission::parse(a).ok_or_else(|| {
+            anyhow!("unknown admission '{a}' (valid: {})", Admission::valid_names())
+        })?;
+    }
+    if let Some(a) = args.get("arrival") {
+        wl.arrival = ArrivalKind::parse(a).ok_or_else(|| {
+            anyhow!("unknown arrival '{a}' (valid: {})", ArrivalKind::valid_names())
+        })?;
+    }
+    let chiplets = args.get_usize("chiplets", 8)?;
+    let topo = match args.get("topology") {
+        None => NopTopology::Mesh,
+        Some(t) => parse_nop_topology(t)?,
+    };
+    let policy = match args.get("policy") {
+        None => config.serving.policy,
+        Some(p) => Policy::parse(p)
+            .ok_or_else(|| anyhow!("unknown policy '{p}' (valid: {})", Policy::valid_names()))?,
+    };
+    let mut requests = args.get_usize("requests", config.serving.requests)?;
+    if fast {
+        requests = requests.min(96);
+    }
+    let serving = ServingConfig {
+        policy,
+        queue_depth: args.get_usize("queue-depth", config.serving.queue_depth)?,
+        arrival_rps: args.get_f64("rate", config.serving.arrival_rps)?,
+        requests,
+        batch: config.serving.batch,
+        seed: args.get_usize("seed", config.serving.seed as usize)? as u64,
+    };
+    serving.validate().map_err(|e| anyhow!("serving config: {e}"))?;
+    if args.has("sim") {
+        // The mix path always prices package legs analytically (its link
+        // contention is simulated by the scheduler itself, and the
+        // saturation backoff threshold is always sim-measured); accepting
+        // the flag would silently change nothing.
+        bail!("--sim is not supported with --mix/--trace (mix ingress is priced analytically; congestion is simulated by the scheduler)");
+    }
+    let nop = NopConfig {
+        topology: topo,
+        chiplets,
+        ..NopConfig::default()
+    };
+    nop.validate().map_err(|e| anyhow!("--chiplets: {e}"))?;
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+
+    let (model, report) = if let Some(path) = args.get("trace") {
+        // Replay: the trace pins the mix, the rate, and every event —
+        // reject flags that would silently change nothing (scheduler
+        // knobs like --placement/--admission/--policy legitimately vary).
+        for conflicting in ["mix", "record-trace", "arrival", "rate", "requests", "seed"] {
+            if args.has(conflicting) {
+                bail!(
+                    "--{conflicting} has no effect when replaying a trace \
+                     (the trace pins the workload); drop --{conflicting} or drop --trace"
+                );
+            }
+        }
+        let trace = Trace::load(path).map_err(|e| anyhow!(e))?;
+        eprintln!(
+            "replaying {} events ({} models) from {path}",
+            trace.events.len(),
+            trace.mix.models.len()
+        );
+        replay_mix(&trace, &arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?
+    } else {
+        let (model, trace, report) =
+            serve_mix(&arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?;
+        if let Some(path) = args.get("record-trace") {
+            trace.save(path).map_err(|e| anyhow!(e))?;
+            eprintln!("recorded {} events to {path}", trace.events.len());
+        }
+        (model, report)
+    };
+    print_mix_report(&model, &report, args.has("csv"));
+    Ok(())
+}
+
+/// Per-model table + headline line shared by the mix serve/replay paths.
+fn print_mix_report(model: &MixServingModel, report: &ServeReport, csv: bool) {
+    let mut t = Table::new(
+        format!(
+            "Mix serving on {} chiplet(s) (NoP-{}, {} placement, {} requests)",
+            model.chiplets,
+            model.topology.name(),
+            model.placement_policy.name(),
+            report.requests,
+        ),
+        &[
+            "model",
+            "replicas",
+            "deadline_ms",
+            "offered",
+            "completed",
+            "shed",
+            "dropped",
+            "hit_rate",
+            "p50_ms",
+            "p99_ms",
+        ],
+    );
+    for (pm, costs) in report.per_model.iter().zip(&model.models) {
+        t.add_row(vec![
+            pm.model.clone(),
+            pm.replicas.to_string(),
+            if costs.deadline_s.is_finite() {
+                fmt_sig(costs.deadline_s * 1e3, 4)
+            } else {
+                "-".into()
+            },
+            pm.offered.to_string(),
+            pm.completed.to_string(),
+            pm.shed.to_string(),
+            pm.dropped.to_string(),
+            fmt_sig(pm.hit_rate(), 3),
+            fmt_sig(pm.p50_ms, 4),
+            fmt_sig(pm.p99_ms, 4),
+        ]);
+    }
+    print_tables(&[t], csv);
+    println!(
+        "deadline hit-rate {:.3}: {}/{} requests completed ({} shed, {} dropped) at {:.1} req/s offered, {:.1} served",
+        report.hit_rate(),
+        report.completed,
+        report.requests,
+        report.shed,
+        report.dropped,
+        report.offered_rps,
+        report.throughput_rps,
+    );
+}
+
 /// The PJRT-measured serving path (`repro serve <artifact.hlo.txt>`).
 fn serve_pjrt_cmd(args: &Args) -> Result<()> {
     let artifact = args
@@ -669,7 +869,16 @@ USAGE:
   repro serve --model <dnn> [--chiplets N] [--topology t]   modeled chiplet-aware serving:
               [--policy round-robin|least-latency|          per-chiplet queues, NoP-priced
                congestion-aware] [--rate RPS] [--batch N]   routing, modeled p50/p99
-              [--queue-depth N] [--requests N] [--sim]      (--fast: small smoke config)
+              [--queue-depth N] [--requests N] [--seed N]   (--fast: small smoke config)
+              [--sim]
+  repro serve --mix [name[:weight[:deadline_ms]],...]       multi-model serving: replica
+              [--placement round-robin|nop-aware]           placement per model, deadline
+              [--admission drop-on-full|deadline-aware]     hit-rate headline, shed/drop
+              [--arrival poisson|bursty|diurnal]            accounting (deadline 0 = auto,
+              [--record-trace f] [--chiplets N] [--seed N]  inf = none; default mix
+              [--topology t] [--rate RPS] [--requests N]    VGG-19 + SqueezeNet)
+  repro serve --trace <file> [--placement p] [--admission a] replay a recorded trace
+                                                            bit-exactly
   repro sweep [--tech sram|reram] [--exact]                 parallel zoo sweep
   repro config [--load path]                                show/parse configuration
   repro list                                                list experiments
@@ -833,6 +1042,124 @@ mod tests {
         ])
         .is_err());
         assert!(run(&["serve".into(), "--model".into(), "NoSuchNet".into()]).is_err());
+    }
+
+    #[test]
+    fn run_serve_mix() {
+        // Explicit spec + knobs on a cheap two-model mix (the default
+        // VGG-19 + SqueezeNet smoke configuration is exercised by the CLI
+        // integration test and the CI `serve --mix --fast` step).
+        run(&[
+            "serve".into(),
+            "--mix".into(),
+            "MLP:1:0,LeNet-5:2:0".into(),
+            "--chiplets".into(),
+            "4".into(),
+            "--topology".into(),
+            "ring".into(),
+            "--placement".into(),
+            "round-robin".into(),
+            "--admission".into(),
+            "drop-on-full".into(),
+            "--arrival".into(),
+            "bursty".into(),
+            "--requests".into(),
+            "48".into(),
+            "--seed".into(),
+            "9".into(),
+        ])
+        .unwrap();
+        // Bad mix / placement / admission / arrival error cleanly.
+        assert!(run(&["serve".into(), "--mix".into(), "NoSuchNet:1:0".into()]).is_err());
+        let err = run(&[
+            "serve".into(),
+            "--mix".into(),
+            "--placement".into(),
+            "magic".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("nop-aware"), "{err}");
+        assert!(run(&[
+            "serve".into(),
+            "--mix".into(),
+            "--admission".into(),
+            "never".into(),
+        ])
+        .is_err());
+        assert!(run(&[
+            "serve".into(),
+            "--mix".into(),
+            "--arrival".into(),
+            "chaotic".into(),
+        ])
+        .is_err());
+        // A 1-chiplet package cannot host a two-model mix.
+        assert!(run(&[
+            "serve".into(),
+            "--mix".into(),
+            "--chiplets".into(),
+            "1".into(),
+        ])
+        .is_err());
+        // --sim is rejected on the mix path (it would be a silent no-op:
+        // mix ingress pricing is analytical by design).
+        let err = run(&["serve".into(), "--mix".into(), "--sim".into()]).unwrap_err();
+        assert!(err.to_string().contains("--sim"), "{err}");
+        // And mix-only flags are rejected on the single-model path.
+        let err = run(&[
+            "serve".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--placement".into(),
+            "nop-aware".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("--mix"), "{err}");
+        // A bare --trace (no file) errors instead of silently generating
+        // a fresh workload.
+        assert!(run(&["serve".into(), "--trace".into()]).is_err());
+    }
+
+    #[test]
+    fn run_serve_mix_record_and_replay() {
+        let path = std::env::temp_dir().join("imcnoc_cli_mix.trace");
+        let path = path.to_str().unwrap().to_string();
+        run(&[
+            "serve".into(),
+            "--mix".into(),
+            "MLP:1:0,LeNet-5:1:0".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--topology".into(),
+            "ring".into(),
+            "--requests".into(),
+            "40".into(),
+            "--record-trace".into(),
+            path.clone(),
+        ])
+        .unwrap();
+        run(&[
+            "serve".into(),
+            "--trace".into(),
+            path,
+            "--chiplets".into(),
+            "2".into(),
+            "--topology".into(),
+            "ring".into(),
+        ])
+        .unwrap();
+        assert!(run(&["serve".into(), "--trace".into(), "/nonexistent.trace".into()]).is_err());
+        // Workload-shaping flags conflict with replay (the trace pins
+        // the workload).
+        let err = run(&[
+            "serve".into(),
+            "--trace".into(),
+            "/nonexistent.trace".into(),
+            "--requests".into(),
+            "10".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("no effect"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub use parse::{parse_ini, IniDoc, ParseError};
 
 use crate::noc::topology::Topology;
 use crate::nop::topology::NopTopology;
+use crate::workload::{ArrivalKind, ArrivalProcess, PlacementPolicy, WorkloadMix};
 
 /// Memory technology of the IMC processing elements (crossbars).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -349,6 +350,45 @@ impl Policy {
     }
 }
 
+/// Admission control of the serving schedulers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Admission {
+    /// Admit unless every eligible queue is at `queue_depth` (PR 3's only
+    /// behavior): overload surfaces as drops and late completions.
+    DropOnFull,
+    /// Additionally *shed* a request at admission when its modeled
+    /// completion (queue backlog + NoP ingress + service + egress) already
+    /// exceeds its deadline — capacity is spent only on requests that can
+    /// still hit.
+    DeadlineAware,
+}
+
+impl Admission {
+    pub fn name(self) -> &'static str {
+        match self {
+            Admission::DropOnFull => "drop-on-full",
+            Admission::DeadlineAware => "deadline-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "drop-on-full" | "drop" | "full" => Some(Admission::DropOnFull),
+            "deadline-aware" | "deadline" | "shed" => Some(Admission::DeadlineAware),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Admission; 2] {
+        [Admission::DropOnFull, Admission::DeadlineAware]
+    }
+
+    /// The valid `parse` spellings, for CLI error messages.
+    pub fn valid_names() -> &'static str {
+        "drop-on-full, deadline-aware"
+    }
+}
+
 /// Serving-scheduler parameters for the chiplet-aware serving loop
 /// ([`crate::coordinator::scheduler`]).
 #[derive(Clone, Debug, PartialEq)]
@@ -364,6 +404,10 @@ pub struct ServingConfig {
     pub requests: usize,
     /// Per-chiplet serving batch (frames pipelined through one replica).
     pub batch: usize,
+    /// Arrival-generator PRNG seed — independent of `[sim] seed` so
+    /// serving experiments reseed without disturbing the NoC/NoP
+    /// simulators (and vice versa).
+    pub seed: u64,
 }
 
 impl Default for ServingConfig {
@@ -374,6 +418,7 @@ impl Default for ServingConfig {
             arrival_rps: 0.0,
             requests: 512,
             batch: 4,
+            seed: 0x1AC5_EED,
         }
     }
 }
@@ -393,6 +438,69 @@ impl ServingConfig {
             return Err("serving arrival_rps must be >= 0".into());
         }
         Ok(())
+    }
+}
+
+/// Multi-model workload parameters for the mix serving scheduler
+/// ([`crate::coordinator::mix`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// The DNN mix: `name[:weight[:deadline_ms]],...` (deadline 0 = auto,
+    /// inf = none).
+    pub mix: WorkloadMix,
+    /// Arrival-process shape (rates come from `[serving] arrival_rps`).
+    pub arrival: ArrivalKind,
+    /// Replica-placement policy over the package's chiplets.
+    pub placement: PlacementPolicy,
+    /// Admission control of the per-chiplet queues.
+    pub admission: Admission,
+    /// Bursty: ON-state rate multiplier.
+    pub burst_factor: f64,
+    /// Bursty: long-run ON-state time fraction.
+    pub on_fraction: f64,
+    /// Bursty: mean ON+OFF cycle, seconds. Diurnal: the period.
+    pub cycle_s: f64,
+    /// Heavy-tailed frames-per-request exponent; 0 = single-frame.
+    pub frames_alpha: f64,
+    /// Frames-per-request cap.
+    pub frames_max: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            mix: WorkloadMix::default_mix(),
+            arrival: ArrivalKind::Poisson,
+            placement: PlacementPolicy::NopAware,
+            admission: Admission::DeadlineAware,
+            burst_factor: 4.0,
+            on_fraction: 0.25,
+            cycle_s: 0.02,
+            frames_alpha: 0.0,
+            frames_max: 8,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Assemble the arrival-process description these knobs define.
+    pub fn arrival_process(&self) -> ArrivalProcess {
+        ArrivalProcess {
+            kind: self.arrival,
+            burst_factor: self.burst_factor,
+            on_fraction: self.on_fraction,
+            cycle_s: self.cycle_s,
+            frames_alpha: self.frames_alpha,
+            frames_max: self.frames_max as u32,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.mix.validate()?;
+        if self.frames_max == 0 || self.frames_max > 1024 {
+            return Err("workload frames_max must be in [1, 1024]".into());
+        }
+        self.arrival_process().validate()
     }
 }
 
@@ -427,6 +535,7 @@ pub struct Config {
     pub noc: NocConfig,
     pub nop: NopConfig,
     pub serving: ServingConfig,
+    pub workload: WorkloadConfig,
     pub sim: SimConfig,
 }
 
@@ -517,6 +626,38 @@ impl Config {
                 ("serving", "batch") => {
                     cfg.serving.batch = v.parse().map_err(|_| parse_err(key))?
                 }
+                ("serving", "seed") => {
+                    cfg.serving.seed = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("workload", "mix") => {
+                    cfg.workload.mix =
+                        WorkloadMix::parse(v).map_err(|e| format!("workload.mix: {e}"))?
+                }
+                ("workload", "arrival") => {
+                    cfg.workload.arrival = ArrivalKind::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("workload", "placement") => {
+                    cfg.workload.placement =
+                        PlacementPolicy::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("workload", "admission") => {
+                    cfg.workload.admission = Admission::parse(v).ok_or_else(|| parse_err(key))?
+                }
+                ("workload", "burst_factor") => {
+                    cfg.workload.burst_factor = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("workload", "on_fraction") => {
+                    cfg.workload.on_fraction = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("workload", "cycle_s") => {
+                    cfg.workload.cycle_s = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("workload", "frames_alpha") => {
+                    cfg.workload.frames_alpha = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("workload", "frames_max") => {
+                    cfg.workload.frames_max = v.parse().map_err(|_| parse_err(key))?
+                }
                 ("sim", "seed") => cfg.sim.seed = v.parse().map_err(|_| parse_err(key))?,
                 ("sim", "warmup_cycles") => {
                     cfg.sim.warmup_cycles = v.parse().map_err(|_| parse_err(key))?
@@ -534,6 +675,7 @@ impl Config {
         cfg.noc.validate()?;
         cfg.nop.validate()?;
         cfg.serving.validate()?;
+        cfg.workload.validate()?;
         Ok(cfg)
     }
 
@@ -555,7 +697,10 @@ impl Config {
              hop_latency_cycles = {}\nbuffer_flits = {}\n\
              energy_pj_per_bit = {}\nphy_area_mm2 = {}\n\n[serving]\n\
              policy = {}\nqueue_depth = {}\narrival_rps = {}\n\
-             requests = {}\nbatch = {}\n\n[sim]\nseed = {}\n\
+             requests = {}\nbatch = {}\nseed = {}\n\n[workload]\n\
+             mix = {}\narrival = {}\nplacement = {}\nadmission = {}\n\
+             burst_factor = {}\non_fraction = {}\ncycle_s = {}\n\
+             frames_alpha = {}\nframes_max = {}\n\n[sim]\nseed = {}\n\
              warmup_cycles = {}\nmeasure_cycles = {}\ndrain_cycles = {}\n",
             self.arch.pe_size,
             self.arch.cell_bits,
@@ -587,6 +732,16 @@ impl Config {
             self.serving.arrival_rps,
             self.serving.requests,
             self.serving.batch,
+            self.serving.seed,
+            self.workload.mix.spec_string(),
+            self.workload.arrival.name(),
+            self.workload.placement.name(),
+            self.workload.admission.name(),
+            self.workload.burst_factor,
+            self.workload.on_fraction,
+            self.workload.cycle_s,
+            self.workload.frames_alpha,
+            self.workload.frames_max,
             self.sim.seed,
             self.sim.warmup_cycles,
             self.sim.measure_cycles,
@@ -679,6 +834,56 @@ mod tests {
         assert!(Config::from_ini("[serving]\nqueue_depth = 0\n").is_err());
         assert!(Config::from_ini("[serving]\nbatch = 0\n").is_err());
         assert!(Config::from_ini("[serving]\narrival_rps = -2\n").is_err());
+    }
+
+    #[test]
+    fn serving_seed_is_independent_of_sim_seed() {
+        let cfg = Config::from_ini("[serving]\nseed = 99\n").unwrap();
+        assert_eq!(cfg.serving.seed, 99);
+        assert_eq!(cfg.sim.seed, SimConfig::default().seed);
+        let cfg = Config::from_ini("[sim]\nseed = 7\n").unwrap();
+        assert_eq!(cfg.sim.seed, 7);
+        assert_eq!(cfg.serving.seed, ServingConfig::default().seed);
+    }
+
+    #[test]
+    fn workload_section_parses_and_validates() {
+        let text = "[workload]\nmix = MLP:2:25,LeNet-5:1:inf\narrival = bursty\n\
+                    placement = round-robin\nadmission = drop-on-full\n\
+                    burst_factor = 2\non_fraction = 0.5\ncycle_s = 0.1\n\
+                    frames_alpha = 1.5\nframes_max = 4\n";
+        let cfg = Config::from_ini(text).unwrap();
+        assert_eq!(cfg.workload.mix.models.len(), 2);
+        assert_eq!(cfg.workload.mix.models[0].model, "MLP");
+        assert_eq!(cfg.workload.mix.models[0].weight, 2.0);
+        assert_eq!(cfg.workload.mix.models[0].deadline_ms, 25.0);
+        assert!(cfg.workload.mix.models[1].deadline_ms.is_infinite());
+        assert_eq!(cfg.workload.arrival, ArrivalKind::Bursty);
+        assert_eq!(cfg.workload.placement, PlacementPolicy::RoundRobin);
+        assert_eq!(cfg.workload.admission, Admission::DropOnFull);
+        assert_eq!(cfg.workload.frames_max, 4);
+        // Defaults: NoP-aware placement, deadline-aware admission, Poisson.
+        let d = WorkloadConfig::default();
+        assert_eq!(d.placement, PlacementPolicy::NopAware);
+        assert_eq!(d.admission, Admission::DeadlineAware);
+        assert_eq!(d.arrival, ArrivalKind::Poisson);
+        // Bad values surface as errors.
+        assert!(Config::from_ini("[workload]\nmix = \n").is_err());
+        assert!(Config::from_ini("[workload]\narrival = chaotic\n").is_err());
+        assert!(Config::from_ini("[workload]\nplacement = psychic\n").is_err());
+        assert!(Config::from_ini("[workload]\nadmission = maybe\n").is_err());
+        assert!(Config::from_ini("[workload]\nburst_factor = 0.5\n").is_err());
+        assert!(Config::from_ini("[workload]\nframes_max = 0\n").is_err());
+    }
+
+    #[test]
+    fn admission_parse_roundtrip() {
+        for a in Admission::all() {
+            assert_eq!(Admission::parse(a.name()), Some(a));
+        }
+        assert_eq!(Admission::parse("shed"), Some(Admission::DeadlineAware));
+        assert_eq!(Admission::parse("always"), None);
+        assert!(Admission::valid_names().contains("deadline-aware"));
     }
 
     #[test]

@@ -1,0 +1,903 @@
+//! Multi-model chiplet serving: one package, a mix of DNNs, deadline-aware
+//! admission, and NoP-co-optimized replica placement.
+//!
+//! [`super::scheduler`] serves one DNN replicated on every chiplet — the
+//! regime where the paper's model-dependent interconnect choice is static.
+//! This module lifts it to a [`WorkloadMix`]: each chiplet is programmed
+//! with *one* model's weights (crossbars are weight-stationary), so a
+//! placement assigns every chiplet to a model, and requests ride the NoP
+//! from the package gateway to a replica of *their* model. The pieces:
+//!
+//! * [`MixModelCosts`] — per-replica modeled costs of one mix member
+//!   (service, pipeline stage, ingress/egress payload, deadline).
+//! * [`MixServingModel`] — the package-level cost model: a
+//!   [`Placement`] from [`crate::workload::place_replicas`], zero-load
+//!   ingress/egress per (model, chiplet), shared-link serialization costs,
+//!   and the measured saturation utilization of the package.
+//! * [`MixScheduler`] — the discrete-event simulation: trace- or
+//!   generator-driven arrivals ([`Event`]), policy routing among a model's
+//!   replicas, per-link ingress serialization over *shared* link state (so
+//!   the mix's models contend for the same SerDes lanes), and admission
+//!   control — [`Admission::DropOnFull`] or [`Admission::DeadlineAware`]
+//!   shedding. Emits the same [`ServeReport`] type as every other serving
+//!   path, extended with per-model deadline statistics.
+//!
+//! The scheduler itself is RNG-free: all randomness lives in the arrival
+//! generator, which is why replaying a recorded [`Trace`] reproduces a
+//! report byte-for-byte.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{
+    Admission, ArchConfig, NocConfig, NopConfig, Policy, ServingConfig, SimConfig, WorkloadConfig,
+};
+use crate::coordinator::scheduler::{
+    measured_sat_link_util, replica_costs, LinkWindow, AUTO_LOAD_FACTOR, SATURATION_BACKOFF,
+};
+use crate::coordinator::server::{ChipletQueueStats, ModelServeStats, ServeReport};
+use crate::dnn::by_name;
+use crate::mapping::Mapping;
+use crate::nop::evaluator::nop_transfer_cycles;
+use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::util::{mean, percentile};
+use crate::workload::{place_replicas, Event, Placement, PlacementPolicy, Trace, WorkloadMix};
+
+/// Auto deadline (`deadline_ms = 0` in a mix spec): this multiple of the
+/// model's modeled replica service time.
+pub const DEADLINE_AUTO_FACTOR: f64 = 5.0;
+
+/// Per-replica modeled costs of one mix member.
+#[derive(Clone, Debug)]
+pub struct MixModelCosts {
+    /// Canonical zoo name.
+    pub name: String,
+    /// Normalized arrival share of the mix's traffic.
+    pub share: f64,
+    /// Latency deadline, seconds (`f64::INFINITY` = none).
+    pub deadline_s: f64,
+    /// One frame through one replica chiplet, seconds.
+    pub service_s: f64,
+    /// Steady-state layer-pipeline inter-frame interval, seconds.
+    pub stage_s: f64,
+    /// NoP flits of one request's input / output payload.
+    pub ingress_flits: u64,
+    pub egress_flits: u64,
+}
+
+impl MixModelCosts {
+    /// Replica occupancy of one `frames`-frame request, seconds (frames
+    /// pipeline through the replica's layers like a batch).
+    pub fn occupancy_s(&self, frames: u32) -> f64 {
+        self.service_s + (frames.max(1) - 1) as f64 * self.stage_s
+    }
+
+    /// Occupancy at a (possibly fractional) expected frame count — the
+    /// capacity-planning form of [`MixModelCosts::occupancy_s`].
+    pub fn mean_occupancy_s(&self, mean_frames: f64) -> f64 {
+        self.service_s + (mean_frames.max(1.0) - 1.0) * self.stage_s
+    }
+}
+
+/// All modeled costs for serving a [`WorkloadMix`] on one package, plus
+/// the replica placement the queues sit over.
+#[derive(Clone, Debug)]
+pub struct MixServingModel {
+    pub chiplets: usize,
+    pub topology: NopTopology,
+    pub models: Vec<MixModelCosts>,
+    pub placement: Placement,
+    pub placement_policy: PlacementPolicy,
+    /// Package I/O entry chiplet (0 by convention; the NoP-aware placement
+    /// optimizes proximity to it).
+    pub gateway: usize,
+    /// SerDes port bundles on the gateway (its injection bandwidth).
+    pub gateway_ports: usize,
+    /// Directed package links of the gateway→chiplet route, per chiplet.
+    pub paths: Vec<Vec<(usize, usize)>>,
+    /// Zero-load input transfer time, `ingress_s[model][chiplet]`, seconds.
+    pub ingress_s: Vec<Vec<f64>>,
+    /// Zero-load result return time, `egress_s[model][chiplet]`, seconds.
+    pub egress_s: Vec<Vec<f64>>,
+    /// Seconds one package link is busy serializing one request's input,
+    /// per model.
+    pub link_busy_s: Vec<f64>,
+    /// Fixed per-hop SerDes latency, seconds.
+    pub hop_s: f64,
+    /// Measured per-link saturation busy fraction (see
+    /// [`super::scheduler::ServingModel::sat_link_util`]).
+    pub sat_link_util: f64,
+}
+
+impl MixServingModel {
+    /// Price every mix member on a `nop.chiplets`-chiplet package and run
+    /// the `policy` placement search. Fails on unknown DNN names or a
+    /// package smaller than the mix.
+    pub fn build(
+        mix: &WorkloadMix,
+        policy: PlacementPolicy,
+        arch: &ArchConfig,
+        noc: &NocConfig,
+        nop: &NopConfig,
+        sim: &SimConfig,
+    ) -> Result<Self, String> {
+        mix.validate()?;
+        let k = nop.chiplets;
+        if k < mix.models.len() {
+            // Fail before the (expensive) per-model pricing.
+            return Err(format!(
+                "{k} chiplet(s) cannot host {} model(s) (one model per chiplet)",
+                mix.models.len()
+            ));
+        }
+        let net = NopNetwork::build(nop.topology, k);
+        let gateway = 0usize;
+        let shares = mix.shares();
+
+        let mut models = Vec::with_capacity(mix.models.len());
+        let mut in_bits = Vec::with_capacity(mix.models.len());
+        let mut out_bits = Vec::with_capacity(mix.models.len());
+        for (spec, share) in mix.models.iter().zip(&shares) {
+            let g = by_name(&spec.model).ok_or_else(|| {
+                format!(
+                    "unknown DNN '{}' in workload mix (valid: {})",
+                    spec.model,
+                    crate::dnn::valid_names()
+                )
+            })?;
+            let mapping = Mapping::build(&g, arch);
+            let (service_s, stage_s) = replica_costs(&g, &mapping, arch, noc, nop, sim);
+            let ib = g.input_bits(arch.n_bits);
+            let ob = g.output_bits(arch.n_bits);
+            let deadline_s = if spec.deadline_ms == 0.0 {
+                DEADLINE_AUTO_FACTOR * service_s
+            } else {
+                spec.deadline_ms * 1e-3
+            };
+            models.push(MixModelCosts {
+                name: g.name.clone(),
+                share: *share,
+                deadline_s,
+                service_s,
+                stage_s,
+                ingress_flits: ib.div_ceil(nop.link_width as u64).max(1),
+                egress_flits: ob.div_ceil(nop.link_width as u64).max(1),
+            });
+            in_bits.push(ib);
+            out_bits.push(ob);
+        }
+
+        // Placement: service demand sizes the replica sets, ingress traffic
+        // orders models for gateway proximity.
+        let (loads, ingress_rate) = placement_inputs(&models);
+        let placement = place_replicas(policy, &net, gateway, &loads, &ingress_rate)?;
+
+        let nop_cycle_s = 1.0 / nop.freq_hz;
+        let paths: Vec<Vec<(usize, usize)>> =
+            (0..k).map(|c| net.route_links(gateway, c)).collect();
+        let n = models.len();
+        let mut ingress_s = vec![vec![0.0f64; k]; n];
+        let mut egress_s = vec![vec![0.0f64; k]; n];
+        for m in 0..n {
+            for c in 0..k {
+                if c == gateway {
+                    continue;
+                }
+                let hops = net.hops(gateway, c);
+                ingress_s[m][c] =
+                    nop_transfer_cycles(in_bits[m], hops, nop, arch.freq_hz) / arch.freq_hz;
+                egress_s[m][c] =
+                    nop_transfer_cycles(out_bits[m], hops, nop, arch.freq_hz) / arch.freq_hz;
+            }
+        }
+        let link_busy_s: Vec<f64> = models
+            .iter()
+            .map(|m| m.ingress_flits as f64 * nop_cycle_s)
+            .collect();
+        let sat_link_util = measured_sat_link_util(&net, nop, sim.seed);
+
+        Ok(Self {
+            chiplets: k,
+            topology: nop.topology,
+            models,
+            placement,
+            placement_policy: policy,
+            gateway,
+            gateway_ports: net.ports(gateway),
+            paths,
+            ingress_s,
+            egress_s,
+            link_busy_s,
+            hop_s: nop.hop_latency_cycles as f64 * nop_cycle_s,
+            sat_link_util,
+        })
+    }
+
+    /// Re-run only the placement search on an already-priced model: the
+    /// expensive per-model pricing and the saturation sweep are reused, so
+    /// comparing placements on one package costs one build plus this.
+    pub fn with_placement(&self, policy: PlacementPolicy) -> Result<Self, String> {
+        let net = NopNetwork::build(self.topology, self.chiplets);
+        let (loads, ingress_rate) = placement_inputs(&self.models);
+        let placement = place_replicas(policy, &net, self.gateway, &loads, &ingress_rate)?;
+        Ok(Self {
+            placement,
+            placement_policy: policy,
+            ..self.clone()
+        })
+    }
+
+    /// Aggregate modeled request capacity of the mix at its traffic
+    /// shares: the smaller of the ideal (demand-proportional,
+    /// placement-independent) replica bandwidth and the gateway's NoP
+    /// injection bandwidth. `mean_frames` is the arrival process's
+    /// expected frames per request
+    /// ([`crate::workload::ArrivalProcess::mean_frames`]) so heavy-tailed
+    /// batches are billed as the extra service and ingress they occupy —
+    /// the auto arrival rate then holds *utilization* constant across
+    /// tail shapes. Deliberately placement-independent so different
+    /// placements can be compared at the same offered load.
+    pub fn capacity_rps(&self, mean_frames: f64) -> f64 {
+        let mf = mean_frames.max(1.0);
+        let mean_occ: f64 = self
+            .models
+            .iter()
+            .map(|m| m.share * m.mean_occupancy_s(mf))
+            .sum();
+        let svc = self.chiplets as f64 / mean_occ;
+        if self.chiplets == 1 {
+            return svc;
+        }
+        let mean_busy: f64 = self
+            .models
+            .iter()
+            .zip(&self.link_busy_s)
+            .map(|(m, b)| m.share * b * mf)
+            .sum();
+        let net_cap = self.gateway_ports as f64 / mean_busy.max(1e-18);
+        svc.min(net_cap)
+    }
+}
+
+/// Placement-search inputs at the mix's traffic shares: per-model service
+/// demand (replica-seconds per second) and NoP ingress traffic — the one
+/// place these weightings are defined, shared by `build` and
+/// `with_placement`.
+fn placement_inputs(models: &[MixModelCosts]) -> (Vec<f64>, Vec<f64>) {
+    let loads = models.iter().map(|m| m.share * m.service_s).collect();
+    let ingress = models
+        .iter()
+        .map(|m| m.share * m.ingress_flits as f64)
+        .collect();
+    (loads, ingress)
+}
+
+/// A request admitted to a replica queue.
+#[derive(Clone, Copy, Debug)]
+struct MixPending {
+    arrival: f64,
+    /// When the input payload is resident on the replica chiplet.
+    ready: f64,
+    model: usize,
+    frames: u32,
+}
+
+/// Per-chiplet request queues over a [`Placement`], plus the
+/// discrete-event multi-model serving simulation that drives them.
+pub struct MixScheduler {
+    pub model: MixServingModel,
+    policy: Policy,
+    admission: Admission,
+    queue_depth: usize,
+    /// Replica chiplets per model (from the placement), in id order.
+    replicas: Vec<Vec<usize>>,
+    // Dynamic state, owned by one `run`.
+    free_at: Vec<f64>,
+    queues: Vec<VecDeque<MixPending>>,
+    /// Total occupancy of the requests queued on each chiplet, seconds
+    /// (keeps admission pricing O(1)).
+    queued_s: Vec<f64>,
+    link_free: HashMap<(usize, usize), f64>,
+    link_util: HashMap<(usize, usize), LinkWindow>,
+    window_s: f64,
+    rr_next: Vec<usize>,
+    busy_s: Vec<f64>,
+    served: Vec<usize>,
+    peak_queue: Vec<usize>,
+    offered: Vec<usize>,
+    completed: Vec<usize>,
+    dropped: Vec<usize>,
+    shed: Vec<usize>,
+    deadline_offered: Vec<usize>,
+    deadline_hits: Vec<usize>,
+    latencies_ms: Vec<Vec<f64>>,
+    batches: usize,
+}
+
+impl MixScheduler {
+    pub fn new(model: MixServingModel, cfg: &ServingConfig, admission: Admission) -> Self {
+        let n = model.models.len();
+        let replicas: Vec<Vec<usize>> = (0..n).map(|m| model.placement.replicas(m)).collect();
+        // Utilization window: long enough to smooth tens of payloads on a
+        // link, short enough to track saturation as it builds.
+        let max_busy = model.link_busy_s.iter().copied().fold(0.0f64, f64::max);
+        let max_stage = model.models.iter().map(|m| m.stage_s).fold(0.0f64, f64::max);
+        let window_s = (32.0 * max_busy).max(16.0 * max_stage);
+        // `reset` is the single initializer of every per-run accumulator
+        // (run() calls it again, so new state added there stays in sync).
+        let mut sched = Self {
+            model,
+            policy: cfg.policy,
+            admission,
+            queue_depth: cfg.queue_depth.max(1),
+            replicas,
+            free_at: Vec::new(),
+            queues: Vec::new(),
+            queued_s: Vec::new(),
+            link_free: HashMap::new(),
+            link_util: HashMap::new(),
+            window_s,
+            rr_next: Vec::new(),
+            busy_s: Vec::new(),
+            served: Vec::new(),
+            peak_queue: Vec::new(),
+            offered: Vec::new(),
+            completed: Vec::new(),
+            dropped: Vec::new(),
+            shed: Vec::new(),
+            deadline_offered: Vec::new(),
+            deadline_hits: Vec::new(),
+            latencies_ms: Vec::new(),
+            batches: 0,
+        };
+        sched.reset();
+        sched
+    }
+
+    /// Reset every per-run accumulator so one scheduler can host several
+    /// independent runs.
+    fn reset(&mut self) {
+        let k = self.model.chiplets;
+        let n = self.model.models.len();
+        self.free_at = vec![0.0; k];
+        self.queues = (0..k).map(|_| VecDeque::new()).collect();
+        self.queued_s = vec![0.0; k];
+        self.link_free.clear();
+        self.link_util.clear();
+        self.rr_next = vec![0; n];
+        self.busy_s = vec![0.0; k];
+        self.served = vec![0; k];
+        self.peak_queue = vec![0; k];
+        self.offered = vec![0; n];
+        self.completed = vec![0; n];
+        self.dropped = vec![0; n];
+        self.shed = vec![0; n];
+        self.deadline_offered = vec![0; n];
+        self.deadline_hits = vec![0; n];
+        self.latencies_ms = (0..n).map(|_| Vec::new()).collect();
+        self.batches = 0;
+    }
+
+    /// Modeled completion delta of a `frames`-frame request of `m`
+    /// admitted to chiplet `c` at `t` — what the least-latency policies
+    /// minimize and what deadline-aware admission compares to the
+    /// deadline.
+    fn price(&self, c: usize, m: usize, frames: u32, t: f64) -> f64 {
+        let costs = &self.model.models[m];
+        let backlog = (self.free_at[c] - t).max(0.0) + self.queued_s[c];
+        // A multi-frame request streams one input payload per frame; the
+        // extra payloads pipeline behind the first at the serialization
+        // rate.
+        let extra_ingress = (frames.max(1) - 1) as f64 * self.model.link_busy_s[m];
+        backlog
+            + self.model.ingress_s[m][c]
+            + extra_ingress
+            + costs.occupancy_s(frames)
+            + self.model.egress_s[m][c]
+    }
+
+    /// Worst busy fraction among the links of chiplet `c`'s ingress path.
+    fn path_utilization(&mut self, c: usize, t: f64) -> f64 {
+        let window_s = self.window_s;
+        let mut worst = 0.0f64;
+        for link in &self.model.paths[c] {
+            let win = self.link_util.entry(*link).or_default();
+            worst = worst.max(win.utilization(t, window_s));
+        }
+        worst
+    }
+
+    /// Pick a replica of model `m` for a request arriving at `t`, or
+    /// `None` when every replica queue is full.
+    fn pick(&mut self, m: usize, frames: u32, t: f64) -> Option<usize> {
+        match self.policy {
+            Policy::RoundRobin => {
+                let count = self.replicas[m].len();
+                for i in 0..count {
+                    let slot = (self.rr_next[m] + i) % count;
+                    let c = self.replicas[m][slot];
+                    if self.queues[c].len() < self.queue_depth {
+                        self.rr_next[m] = (slot + 1) % count;
+                        return Some(c);
+                    }
+                }
+                None
+            }
+            Policy::LeastLatency | Policy::CongestionAware => {
+                let aware = self.policy == Policy::CongestionAware;
+                let threshold = SATURATION_BACKOFF * self.model.sat_link_util;
+                let mut best: Option<(bool, f64, usize)> = None;
+                // Indexed loop: iterating `&self.replicas[m]` would hold a
+                // borrow across the `&mut self` utilization probe below.
+                #[allow(clippy::needless_range_loop)]
+                for i in 0..self.replicas[m].len() {
+                    let c = self.replicas[m][i];
+                    if self.queues[c].len() >= self.queue_depth {
+                        continue;
+                    }
+                    let backed_off = aware && self.path_utilization(c, t) >= threshold;
+                    let price = self.price(c, m, frames, t);
+                    let better = match &best {
+                        None => true,
+                        Some((bo, p, _)) => (backed_off, price) < (*bo, *p),
+                    };
+                    if better {
+                        best = Some((backed_off, price, c));
+                    }
+                }
+                best.map(|(_, _, c)| c)
+            }
+        }
+    }
+
+    /// Cheapest non-full replica of model `m` for a request at `t`, with
+    /// its price — the deadline-aware fallback when the policy's pick
+    /// would miss (round-robin rotation can land on a backlogged replica
+    /// while an idle one could still hit the deadline).
+    fn cheapest(&self, m: usize, frames: u32, t: f64) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for &c in &self.replicas[m] {
+            if self.queues[c].len() >= self.queue_depth {
+                continue;
+            }
+            let price = self.price(c, m, frames, t);
+            if best.map_or(true, |(_, p)| price < p) {
+                best = Some((c, price));
+            }
+        }
+        best
+    }
+
+    /// Stream one request's input over the gateway→`c` package route
+    /// starting at `t` (links serialize over shared state, the head
+    /// pipelines hop by hop); returns when the payload is resident on `c`.
+    fn ingress(&mut self, c: usize, m: usize, frames: u32, t: f64) -> f64 {
+        // One input payload per frame, streamed back to back.
+        let ser_s = self.model.link_busy_s[m] * frames.max(1) as f64;
+        let hop_s = self.model.hop_s;
+        let window_s = self.window_s;
+        let mut head = t;
+        let mut done = t;
+        for &link in &self.model.paths[c] {
+            let free = *self.link_free.get(&link).unwrap_or(&0.0);
+            let start = head.max(free);
+            let finish = (start + ser_s).max(done);
+            self.link_free.insert(link, finish);
+            let win = self.link_util.entry(link).or_default();
+            win.add(start, finish - start, window_s);
+            head = start + hop_s;
+            done = finish + hop_s;
+        }
+        done
+    }
+
+    /// Serve every input-resident request that can start by `t`
+    /// (work-conserving: a free replica takes its queue head as soon as
+    /// the payload has landed).
+    fn advance(&mut self, t: f64) {
+        for c in 0..self.model.chiplets {
+            loop {
+                let head = match self.queues[c].front() {
+                    None => break,
+                    Some(p) => *p,
+                };
+                let start = self.free_at[c].max(head.ready);
+                if start > t {
+                    break;
+                }
+                self.queues[c].pop_front();
+                let costs = &self.model.models[head.model];
+                let occupied = costs.occupancy_s(head.frames);
+                self.queued_s[c] = (self.queued_s[c] - occupied).max(0.0);
+                let complete = start + occupied + self.model.egress_s[head.model][c];
+                let latency_s = complete - head.arrival;
+                self.latencies_ms[head.model].push(latency_s * 1e3);
+                // Hits only count toward deadline-carrying requests (an
+                // infinite deadline was never "offered" a deadline).
+                if costs.deadline_s.is_finite() && latency_s <= costs.deadline_s {
+                    self.deadline_hits[head.model] += 1;
+                }
+                self.free_at[c] = start + occupied;
+                self.busy_s[c] += occupied;
+                self.served[c] += 1;
+                self.completed[head.model] += 1;
+                self.batches += 1;
+            }
+        }
+    }
+
+    /// Run the multi-model serving simulation over a time-sorted event
+    /// sequence (generated or replayed from a trace). Deterministic: the
+    /// scheduler draws no random numbers of its own.
+    pub fn run(&mut self, events: &[Event]) -> ServeReport {
+        self.reset();
+        let n = self.model.models.len();
+        let mut t = 0.0f64;
+        for (i, e) in events.iter().enumerate() {
+            assert!(
+                e.model < n,
+                "event {i} names model {} but the mix has {n} (trace/mix mismatch)",
+                e.model
+            );
+            t = t.max(e.t_s);
+            let m = e.model;
+            self.advance(t);
+            self.offered[m] += 1;
+            let costs = &self.model.models[m];
+            let deadline_s = costs.deadline_s;
+            let has_deadline = deadline_s.is_finite();
+            if has_deadline {
+                self.deadline_offered[m] += 1;
+            }
+            match self.pick(m, e.frames, t) {
+                None => self.dropped[m] += 1,
+                Some(mut c) => {
+                    if self.admission == Admission::DeadlineAware
+                        && has_deadline
+                        && self.price(c, m, e.frames, t) > deadline_s
+                    {
+                        // The routed replica would miss; shed only if the
+                        // cheapest replica would miss too, else reroute.
+                        match self.cheapest(m, e.frames, t) {
+                            Some((c2, p2)) if p2 <= deadline_s => c = c2,
+                            _ => {
+                                self.shed[m] += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    let ready = self.ingress(c, m, e.frames, t);
+                    let occupied = self.model.models[m].occupancy_s(e.frames);
+                    self.queues[c].push_back(MixPending {
+                        arrival: t,
+                        ready,
+                        model: m,
+                        frames: e.frames,
+                    });
+                    self.queued_s[c] += occupied;
+                    self.peak_queue[c] = self.peak_queue[c].max(self.queues[c].len());
+                }
+            }
+        }
+        // Drain: jump past every outstanding ready/free horizon until the
+        // queues empty (each pass starts at least the head requests).
+        let max_service = self
+            .model
+            .models
+            .iter()
+            .map(|m| m.service_s)
+            .fold(0.0f64, f64::max);
+        let mut horizon = t;
+        loop {
+            let pending: usize = self.queues.iter().map(|q| q.len()).sum();
+            if pending == 0 {
+                break;
+            }
+            for q in &self.queues {
+                for p in q {
+                    horizon = horizon.max(p.ready);
+                }
+            }
+            for &f in &self.free_at {
+                horizon = horizon.max(f);
+            }
+            horizon += max_service;
+            self.advance(horizon);
+        }
+
+        let end = self.free_at.iter().copied().fold(t, f64::max).max(1e-12);
+        let mut per_chiplet = Vec::with_capacity(self.model.chiplets);
+        for c in 0..self.model.chiplets {
+            per_chiplet.push(ChipletQueueStats {
+                chiplet: c,
+                served: self.served[c],
+                utilization: (self.busy_s[c] / end).min(1.0),
+                peak_queue: self.peak_queue[c],
+            });
+        }
+        let mut per_model = Vec::with_capacity(n);
+        let mut all_latencies: Vec<f64> = Vec::new();
+        for m in 0..n {
+            let lat = &self.latencies_ms[m];
+            per_model.push(ModelServeStats {
+                model: self.model.models[m].name.clone(),
+                replicas: self.replicas[m].len(),
+                offered: self.offered[m],
+                completed: self.completed[m],
+                dropped: self.dropped[m],
+                shed: self.shed[m],
+                deadline_offered: self.deadline_offered[m],
+                deadline_hits: self.deadline_hits[m],
+                mean_ms: mean(lat),
+                p50_ms: percentile(lat, 50.0),
+                p99_ms: percentile(lat, 99.0),
+            });
+            all_latencies.extend_from_slice(lat);
+        }
+        let mut report = ServeReport::from_latencies_ms(
+            events.len(),
+            self.completed.iter().sum(),
+            self.dropped.iter().sum(),
+            1,
+            self.batches,
+            &all_latencies,
+            end,
+        );
+        report.shed = self.shed.iter().sum();
+        report.deadline_offered = self.deadline_offered.iter().sum();
+        report.deadline_hits = self.deadline_hits.iter().sum();
+        report.per_chiplet = per_chiplet;
+        report.per_model = per_model;
+        report
+    }
+}
+
+/// Build the mix model, generate the workload from `[serving]` +
+/// `[workload]`, and run one multi-model serving simulation — the CLI /
+/// experiment entry point. Returns the priced model, the generated trace
+/// (ready to record), and the report.
+pub fn serve_mix(
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    serving: &ServingConfig,
+    workload: &WorkloadConfig,
+) -> Result<(MixServingModel, Trace, ServeReport), String> {
+    workload.validate()?;
+    serving.validate()?;
+    let model = MixServingModel::build(&workload.mix, workload.placement, arch, noc, nop, sim)?;
+    let rate = if serving.arrival_rps > 0.0 {
+        serving.arrival_rps
+    } else {
+        AUTO_LOAD_FACTOR * model.capacity_rps(workload.arrival_process().mean_frames())
+    };
+    let events = workload
+        .arrival_process()
+        .generate(&workload.mix, rate, serving.requests, serving.seed);
+    let trace = Trace::new(workload.mix.clone(), rate, events);
+    let mut sched = MixScheduler::new(model, serving, workload.admission);
+    let mut report = sched.run(&trace.events);
+    report.offered_rps = rate;
+    Ok((sched.model, trace, report))
+}
+
+/// Replay a recorded trace: rebuild the mix model from the trace's own mix
+/// spec and rerun the exact event sequence. With identical configuration
+/// this reproduces the recorded run's report byte-for-byte.
+pub fn replay_mix(
+    trace: &Trace,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    serving: &ServingConfig,
+    workload: &WorkloadConfig,
+) -> Result<(MixServingModel, ServeReport), String> {
+    let model = MixServingModel::build(&trace.mix, workload.placement, arch, noc, nop, sim)?;
+    let mut sched = MixScheduler::new(model, serving, workload.admission);
+    let mut report = sched.run(&trace.events);
+    report.offered_rps = trace.offered_rps;
+    Ok((sched.model, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ArrivalProcess;
+
+    fn defaults() -> (ArchConfig, NocConfig, SimConfig) {
+        (
+            ArchConfig::default(),
+            NocConfig::default(),
+            SimConfig::default(),
+        )
+    }
+
+    fn small_mix() -> WorkloadMix {
+        WorkloadMix::parse("MLP:1:0,LeNet-5:1:0").unwrap()
+    }
+
+    #[test]
+    fn build_prices_every_model_and_places_all_chiplets() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Mesh,
+            chiplets: 6,
+            ..NopConfig::default()
+        };
+        let model =
+            MixServingModel::build(&small_mix(), PlacementPolicy::NopAware, &arch, &noc, &nop, &sim)
+                .unwrap();
+        assert_eq!(model.models.len(), 2);
+        assert_eq!(model.placement.model_of.len(), 6);
+        model.placement.validate(2).unwrap();
+        for m in &model.models {
+            assert!(m.service_s > 0.0 && m.stage_s > 0.0);
+            assert!(m.stage_s <= m.service_s);
+            assert!(m.deadline_s.is_finite() && m.deadline_s > m.service_s);
+            assert!(m.ingress_flits >= 1 && m.egress_flits >= 1);
+        }
+        // Ingress costs grow with distance from the gateway, per model.
+        assert_eq!(model.ingress_s[0][0], 0.0);
+        assert!(model.ingress_s[0][5] > model.ingress_s[0][1]);
+        assert!(model.capacity_rps(1.0) > 0.0);
+        assert!(model.sat_link_util > 0.0 && model.sat_link_util <= 1.0);
+    }
+
+    #[test]
+    fn build_rejects_bad_mixes() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            chiplets: 1,
+            ..NopConfig::default()
+        };
+        // Two models cannot share one chiplet.
+        let err = MixServingModel::build(
+            &small_mix(),
+            PlacementPolicy::RoundRobin,
+            &arch,
+            &noc,
+            &nop,
+            &sim,
+        )
+        .unwrap_err();
+        assert!(err.contains("cannot host"), "{err}");
+        // Unknown names list the zoo.
+        let bad = WorkloadMix::parse("NoSuchNet:1:0").unwrap();
+        let nop4 = NopConfig {
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let err =
+            MixServingModel::build(&bad, PlacementPolicy::RoundRobin, &arch, &noc, &nop4, &sim)
+                .unwrap_err();
+        assert!(err.contains("unknown DNN"), "{err}");
+        assert!(err.contains("SqueezeNet"), "{err}");
+    }
+
+    #[test]
+    fn explicit_and_auto_deadlines() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let mix = WorkloadMix::parse("MLP:1:2.5,LeNet-5:1:inf").unwrap();
+        let model =
+            MixServingModel::build(&mix, PlacementPolicy::NopAware, &arch, &noc, &nop, &sim)
+                .unwrap();
+        assert!((model.models[0].deadline_s - 2.5e-3).abs() < 1e-12);
+        assert!(model.models[1].deadline_s.is_infinite());
+        let auto = MixServingModel::build(
+            &small_mix(),
+            PlacementPolicy::NopAware,
+            &arch,
+            &noc,
+            &nop,
+            &sim,
+        )
+        .unwrap();
+        let m0 = &auto.models[0];
+        assert!((m0.deadline_s - DEADLINE_AUTO_FACTOR * m0.service_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn light_load_completes_everything_within_deadline() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let model =
+            MixServingModel::build(&small_mix(), PlacementPolicy::NopAware, &arch, &noc, &nop, &sim)
+                .unwrap();
+        let rate = 0.2 * model.capacity_rps(1.0);
+        let events = ArrivalProcess::default().generate(&small_mix(), rate, 200, 11);
+        let cfg = ServingConfig::default();
+        let mut sched = MixScheduler::new(model, &cfg, Admission::DeadlineAware);
+        let report = sched.run(&events);
+        assert_eq!(report.requests, 200);
+        assert_eq!(report.completed, 200);
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.deadline_offered, 200);
+        // At 20% load nothing should queue long enough to miss an auto
+        // (5x service) deadline; allow a hair of slack for rare pile-ups.
+        assert!(report.deadline_hits >= 196, "hits {}", report.deadline_hits);
+        assert!(report.hit_rate() > 0.97);
+        assert_eq!(report.per_model.len(), 2);
+        let served: usize = report.per_chiplet.iter().map(|s| s.served).sum();
+        assert_eq!(served, 200);
+        for pm in &report.per_model {
+            assert_eq!(pm.offered, pm.completed + pm.dropped + pm.shed);
+            assert!(pm.p99_ms >= pm.p50_ms);
+        }
+    }
+
+    #[test]
+    fn overload_sheds_under_deadline_aware_and_drops_under_drop_on_full() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 2,
+            ..NopConfig::default()
+        };
+        let model =
+            MixServingModel::build(&small_mix(), PlacementPolicy::NopAware, &arch, &noc, &nop, &sim)
+                .unwrap();
+        let rate = 5.0 * model.capacity_rps(1.0);
+        let events = ArrivalProcess::default().generate(&small_mix(), rate, 400, 3);
+        // Queue depth deep enough that drop-on-full admits requests whose
+        // wait (up to ~12 services) blows the 5x-service auto deadline —
+        // the regime where shedding visibly wins.
+        let cfg = ServingConfig {
+            queue_depth: 12,
+            ..ServingConfig::default()
+        };
+        let mut sched = MixScheduler::new(model.clone(), &cfg, Admission::DeadlineAware);
+        let da = sched.run(&events);
+        assert!(da.shed > 0, "overload must shed under deadline-aware");
+        assert_eq!(da.completed + da.dropped + da.shed, da.requests);
+        let mut sched = MixScheduler::new(model, &cfg, Admission::DropOnFull);
+        let drop = sched.run(&events);
+        assert_eq!(drop.shed, 0, "drop-on-full never sheds");
+        assert!(drop.dropped > 0);
+        assert_eq!(drop.completed + drop.dropped, drop.requests);
+        // Same offered workload: deadline-aware turns late completions and
+        // drops into early sheds, and strictly wins on hit-rate.
+        assert!(
+            da.hit_rate() > drop.hit_rate(),
+            "deadline-aware hit-rate {} must beat drop-on-full {}",
+            da.hit_rate(),
+            drop.hit_rate()
+        );
+    }
+
+    #[test]
+    fn serve_mix_and_replay_roundtrip() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let serving = ServingConfig {
+            requests: 120,
+            ..ServingConfig::default()
+        };
+        let workload = WorkloadConfig {
+            mix: small_mix(),
+            ..WorkloadConfig::default()
+        };
+        let (_, trace, report) =
+            serve_mix(&arch, &noc, &nop, &sim, &serving, &workload).unwrap();
+        assert_eq!(trace.events.len(), 120);
+        assert!(report.offered_rps > 0.0);
+        // Replaying the just-recorded trace reproduces the identical report.
+        let parsed = Trace::parse(&trace.to_text()).unwrap();
+        let (_, replayed) =
+            replay_mix(&parsed, &arch, &noc, &nop, &sim, &serving, &workload).unwrap();
+        assert_eq!(format!("{report:?}"), format!("{replayed:?}"));
+    }
+}

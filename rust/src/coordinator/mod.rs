@@ -2,13 +2,16 @@
 //! circuit-estimator + NoC-simulator runs across DNNs/topologies/configs
 //! in parallel (the paper's "simulation framework", Fig. 6), the inference
 //! serving loop that batches requests through the PJRT-compiled artifacts,
-//! and the chiplet-aware serving scheduler that routes requests to
-//! per-chiplet queues priced by the NoP cost model.
+//! the chiplet-aware serving scheduler that routes requests to per-chiplet
+//! queues priced by the NoP cost model, and its multi-model lift — mixes
+//! of DNNs with deadline-aware admission and NoP-co-optimized placement.
 
 pub mod driver;
+pub mod mix;
 pub mod scheduler;
 pub mod server;
 
 pub use driver::{par_map, Driver, EvalKey};
+pub use mix::{replay_mix, serve_mix, MixScheduler, MixServingModel};
 pub use scheduler::{serve_modeled, ChipletScheduler, Policy, ServingModel};
-pub use server::{ChipletQueueStats, InferenceServer, ServeReport};
+pub use server::{ChipletQueueStats, InferenceServer, ModelServeStats, ServeReport};

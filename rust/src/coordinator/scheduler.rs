@@ -116,29 +116,8 @@ impl ServingModel {
         sim: &SimConfig,
     ) -> (Self, ChipletPartition) {
         let k = nop.chiplets;
-        let solo = NopConfig {
-            chiplets: 1,
-            ..nop.clone()
-        };
-        let replica = evaluate_package(graph, arch, noc, &solo, sim, CommBackend::Analytical);
-        let service_s = replica.latency_s();
-
-        // Layer-pipeline interval: consecutive frames of a batch stream
-        // through the replica layer by layer, so the steady-state
-        // inter-frame gap is the slowest per-layer stage. comm_per_layer
-        // is sparse (layers with no inbound on-chip flows are skipped) and
-        // keyed by graph layer id, so join on that id rather than zipping.
-        let flat = evaluate(graph, noc.topology, arch, noc, sim, CommBackend::Analytical);
         let mapping = Mapping::build(graph, arch);
-        let chip = ChipCost::evaluate(graph, &mapping, arch);
-        let comm_of: HashMap<usize, u64> = flat.comm_per_layer.iter().copied().collect();
-        let mut stage_cycles = 1.0f64;
-        for (i, lt) in mapping.layers.iter().enumerate() {
-            let compute = chip.per_layer[i].cycles as f64;
-            let comm = comm_of.get(&lt.layer).copied().unwrap_or(0) as f64;
-            stage_cycles = stage_cycles.max(compute.max(comm));
-        }
-        let stage_s = (stage_cycles / arch.freq_hz).min(service_s);
+        let (service_s, stage_s) = replica_costs(graph, &mapping, arch, noc, nop, sim);
 
         // The model-parallel alternative and the partition the queues sit
         // over (which also fixes the package I/O gateway).
@@ -163,8 +142,7 @@ impl ServingModel {
                 egress_s.push(0.0);
                 continue;
             }
-            let route = net.route_path(gateway, c);
-            paths.push(route.windows(2).map(|w| (w[0], w[1])).collect());
+            paths.push(net.route_links(gateway, c));
             let hops = net.hops(gateway, c);
             let ing = match nop.mode {
                 NopMode::Analytical => {
@@ -199,27 +177,7 @@ impl ServingModel {
             egress_s.push(egr / arch.freq_hz);
         }
 
-        // Convert the measured package saturation rate (uniform flits per
-        // chiplet per NoP cycle) into the per-link busy fraction it
-        // implies: rate × k flit-hops spread over the link graph.
-        let sat_link_util = match saturation_rate(nop.topology, k, nop, sim.seed) {
-            None => 1.0,
-            Some(rate) => {
-                let mut hop_sum = 0usize;
-                let mut pairs = 0usize;
-                for s in 0..k {
-                    for d in 0..k {
-                        if s != d {
-                            hop_sum += net.hops(s, d);
-                            pairs += 1;
-                        }
-                    }
-                }
-                let avg_hops = hop_sum as f64 / pairs.max(1) as f64;
-                let load = rate * k as f64 * avg_hops / net.link_count().max(1) as f64;
-                load.min(1.0)
-            }
-        };
+        let sat_link_util = measured_sat_link_util(&net, nop, sim.seed);
 
         let model = Self {
             dnn: graph.name.clone(),
@@ -263,16 +221,80 @@ impl ServingModel {
     }
 }
 
+/// Per-replica modeled costs shared by the single-model and multi-model
+/// ([`crate::coordinator::mix`]) schedulers: one-frame service time through
+/// a 1-chiplet replica (regression-tested equal to the flat single-chip
+/// evaluator) and the steady-state layer-pipeline interval that batching
+/// amortizes against.
+///
+/// The pipeline interval: consecutive frames of a batch stream through the
+/// replica layer by layer, so the steady-state inter-frame gap is the
+/// slowest per-layer stage. `comm_per_layer` is sparse (layers with no
+/// inbound on-chip flows are skipped) and keyed by graph layer id, so the
+/// join is on that id rather than a zip.
+pub(crate) fn replica_costs(
+    graph: &DnnGraph,
+    mapping: &Mapping,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+) -> (f64, f64) {
+    let solo = NopConfig {
+        chiplets: 1,
+        ..nop.clone()
+    };
+    let replica = evaluate_package(graph, arch, noc, &solo, sim, CommBackend::Analytical);
+    let service_s = replica.latency_s();
+    let flat = evaluate(graph, noc.topology, arch, noc, sim, CommBackend::Analytical);
+    let chip = ChipCost::evaluate(graph, mapping, arch);
+    let comm_of: HashMap<usize, u64> = flat.comm_per_layer.iter().copied().collect();
+    let mut stage_cycles = 1.0f64;
+    for (i, lt) in mapping.layers.iter().enumerate() {
+        let compute = chip.per_layer[i].cycles as f64;
+        let comm = comm_of.get(&lt.layer).copied().unwrap_or(0) as f64;
+        stage_cycles = stage_cycles.max(compute.max(comm));
+    }
+    let stage_s = (stage_cycles / arch.freq_hz).min(service_s);
+    (service_s, stage_s)
+}
+
+/// Convert the measured package saturation rate (uniform flits per chiplet
+/// per NoP cycle, from [`crate::nop::sim::saturation_rate`]) into the
+/// per-link busy fraction it implies: rate × k flit-hops spread over the
+/// link graph. 1.0 when the topology sustains full injection (or k = 1).
+pub(crate) fn measured_sat_link_util(net: &NopNetwork, nop: &NopConfig, seed: u64) -> f64 {
+    let k = net.chiplets;
+    match saturation_rate(nop.topology, k, nop, seed) {
+        None => 1.0,
+        Some(rate) => {
+            let mut hop_sum = 0usize;
+            let mut pairs = 0usize;
+            for s in 0..k {
+                for d in 0..k {
+                    if s != d {
+                        hop_sum += net.hops(s, d);
+                        pairs += 1;
+                    }
+                }
+            }
+            let avg_hops = hop_sum as f64 / pairs.max(1) as f64;
+            let load = rate * k as f64 * avg_hops / net.link_count().max(1) as f64;
+            load.min(1.0)
+        }
+    }
+}
+
 /// Two-bucket sliding estimate of a package link's busy fraction.
 #[derive(Clone, Copy, Debug, Default)]
-struct LinkWindow {
+pub(crate) struct LinkWindow {
     bucket_start: f64,
     cur: f64,
     prev: f64,
 }
 
 impl LinkWindow {
-    fn add(&mut self, t: f64, busy_s: f64, window_s: f64) {
+    pub(crate) fn add(&mut self, t: f64, busy_s: f64, window_s: f64) {
         self.roll(t, window_s);
         self.cur += busy_s;
     }
@@ -289,7 +311,7 @@ impl LinkWindow {
         }
     }
 
-    fn utilization(&mut self, t: f64, window_s: f64) -> f64 {
+    pub(crate) fn utilization(&mut self, t: f64, window_s: f64) -> f64 {
         self.roll(t, window_s);
         let span = window_s + (t - self.bucket_start).max(0.0);
         ((self.prev + self.cur) / span.max(1e-12)).min(1.0)
@@ -567,7 +589,9 @@ pub fn serve_modeled(
 ) -> (ServingModel, ServeReport) {
     let (model, part) = ServingModel::build(graph, arch, noc, nop, sim);
     let mut sched = ChipletScheduler::new(model, part, cfg);
-    let report = sched.run(cfg, sim.seed);
+    // Arrivals are seeded by `[serving] seed`, not `[sim] seed`, so serving
+    // runs reseed independently of the NoC/NoP simulators.
+    let report = sched.run(cfg, cfg.seed);
     (sched.model, report)
 }
 
@@ -646,6 +670,7 @@ mod tests {
             arrival_rps: 10.0 * flat.fps(),
             requests: 400,
             batch: 1,
+            ..ServingConfig::default()
         };
         let mut sched = ChipletScheduler::new(model, part, &cfg);
         let report = sched.run(&cfg, 7);
@@ -700,6 +725,7 @@ mod tests {
             arrival_rps: 50.0 * model.capacity_rps(1),
             requests: 300,
             batch: 1,
+            ..ServingConfig::default()
         };
         let mut sched = ChipletScheduler::new(model, part, &cfg);
         let report = sched.run(&cfg, 3);

@@ -30,6 +30,41 @@ pub struct ChipletQueueStats {
     pub peak_queue: usize,
 }
 
+/// Per-model statistics of a multi-model (mix) serving run
+/// ([`crate::coordinator::mix::MixScheduler`]).
+#[derive(Clone, Debug)]
+pub struct ModelServeStats {
+    pub model: String,
+    /// Replica chiplets this model was pinned to.
+    pub replicas: usize,
+    /// Requests offered / completed / dropped (queues full) / shed
+    /// (deadline-aware admission declined them).
+    pub offered: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub shed: usize,
+    /// Offered requests carrying a finite deadline, and how many completed
+    /// within it (dropped/shed/late ones are misses).
+    pub deadline_offered: usize,
+    pub deadline_hits: usize,
+    /// Latency statistics over this model's completed requests, ms.
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl ModelServeStats {
+    /// Deadline hit-rate: hits over deadline-carrying offered requests
+    /// (1.0 when the model has no deadline).
+    pub fn hit_rate(&self) -> f64 {
+        if self.deadline_offered == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / self.deadline_offered as f64
+        }
+    }
+}
+
 /// Serving statistics for one run (measured or modeled).
 ///
 /// On the PJRT path the latency samples are per-*batch* wall-clock times;
@@ -42,6 +77,15 @@ pub struct ServeReport {
     /// queues; the PJRT path always completes everything).
     pub completed: usize,
     pub dropped: usize,
+    /// Requests declined by deadline-aware admission (their modeled
+    /// completion already exceeded the deadline). Always 0 under
+    /// drop-on-full admission and on the PJRT path. Conservation:
+    /// `completed + dropped + shed == requests`.
+    pub shed: usize,
+    /// Offered requests carrying a finite deadline / completed within it
+    /// (multi-model runs only; both 0 elsewhere).
+    pub deadline_offered: usize,
+    pub deadline_hits: usize,
     pub batch_size: usize,
     pub batches: usize,
     /// Latency statistics over the run's samples, ms.
@@ -56,6 +100,8 @@ pub struct ServeReport {
     pub offered_rps: f64,
     /// Per-chiplet queue statistics (modeled path only).
     pub per_chiplet: Vec<ChipletQueueStats>,
+    /// Per-model statistics (multi-model runs only).
+    pub per_model: Vec<ModelServeStats>,
     /// Output vectors per request (PJRT path only).
     pub outputs: Vec<Vec<f32>>,
 }
@@ -76,6 +122,9 @@ impl ServeReport {
             requests,
             completed,
             dropped,
+            shed: 0,
+            deadline_offered: 0,
+            deadline_hits: 0,
             batch_size,
             batches,
             mean_ms: mean(latencies_ms),
@@ -84,7 +133,18 @@ impl ServeReport {
             throughput_rps: completed as f64 / horizon_s.max(1e-12),
             offered_rps: 0.0,
             per_chiplet: Vec::new(),
+            per_model: Vec::new(),
             outputs: Vec::new(),
+        }
+    }
+
+    /// Deadline hit-rate over every deadline-carrying offered request
+    /// (1.0 when none carried a deadline).
+    pub fn hit_rate(&self) -> f64 {
+        if self.deadline_offered == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / self.deadline_offered as f64
         }
     }
 }

@@ -14,6 +14,7 @@ pub mod fig_edap;
 pub mod fig_nop_congestion;
 pub mod fig_p2p;
 pub mod fig_serving;
+pub mod fig_workload;
 pub mod tables;
 
 use crate::arch::CommBackend;
@@ -168,6 +169,11 @@ pub fn registry() -> Vec<Experiment> {
             id: "serving",
             title: "Chiplet-aware serving: policy x package sweep with modeled p50/p99",
             run: fig_serving::serving,
+        },
+        Experiment {
+            id: "workload",
+            title: "Multi-model serving: placement x admission x arrival shape, hit-rate headline",
+            run: fig_workload::workload,
         },
         Experiment {
             id: "table2",

@@ -26,7 +26,11 @@
 //!     (chiplets, NoP, NoC) scale-out advisor,
 //!   * [`baselines`] — ISAAC / PipeLayer / AtomLayer / P2P-IMC comparators,
 //!   * [`runtime`] — PJRT loader executing the AOT artifacts from rust,
-//!   * [`coordinator`] — parallel sweep driver + batched inference serving loop,
+//!   * [`coordinator`] — parallel sweep driver, batched inference serving,
+//!     and the single-/multi-model chiplet serving schedulers,
+//!   * [`workload`] — multi-model serving workloads: DNN mixes with
+//!     deadlines, bursty/diurnal arrival generators, record/replay traces,
+//!     and NoP-aware replica placement,
 //!   * [`experiments`] — one generator per paper figure/table.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
@@ -45,9 +49,13 @@ pub mod noc;
 pub mod nop;
 pub mod runtime;
 pub mod util;
+pub mod workload;
 
 pub use arch::evaluator::{evaluate, ArchEvaluation};
-pub use config::{ArchConfig, MemTech, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig};
+pub use config::{
+    Admission, ArchConfig, MemTech, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig,
+    WorkloadConfig,
+};
 pub use dnn::{model_zoo, DnnGraph};
 pub use noc::topology::Topology;
 pub use nop::{evaluate_package, NopEvaluation, NopTopology};

@@ -80,7 +80,14 @@ impl NopEvaluation {
 
     /// Energy-delay-area product, J·ms·mm² (the paper's headline metric).
     pub fn edap(&self) -> f64 {
-        self.energy_j() * (self.latency_s() * 1e3) * self.area_mm2()
+        self.edap_with_latency(self.latency_s())
+    }
+
+    /// EDAP at a substituted frame latency — keeps derated rankings (e.g.
+    /// the sim-calibrated scale-out advisor) on the same formula as
+    /// [`NopEvaluation::edap`].
+    pub fn edap_with_latency(&self, latency_s: f64) -> f64 {
+        self.energy_j() * (latency_s * 1e3) * self.area_mm2()
     }
 
     /// Communication (NoC + NoP) share of end-to-end latency.

@@ -131,6 +131,19 @@ impl NopNetwork {
         path
     }
 
+    /// The directed links of the deterministic `src`→`dst` route, as
+    /// (from, to) node pairs — the shared route→links convention of the
+    /// serving schedulers and the placement search. Empty for `src == dst`.
+    pub fn route_links(&self, src: usize, dst: usize) -> Vec<(usize, usize)> {
+        if src == dst {
+            return Vec::new();
+        }
+        self.route_path(src, dst)
+            .windows(2)
+            .map(|w| (w[0], w[1]))
+            .collect()
+    }
+
     /// Package hops (links traversed) between two chiplets.
     pub fn hops(&self, src: usize, dst: usize) -> usize {
         if src == dst {

@@ -1,0 +1,193 @@
+//! Workload mixes: named DNNs with arrival weights and latency deadlines.
+
+/// One model of a serving mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// Zoo DNN name, resolved via [`crate::dnn::by_name`] when the mix is
+    /// priced (so a `WorkloadMix` can be parsed without touching the zoo).
+    pub model: String,
+    /// Relative arrival-rate weight: this model's share of the mix's
+    /// traffic is `weight / Σ weights`.
+    pub weight: f64,
+    /// Latency deadline in ms. `0` = auto (a fixed multiple of the modeled
+    /// replica service time, see
+    /// [`crate::coordinator::mix::DEADLINE_AUTO_FACTOR`]); `inf` = no
+    /// deadline.
+    pub deadline_ms: f64,
+}
+
+/// A mix of named DNNs served concurrently on one package.
+///
+/// Text form (the `[workload] mix` config key and `repro serve --mix`):
+/// comma-separated `name[:weight[:deadline_ms]]` entries, e.g.
+/// `"VGG-19:1:0,SqueezeNet:1:0"`. Weight defaults to 1, deadline to 0
+/// (auto).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadMix {
+    pub models: Vec<ModelSpec>,
+}
+
+impl WorkloadMix {
+    /// Parse the `name[:weight[:deadline_ms]],...` spec form.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut models = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let mut fields = entry.split(':');
+            let name = fields.next().unwrap_or("").trim();
+            if name.is_empty() {
+                return Err(format!("empty model name in mix entry '{entry}'"));
+            }
+            let weight = match fields.next() {
+                None => 1.0,
+                Some(w) => w
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad weight '{w}' in mix entry '{entry}'"))?,
+            };
+            let deadline_ms = match fields.next() {
+                None => 0.0,
+                Some(d) => d
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad deadline '{d}' in mix entry '{entry}'"))?,
+            };
+            if fields.next().is_some() {
+                return Err(format!(
+                    "mix entry '{entry}' has too many fields (want name[:weight[:deadline_ms]])"
+                ));
+            }
+            models.push(ModelSpec {
+                model: name.to_string(),
+                weight,
+                deadline_ms,
+            });
+        }
+        let mix = Self { models };
+        mix.validate()?;
+        Ok(mix)
+    }
+
+    /// The default two-model mix the paper's contrast suggests: one dense
+    /// network (NoC-mesh territory) and one compact one (NoC-tree
+    /// territory), equal traffic shares, auto deadlines.
+    pub fn default_mix() -> Self {
+        Self {
+            models: vec![
+                ModelSpec {
+                    model: "VGG-19".to_string(),
+                    weight: 1.0,
+                    deadline_ms: 0.0,
+                },
+                ModelSpec {
+                    model: "SqueezeNet".to_string(),
+                    weight: 1.0,
+                    deadline_ms: 0.0,
+                },
+            ],
+        }
+    }
+
+    /// Serialize back to the spec form (`parse` round-trips it).
+    pub fn spec_string(&self) -> String {
+        self.models
+            .iter()
+            .map(|m| format!("{}:{}:{}", m.model, m.weight, m.deadline_ms))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Structural validation (zoo-name resolution happens at pricing time).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.models.is_empty() {
+            return Err("workload mix must name at least one model".into());
+        }
+        if self.models.len() > 16 {
+            return Err("workload mix is limited to 16 models".into());
+        }
+        for m in &self.models {
+            if !(m.weight.is_finite() && m.weight > 0.0) {
+                return Err(format!("mix weight for {} must be positive", m.model));
+            }
+            if m.deadline_ms.is_nan() || m.deadline_ms < 0.0 {
+                return Err(format!(
+                    "mix deadline for {} must be >= 0 (0 = auto, inf = none)",
+                    m.model
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Normalized arrival shares, in model order.
+    pub fn shares(&self) -> Vec<f64> {
+        let total: f64 = self.models.iter().map(|m| m.weight).sum();
+        self.models.iter().map(|m| m.weight / total).collect()
+    }
+
+    /// Model names, in model order.
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.model.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_and_defaulted_fields() {
+        let mix = WorkloadMix::parse("VGG-19:1:40, SqueezeNet:4:10").unwrap();
+        assert_eq!(mix.models.len(), 2);
+        assert_eq!(mix.models[0].model, "VGG-19");
+        assert_eq!(mix.models[0].weight, 1.0);
+        assert_eq!(mix.models[0].deadline_ms, 40.0);
+        assert_eq!(mix.models[1].weight, 4.0);
+        // Weight and deadline default to 1 and 0 (auto).
+        let short = WorkloadMix::parse("MLP,LeNet-5:2").unwrap();
+        assert_eq!(short.models[0].weight, 1.0);
+        assert_eq!(short.models[0].deadline_ms, 0.0);
+        assert_eq!(short.models[1].weight, 2.0);
+        // "inf" = no deadline.
+        let none = WorkloadMix::parse("MLP:1:inf").unwrap();
+        assert!(none.models[0].deadline_ms.is_infinite());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        assert!(WorkloadMix::parse("").is_err());
+        assert!(WorkloadMix::parse("MLP:x").is_err());
+        assert!(WorkloadMix::parse("MLP:1:y").is_err());
+        assert!(WorkloadMix::parse("MLP:1:2:3").is_err());
+        assert!(WorkloadMix::parse(":1:2").is_err());
+        assert!(WorkloadMix::parse("MLP:0").is_err());
+        assert!(WorkloadMix::parse("MLP:1:-5").is_err());
+    }
+
+    #[test]
+    fn spec_string_roundtrips() {
+        for spec in [
+            "VGG-19:1:0,SqueezeNet:1:0",
+            "MLP:2.5:12.5",
+            "MLP:1:inf,LeNet-5:3:0",
+        ] {
+            let mix = WorkloadMix::parse(spec).unwrap();
+            let back = WorkloadMix::parse(&mix.spec_string()).unwrap();
+            assert_eq!(back, mix, "{spec}");
+        }
+        let mix = WorkloadMix::default_mix();
+        assert_eq!(WorkloadMix::parse(&mix.spec_string()).unwrap(), mix);
+    }
+
+    #[test]
+    fn shares_normalize() {
+        let mix = WorkloadMix::parse("A:1,B:3").unwrap();
+        let s = mix.shares();
+        assert!((s[0] - 0.25).abs() < 1e-12);
+        assert!((s[1] - 0.75).abs() < 1e-12);
+        assert_eq!(mix.names(), vec!["A".to_string(), "B".to_string()]);
+    }
+}

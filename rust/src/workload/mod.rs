@@ -1,0 +1,33 @@
+//! Workload modeling for multi-model serving: which DNNs a package serves,
+//! how their requests arrive, and where their replicas live.
+//!
+//! The serving scheduler of PR 3 ([`crate::coordinator::scheduler`]) drives
+//! exactly one model at a fixed-rate Poisson arrival process — the one
+//! regime where the paper's model-dependent interconnect choice is static.
+//! This module supplies everything needed to serve a *mix* of DNNs on one
+//! 2.5D package under realistic traffic:
+//!
+//! * [`mix`] — a [`WorkloadMix`]: named zoo DNNs with per-model arrival
+//!   weights and latency deadlines (`"VGG-19:1:0,SqueezeNet:1:0"`).
+//! * [`arrival`] — arrival-process generators beyond fixed-rate Poisson:
+//!   MMPP-style bursty on/off sources, diurnal rate curves, and
+//!   heavy-tailed frames-per-request batches.
+//! * [`trace`] — a text trace format with record/replay so an experiment's
+//!   exact request sequence can be rerun across schedulers and policies.
+//! * [`placement`] — replica placement: pin each model of the mix to a
+//!   chiplet subset, either naively (round-robin striping) or via a
+//!   NoP-aware greedy + swap-refinement search that sizes replica sets by
+//!   demand and keeps high-traffic models close to the package gateway.
+//!
+//! The multi-model scheduler that consumes all of this lives in
+//! [`crate::coordinator::mix`].
+
+pub mod arrival;
+pub mod mix;
+pub mod placement;
+pub mod trace;
+
+pub use arrival::{ArrivalKind, ArrivalProcess, Event};
+pub use mix::{ModelSpec, WorkloadMix};
+pub use placement::{place_replicas, Placement, PlacementPolicy};
+pub use trace::Trace;

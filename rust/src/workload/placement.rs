@@ -1,0 +1,382 @@
+//! Replica placement: pin each model of a mix to a chiplet subset.
+//!
+//! IMC crossbars are weight-stationary, so a chiplet serves exactly one
+//! model (its weights are programmed once); a *placement* is therefore a
+//! chiplet → model assignment. What makes the assignment matter is the
+//! package interconnect: request inputs enter at the gateway and ride NoP
+//! SerDes links to their replica, so the chiplets differ in ingress cost
+//! and share links — the paper's interconnect-dominates argument applied
+//! to serving.
+//!
+//! Two policies:
+//!
+//! * [`PlacementPolicy::RoundRobin`] — the naive baseline: stripe chiplets
+//!   across models in id order, ignoring demand and the NoP entirely.
+//! * [`PlacementPolicy::NopAware`] — (1) size each model's replica set by
+//!   minimax waterfilling on its service demand (repeatedly granting the
+//!   next chiplet to the model with the highest per-replica load), then
+//!   (2) hand the cheapest-ingress chiplets to the models injecting the
+//!   most NoP traffic, and (3) refine by pairwise swaps scored on expected
+//!   flit-hops plus worst-link contention.
+
+use crate::nop::topology::NopNetwork;
+use std::collections::HashMap;
+
+/// How replicas are assigned to chiplets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlacementPolicy {
+    /// Stripe chiplets across models in id order (naive baseline).
+    RoundRobin,
+    /// Demand-sized replica sets, gateway-proximate high-traffic models,
+    /// swap refinement on the NoP contention score.
+    NopAware,
+}
+
+impl PlacementPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::NopAware => "nop-aware",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" | "naive" => Some(PlacementPolicy::RoundRobin),
+            "nop-aware" | "nopaware" | "nop" | "aware" => Some(PlacementPolicy::NopAware),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [PlacementPolicy; 2] {
+        [PlacementPolicy::RoundRobin, PlacementPolicy::NopAware]
+    }
+
+    /// The valid `parse` spellings, for CLI error messages.
+    pub fn valid_names() -> &'static str {
+        "round-robin, nop-aware"
+    }
+}
+
+/// A chiplet → model assignment for one package.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    pub chiplets: usize,
+    /// `model_of[c]` = mix model index served by chiplet `c`.
+    pub model_of: Vec<usize>,
+}
+
+impl Placement {
+    /// Chiplets hosting a replica of `model`, in id order.
+    pub fn replicas(&self, model: usize) -> Vec<usize> {
+        (0..self.chiplets)
+            .filter(|&c| self.model_of[c] == model)
+            .collect()
+    }
+
+    /// Number of replicas of `model`.
+    pub fn replica_count(&self, model: usize) -> usize {
+        self.model_of.iter().filter(|&&m| m == model).count()
+    }
+
+    /// Invariants: every chiplet assigned, every model hosted at least once.
+    pub fn validate(&self, n_models: usize) -> Result<(), String> {
+        if self.model_of.len() != self.chiplets {
+            return Err("placement length != chiplet count".into());
+        }
+        for (c, &m) in self.model_of.iter().enumerate() {
+            if m >= n_models {
+                return Err(format!("chiplet {c} assigned to out-of-range model {m}"));
+            }
+        }
+        for m in 0..n_models {
+            if self.replica_count(m) == 0 {
+                return Err(format!("model {m} has no replica"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Place one replica set per model over `net`'s chiplets.
+///
+/// * `loads[m]` — service demand of model `m` in replica-seconds per
+///   second (arrival share × per-request occupancy); sizes the replica
+///   sets under [`PlacementPolicy::NopAware`].
+/// * `ingress_rate[m]` — relative NoP ingress traffic of model `m`
+///   (arrival share × flits per request); orders models for gateway
+///   proximity and weights the contention score.
+pub fn place_replicas(
+    policy: PlacementPolicy,
+    net: &NopNetwork,
+    gateway: usize,
+    loads: &[f64],
+    ingress_rate: &[f64],
+) -> Result<Placement, String> {
+    let k = net.chiplets;
+    let n = loads.len();
+    if n == 0 || n != ingress_rate.len() {
+        return Err("placement needs one load and one ingress rate per model".into());
+    }
+    if k < n {
+        return Err(format!(
+            "{k} chiplet(s) cannot host {n} model(s) (one model per chiplet)"
+        ));
+    }
+    let model_of = match policy {
+        PlacementPolicy::RoundRobin => (0..k).map(|c| c % n).collect(),
+        PlacementPolicy::NopAware => {
+            let counts = waterfill_counts(k, loads);
+            let routes = ingress_routes(net, gateway);
+            let mut model_of = assign_by_ingress_cost(net, gateway, &counts, ingress_rate);
+            refine_by_swaps(&routes, k, &mut model_of, &counts, ingress_rate);
+            model_of
+        }
+    };
+    let placement = Placement {
+        chiplets: k,
+        model_of,
+    };
+    placement.validate(n)?;
+    Ok(placement)
+}
+
+/// Minimax waterfilling: start with one replica per model, then repeatedly
+/// grant the next chiplet to the model with the highest per-replica load.
+fn waterfill_counts(k: usize, loads: &[f64]) -> Vec<usize> {
+    let n = loads.len();
+    let mut counts = vec![1usize; n];
+    for _ in n..k {
+        let mut best = 0usize;
+        let mut best_load = f64::NEG_INFINITY;
+        for (m, &load) in loads.iter().enumerate() {
+            let per = load / counts[m] as f64;
+            if per > best_load {
+                best_load = per;
+                best = m;
+            }
+        }
+        counts[best] += 1;
+    }
+    counts
+}
+
+/// Order chiplets by ingress cost (hops from the gateway, then id) and
+/// grant the cheapest runs to the models injecting the most NoP traffic.
+fn assign_by_ingress_cost(
+    net: &NopNetwork,
+    gateway: usize,
+    counts: &[usize],
+    ingress_rate: &[f64],
+) -> Vec<usize> {
+    let k = net.chiplets;
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&c| (net.hops(gateway, c), c));
+    // Models by per-replica ingress traffic, heaviest first (stable on id).
+    let mut models: Vec<usize> = (0..counts.len()).collect();
+    models.sort_by(|&a, &b| {
+        let ra = ingress_rate[a] / counts[a] as f64;
+        let rb = ingress_rate[b] / counts[b] as f64;
+        rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut model_of = vec![0usize; k];
+    let mut next = 0usize;
+    for &m in &models {
+        for _ in 0..counts[m] {
+            model_of[order[next]] = m;
+            next += 1;
+        }
+    }
+    model_of
+}
+
+/// Per-chiplet ingress route from the gateway, precomputed once for the
+/// swap search: (directed links of the route, hop count). The gateway's
+/// own entry is empty.
+fn ingress_routes(net: &NopNetwork, gateway: usize) -> Vec<(Vec<(usize, usize)>, usize)> {
+    (0..net.chiplets)
+        .map(|c| (net.route_links(gateway, c), net.hops(gateway, c)))
+        .collect()
+}
+
+/// Contention score of a placement: expected ingress flit-hops per unit
+/// time plus a worst-link term (weighted by the package size so a single
+/// hot SerDes lane dominates ties). Lower is better.
+fn placement_score(
+    routes: &[(Vec<(usize, usize)>, usize)],
+    chiplets: usize,
+    model_of: &[usize],
+    counts: &[usize],
+    ingress_rate: &[f64],
+) -> f64 {
+    let mut link_load: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut hop_cost = 0.0f64;
+    for (c, &m) in model_of.iter().enumerate() {
+        let (links, hops) = &routes[c];
+        let r = ingress_rate[m] / counts[m] as f64;
+        for &link in links {
+            *link_load.entry(link).or_insert(0.0) += r;
+        }
+        hop_cost += r * *hops as f64;
+    }
+    let worst = link_load.values().fold(0.0f64, |a, &b| a.max(b));
+    hop_cost + chiplets as f64 * worst
+}
+
+/// Pairwise swap refinement: exchange two chiplets' models whenever that
+/// strictly lowers the contention score (replica counts are preserved by
+/// construction).
+fn refine_by_swaps(
+    routes: &[(Vec<(usize, usize)>, usize)],
+    chiplets: usize,
+    model_of: &mut [usize],
+    counts: &[usize],
+    ingress_rate: &[f64],
+) {
+    let k = model_of.len();
+    let mut current = placement_score(routes, chiplets, model_of, counts, ingress_rate);
+    let mut improved = true;
+    let mut guard = 0usize;
+    while improved && guard < 4 * k {
+        improved = false;
+        guard += 1;
+        for a in 0..k {
+            for b in (a + 1)..k {
+                if model_of[a] == model_of[b] {
+                    continue;
+                }
+                model_of.swap(a, b);
+                let after = placement_score(routes, chiplets, model_of, counts, ingress_rate);
+                if after < current {
+                    current = after;
+                    improved = true;
+                } else {
+                    model_of.swap(a, b); // revert
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nop::topology::NopTopology;
+
+    #[test]
+    fn round_robin_stripes_ignoring_demand() {
+        let net = NopNetwork::build(NopTopology::Mesh, 8);
+        let p = place_replicas(
+            PlacementPolicy::RoundRobin,
+            &net,
+            0,
+            &[10.0, 1.0],
+            &[5.0, 1.0],
+        )
+        .unwrap();
+        p.validate(2).unwrap();
+        assert_eq!(p.replica_count(0), 4);
+        assert_eq!(p.replica_count(1), 4);
+        assert_eq!(p.model_of, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn waterfilling_sizes_replicas_by_demand() {
+        // Loads 10:1 over 16 chiplets: the minimax greedy lands on (14, 2)
+        // — never starving the small model down to an overloaded single
+        // replica (the largest-remainder failure mode).
+        assert_eq!(waterfill_counts(16, &[10.0, 1.0]), vec![14, 2]);
+        assert_eq!(waterfill_counts(4, &[1.0, 1.0]), vec![2, 2]);
+        assert_eq!(waterfill_counts(3, &[1.0, 100.0]), vec![1, 2]);
+        // Equal demands split evenly regardless of order.
+        assert_eq!(waterfill_counts(6, &[2.0, 2.0, 2.0]), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn nop_aware_puts_heavy_traffic_near_the_gateway() {
+        // Mesh of 16, gateway at corner 0. Model 0 carries 10x the ingress
+        // traffic per replica: its chiplets must sit strictly closer to the
+        // gateway on average than model 1's.
+        let net = NopNetwork::build(NopTopology::Mesh, 16);
+        let p = place_replicas(
+            PlacementPolicy::NopAware,
+            &net,
+            0,
+            &[1.0, 1.0],
+            &[10.0, 1.0],
+        )
+        .unwrap();
+        p.validate(2).unwrap();
+        assert_eq!(p.replica_count(0), 8);
+        assert_eq!(p.replica_count(1), 8);
+        let mean_hops = |m: usize| {
+            let reps = p.replicas(m);
+            reps.iter().map(|&c| net.hops(0, c)).sum::<usize>() as f64 / reps.len() as f64
+        };
+        assert!(
+            mean_hops(0) < mean_hops(1),
+            "heavy model at {} hops, light at {}",
+            mean_hops(0),
+            mean_hops(1)
+        );
+    }
+
+    #[test]
+    fn nop_aware_beats_round_robin_on_its_own_score() {
+        // Equal service demands so both policies land on 8+8 replicas and
+        // the scores compare the *arrangement* alone.
+        let net = NopNetwork::build(NopTopology::Mesh, 16);
+        let loads = [1.0, 1.0];
+        let ingress = [8.0, 1.0];
+        let rr = place_replicas(PlacementPolicy::RoundRobin, &net, 0, &loads, &ingress).unwrap();
+        let aware = place_replicas(PlacementPolicy::NopAware, &net, 0, &loads, &ingress).unwrap();
+        let counts = [8usize, 8];
+        assert_eq!(aware.replica_count(0), 8);
+        let routes = ingress_routes(&net, 0);
+        let s_rr = placement_score(&routes, 16, &rr.model_of, &counts, &ingress);
+        let s_aware = placement_score(&routes, 16, &aware.model_of, &counts, &ingress);
+        assert!(
+            s_aware < s_rr,
+            "nop-aware score {s_aware} vs round-robin {s_rr}"
+        );
+    }
+
+    #[test]
+    fn placement_is_deterministic() {
+        let net = NopNetwork::build(NopTopology::Ring, 12);
+        let a = place_replicas(PlacementPolicy::NopAware, &net, 0, &[3.0, 1.0], &[2.0, 5.0])
+            .unwrap();
+        let b = place_replicas(PlacementPolicy::NopAware, &net, 0, &[3.0, 1.0], &[2.0, 5.0])
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn errors_on_impossible_packages() {
+        let net = NopNetwork::build(NopTopology::Ring, 2);
+        assert!(place_replicas(
+            PlacementPolicy::NopAware,
+            &net,
+            0,
+            &[1.0, 1.0, 1.0],
+            &[1.0, 1.0, 1.0]
+        )
+        .is_err());
+        assert!(place_replicas(PlacementPolicy::RoundRobin, &net, 0, &[], &[]).is_err());
+        assert!(place_replicas(PlacementPolicy::RoundRobin, &net, 0, &[1.0], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for p in PlacementPolicy::all() {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(
+            PlacementPolicy::parse("RR"),
+            Some(PlacementPolicy::RoundRobin)
+        );
+        assert_eq!(PlacementPolicy::parse("nop"), Some(PlacementPolicy::NopAware));
+        assert_eq!(PlacementPolicy::parse("magic"), None);
+        assert!(PlacementPolicy::valid_names().contains("nop-aware"));
+    }
+}

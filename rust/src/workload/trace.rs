@@ -1,0 +1,199 @@
+//! Record/replay traces: a text format freezing one generated workload.
+//!
+//! A trace is self-contained: it carries the mix spec (names, weights,
+//! deadlines), the offered rate the generator targeted, and every request
+//! event. Times are written with Rust's shortest-round-trip float
+//! formatting, so `parse(to_text())` reproduces the events *bit-exactly* —
+//! replaying a recorded trace yields byte-for-byte identical serving
+//! reports (see the replay-determinism test in `tests/properties.rs`).
+//!
+//! Format (`#` lines are comments):
+//!
+//! ```text
+//! # imcnoc-trace v1
+//! mix VGG-19:1:0,SqueezeNet:1:0
+//! rate 1234.5
+//! # t_s model frames
+//! 0.00081 0 1
+//! 0.00095 1 2
+//! ```
+
+use super::arrival::Event;
+use super::mix::WorkloadMix;
+
+/// First line of every trace file.
+pub const TRACE_HEADER: &str = "# imcnoc-trace v1";
+
+/// A recorded workload: the mix it indexes into plus the event sequence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub mix: WorkloadMix,
+    /// Offered arrival rate the generator targeted, requests/s (stamped
+    /// into replayed reports so they match the recorded run).
+    pub offered_rps: f64,
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn new(mix: WorkloadMix, offered_rps: f64, events: Vec<Event>) -> Self {
+        Self {
+            mix,
+            offered_rps,
+            events,
+        }
+    }
+
+    /// Serialize to the text format ([`Trace::parse`] round-trips it).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(TRACE_HEADER);
+        out.push('\n');
+        out.push_str(&format!("mix {}\n", self.mix.spec_string()));
+        out.push_str(&format!("rate {}\n", self.offered_rps));
+        out.push_str("# t_s model frames\n");
+        for e in &self.events {
+            out.push_str(&format!("{} {} {}\n", e.t_s, e.model, e.frames));
+        }
+        out
+    }
+
+    /// Parse the text format, validating model indices and time ordering.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut mix: Option<WorkloadMix> = None;
+        let mut offered_rps = 0.0f64;
+        let mut events = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(spec) = line.strip_prefix("mix ") {
+                mix = Some(WorkloadMix::parse(spec)?);
+                continue;
+            }
+            if let Some(rate) = line.strip_prefix("rate ") {
+                offered_rps = rate
+                    .trim()
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|r| r.is_finite() && *r >= 0.0)
+                    .ok_or_else(|| format!("trace line {}: bad rate '{rate}'", ln + 1))?;
+                continue;
+            }
+            let mut fields = line.split_whitespace();
+            let t_s: f64 = fields
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| format!("trace line {}: bad event '{line}'", ln + 1))?;
+            let model: usize = fields
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| format!("trace line {}: bad event '{line}'", ln + 1))?;
+            let frames: u32 = fields
+                .next()
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| format!("trace line {}: bad event '{line}'", ln + 1))?;
+            if fields.next().is_some() {
+                return Err(format!("trace line {}: trailing fields in '{line}'", ln + 1));
+            }
+            if frames == 0 {
+                return Err(format!("trace line {}: zero frames", ln + 1));
+            }
+            if !t_s.is_finite() || t_s < 0.0 {
+                // NaN would also slip through the ordering check below.
+                return Err(format!("trace line {}: bad time {t_s}", ln + 1));
+            }
+            events.push(Event { t_s, model, frames });
+        }
+        let mix = mix.ok_or_else(|| "trace is missing its 'mix' line".to_string())?;
+        for (i, e) in events.iter().enumerate() {
+            if e.model >= mix.models.len() {
+                return Err(format!(
+                    "trace event {i} names model {} but the mix has {}",
+                    e.model,
+                    mix.models.len()
+                ));
+            }
+            if i > 0 && e.t_s < events[i - 1].t_s {
+                return Err(format!("trace event {i} goes back in time"));
+            }
+        }
+        Ok(Self {
+            mix,
+            offered_rps,
+            events,
+        })
+    }
+
+    /// Write the trace to a file.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_text()).map_err(|e| format!("write trace {path}: {e}"))
+    }
+
+    /// Load a trace from a file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read trace {path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::arrival::ArrivalProcess;
+
+    fn sample_trace() -> Trace {
+        let mix = WorkloadMix::parse("MLP:1:0,LeNet-5:3:12.5").unwrap();
+        let proc = ArrivalProcess {
+            frames_alpha: 1.5,
+            ..ArrivalProcess::default()
+        };
+        let events = proc.generate(&mix, 750.0, 64, 0xFEED);
+        Trace::new(mix, 750.0, events)
+    }
+
+    #[test]
+    fn text_roundtrip_is_bit_exact() {
+        let trace = sample_trace();
+        let text = trace.to_text();
+        assert!(text.starts_with(TRACE_HEADER));
+        let parsed = Trace::parse(&text).unwrap();
+        // PartialEq on f64 fields: bit-exact times survive the text form.
+        assert_eq!(parsed, trace);
+        // And the round trip is a fixed point.
+        assert_eq!(parsed.to_text(), text);
+    }
+
+    #[test]
+    fn save_and_load() {
+        let trace = sample_trace();
+        let path = std::env::temp_dir().join("imcnoc_trace_roundtrip.trace");
+        let path = path.to_str().unwrap().to_string();
+        trace.save(&path).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded, trace);
+        assert!(Trace::load("/nonexistent/trace.txt").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_traces() {
+        assert!(Trace::parse("0.1 0 1\n").is_err()); // no mix line
+        assert!(Trace::parse("mix MLP:1:0\n0.1 zero 1\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\n0.1 0 1 9\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\n0.1 0 0\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\n0.1 5 1\n").is_err()); // model out of range
+        assert!(Trace::parse("mix MLP:1:0\n0.2 0 1\n0.1 0 1\n").is_err()); // time reversal
+        assert!(Trace::parse("mix MLP:1:0\nrate banana\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\nrate -2\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\nrate inf\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\nnan 0 1\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\n-0.5 0 1\n").is_err());
+        assert!(Trace::parse("mix MLP:1:0\ninf 0 1\n").is_err());
+        // Comments and blank lines are fine; rate is optional.
+        let ok = Trace::parse("# c\nmix MLP:1:0\n\n0.1 0 2\n# tail\n").unwrap();
+        assert_eq!(ok.events.len(), 1);
+        assert_eq!(ok.offered_rps, 0.0);
+        assert_eq!(ok.events[0].frames, 2);
+    }
+}

@@ -87,6 +87,46 @@ fn serve_modeled_and_serving_experiment() {
 }
 
 #[test]
+fn serve_mix_and_workload_experiment() {
+    // The tier-1 CI smoke run: the default VGG-19 + SqueezeNet mix with
+    // NoP-aware placement and deadline-aware admission, small config.
+    run(&argv(&["serve", "--mix", "--fast"])).unwrap();
+    // The registered multi-model workload experiment through the figure
+    // runner.
+    run(&argv(&["figure", "workload", "--fast"])).unwrap();
+    // Record a trace on a cheap mix, then replay it through the CLI.
+    let path = std::env::temp_dir().join("imcnoc_cli_integration.trace");
+    let path = path.to_str().unwrap().to_string();
+    run(&argv(&[
+        "serve",
+        "--mix",
+        "MLP:1:0,LeNet-5:1:0",
+        "--chiplets",
+        "2",
+        "--topology",
+        "ring",
+        "--requests",
+        "40",
+        "--record-trace",
+        path.as_str(),
+    ]))
+    .unwrap();
+    run(&argv(&[
+        "serve",
+        "--trace",
+        path.as_str(),
+        "--chiplets",
+        "2",
+        "--topology",
+        "ring",
+    ]))
+    .unwrap();
+    // Bad specs surface as errors, not panics.
+    assert!(run(&argv(&["serve", "--mix", "NoSuchNet:1:0"])).is_err());
+    assert!(run(&argv(&["serve", "--mix", "--placement", "magic"])).is_err());
+}
+
+#[test]
 fn unknown_inputs_error_cleanly() {
     assert!(run(&argv(&["figure", "99"])).is_err());
     assert!(run(&argv(&["table"])).is_err());

@@ -3,7 +3,11 @@
 //! latency monotonicity, mapping soundness, queueing-model sanity, EDAP
 //! positivity, and config round-trips.
 
-use imcnoc::config::{ArchConfig, Config, NocConfig, NopConfig, NopMode, ServingConfig};
+use imcnoc::config::{
+    Admission, ArchConfig, Config, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig,
+    WorkloadConfig,
+};
+use imcnoc::coordinator::mix::{MixScheduler, MixServingModel};
 use imcnoc::coordinator::scheduler::{ChipletScheduler, Policy, ServingModel};
 use imcnoc::dnn::{model_zoo, models};
 use imcnoc::mapping::{ChipletPartition, InjectionMatrix, Mapping};
@@ -13,6 +17,7 @@ use imcnoc::noc::AnalyticalModel;
 use imcnoc::nop::sim::{analytical_latency, saturation_rate, uniform_nop_flows, NopSim};
 use imcnoc::nop::topology::{NopNetwork, NopTopology};
 use imcnoc::util::proptest::check;
+use imcnoc::workload::{ArrivalKind, ArrivalProcess, PlacementPolicy, Trace, WorkloadMix};
 
 fn random_flows(
     g: &mut imcnoc::util::proptest::Gen,
@@ -469,6 +474,18 @@ fn prop_config_ini_roundtrip() {
                 arrival_rps: g.f64_in(0.0, 10_000.0).round(),
                 requests: g.usize_in(1, 10_000),
                 batch: g.usize_in(1, 64),
+                seed: g.u64(),
+            },
+            workload: WorkloadConfig {
+                mix: WorkloadMix::parse("MLP:2:25,LeNet-5:1:inf,NiN:3:0").unwrap(),
+                arrival: *g.pick(&ArrivalKind::all()),
+                placement: *g.pick(&PlacementPolicy::all()),
+                admission: *g.pick(&Admission::all()),
+                burst_factor: g.f64_in(1.0, 2.0).round(),
+                on_fraction: 0.25,
+                cycle_s: 0.05,
+                frames_alpha: g.f64_in(0.0, 2.0).round(),
+                frames_max: g.usize_in(1, 16),
             },
             sim: Default::default(),
         };
@@ -478,6 +495,168 @@ fn prop_config_ini_roundtrip() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_mix_serving_conserves_requests_across_policies_and_generators() {
+    // The multi-model scheduler over random routing policies, admission
+    // controls, arrival generators (Poisson / bursty / diurnal, with and
+    // without heavy-tailed frames) and loads: offered == completed +
+    // dropped + shed, globally and per model; per-chiplet served counts
+    // close the books; shedding only happens under deadline-aware
+    // admission; queues respect their depth.
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let mix = WorkloadMix::parse("MLP:2:0,LeNet-5:1:0").unwrap();
+    // Model builds are expensive (each runs a NoP saturation sweep):
+    // prebuild two package points and randomize everything else.
+    let built: Vec<MixServingModel> = [
+        (3usize, NopTopology::Ring, PlacementPolicy::RoundRobin),
+        (5usize, NopTopology::Mesh, PlacementPolicy::NopAware),
+    ]
+    .iter()
+    .map(|&(k, topo, placement)| {
+        let nop = NopConfig {
+            topology: topo,
+            chiplets: k,
+            ..NopConfig::default()
+        };
+        MixServingModel::build(&mix, placement, &arch, &noc, &nop, &sim).unwrap()
+    })
+    .collect();
+    check("mix-serving-conservation", 12, |g| {
+        let model = g.pick(&built).clone();
+        let proc = ArrivalProcess {
+            kind: *g.pick(&ArrivalKind::all()),
+            // on_fraction <= 0.5 and factor <= 2 keeps factor*fraction <= 1.
+            burst_factor: g.f64_in(1.0, 2.0),
+            on_fraction: g.f64_in(0.1, 0.5),
+            cycle_s: g.f64_in(0.005, 0.05),
+            frames_alpha: *g.pick(&[0.0, 1.5]),
+            frames_max: 6,
+        };
+        proc.validate()?;
+        let rate = model.capacity_rps(proc.mean_frames()) * g.f64_in(0.2, 3.0);
+        let requests = g.usize_in(10, 120);
+        let events = proc.generate(&mix, rate, requests, g.u64());
+        let cfg = ServingConfig {
+            policy: *g.pick(&Policy::all()),
+            queue_depth: g.usize_in(1, 8),
+            requests,
+            ..ServingConfig::default()
+        };
+        let admission = *g.pick(&Admission::all());
+        let mut sched = MixScheduler::new(model, &cfg, admission);
+        let report = sched.run(&events);
+        if report.requests != requests {
+            return Err(format!("report requests {} != {requests}", report.requests));
+        }
+        if report.completed + report.dropped + report.shed != report.requests {
+            return Err(format!(
+                "requests {} != completed {} + dropped {} + shed {}",
+                report.requests, report.completed, report.dropped, report.shed
+            ));
+        }
+        if admission == Admission::DropOnFull && report.shed != 0 {
+            return Err(format!("drop-on-full shed {}", report.shed));
+        }
+        let served: usize = report.per_chiplet.iter().map(|s| s.served).sum();
+        if served != report.completed {
+            return Err(format!("served {served} != completed {}", report.completed));
+        }
+        let mut sums = (0usize, 0usize, 0usize, 0usize);
+        for pm in &report.per_model {
+            if pm.offered != pm.completed + pm.dropped + pm.shed {
+                return Err(format!(
+                    "{}: offered {} != {} + {} + {}",
+                    pm.model, pm.offered, pm.completed, pm.dropped, pm.shed
+                ));
+            }
+            if pm.deadline_hits > pm.deadline_offered || pm.deadline_offered > pm.offered {
+                return Err(format!(
+                    "{}: hits {} / deadline-offered {} / offered {}",
+                    pm.model, pm.deadline_hits, pm.deadline_offered, pm.offered
+                ));
+            }
+            sums.0 += pm.offered;
+            sums.1 += pm.completed;
+            sums.2 += pm.dropped;
+            sums.3 += pm.shed;
+        }
+        if sums != (report.requests, report.completed, report.dropped, report.shed) {
+            return Err(format!("per-model sums {sums:?} do not close the books"));
+        }
+        for s in &report.per_chiplet {
+            if s.peak_queue > cfg.queue_depth {
+                return Err(format!(
+                    "peak queue {} > depth {}",
+                    s.peak_queue, cfg.queue_depth
+                ));
+            }
+            if !(0.0..=1.0).contains(&s.utilization) {
+                return Err(format!("utilization {}", s.utilization));
+            }
+        }
+        if report.p99_ms < report.p50_ms {
+            return Err(format!("p99 {} < p50 {}", report.p99_ms, report.p50_ms));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mix_replay_determinism_byte_for_byte() {
+    // Acceptance contract: recording a bursty heavy-tailed workload to the
+    // text trace format and replaying it reproduces the serving report
+    // byte-for-byte (the scheduler draws no randomness of its own, and the
+    // trace's shortest-round-trip floats are bit-exact).
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let nop = NopConfig {
+        topology: NopTopology::Mesh,
+        chiplets: 4,
+        ..NopConfig::default()
+    };
+    let serving = ServingConfig {
+        requests: 200,
+        seed: 0xDEAD_BEEF,
+        ..ServingConfig::default()
+    };
+    let workload = WorkloadConfig {
+        mix: WorkloadMix::parse("MLP:1:0,LeNet-5:1:0").unwrap(),
+        arrival: ArrivalKind::Bursty,
+        frames_alpha: 1.5,
+        ..WorkloadConfig::default()
+    };
+    let (_, trace, original) =
+        imcnoc::coordinator::mix::serve_mix(&arch, &noc, &nop, &sim, &serving, &workload)
+            .unwrap();
+    // Same seed + config regenerates the identical trace and report.
+    let (_, trace2, again) =
+        imcnoc::coordinator::mix::serve_mix(&arch, &noc, &nop, &sim, &serving, &workload)
+            .unwrap();
+    assert_eq!(trace2, trace);
+    assert_eq!(format!("{again:?}"), format!("{original:?}"));
+    // The text round trip is bit-exact, and replaying it reproduces the
+    // report byte-for-byte.
+    let parsed = Trace::parse(&trace.to_text()).unwrap();
+    assert_eq!(parsed, trace);
+    let (_, replayed) =
+        imcnoc::coordinator::mix::replay_mix(&parsed, &arch, &noc, &nop, &sim, &serving, &workload)
+            .unwrap();
+    assert_eq!(format!("{replayed:?}"), format!("{original:?}"));
+    // A different serving seed produces a different workload (the serving
+    // seed is live and independent of [sim] seed).
+    let reseeded = ServingConfig {
+        seed: 0xBEEF,
+        ..serving.clone()
+    };
+    let (_, trace3, _) =
+        imcnoc::coordinator::mix::serve_mix(&arch, &noc, &nop, &sim, &reseeded, &workload)
+            .unwrap();
+    assert_ne!(trace3.events, trace.events);
 }
 
 #[test]
@@ -510,6 +689,7 @@ fn prop_serving_scheduler_conserves_requests() {
             arrival_rps: model.capacity_rps(1) * g.f64_in(0.2, 3.0),
             requests: g.usize_in(10, 120),
             batch: g.usize_in(1, 4),
+            ..ServingConfig::default()
         };
         let mut sched = ChipletScheduler::new(model, part, &cfg);
         let report = sched.run(&cfg, g.u64());

@@ -1,44 +1,70 @@
 #!/usr/bin/env python3
 """Bench regression gate for CI.
 
-Usage: check_bench.py MEASURED.json BASELINE.json MAX_RATIO
+Usage: check_bench.py MEASURED.json BASELINE.json THRESHOLD [THRESHOLD...]
 
-Compares mean_ns per bench name against the checked-in baseline and fails
-(exit 1) when any measured mean exceeds baseline * MAX_RATIO. Benches
-missing from the baseline are reported but do not fail the run (new
-benches land with a follow-up baseline update). The baseline values start
-deliberately generous — CI machines vary — and should be ratcheted down
-as real CI numbers accumulate; the script prints the measured file as a
-ready-to-commit baseline snippet to make that easy.
+Each THRESHOLD is either a bare ratio (gates mean_ns only — backwards
+compatible) or metric=ratio (e.g. mean_ns=1.25 p99=1.60), so tail latency
+is gated alongside the mean with its own, typically looser, budget.
+
+For every gated metric, a bench fails when measured > baseline * ratio for
+its name. Benches missing from the baseline are reported but do not fail
+the run (new benches land with a follow-up baseline update); a metric
+missing from a baseline entry is skipped for that bench. The baseline
+values start deliberately generous — CI machines vary — and should be
+ratcheted down as real CI numbers accumulate; the script prints the
+measured file as a ready-to-commit baseline snippet to make that easy.
 """
 
 import json
 import sys
 
 
+def parse_thresholds(args):
+    thresholds = {}
+    for arg in args:
+        if "=" in arg:
+            metric, ratio = arg.split("=", 1)
+            thresholds[metric] = float(ratio)
+        else:
+            thresholds["mean_ns"] = float(arg)
+    return thresholds
+
+
 def main() -> int:
-    if len(sys.argv) != 4:
+    if len(sys.argv) < 4:
         print(__doc__)
         return 2
-    measured_path, baseline_path, max_ratio = sys.argv[1], sys.argv[2], float(sys.argv[3])
+    measured_path, baseline_path = sys.argv[1], sys.argv[2]
+    thresholds = parse_thresholds(sys.argv[3:])
     with open(measured_path) as f:
         measured = {e["name"]: e for e in json.load(f)}
     with open(baseline_path) as f:
         baseline = {e["name"]: e for e in json.load(f)}
 
     regressions = []
-    print(f"{'bench':<48} {'measured_ms':>12} {'baseline_ms':>12} {'ratio':>7}")
+    print(
+        f"{'bench':<48} {'metric':>8} {'measured_ms':>12} {'baseline_ms':>12} {'ratio':>7}"
+    )
     for name in sorted(measured):
-        m = measured[name]["mean_ns"]
-        b = baseline.get(name, {}).get("mean_ns")
-        if b is None:
-            print(f"{name:<48} {m / 1e6:>12.3f} {'(new)':>12} {'-':>7}")
+        base_entry = baseline.get(name)
+        if base_entry is None:
+            m = measured[name].get("mean_ns", 0.0)
+            print(f"{name:<48} {'mean_ns':>8} {m / 1e6:>12.3f} {'(new)':>12} {'-':>7}")
             continue
-        ratio = m / b if b > 0 else float("inf")
-        flag = " REGRESSION" if ratio > max_ratio else ""
-        print(f"{name:<48} {m / 1e6:>12.3f} {b / 1e6:>12.3f} {ratio:>7.2f}{flag}")
-        if ratio > max_ratio:
-            regressions.append((name, ratio))
+        for metric in sorted(thresholds):
+            max_ratio = thresholds[metric]
+            m = measured[name].get(metric)
+            b = base_entry.get(metric)
+            if m is None or b is None:
+                continue
+            ratio = m / b if b > 0 else float("inf")
+            flag = " REGRESSION" if ratio > max_ratio else ""
+            print(
+                f"{name:<48} {metric:>8} {m / 1e6:>12.3f} {b / 1e6:>12.3f} {ratio:>7.2f}{flag}"
+            )
+            if ratio > max_ratio:
+                regressions.append((name, metric, ratio, max_ratio))
 
     missing = sorted(set(baseline) - set(measured))
     for name in missing:
@@ -49,13 +75,14 @@ def main() -> int:
     print(json.dumps(snapshot, indent=2))
 
     if regressions:
-        worst = max(r for _, r in regressions)
-        print(
-            f"\nFAIL: {len(regressions)} bench(es) regressed more than "
-            f"{(max_ratio - 1) * 100:.0f}% vs baseline (worst ratio {worst:.2f})"
-        )
+        print(f"\nFAIL: {len(regressions)} bench metric(s) regressed:")
+        for name, metric, ratio, max_ratio in regressions:
+            print(
+                f"  {name} {metric}: {ratio:.2f}x vs allowed {max_ratio:.2f}x"
+            )
         return 1
-    print(f"\nOK: no bench regressed more than {(max_ratio - 1) * 100:.0f}% vs baseline")
+    budgets = ", ".join(f"{m} <= {r:.2f}x" for m, r in sorted(thresholds.items()))
+    print(f"\nOK: no bench regressed past its budget ({budgets})")
     return 0
 
 
