@@ -6,8 +6,8 @@
 //! repro all         [--exact] [--fast] [--csv]
 //! repro eval <dnn> [--tech sram|reram] [--topology mesh|tree|p2p|cmesh] [--exact]
 //! repro advise <dnn>
-//! repro chiplet [--model <dnn>] [--chiplets N] [--noc t] [--nop t] [--advise]
-//! repro serve <artifact> [--requests N] [--batch N] [--in-dim N]
+//! repro chiplet [--model <dnn>] [--chiplets N] [--noc t] [--nop t] [--advise] [--heatmap]
+//! repro serve <artifact> [--requests N] [--batch N] [--in-dim N] [--trace-out f]
 //! repro config [--show] [--load path]
 //! repro list
 //! ```
@@ -19,15 +19,19 @@ use crate::config::{
     Admission, ArchConfig, Config, MemTech, NocConfig, NopConfig, NopMode, ServingConfig,
     SimConfig, WorkloadConfig,
 };
-use crate::coordinator::mix::{replay_mix, serve_mix, MixServingModel};
-use crate::coordinator::scheduler::{serve_modeled, Policy};
+use crate::coordinator::mix::{replay_mix_traced, serve_mix_traced, MixServingModel};
+use crate::coordinator::scheduler::{serve_modeled_traced, Policy};
 use crate::coordinator::server::{synthetic_requests, InferenceServer, ServeReport};
-use crate::dnn::by_name;
+use crate::dnn::{by_name, DnnGraph};
 use crate::experiments::{find, registry, Options};
+use crate::noc::sim::Mode;
 use crate::noc::topology::Topology;
-use crate::nop::evaluator::evaluate_package;
-use crate::nop::topology::NopTopology;
-use crate::util::{fmt_sig, Table};
+use crate::nop::evaluator::{evaluate_package, package_flows};
+use crate::nop::sim::NopSim;
+use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::telemetry::span::RequestSpan;
+use crate::telemetry::{heatmap_json, heatmap_text, spans_to_trace};
+use crate::util::{fmt_sig, log, Table};
 use crate::workload::{ArrivalKind, PlacementPolicy, Trace, WorkloadMix};
 
 /// Parsed flag set: positionals + `--key value` / `--flag` options.
@@ -117,6 +121,8 @@ fn flag_takes_value(name: &str) -> bool {
             | "arrival"
             | "trace"
             | "record-trace"
+            | "trace-out"
+            | "heatmap-out"
     )
 }
 
@@ -190,6 +196,9 @@ fn print_tables(tables: &[Table], csv: bool) {
 /// Entry point; returns the process exit code.
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv);
+    if args.has("verbose") {
+        log::set_level(log::Level::Debug);
+    }
     let cmd = args
         .positional
         .first()
@@ -210,14 +219,14 @@ pub fn run(argv: &[String]) -> Result<()> {
             let exp = find(&full_id)
                 .ok_or_else(|| anyhow!("unknown experiment '{full_id}' (try `repro list`)"))?;
             let opts = options_from(&args)?;
-            eprintln!("== {} — {} ==", exp.id, exp.title);
+            log::info!("== {} — {} ==", exp.id, exp.title);
             let tables = (exp.run)(&opts).map_err(|e| anyhow!(e))?;
             print_tables(&tables, args.has("csv"));
         }
         "all" => {
             let opts = options_from(&args)?;
             for exp in registry() {
-                eprintln!("== {} — {} ==", exp.id, exp.title);
+                log::info!("== {} — {} ==", exp.id, exp.title);
                 let tables = (exp.run)(&opts).map_err(|e| anyhow!(e))?;
                 print_tables(&tables, args.has("csv"));
             }
@@ -343,6 +352,9 @@ pub fn run(argv: &[String]) -> Result<()> {
                         );
                     }
                 }
+                if args.has("heatmap") || args.has("heatmap-out") {
+                    bail!("--advise conflicts with --heatmap/--heatmap-out; drop one side");
+                }
                 let mut t = Table::new(
                     "Joint scale-out recommendation per zoo model",
                     &["dnn", "chiplets", "NoP", "NoC", "latency_ms", "EDAP"],
@@ -381,6 +393,9 @@ pub fn run(argv: &[String]) -> Result<()> {
                         );
                     }
                 }
+                if args.has("heatmap") || args.has("heatmap-out") {
+                    bail!("--advise conflicts with --heatmap/--heatmap-out; drop one side");
+                }
                 let rec = recommend_scaleout(&g, &arch, &base_noc, &base_nop);
                 let mut t = Table::new(
                     format!("Scale-out design space for {}", g.name),
@@ -417,6 +432,12 @@ pub fn run(argv: &[String]) -> Result<()> {
                 None => NopTopology::all().to_vec(),
                 Some(t) => vec![parse_nop_topology(t)?],
             };
+            let heatmap_out = args.get("heatmap-out");
+            let cfg_heatmap = Config::default().telemetry.heatmap;
+            let want_heatmap = args.has("heatmap") || heatmap_out.is_some() || cfg_heatmap;
+            if heatmap_out.is_some() && nop_choices.len() > 1 {
+                bail!("--heatmap-out writes one topology; pin it with --nop <p2p|ring|mesh>");
+            }
             let mut cols = vec![
                 "NoP",
                 "latency_ms",
@@ -442,12 +463,16 @@ pub fn run(argv: &[String]) -> Result<()> {
                 ),
                 &cols,
             );
+            let mut heatmaps = Vec::new();
             for nop_topo in nop_choices {
                 let nop = NopConfig {
                     topology: nop_topo,
                     chiplets,
                     ..base_nop.clone()
                 };
+                if want_heatmap {
+                    heatmaps.push(chiplet_heatmap(&g, &arch, &noc, &nop));
+                }
                 let e = evaluate_package(&g, &arch, &noc, &nop, &SimConfig::default(), backend);
                 let mut row = vec![
                     nop_topo.name().into(),
@@ -473,6 +498,14 @@ pub fn run(argv: &[String]) -> Result<()> {
                 t.add_row(row);
             }
             print_tables(&[t], args.has("csv"));
+            for (text, _) in &heatmaps {
+                println!("{text}");
+            }
+            if let Some(path) = heatmap_out {
+                let (_, json) = heatmaps.first().expect("one topology pinned");
+                std::fs::write(path, json).map_err(|e| anyhow!("write {path}: {e}"))?;
+                log::info!("wrote NoP heatmap JSON to {path}");
+            }
             // The joint recommendation sweep evaluates analytically, but
             // under --sim its ranking folds in the measured (NoP, k)
             // saturation rates (see `recommend_scaleout`).
@@ -611,7 +644,7 @@ fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
     let arch = ArchConfig::default();
     let noc = NocConfig::default();
     let sim = SimConfig::default();
-    let (model, report) = serve_modeled(&g, &arch, &noc, &nop, &sim, &cfg);
+    let (model, report, spans) = serve_modeled_traced(&g, &arch, &noc, &nop, &sim, &cfg);
 
     let mut t = Table::new(
         format!(
@@ -653,7 +686,83 @@ fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
         model.partitioned_latency_s * 1e3,
         model.sat_link_util
     );
+    println!(
+        "lifecycle breakdown (completed means): ingress {:.4} + queue {:.4} + service {:.4} = {:.4} ms",
+        report.mean_ingress_ms,
+        report.mean_queue_ms,
+        report.mean_service_ms,
+        report.mean_ms
+    );
+    if let Some(path) = trace_out_path(args) {
+        write_trace(&path, &spans, &[g.name.as_str()], &report)?;
+    }
     Ok(())
+}
+
+/// `--trace-out` path, falling back to the `[telemetry] trace_out`
+/// config default (empty = no trace).
+fn trace_out_path(args: &Args) -> Option<String> {
+    args.get("trace-out").map(str::to_string).or_else(|| {
+        let t = Config::default().telemetry.trace_out;
+        (!t.is_empty()).then_some(t)
+    })
+}
+
+/// Write serving spans as Chrome trace-event JSON (Perfetto-loadable),
+/// stamped with the offered-request total so downstream checkers can
+/// reconcile the trace against the report.
+fn write_trace(
+    path: &str,
+    spans: &[RequestSpan],
+    names: &[&str],
+    report: &ServeReport,
+) -> Result<()> {
+    let mut tr = spans_to_trace(spans, names);
+    tr.set_meta("requests", report.requests as u64);
+    tr.set_meta("completed", report.completed as u64);
+    tr.set_meta("dropped", report.dropped as u64);
+    tr.set_meta("shed", report.shed as u64);
+    std::fs::write(path, tr.to_json()).map_err(|e| anyhow!("write {path}: {e}"))?;
+    log::info!("wrote {} trace events to {path}", tr.len());
+    Ok(())
+}
+
+/// Drain the model's aggregated package flows through an instrumented
+/// flit-level NoP simulation and render the link heatmap (text + JSON).
+fn chiplet_heatmap(
+    g: &DnnGraph,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+) -> (String, String) {
+    let flows = package_flows(g, arch, noc, nop);
+    let total: u64 = flows.iter().map(|f| f.flits).sum();
+    if total == 0 {
+        log::warn!(
+            "{} has no cross-chiplet traffic on {} chiplet(s); heatmap is empty",
+            g.name,
+            nop.chiplets
+        );
+    }
+    // Same generous drain budget as the evaluator's sim mode: full
+    // serialization over the worst route still fits.
+    let slack = total
+        .saturating_mul(4)
+        .saturating_mul(nop.hop_latency_cycles + 2);
+    let (_, telem) = NopSim::new(
+        nop.topology,
+        nop.chiplets,
+        nop,
+        &flows,
+        Mode::Drain {
+            max_cycles: 10_000 + slack,
+        },
+        SimConfig::default().seed,
+    )
+    .instrument(true)
+    .run_instrumented();
+    let net = NopNetwork::build(nop.topology, nop.chiplets);
+    (heatmap_text(&net, &telem), heatmap_json(&net, &telem))
 }
 
 /// The multi-model serving path (`repro serve --mix [spec]` /
@@ -739,7 +848,7 @@ fn serve_mix_cmd(args: &Args, fast: bool) -> Result<()> {
     let noc = NocConfig::default();
     let sim = SimConfig::default();
 
-    let (model, report) = if let Some(path) = args.get("trace") {
+    let (model, report, spans) = if let Some(path) = args.get("trace") {
         // Replay: the trace pins the mix, the rate, and every event —
         // reject flags that would silently change nothing (scheduler
         // knobs like --placement/--admission/--policy legitimately vary).
@@ -752,22 +861,26 @@ fn serve_mix_cmd(args: &Args, fast: bool) -> Result<()> {
             }
         }
         let trace = Trace::load(path).map_err(|e| anyhow!(e))?;
-        eprintln!(
+        log::info!(
             "replaying {} events ({} models) from {path}",
             trace.events.len(),
             trace.mix.models.len()
         );
-        replay_mix(&trace, &arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?
+        replay_mix_traced(&trace, &arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?
     } else {
-        let (model, trace, report) =
-            serve_mix(&arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?;
+        let (model, trace, report, spans) =
+            serve_mix_traced(&arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?;
         if let Some(path) = args.get("record-trace") {
             trace.save(path).map_err(|e| anyhow!(e))?;
-            eprintln!("recorded {} events to {path}", trace.events.len());
+            log::info!("recorded {} events to {path}", trace.events.len());
         }
-        (model, report)
+        (model, report, spans)
     };
     print_mix_report(&model, &report, args.has("csv"));
+    if let Some(path) = trace_out_path(args) {
+        let names: Vec<&str> = model.models.iter().map(|m| m.name.as_str()).collect();
+        write_trace(&path, &spans, &names, &report)?;
+    }
     Ok(())
 }
 
@@ -792,6 +905,9 @@ fn print_mix_report(model: &MixServingModel, report: &ServeReport, csv: bool) {
             "hit_rate",
             "p50_ms",
             "p99_ms",
+            "ingress_ms",
+            "queue_ms",
+            "service_ms",
         ],
     );
     for (pm, costs) in report.per_model.iter().zip(&model.models) {
@@ -810,6 +926,9 @@ fn print_mix_report(model: &MixServingModel, report: &ServeReport, csv: bool) {
             fmt_sig(pm.hit_rate(), 3),
             fmt_sig(pm.p50_ms, 4),
             fmt_sig(pm.p99_ms, 4),
+            fmt_sig(pm.mean_ingress_ms, 3),
+            fmt_sig(pm.mean_queue_ms, 3),
+            fmt_sig(pm.mean_service_ms, 3),
         ]);
     }
     print_tables(&[t], csv);
@@ -823,6 +942,13 @@ fn print_mix_report(model: &MixServingModel, report: &ServeReport, csv: bool) {
         report.offered_rps,
         report.throughput_rps,
     );
+    println!(
+        "lifecycle breakdown (completed means): ingress {:.3} + queue {:.3} + service {:.3} = {:.3} ms",
+        report.mean_ingress_ms,
+        report.mean_queue_ms,
+        report.mean_service_ms,
+        report.mean_ms,
+    );
 }
 
 /// The PJRT-measured serving path (`repro serve <artifact.hlo.txt>`).
@@ -835,7 +961,7 @@ fn serve_pjrt_cmd(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 8)?;
     let in_dim = args.get_usize("in-dim", 784)?;
     let mut server = InferenceServer::new(batch)?;
-    eprintln!("platform: {}", server.platform());
+    log::info!("platform: {}", server.platform());
     let reqs = synthetic_requests(requests, in_dim, 42);
     let report = server.serve(artifact, &reqs, in_dim)?;
     println!(
@@ -862,6 +988,8 @@ USAGE:
   repro advise <dnn>                                        optimal-topology advisor
   repro chiplet --model <dnn> [--chiplets N] [--noc t]      multi-chiplet NoC+NoP evaluation
                [--nop p2p|ring|mesh] [--exact] [--sim]      (all NoP topologies by default)
+               [--heatmap] [--heatmap-out f]                NoP link heatmaps from an
+                                                            instrumented flit-level run
   repro chiplet --advise [--model <dnn>]                    joint (chiplets, NoP, NoC)
                                                             recommendation: whole zoo, or the
                                                             full design space of one model
@@ -870,13 +998,14 @@ USAGE:
               [--policy round-robin|least-latency|          per-chiplet queues, NoP-priced
                congestion-aware] [--rate RPS] [--batch N]   routing, modeled p50/p99
               [--queue-depth N] [--requests N] [--seed N]   (--fast: small smoke config)
-              [--sim]
+              [--sim] [--trace-out f]
   repro serve --mix [name[:weight[:deadline_ms]],...]       multi-model serving: replica
               [--placement round-robin|nop-aware]           placement per model, deadline
               [--admission drop-on-full|deadline-aware]     hit-rate headline, shed/drop
               [--arrival poisson|bursty|diurnal]            accounting (deadline 0 = auto,
               [--record-trace f] [--chiplets N] [--seed N]  inf = none; default mix
               [--topology t] [--rate RPS] [--requests N]    VGG-19 + SqueezeNet)
+              [--trace-out f]
   repro serve --trace <file> [--placement p] [--admission a] replay a recorded trace
                                                             bit-exactly
   repro sweep [--tech sram|reram] [--exact]                 parallel zoo sweep
@@ -888,7 +1017,11 @@ FLAGS:
   --sim     chiplet: run the package leg through the flit-level NoP
             co-simulation and report per-topology saturation rates
   --fast    restrict sweeps to the small-DNN subset
-  --csv     emit CSV instead of ASCII tables"
+  --csv     emit CSV instead of ASCII tables
+  --verbose debug-level logging (REPRO_LOG=warn|info|debug sets the default)
+  --trace-out <f>    serve: write request lifecycle spans as Chrome
+            trace-event JSON (load in Perfetto / chrome://tracing)
+  --heatmap[-out f]  chiplet: per-link NoP utilization heatmap (text/JSON)"
 }
 
 #[cfg(test)]
@@ -1118,6 +1251,90 @@ mod tests {
         // A bare --trace (no file) errors instead of silently generating
         // a fresh workload.
         assert!(run(&["serve".into(), "--trace".into()]).is_err());
+    }
+
+    #[test]
+    fn run_serve_trace_out_writes_chrome_trace() {
+        let path = std::env::temp_dir().join("imcnoc_cli_serve_trace.json");
+        let path = path.to_str().unwrap().to_string();
+        run(&[
+            "serve".into(),
+            "--fast".into(),
+            "--trace-out".into(),
+            path.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"traceEvents\""), "{text}");
+        assert!(text.contains("\"completed\""), "{text}");
+        assert!(text.contains("\"requests\""), "{text}");
+        // The mix path exports traces too.
+        let mix_path = std::env::temp_dir().join("imcnoc_cli_mix_trace.json");
+        let mix_path = mix_path.to_str().unwrap().to_string();
+        run(&[
+            "serve".into(),
+            "--mix".into(),
+            "MLP:1:0,LeNet-5:1:0".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--requests".into(),
+            "32".into(),
+            "--trace-out".into(),
+            mix_path.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&mix_path).unwrap();
+        assert!(text.contains("\"displayTimeUnit\""), "{text}");
+        assert!(text.contains("MLP"), "{text}");
+    }
+
+    #[test]
+    fn run_chiplet_heatmap() {
+        run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--nop".into(),
+            "ring".into(),
+            "--heatmap".into(),
+        ])
+        .unwrap();
+        let path = std::env::temp_dir().join("imcnoc_cli_heatmap.json");
+        let path = path.to_str().unwrap().to_string();
+        run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "lenet5".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--nop".into(),
+            "mesh".into(),
+            "--heatmap-out".into(),
+            path.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"links\""), "{text}");
+        // JSON export needs one pinned topology, not the default sweep.
+        assert!(run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--heatmap-out".into(),
+            "/tmp/imcnoc_ambiguous.json".into(),
+        ])
+        .is_err());
+        // --advise contradicts the single-point heatmap view.
+        assert!(run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--advise".into(),
+            "--heatmap".into(),
+        ])
+        .is_err());
     }
 
     #[test]

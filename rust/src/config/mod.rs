@@ -504,6 +504,25 @@ impl WorkloadConfig {
     }
 }
 
+/// Observability knobs for the [`crate::telemetry`] subsystem.
+///
+/// Request lifecycle spans on the serving schedulers are always
+/// collected (their cost is one `Vec` push per request); these knobs
+/// only control the *optional* instrumentation and exports.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetryConfig {
+    /// Instrument the cycle-accurate NoC/NoP simulators with per-link
+    /// flit counters and buffer-occupancy histograms. Off by default:
+    /// the simulators then carry no telemetry state at all.
+    pub enabled: bool,
+    /// Default Chrome-trace output path for `repro serve` (empty = no
+    /// trace; the `--trace-out` flag overrides).
+    pub trace_out: String,
+    /// Print the NoP link-utilization heatmap after `repro chiplet`
+    /// (same as passing `--heatmap`).
+    pub heatmap: bool,
+}
+
 /// Simulation-control parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
@@ -537,6 +556,7 @@ pub struct Config {
     pub serving: ServingConfig,
     pub workload: WorkloadConfig,
     pub sim: SimConfig,
+    pub telemetry: TelemetryConfig,
 }
 
 impl Config {
@@ -668,6 +688,13 @@ impl Config {
                 ("sim", "drain_cycles") => {
                     cfg.sim.drain_cycles = v.parse().map_err(|_| parse_err(key))?
                 }
+                ("telemetry", "enabled") => {
+                    cfg.telemetry.enabled = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("telemetry", "trace_out") => cfg.telemetry.trace_out = v.to_string(),
+                ("telemetry", "heatmap") => {
+                    cfg.telemetry.heatmap = v.parse().map_err(|_| parse_err(key))?
+                }
                 _ => return Err(format!("unknown config key: [{section}] {key}")),
             }
         }
@@ -701,7 +728,8 @@ impl Config {
              mix = {}\narrival = {}\nplacement = {}\nadmission = {}\n\
              burst_factor = {}\non_fraction = {}\ncycle_s = {}\n\
              frames_alpha = {}\nframes_max = {}\n\n[sim]\nseed = {}\n\
-             warmup_cycles = {}\nmeasure_cycles = {}\ndrain_cycles = {}\n",
+             warmup_cycles = {}\nmeasure_cycles = {}\ndrain_cycles = {}\n\n\
+             [telemetry]\nenabled = {}\ntrace_out = {}\nheatmap = {}\n",
             self.arch.pe_size,
             self.arch.cell_bits,
             self.arch.n_bits,
@@ -746,6 +774,9 @@ impl Config {
             self.sim.warmup_cycles,
             self.sim.measure_cycles,
             self.sim.drain_cycles,
+            self.telemetry.enabled,
+            self.telemetry.trace_out,
+            self.telemetry.heatmap,
         )
     }
 }
@@ -776,6 +807,20 @@ mod tests {
         let text = cfg.to_ini();
         let parsed = Config::from_ini(&text).unwrap();
         assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn telemetry_section_parses_and_roundtrips() {
+        let cfg = Config::from_ini(
+            "[telemetry]\nenabled = true\ntrace_out = /tmp/trace.json\nheatmap = true\n",
+        )
+        .unwrap();
+        assert!(cfg.telemetry.enabled);
+        assert_eq!(cfg.telemetry.trace_out, "/tmp/trace.json");
+        assert!(cfg.telemetry.heatmap);
+        assert!(Config::from_ini("[telemetry]\nenabled = yes\n").is_err());
+        let back = Config::from_ini(&cfg.to_ini()).unwrap();
+        assert_eq!(back, cfg);
     }
 
     #[test]

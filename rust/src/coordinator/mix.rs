@@ -39,6 +39,7 @@ use crate::dnn::by_name;
 use crate::mapping::Mapping;
 use crate::nop::evaluator::nop_transfer_cycles;
 use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
 use crate::util::{mean, percentile};
 use crate::workload::{place_replicas, Event, Placement, PlacementPolicy, Trace, WorkloadMix};
 
@@ -279,6 +280,8 @@ struct MixPending {
     ready: f64,
     model: usize,
     frames: u32,
+    /// Lifecycle span index.
+    span: usize,
 }
 
 /// Per-chiplet request queues over a [`Placement`], plus the
@@ -311,6 +314,8 @@ pub struct MixScheduler {
     deadline_hits: Vec<usize>,
     latencies_ms: Vec<Vec<f64>>,
     batches: usize,
+    /// One lifecycle span per offered request, in event order.
+    spans: Vec<RequestSpan>,
 }
 
 impl MixScheduler {
@@ -348,9 +353,16 @@ impl MixScheduler {
             deadline_hits: Vec::new(),
             latencies_ms: Vec::new(),
             batches: 0,
+            spans: Vec::new(),
         };
         sched.reset();
         sched
+    }
+
+    /// Lifecycle spans of the most recent run, in event order (one per
+    /// offered request — completed, dropped and shed alike).
+    pub fn spans(&self) -> &[RequestSpan] {
+        &self.spans
     }
 
     /// Reset every per-run accumulator so one scheduler can host several
@@ -375,6 +387,7 @@ impl MixScheduler {
         self.deadline_hits = vec![0; n];
         self.latencies_ms = (0..n).map(|_| Vec::new()).collect();
         self.batches = 0;
+        self.spans.clear();
     }
 
     /// Modeled completion delta of a `frames`-frame request of `m`
@@ -511,6 +524,9 @@ impl MixScheduler {
                 let complete = start + occupied + self.model.egress_s[head.model][c];
                 let latency_s = complete - head.arrival;
                 self.latencies_ms[head.model].push(latency_s * 1e3);
+                let sp = &mut self.spans[head.span];
+                sp.service_start = start;
+                sp.complete = complete;
                 // Hits only count toward deadline-carrying requests (an
                 // infinite deadline was never "offered" a deadline).
                 if costs.deadline_s.is_finite() && latency_s <= costs.deadline_s {
@@ -549,7 +565,10 @@ impl MixScheduler {
                 self.deadline_offered[m] += 1;
             }
             match self.pick(m, e.frames, t) {
-                None => self.dropped[m] += 1,
+                None => {
+                    self.dropped[m] += 1;
+                    self.spans.push(RequestSpan::rejected(m, t, SpanOutcome::Dropped));
+                }
                 Some(mut c) => {
                     if self.admission == Admission::DeadlineAware
                         && has_deadline
@@ -561,17 +580,21 @@ impl MixScheduler {
                             Some((c2, p2)) if p2 <= deadline_s => c = c2,
                             _ => {
                                 self.shed[m] += 1;
+                                self.spans.push(RequestSpan::rejected(m, t, SpanOutcome::Shed));
                                 continue;
                             }
                         }
                     }
                     let ready = self.ingress(c, m, e.frames, t);
                     let occupied = self.model.models[m].occupancy_s(e.frames);
+                    let span = self.spans.len();
+                    self.spans.push(RequestSpan::admitted(m, c, t, ready));
                     self.queues[c].push_back(MixPending {
                         arrival: t,
                         ready,
                         model: m,
                         frames: e.frames,
+                        span,
                     });
                     self.queued_s[c] += occupied;
                     self.peak_queue[c] = self.peak_queue[c].max(self.queues[c].len());
@@ -618,6 +641,7 @@ impl MixScheduler {
         let mut all_latencies: Vec<f64> = Vec::new();
         for m in 0..n {
             let lat = &self.latencies_ms[m];
+            let (ing, que, ser) = mean_breakdown_ms(&self.spans, Some(m));
             per_model.push(ModelServeStats {
                 model: self.model.models[m].name.clone(),
                 replicas: self.replicas[m].len(),
@@ -630,6 +654,9 @@ impl MixScheduler {
                 mean_ms: mean(lat),
                 p50_ms: percentile(lat, 50.0),
                 p99_ms: percentile(lat, 99.0),
+                mean_ingress_ms: ing,
+                mean_queue_ms: que,
+                mean_service_ms: ser,
             });
             all_latencies.extend_from_slice(lat);
         }
@@ -647,6 +674,10 @@ impl MixScheduler {
         report.deadline_hits = self.deadline_hits.iter().sum();
         report.per_chiplet = per_chiplet;
         report.per_model = per_model;
+        let (ing, que, ser) = mean_breakdown_ms(&self.spans, None);
+        report.mean_ingress_ms = ing;
+        report.mean_queue_ms = que;
+        report.mean_service_ms = ser;
         report
     }
 }
@@ -663,6 +694,20 @@ pub fn serve_mix(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
 ) -> Result<(MixServingModel, Trace, ServeReport), String> {
+    let (model, trace, report, _) = serve_mix_traced(arch, noc, nop, sim, serving, workload)?;
+    Ok((model, trace, report))
+}
+
+/// [`serve_mix`] variant that also returns the per-request lifecycle
+/// spans for trace export (`repro serve --mix … --trace-out`).
+pub fn serve_mix_traced(
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    serving: &ServingConfig,
+    workload: &WorkloadConfig,
+) -> Result<(MixServingModel, Trace, ServeReport, Vec<RequestSpan>), String> {
     workload.validate()?;
     serving.validate()?;
     let model = MixServingModel::build(&workload.mix, workload.placement, arch, noc, nop, sim)?;
@@ -678,7 +723,8 @@ pub fn serve_mix(
     let mut sched = MixScheduler::new(model, serving, workload.admission);
     let mut report = sched.run(&trace.events);
     report.offered_rps = rate;
-    Ok((sched.model, trace, report))
+    let spans = std::mem::take(&mut sched.spans);
+    Ok((sched.model, trace, report, spans))
 }
 
 /// Replay a recorded trace: rebuild the mix model from the trace's own mix
@@ -693,11 +739,27 @@ pub fn replay_mix(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
 ) -> Result<(MixServingModel, ServeReport), String> {
+    let (model, report, _) = replay_mix_traced(trace, arch, noc, nop, sim, serving, workload)?;
+    Ok((model, report))
+}
+
+/// [`replay_mix`] variant that also returns the per-request lifecycle
+/// spans for trace export.
+pub fn replay_mix_traced(
+    trace: &Trace,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    serving: &ServingConfig,
+    workload: &WorkloadConfig,
+) -> Result<(MixServingModel, ServeReport, Vec<RequestSpan>), String> {
     let model = MixServingModel::build(&trace.mix, workload.placement, arch, noc, nop, sim)?;
     let mut sched = MixScheduler::new(model, serving, workload.admission);
     let mut report = sched.run(&trace.events);
     report.offered_rps = trace.offered_rps;
-    Ok((sched.model, report))
+    let spans = std::mem::take(&mut sched.spans);
+    Ok((sched.model, report, spans))
 }
 
 #[cfg(test)]
@@ -899,5 +961,53 @@ mod tests {
         let (_, replayed) =
             replay_mix(&parsed, &arch, &noc, &nop, &sim, &serving, &workload).unwrap();
         assert_eq!(format!("{report:?}"), format!("{replayed:?}"));
+    }
+
+    #[test]
+    fn mix_spans_reconcile_with_report() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let serving = ServingConfig {
+            requests: 200,
+            arrival_rps: 1.0e6, // overload: force drops alongside completions
+            queue_depth: 1,
+            ..ServingConfig::default()
+        };
+        let workload = WorkloadConfig {
+            mix: small_mix(),
+            ..WorkloadConfig::default()
+        };
+        let (_, trace, report, spans) =
+            serve_mix_traced(&arch, &noc, &nop, &sim, &serving, &workload).unwrap();
+        assert_eq!(spans.len(), trace.events.len());
+        let done = spans
+            .iter()
+            .filter(|s| s.outcome == SpanOutcome::Completed)
+            .count();
+        let dropped = spans
+            .iter()
+            .filter(|s| s.outcome == SpanOutcome::Dropped)
+            .count();
+        let shed = spans.iter().filter(|s| s.outcome == SpanOutcome::Shed).count();
+        assert_eq!(done, report.completed);
+        assert_eq!(dropped, report.dropped);
+        assert_eq!(shed, report.shed);
+        assert!(report.dropped > 0, "overload must drop requests");
+        // Phase means decompose the end-to-end mean exactly.
+        let total = report.mean_ingress_ms + report.mean_queue_ms + report.mean_service_ms;
+        assert!((total - report.mean_ms).abs() < 1e-9);
+        for st in &report.per_model {
+            let t = st.mean_ingress_ms + st.mean_queue_ms + st.mean_service_ms;
+            assert!((t - st.mean_ms).abs() < 1e-9, "model {}", st.model);
+        }
+        for s in &spans {
+            assert!(s.ready >= s.arrival);
+            assert!(s.service_start >= s.ready);
+            assert!(s.complete >= s.service_start);
+        }
     }
 }

@@ -46,6 +46,8 @@ use crate::noc::sim::{FlowSpec, Mode};
 use crate::nop::evaluator::{evaluate_package, nop_transfer_cycles};
 use crate::nop::sim::{saturation_rate, NopSim};
 use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
+use crate::telemetry::Histogram;
 use crate::util::Pcg32;
 
 pub use crate::config::Policy;
@@ -318,12 +320,14 @@ impl LinkWindow {
     }
 }
 
-/// A request admitted to a chiplet queue: arrival time at the gateway and
-/// the time its input finishes streaming to the chiplet.
+/// A request admitted to a chiplet queue: arrival time at the gateway, the
+/// time its input finishes streaming to the chiplet, and its lifecycle
+/// span index.
 #[derive(Clone, Copy, Debug)]
 struct Pending {
     arrival: f64,
     ready: f64,
+    span: usize,
 }
 
 /// Per-chiplet request queues over a [`ChipletPartition`], plus the
@@ -346,6 +350,10 @@ pub struct ChipletScheduler {
     peak_queue: Vec<usize>,
     batches: usize,
     latencies_ms: Vec<f64>,
+    /// One lifecycle span per offered request, in admission order.
+    spans: Vec<RequestSpan>,
+    /// Queue depth observed at each admission.
+    queue_depth: Histogram,
 }
 
 impl ChipletScheduler {
@@ -371,6 +379,8 @@ impl ChipletScheduler {
             peak_queue: vec![0; k],
             batches: 0,
             latencies_ms: Vec::new(),
+            spans: Vec::new(),
+            queue_depth: Histogram::default(),
         }
     }
 
@@ -388,6 +398,19 @@ impl ChipletScheduler {
         self.peak_queue = vec![0; k];
         self.batches = 0;
         self.latencies_ms.clear();
+        self.spans.clear();
+        self.queue_depth = Histogram::default();
+    }
+
+    /// Lifecycle spans of the most recent run, in admission order (one per
+    /// offered request — completed and dropped alike).
+    pub fn spans(&self) -> &[RequestSpan] {
+        &self.spans
+    }
+
+    /// Queue depth observed at each admission of the most recent run.
+    pub fn queue_depth_hist(&self) -> &Histogram {
+        &self.queue_depth
     }
 
     /// Modeled completion time of a request admitted to chiplet `c` at
@@ -499,6 +522,9 @@ impl ChipletScheduler {
                 for (j, p) in taken.iter().enumerate() {
                     let complete = start + service_s + j as f64 * stage_s + egress;
                     self.latencies_ms.push((complete - p.arrival) * 1e3);
+                    let sp = &mut self.spans[p.span];
+                    sp.service_start = start;
+                    sp.complete = complete;
                 }
                 let occupied = service_s + (taken.len() - 1) as f64 * stage_s;
                 self.free_at[c] = start + occupied;
@@ -525,11 +551,21 @@ impl ChipletScheduler {
             t += -(1.0 - rng.next_f64()).ln() / rate;
             self.advance(t);
             match self.pick(t) {
-                None => dropped += 1,
+                None => {
+                    dropped += 1;
+                    self.spans.push(RequestSpan::rejected(0, t, SpanOutcome::Dropped));
+                }
                 Some(c) => {
                     let ready = self.ingress(c, t);
-                    self.queues[c].push_back(Pending { arrival: t, ready });
+                    let span = self.spans.len();
+                    self.spans.push(RequestSpan::admitted(0, c, t, ready));
+                    self.queues[c].push_back(Pending {
+                        arrival: t,
+                        ready,
+                        span,
+                    });
                     self.peak_queue[c] = self.peak_queue[c].max(self.queues[c].len());
+                    self.queue_depth.record(self.queues[c].len() as f64);
                 }
             }
         }
@@ -573,6 +609,10 @@ impl ChipletScheduler {
         );
         report.per_chiplet = per_chiplet;
         report.offered_rps = rate;
+        let (ing, que, ser) = mean_breakdown_ms(&self.spans, None);
+        report.mean_ingress_ms = ing;
+        report.mean_queue_ms = que;
+        report.mean_service_ms = ser;
         report
     }
 }
@@ -587,12 +627,27 @@ pub fn serve_modeled(
     sim: &SimConfig,
     cfg: &ServingConfig,
 ) -> (ServingModel, ServeReport) {
+    let (model, report, _) = serve_modeled_traced(graph, arch, noc, nop, sim, cfg);
+    (model, report)
+}
+
+/// Like [`serve_modeled`], also returning the per-request lifecycle spans
+/// (the raw material for `repro serve --trace-out`).
+pub fn serve_modeled_traced(
+    graph: &DnnGraph,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    cfg: &ServingConfig,
+) -> (ServingModel, ServeReport, Vec<RequestSpan>) {
     let (model, part) = ServingModel::build(graph, arch, noc, nop, sim);
     let mut sched = ChipletScheduler::new(model, part, cfg);
     // Arrivals are seeded by `[serving] seed`, not `[sim] seed`, so serving
     // runs reseed independently of the NoC/NoP simulators.
     let report = sched.run(cfg, cfg.seed);
-    (sched.model, report)
+    let spans = std::mem::take(&mut sched.spans);
+    (sched.model, report, spans)
 }
 
 #[cfg(test)]
@@ -735,6 +790,54 @@ mod tests {
             assert!(s.peak_queue <= 1, "peak {}", s.peak_queue);
         }
         assert!(report.p99_ms >= report.p50_ms);
+    }
+
+    #[test]
+    fn spans_reconcile_with_report() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 2,
+            ..NopConfig::default()
+        };
+        let (model, part) = ServingModel::build(&models::mlp(), &arch, &noc, &nop, &sim);
+        let cfg = ServingConfig {
+            policy: Policy::LeastLatency,
+            queue_depth: 1,
+            arrival_rps: 50.0 * model.capacity_rps(1),
+            requests: 300,
+            batch: 1,
+            ..ServingConfig::default()
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        let report = sched.run(&cfg, 3);
+        // One span per offered request; outcomes match the report exactly.
+        assert_eq!(sched.spans().len(), report.requests);
+        let done = sched
+            .spans()
+            .iter()
+            .filter(|s| s.outcome == SpanOutcome::Completed)
+            .count();
+        let dropped = sched
+            .spans()
+            .iter()
+            .filter(|s| s.outcome == SpanOutcome::Dropped)
+            .count();
+        assert_eq!(done, report.completed);
+        assert_eq!(dropped, report.dropped);
+        // Phase means sum to the mean latency (same underlying samples).
+        let sum = report.mean_ingress_ms + report.mean_queue_ms + report.mean_service_ms;
+        assert!((sum - report.mean_ms).abs() < 1e-9, "{sum} vs {}", report.mean_ms);
+        assert!(report.mean_queue_ms > 0.0, "overload must show queue wait");
+        assert_eq!(sched.queue_depth_hist().count(), done as u64);
+        // Every completed span is internally ordered.
+        for s in sched.spans() {
+            if s.outcome == SpanOutcome::Completed {
+                assert!(s.ready >= s.arrival);
+                assert!(s.service_start >= s.ready);
+                assert!(s.complete >= s.service_start);
+            }
+        }
     }
 
     #[test]

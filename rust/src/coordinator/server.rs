@@ -51,6 +51,12 @@ pub struct ModelServeStats {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Mean lifecycle-phase durations over this model's completed
+    /// requests, ms (NoP ingress / queue wait / chiplet service incl.
+    /// egress — they sum to `mean_ms`).
+    pub mean_ingress_ms: f64,
+    pub mean_queue_ms: f64,
+    pub mean_service_ms: f64,
 }
 
 impl ModelServeStats {
@@ -92,6 +98,13 @@ pub struct ServeReport {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Mean lifecycle-phase durations over completed requests, ms: NoP
+    /// ingress, queue wait, chiplet service incl. egress. They sum to
+    /// `mean_ms` on the modeled paths; all 0 on the PJRT path, which has
+    /// no modeled phases.
+    pub mean_ingress_ms: f64,
+    pub mean_queue_ms: f64,
+    pub mean_service_ms: f64,
     /// Completed requests per second end to end.
     pub throughput_rps: f64,
     /// Arrival rate the run was driven at (modeled path only; the
@@ -130,6 +143,9 @@ impl ServeReport {
             mean_ms: mean(latencies_ms),
             p50_ms: percentile(latencies_ms, 50.0),
             p99_ms: percentile(latencies_ms, 99.0),
+            mean_ingress_ms: 0.0,
+            mean_queue_ms: 0.0,
+            mean_service_ms: 0.0,
             throughput_rps: completed as f64 / horizon_s.max(1e-12),
             offered_rps: 0.0,
             per_chiplet: Vec::new(),

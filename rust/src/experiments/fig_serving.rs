@@ -92,6 +92,9 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
             "p99_ms",
             "drop_%",
             "util_mean",
+            "ingress_ms",
+            "queue_ms",
+            "service_ms",
         ],
     );
     let mut context = Table::new(
@@ -150,6 +153,9 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
                 fmt_sig(report.p99_ms, 4),
                 fmt_sig(drop_pct, 3),
                 fmt_sig(util_mean, 3),
+                fmt_sig(report.mean_ingress_ms, 3),
+                fmt_sig(report.mean_queue_ms, 3),
+                fmt_sig(report.mean_service_ms, 3),
             ]);
         }
     }
@@ -176,6 +182,14 @@ mod tests {
             let p50: f64 = row[6].parse().unwrap();
             let p99: f64 = row[7].parse().unwrap();
             assert!(p99 >= p50, "p99 {p99} < p50 {p50}");
+            // Lifecycle breakdown columns (telemetry spans): every phase
+            // mean is finite and non-negative, and service dominates on
+            // these underloaded points.
+            let ingress: f64 = row[10].parse().unwrap();
+            let queue: f64 = row[11].parse().unwrap();
+            let service: f64 = row[12].parse().unwrap();
+            assert!(ingress >= 0.0 && queue >= 0.0 && service > 0.0);
+            assert!(service + queue + ingress <= p99.max(p50) * 2.0 + 1e-6);
         }
     }
 

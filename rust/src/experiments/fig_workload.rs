@@ -91,6 +91,8 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
             "shed_%",
             "drop_%",
             "p99_ms",
+            "queue_ms",
+            "service_ms",
         ],
     );
     let mut healthy: Option<MixServingModel> = None;
@@ -131,6 +133,8 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
                     fmt_sig(pct(report.shed), 3),
                     fmt_sig(pct(report.dropped), 3),
                     fmt_sig(report.p99_ms, 4),
+                    fmt_sig(report.mean_queue_ms, 3),
+                    fmt_sig(report.mean_service_ms, 3),
                 ]);
             }
         }
@@ -205,6 +209,11 @@ mod tests {
         for row in &tables[0].rows {
             let hit: f64 = row[7].parse().unwrap();
             assert!((0.0..=1.0).contains(&hit), "hit rate {hit}");
+            // Span-derived breakdown columns are present and sane.
+            let queue: f64 = row[11].parse().unwrap();
+            let service: f64 = row[12].parse().unwrap();
+            assert!(queue >= 0.0, "queue {queue}");
+            assert!(service > 0.0, "service {service}");
         }
     }
 

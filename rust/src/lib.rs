@@ -31,6 +31,9 @@
 //!   * [`workload`] — multi-model serving workloads: DNN mixes with
 //!     deadlines, bursty/diurnal arrival generators, record/replay traces,
 //!     and NoP-aware replica placement,
+//!   * [`telemetry`] — zero-cost-when-disabled observability: per-link
+//!     flit counters and heatmaps, request lifecycle spans, and
+//!     Chrome-trace (Perfetto) export,
 //!   * [`experiments`] — one generator per paper figure/table.
 //!
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
@@ -48,6 +51,7 @@ pub mod mapping;
 pub mod noc;
 pub mod nop;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

@@ -24,6 +24,7 @@ use std::collections::HashMap;
 use super::router::{Flit, RouterState};
 use super::topology::{Network, Topology, NONE};
 use crate::config::NocConfig;
+use crate::telemetry::SimTelemetry;
 use crate::util::Pcg32;
 
 /// One source→destination traffic specification.
@@ -165,6 +166,12 @@ pub struct NocSim {
     /// the switch loop skip routers whose flits are all mid-pipeline with
     /// one compare instead of a 5-port queue scan.
     next_ready: Vec<u64>,
+    /// Per-link telemetry, collected only when built with `instrument(true)`
+    /// (boxed so the disabled path stays one pointer wide).
+    telem: Option<Box<SimTelemetry>>,
+    /// link_ids[r][slot] = telemetry link index for the (r, slot) hop
+    /// (`NONE` for absent slots). Empty unless instrumented.
+    link_ids: Vec<Vec<usize>>,
 }
 
 impl NocSim {
@@ -268,6 +275,8 @@ impl NocSim {
             moves: Vec::with_capacity(256),
             spare: Vec::with_capacity(64),
             next_ready: vec![0; net_routers],
+            telem: None,
+            link_ids: Vec::new(),
         };
         // Saturation guard: clamp aggregate per-source rate at 1 flit/cycle.
         for s in &mut sim.sources {
@@ -285,6 +294,36 @@ impl NocSim {
     /// Enable per-pair latency tracking (Fig. 15 / Table 3).
     pub fn track_pairs(mut self, on: bool) -> Self {
         self.track_pairs = on;
+        self
+    }
+
+    /// Collect per-link flit counters, per-terminal injection/ejection
+    /// counters and buffer-occupancy telemetry while running (returned by
+    /// [`NocSim::run_instrumented`]). Off by default: the disabled path
+    /// costs one branch per hook site and allocates nothing.
+    pub fn instrument(mut self, on: bool) -> Self {
+        if !on {
+            self.telem = None;
+            self.link_ids = Vec::new();
+            return self;
+        }
+        // Enumerate directed links in deterministic (router, slot) order.
+        let mut links = Vec::new();
+        let mut link_ids = Vec::with_capacity(self.net.routers);
+        for r in 0..self.net.routers {
+            let mut ids = Vec::with_capacity(self.net.neighbors[r].len());
+            for &n in &self.net.neighbors[r] {
+                if n == NONE {
+                    ids.push(NONE);
+                } else {
+                    ids.push(links.len());
+                    links.push((r, n));
+                }
+            }
+            link_ids.push(ids);
+        }
+        self.telem = Some(Box::new(SimTelemetry::sized(links, self.sources.len())));
+        self.link_ids = link_ids;
         self
     }
 
@@ -314,6 +353,9 @@ impl NocSim {
             } else {
                 self.stats.nonzero_occ_sum += occ as f64;
                 self.stats.nonzero_occ_count += 1;
+            }
+            if let Some(tm) = &mut self.telem {
+                tm.occupancy.record(occ as f64);
             }
         }
         self.mark_active(r);
@@ -353,6 +395,9 @@ impl NocSim {
                     s.fifo.push_back((dst, self.now));
                     self.stats.injected += 1;
                     self.in_flight += 1;
+                    if let Some(tm) = &mut self.telem {
+                        tm.injected[t] += 1;
+                    }
                 }
             } else if self.sources[t].fifo.is_empty() && !self.sources[t].pending.is_empty() {
                 // Drain mode: keep the FIFO primed with the next flit,
@@ -364,6 +409,9 @@ impl NocSim {
                 self.stats.injected += 1;
                 self.in_flight += 1;
                 self.ungenerated -= 1;
+                if let Some(tm) = &mut self.telem {
+                    tm.injected[t] += 1;
+                }
                 if remaining <= 1 {
                     s.pending.swap_remove(k);
                 } else {
@@ -500,6 +548,9 @@ impl NocSim {
                 // +1 cycle link traversal is folded into arrival at now+pipe.
                 let ok = self.push_router(next, in_port, flit, true);
                 debug_assert!(ok);
+                if let Some(tm) = &mut self.telem {
+                    tm.link_flits[self.link_ids[r][slot]] += 1;
+                }
             }
             if self.routers[r].total_occupancy() > 0 {
                 self.mark_active(r);
@@ -518,6 +569,9 @@ impl NocSim {
             return;
         }
         self.stats.delivered += 1;
+        if let Some(tm) = &mut self.telem {
+            tm.ejected[flit.dst as usize] += 1;
+        }
         self.stats.avg_latency += latency as f64; // running sum; divided at end
         self.stats.max_latency = self.stats.max_latency.max(latency);
         self.stats.makespan = self.now + 1;
@@ -537,7 +591,13 @@ impl NocSim {
     }
 
     /// Run to completion per the configured mode.
-    pub fn run(mut self) -> SimStats {
+    pub fn run(self) -> SimStats {
+        self.run_instrumented().0
+    }
+
+    /// Run to completion, also returning the collected telemetry (empty
+    /// unless built with [`NocSim::instrument`]).
+    pub fn run_instrumented(mut self) -> (SimStats, SimTelemetry) {
         match self.mode {
             Mode::Steady { warmup, measure } => {
                 while self.now < warmup {
@@ -567,7 +627,12 @@ impl NocSim {
         if self.stats.delivered > 0 {
             self.stats.avg_latency /= self.stats.delivered as f64;
         }
-        self.stats
+        let mut telem = match self.telem.take() {
+            Some(b) => *b,
+            None => SimTelemetry::default(),
+        };
+        telem.cycles = self.stats.cycles;
+        (self.stats, telem)
     }
 }
 
@@ -898,5 +963,57 @@ mod tests {
         .run();
         assert_eq!(s.injected, 0);
         assert!(s.drained);
+    }
+
+    #[test]
+    fn instrumented_totals_match_stats() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 5,
+                rate: 0.0,
+                flits: 40,
+            },
+            FlowSpec {
+                src: 3,
+                dst: 1,
+                rate: 0.0,
+                flits: 17,
+            },
+        ];
+        let (s, t) = NocSim::new(
+            Topology::Mesh,
+            9,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 100_000 },
+            7,
+        )
+        .instrument(true)
+        .run_instrumented();
+        assert!(s.drained);
+        assert_eq!(t.injected_total(), s.injected);
+        assert_eq!(t.ejected_total(), s.delivered);
+        assert_eq!(t.injected[0], 40);
+        assert_eq!(t.ejected[1], 17);
+        assert_eq!(t.cycles, s.cycles);
+        // Every delivered flit crossed at least one inter-router link.
+        assert!(t.transit_total() >= s.delivered);
+        assert!(t.peak_link().is_some());
+
+        // Uninstrumented runs return empty telemetry and identical stats.
+        let (s2, empty) = NocSim::new(
+            Topology::Mesh,
+            9,
+            &cfg(),
+            &flows,
+            Mode::Drain { max_cycles: 100_000 },
+            7,
+        )
+        .run_instrumented();
+        assert_eq!(s2.delivered, s.delivered);
+        assert_eq!(s2.makespan, s.makespan);
+        assert!(empty.links.is_empty());
+        assert_eq!(empty.injected_total(), 0);
     }
 }

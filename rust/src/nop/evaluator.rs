@@ -406,6 +406,51 @@ pub fn evaluate_package(
     }
 }
 
+/// Aggregate a model's cross-chiplet transfers into one package flow set:
+/// total NoP flits per (producer chiplet, consumer chiplet) pair over all
+/// layers, in sorted pair order. This is the traffic the telemetry link
+/// heatmap visualizes (`repro chiplet --heatmap`); running it through an
+/// instrumented [`NopSim`] drain shows which package links the partition
+/// actually loads.
+pub fn package_flows(
+    graph: &DnnGraph,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+) -> Vec<FlowSpec> {
+    let mapping = Mapping::build(graph, arch);
+    let inj = InjectionMatrix::build(graph, &mapping, arch, noc);
+    let part = ChipletPartition::build(graph, &mapping, arch, nop.chiplets);
+    let mut midx = vec![usize::MAX; graph.layers.len()];
+    for (i, lt) in mapping.layers.iter().enumerate() {
+        midx[lt.layer] = i;
+    }
+    let mut per_pair: std::collections::HashMap<(usize, usize), u64> =
+        std::collections::HashMap::new();
+    for (i, lt) in mapping.layers.iter().enumerate() {
+        let c = part.chiplet_of_layer(i);
+        for f in inj.flows_into(lt.layer) {
+            let src_chiplet = part.chiplet_of_layer(midx[f.src_layer]);
+            if src_chiplet != c {
+                let bits = f.activations as u64 * arch.n_bits as u64;
+                *per_pair.entry((src_chiplet, c)).or_default() +=
+                    bits.div_ceil(nop.link_width as u64);
+            }
+        }
+    }
+    let mut pairs: Vec<_> = per_pair.into_iter().collect();
+    pairs.sort_unstable();
+    pairs
+        .into_iter()
+        .map(|((src, dst), flits)| FlowSpec {
+            src,
+            dst,
+            rate: 0.0,
+            flits,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -508,6 +553,32 @@ mod tests {
         // NoP energy: 1024 bits x 1 hop x 1.5 pJ/bit.
         let expected_nop_j = 1024.0 * 1.5e-12;
         assert!((pkg.nop_energy_j - expected_nop_j).abs() < 1e-20);
+    }
+
+    #[test]
+    fn package_flows_aggregate_cross_traffic() {
+        // Same two-chiplet graph as the hand-computed composition: the
+        // only cross-chiplet transfer is fc1 -> fc2, 128 x 8 bits over
+        // 32-bit NoP links = 32 flits.
+        let mut g = DnnGraph::new("two-fc-flows", Dataset::Mnist);
+        let f1 = g.fc("fc1", 0, 128);
+        g.fc("fc2", f1, 64);
+        let (arch, noc, _) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 2,
+            ..NopConfig::default()
+        };
+        let flows = package_flows(&g, &arch, &noc, &nop);
+        assert_eq!(flows.len(), 1);
+        assert_eq!((flows[0].src, flows[0].dst), (0, 1));
+        assert_eq!(flows[0].flits, 32);
+        // A single-chiplet package carries no cross traffic at all.
+        let one = NopConfig {
+            chiplets: 1,
+            ..NopConfig::default()
+        };
+        assert!(package_flows(&models::mlp(), &arch, &noc, &one).is_empty());
     }
 
     #[test]

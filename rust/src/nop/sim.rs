@@ -35,6 +35,7 @@ use std::collections::{HashMap, HashSet, VecDeque};
 use crate::config::NopConfig;
 use crate::noc::sim::{FlowSpec, Mode, SimStats};
 use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::telemetry::SimTelemetry;
 use crate::util::Pcg32;
 
 /// Upstream marker for injection buffers (no inbound link).
@@ -112,6 +113,9 @@ pub struct NopSim {
     in_flight: u64,
     /// Drain mode: flits not yet generated.
     ungenerated: u64,
+    /// Per-link telemetry, collected only when built with `instrument(true)`
+    /// (boxed so the disabled path stays one pointer wide).
+    telem: Option<Box<SimTelemetry>>,
 }
 
 impl NopSim {
@@ -218,12 +222,30 @@ impl NopSim {
             in_warmup: steady,
             in_flight: 0,
             ungenerated,
+            telem: None,
         }
     }
 
     /// Enable per-pair latency tracking.
     pub fn track_pairs(mut self, on: bool) -> Self {
         self.track_pairs = on;
+        self
+    }
+
+    /// Collect per-link flit counters, per-chiplet injection/ejection
+    /// counters and buffer-occupancy telemetry while running (returned by
+    /// [`NopSim::run_instrumented`]). Off by default: the disabled path
+    /// costs one branch per hook site and allocates nothing.
+    pub fn instrument(mut self, on: bool) -> Self {
+        if !on {
+            self.telem = None;
+            return self;
+        }
+        // Link buffer id == telemetry link index: both follow the sorted
+        // link enumeration of `new`, so `forward` can index directly.
+        let injection_base = self.bufs.len() - self.net.nodes;
+        let links: Vec<(usize, usize)> = self.buf_edge[..injection_base].to_vec();
+        self.telem = Some(Box::new(SimTelemetry::sized(links, self.sources.len())));
         self
     }
 
@@ -264,6 +286,9 @@ impl NopSim {
                     self.stats.nonzero_occ_sum += occ as f64;
                     self.stats.nonzero_occ_count += 1;
                 }
+                if let Some(tm) = &mut self.telem {
+                    tm.occupancy.record(occ as f64);
+                }
             }
             self.bufs[buf].push_back(flit);
         }
@@ -289,6 +314,9 @@ impl NopSim {
                     s.fifo.push_back((dst, self.now));
                     self.stats.injected += 1;
                     self.in_flight += 1;
+                    if let Some(tm) = &mut self.telem {
+                        tm.injected[t] += 1;
+                    }
                 }
             } else if self.sources[t].fifo.is_empty() && !self.sources[t].pending.is_empty() {
                 // Drain mode: keep the FIFO primed, round-robin over the
@@ -300,6 +328,9 @@ impl NopSim {
                 self.stats.injected += 1;
                 self.in_flight += 1;
                 self.ungenerated -= 1;
+                if let Some(tm) = &mut self.telem {
+                    tm.injected[t] += 1;
+                }
                 if remaining <= 1 {
                     s.pending.swap_remove(idx);
                 } else {
@@ -376,6 +407,9 @@ impl NopSim {
                             target,
                             flit,
                         ));
+                        if let Some(tm) = &mut self.telem {
+                            tm.link_flits[target] += 1;
+                        }
                     } else {
                         kept.push_back(flit);
                     }
@@ -392,6 +426,9 @@ impl NopSim {
             return;
         }
         self.stats.delivered += 1;
+        if let Some(tm) = &mut self.telem {
+            tm.ejected[flit.dst as usize] += 1;
+        }
         self.stats.avg_latency += latency as f64; // running sum; divided at end
         self.stats.max_latency = self.stats.max_latency.max(latency);
         self.stats.makespan = self.now + 1;
@@ -421,11 +458,23 @@ impl NopSim {
 
     /// Run to completion per the configured mode.
     pub fn run(self) -> SimStats {
-        self.run_audited().0
+        self.run_all().0
     }
 
     /// Like [`run`](Self::run), also returning the flow-control audit.
-    pub fn run_audited(mut self) -> (SimStats, NopAudit) {
+    pub fn run_audited(self) -> (SimStats, NopAudit) {
+        let (stats, audit, _) = self.run_all();
+        (stats, audit)
+    }
+
+    /// Like [`run`](Self::run), also returning the collected telemetry
+    /// (empty unless built with [`NopSim::instrument`]).
+    pub fn run_instrumented(self) -> (SimStats, SimTelemetry) {
+        let (stats, _, telem) = self.run_all();
+        (stats, telem)
+    }
+
+    fn run_all(mut self) -> (SimStats, NopAudit, SimTelemetry) {
         match self.mode {
             Mode::Steady { warmup, measure } => {
                 let end = warmup + measure;
@@ -461,12 +510,17 @@ impl NopSim {
         if self.stats.delivered > 0 {
             self.stats.avg_latency /= self.stats.delivered as f64;
         }
+        let mut telem = match self.telem.take() {
+            Some(b) => *b,
+            None => SimTelemetry::default(),
+        };
+        telem.cycles = self.stats.cycles;
         let audit = NopAudit {
             capacity: self.cfg.buffer_flits as i64,
             credits: self.credits,
             min_credit: self.min_credit,
         };
-        (self.stats, audit)
+        (self.stats, audit, telem)
     }
 }
 
@@ -888,5 +942,64 @@ mod tests {
         assert_eq!(s.per_pair.len(), 2);
         assert_eq!(s.per_pair[&3u64].count, 10);
         assert_eq!(s.per_pair[&((1u64 << 32) | 2)].count, 5);
+    }
+
+    #[test]
+    fn instrumented_totals_match_stats() {
+        let flows = [
+            FlowSpec {
+                src: 6,
+                dst: 2,
+                rate: 0.0,
+                flits: 40,
+            },
+            FlowSpec {
+                src: 1,
+                dst: 6,
+                rate: 0.0,
+                flits: 25,
+            },
+        ];
+        // k=7 mesh exercises the passive relay sites too.
+        let (s, t) = NopSim::new(
+            NopTopology::Mesh,
+            7,
+            &cfg(),
+            &flows,
+            Mode::Drain {
+                max_cycles: 1_000_000,
+            },
+            17,
+        )
+        .instrument(true)
+        .run_instrumented();
+        assert!(s.drained);
+        assert_eq!(t.injected_total(), s.injected);
+        assert_eq!(t.ejected_total(), s.delivered);
+        assert_eq!(t.injected[6], 40);
+        assert_eq!(t.ejected[6], 25);
+        assert_eq!(t.cycles, s.cycles);
+        // Every delivered flit crossed at least one package link.
+        assert!(t.transit_total() >= s.delivered);
+        // Links are the sorted enumeration `new` built buffers from.
+        let mut sorted = t.links.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, t.links);
+
+        // Uninstrumented runs return empty telemetry and identical stats.
+        let (s2, empty) = NopSim::new(
+            NopTopology::Mesh,
+            7,
+            &cfg(),
+            &flows,
+            Mode::Drain {
+                max_cycles: 1_000_000,
+            },
+            17,
+        )
+        .run_instrumented();
+        assert_eq!(s2.makespan, s.makespan);
+        assert!(empty.links.is_empty());
+        assert_eq!(empty.injected_total(), 0);
     }
 }

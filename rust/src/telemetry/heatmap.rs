@@ -1,0 +1,235 @@
+//! Per-topology link-utilization heatmaps rendered from a
+//! [`SimTelemetry`]: a text grid (mesh) or ranked link list (ring/P2P) for
+//! the terminal, plus a machine-readable JSON export. This is how "which
+//! mesh link saturates first" becomes directly visible
+//! (`repro chiplet --heatmap`).
+
+use std::collections::HashMap;
+
+use super::registry::SimTelemetry;
+use crate::nop::topology::{NopNetwork, NopTopology};
+
+/// Utilization as an integer percent, from a `(from, to)` lookup.
+fn pct(map: &HashMap<(usize, usize), u64>, a: usize, b: usize, cycles: u64) -> Option<u64> {
+    if cycles == 0 {
+        return None;
+    }
+    // A grid edge carries two directed links; show the hotter direction.
+    let f = map.get(&(a, b)).copied();
+    let r = map.get(&(b, a)).copied();
+    match (f, r) {
+        (None, None) => None,
+        (f, r) => {
+            let flits = f.unwrap_or(0).max(r.unwrap_or(0));
+            Some((100.0 * flits as f64 / cycles as f64).round() as u64)
+        }
+    }
+}
+
+fn flit_map(telem: &SimTelemetry) -> HashMap<(usize, usize), u64> {
+    telem
+        .links
+        .iter()
+        .zip(&telem.link_flits)
+        .map(|(&l, &f)| (l, f))
+        .collect()
+}
+
+/// Ranked hottest-links summary shared by every topology.
+fn hottest(telem: &SimTelemetry, top: usize) -> String {
+    let mut order: Vec<usize> = (0..telem.links.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(telem.link_flits[i]), i));
+    let mut out = String::new();
+    for &i in order.iter().take(top) {
+        let (a, b) = telem.links[i];
+        out.push_str(&format!(
+            "  {a:>3} -> {b:<3} {:>10} flits  {:>5.1}% util\n",
+            telem.link_flits[i],
+            100.0 * telem.link_utilization(i)
+        ));
+    }
+    if telem.links.len() > top {
+        out.push_str(&format!("  ({} more links)\n", telem.links.len() - top));
+    }
+    out
+}
+
+/// Render the heatmap as a terminal text grid. Mesh packages draw the
+/// physical `cols x rows` interposer with per-edge utilization percentages
+/// (hotter direction of each edge); ring/P2P packages, which have no 2-D
+/// embedding, list every directed link ranked by utilization. Passive relay
+/// mesh sites (no chiplet) render as `[--]`.
+pub fn heatmap_text(net: &NopNetwork, telem: &SimTelemetry) -> String {
+    let mut out = format!(
+        "NoP {} heatmap: k={} ({} nodes), {} cycles, {} flits forwarded\n",
+        net.topology.name(),
+        net.chiplets,
+        net.nodes,
+        telem.cycles,
+        telem.transit_total()
+    );
+    if net.topology == NopTopology::Mesh && net.dims.0 > 0 {
+        let (cols, rows) = net.dims;
+        let map = flit_map(telem);
+        for r in 0..rows {
+            // Node row: [ 0]-12%-[ 1]-...
+            let mut line = String::new();
+            for c in 0..cols {
+                let n = r * cols + c;
+                if n < net.chiplets {
+                    line.push_str(&format!("[{n:>2}]"));
+                } else {
+                    line.push_str("[--]");
+                }
+                if c + 1 < cols {
+                    match pct(&map, n, n + 1, telem.cycles) {
+                        Some(p) => line.push_str(&format!("-{p:>3}%-")),
+                        None => line.push_str("      "),
+                    }
+                }
+            }
+            out.push_str(line.trim_end());
+            out.push('\n');
+            // Vertical links to the next row: a bar line and a percent line.
+            if r + 1 < rows {
+                let mut bars = String::new();
+                let mut pcts = String::new();
+                for c in 0..cols {
+                    let n = r * cols + c;
+                    match pct(&map, n, n + cols, telem.cycles) {
+                        Some(p) => {
+                            bars.push_str("  |       ");
+                            pcts.push_str(&format!(" {p:>3}%     "));
+                        }
+                        None => {
+                            bars.push_str("          ");
+                            pcts.push_str("          ");
+                        }
+                    }
+                }
+                out.push_str(bars.trim_end());
+                out.push('\n');
+                out.push_str(pcts.trim_end());
+                out.push('\n');
+            }
+        }
+        out.push_str("hottest links:\n");
+        out.push_str(&hottest(telem, 5));
+    } else {
+        out.push_str("links by utilization:\n");
+        out.push_str(&hottest(telem, 24));
+    }
+    if telem.occupancy.count() > 0 {
+        out.push_str(&format!(
+            "buffer occupancy at arrival: mean {:.2}, max {:.0} ({} samples)\n",
+            telem.occupancy.mean(),
+            telem.occupancy.max_sample(),
+            telem.occupancy.count()
+        ));
+    }
+    out
+}
+
+/// Machine-readable heatmap: topology, package shape, cycles, and every
+/// directed link with its flit count and utilization. Fixed-precision
+/// floats keep the export byte-deterministic for a given run.
+pub fn heatmap_json(net: &NopNetwork, telem: &SimTelemetry) -> String {
+    let links: Vec<String> = telem
+        .links
+        .iter()
+        .enumerate()
+        .map(|(i, &(a, b))| {
+            format!(
+                "{{\"src\":{a},\"dst\":{b},\"flits\":{},\"utilization\":{:.6}}}",
+                telem.link_flits[i],
+                telem.link_utilization(i)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"topology\":\"{}\",\"chiplets\":{},\"nodes\":{},\"cols\":{},\"rows\":{},\
+         \"cycles\":{},\"injected\":{},\"delivered\":{},\"links\":[{}]}}",
+        net.topology.name(),
+        net.chiplets,
+        net.nodes,
+        net.dims.0,
+        net.dims.1,
+        telem.cycles,
+        telem.injected_total(),
+        telem.ejected_total(),
+        links.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_telem(net: &NopNetwork) -> SimTelemetry {
+        // One flit counter per enumerated routable link, like the sim does.
+        let mut links: Vec<(usize, usize)> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..net.nodes {
+            for d in 0..net.chiplets {
+                if d != a {
+                    let b = net.route_next(a, d);
+                    if seen.insert((a, b)) {
+                        links.push((a, b));
+                    }
+                }
+            }
+        }
+        links.sort_unstable();
+        let mut t = SimTelemetry::sized(links, net.chiplets);
+        for (i, f) in t.link_flits.iter_mut().enumerate() {
+            *f = (i as u64 + 1) * 3;
+        }
+        t.cycles = 100;
+        t.injected[0] = 7;
+        t.ejected[1] = 7;
+        t.occupancy.record(2.0);
+        t
+    }
+
+    #[test]
+    fn mesh_grid_renders_nodes_and_percentages() {
+        let net = NopNetwork::build(NopTopology::Mesh, 4);
+        let t = fake_telem(&net);
+        let txt = heatmap_text(&net, &t);
+        assert!(txt.contains("[ 0]"), "{txt}");
+        assert!(txt.contains("[ 3]"), "{txt}");
+        assert!(txt.contains('%'), "{txt}");
+        assert!(txt.contains("hottest links"), "{txt}");
+        assert!(txt.contains("buffer occupancy"), "{txt}");
+    }
+
+    #[test]
+    fn relay_sites_render_as_blanks() {
+        // k=7 on a 3x3 grid leaves passive relay sites.
+        let net = NopNetwork::build(NopTopology::Mesh, 7);
+        let t = fake_telem(&net);
+        let txt = heatmap_text(&net, &t);
+        assert!(txt.contains("[--]"), "{txt}");
+    }
+
+    #[test]
+    fn ring_lists_links() {
+        let net = NopNetwork::build(NopTopology::Ring, 6);
+        let t = fake_telem(&net);
+        let txt = heatmap_text(&net, &t);
+        assert!(txt.contains("links by utilization"), "{txt}");
+        assert!(txt.contains("->"), "{txt}");
+    }
+
+    #[test]
+    fn json_contains_every_link_and_is_deterministic() {
+        let net = NopNetwork::build(NopTopology::Mesh, 4);
+        let t = fake_telem(&net);
+        let j1 = heatmap_json(&net, &t);
+        let j2 = heatmap_json(&net, &t);
+        assert_eq!(j1, j2);
+        assert!(j1.starts_with("{\"topology\":\"mesh\""), "{j1}");
+        assert!(j1.contains("\"links\":["), "{j1}");
+        assert!(j1.matches("\"src\":").count() == t.links.len(), "{j1}");
+    }
+}

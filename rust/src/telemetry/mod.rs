@@ -1,0 +1,31 @@
+//! Zero-cost-when-disabled instrumentation for the flit simulators and the
+//! serving schedulers (DESIGN.md §5).
+//!
+//! Three pillars, no external dependencies (consistent with the offline
+//! vendored-shim policy):
+//!
+//! * [`registry`] — named counters and log2-bucket histograms
+//!   ([`Registry`], [`Histogram`]) plus [`SimTelemetry`], the dense
+//!   per-link flit counters both [`crate::noc::sim::NocSim`] and
+//!   [`crate::nop::sim::NopSim`] fill in when built with
+//!   `.instrument(true)`. Disabled (the default) the simulators pay one
+//!   branch per hook site and allocate nothing.
+//! * [`span`] — request lifecycle spans ([`RequestSpan`]): admission →
+//!   NoP ingress → queue wait → chiplet service → completion/drop/shed
+//!   timestamps recorded by both serving schedulers and rolled up into the
+//!   per-model latency breakdown on
+//!   [`crate::coordinator::server::ServeReport`].
+//! * [`heatmap`] + [`trace`] — exporters: per-topology link-utilization
+//!   heatmaps (text grid + JSON, `repro chiplet --heatmap`) and a Chrome
+//!   trace-event JSON writer ([`ChromeTrace`], loadable in Perfetto /
+//!   `chrome://tracing`, `repro serve --trace-out <path>`).
+
+pub mod heatmap;
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+pub use heatmap::{heatmap_json, heatmap_text};
+pub use registry::{Histogram, Registry, SimTelemetry};
+pub use span::{RequestSpan, SpanOutcome};
+pub use trace::{spans_to_trace, ChromeTrace};

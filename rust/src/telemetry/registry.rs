@@ -1,0 +1,317 @@
+//! Named counters, log2-bucket histograms, and the dense per-link flit
+//! telemetry the simulators collect when instrumented.
+//!
+//! The registry is deliberately tiny: insertion-ordered `Vec`s (metric
+//! counts are small, and deterministic export order matters more than O(1)
+//! lookup) and hand-rolled JSON export (no serde in the offline build).
+
+/// Number of log2 buckets: bucket 0 is `[0, 1)`, bucket `i >= 1` is
+/// `[2^(i-1), 2^i)`, the last bucket absorbs everything larger.
+const BUCKETS: usize = 24;
+
+/// Fixed-shape log2 histogram for occupancies, queue depths and span
+/// durations. Recording is O(1) and allocation-free after the first sample.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Record one sample. Negative/NaN samples land in bucket 0.
+    pub fn record(&mut self, v: f64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        let idx = if v >= 1.0 {
+            ((v.log2().floor() as usize) + 1).min(BUCKETS - 1)
+        } else {
+            0
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Largest sample recorded (0 when empty).
+    pub fn max_sample(&self) -> f64 {
+        self.max
+    }
+
+    /// Per-bucket counts (empty until the first sample).
+    pub fn buckets(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Lower edge of bucket `i` (0, then powers of two).
+    pub fn bucket_floor(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            2f64.powi(i as i32 - 1)
+        }
+    }
+
+    /// `{"count":..,"mean":..,"max":..,"buckets":[..]}` with trailing empty
+    /// buckets trimmed. Fixed-precision floats keep the export
+    /// byte-deterministic.
+    pub fn to_json(&self) -> String {
+        let last = match self.counts.iter().rposition(|&c| c != 0) {
+            Some(i) => i + 1,
+            None => 0,
+        };
+        let buckets: Vec<String> = self.counts[..last].iter().map(|c| c.to_string()).collect();
+        format!(
+            "{{\"count\":{},\"mean\":{:.6},\"max\":{:.6},\"buckets\":[{}]}}",
+            self.total,
+            self.mean(),
+            self.max,
+            buckets.join(",")
+        )
+    }
+}
+
+/// Insertion-ordered registry of named counters and histograms.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: Vec<(String, u64)>,
+    histograms: Vec<(String, Histogram)>,
+}
+
+impl Registry {
+    /// Add `delta` to counter `name`, creating it at zero first.
+    pub fn add(&mut self, name: &str, delta: u64) {
+        if let Some(i) = self.counters.iter().position(|(n, _)| n == name) {
+            self.counters[i].1 += delta;
+        } else {
+            self.counters.push((name.to_string(), delta));
+        }
+    }
+
+    /// Current value of counter `name`.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Mutable access to histogram `name`, creating it empty first.
+    pub fn histogram(&mut self, name: &str) -> &mut Histogram {
+        if let Some(i) = self.histograms.iter().position(|(n, _)| n == name) {
+            return &mut self.histograms[i].1;
+        }
+        self.histograms.push((name.to_string(), Histogram::default()));
+        &mut self.histograms.last_mut().unwrap().1
+    }
+
+    /// Read-only lookup of histogram `name`.
+    pub fn get_histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// True when no metric has been touched.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.histograms.is_empty()
+    }
+
+    /// `{"counters":{..},"histograms":{..}}`, keys sorted for determinism.
+    pub fn to_json(&self) -> String {
+        let mut counters: Vec<&(String, u64)> = self.counters.iter().collect();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        let c: Vec<String> = counters
+            .iter()
+            .map(|(n, v)| format!("\"{}\":{v}", escape(n)))
+            .collect();
+        let mut hists: Vec<&(String, Histogram)> = self.histograms.iter().collect();
+        hists.sort_by(|a, b| a.0.cmp(&b.0));
+        let h: Vec<String> = hists
+            .iter()
+            .map(|(n, hist)| format!("\"{}\":{}", escape(n), hist.to_json()))
+            .collect();
+        format!(
+            "{{\"counters\":{{{}}},\"histograms\":{{{}}}}}",
+            c.join(","),
+            h.join(",")
+        )
+    }
+}
+
+/// Minimal JSON string escape (metric names are ASCII identifiers, but a
+/// stray quote must never corrupt the export).
+pub(crate) fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Dense per-link flit counters a flit simulator fills in while running
+/// instrumented (`.instrument(true)`). `links`/`link_flits` align by index;
+/// `injected`/`ejected` are per terminal (NoC) or per chiplet (NoP) and sum
+/// to the run's `SimStats` totals (property-tested).
+#[derive(Clone, Debug, Default)]
+pub struct SimTelemetry {
+    /// Directed links `(from, to)` in the simulator's deterministic order.
+    pub links: Vec<(usize, usize)>,
+    /// Flits that traversed each link (index-aligned with `links`).
+    pub link_flits: Vec<u64>,
+    /// Flits generated per source terminal/chiplet.
+    pub injected: Vec<u64>,
+    /// Flits delivered per destination terminal/chiplet.
+    pub ejected: Vec<u64>,
+    /// Receive-buffer occupancy observed at flit arrival.
+    pub occupancy: Histogram,
+    /// Cycles the run simulated (denominator for link utilization).
+    pub cycles: u64,
+}
+
+impl SimTelemetry {
+    /// Empty telemetry sized for `links` and `terminals` endpoints.
+    pub fn sized(links: Vec<(usize, usize)>, terminals: usize) -> Self {
+        let n = links.len();
+        Self {
+            links,
+            link_flits: vec![0; n],
+            injected: vec![0; terminals],
+            ejected: vec![0; terminals],
+            occupancy: Histogram::default(),
+            cycles: 0,
+        }
+    }
+
+    /// Sum of per-source injected flits (== `SimStats::injected`).
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().sum()
+    }
+
+    /// Sum of per-destination delivered flits (== `SimStats::delivered`).
+    pub fn ejected_total(&self) -> u64 {
+        self.ejected.iter().sum()
+    }
+
+    /// Total link traversals (every flit crosses >= 1 link).
+    pub fn transit_total(&self) -> u64 {
+        self.link_flits.iter().sum()
+    }
+
+    /// Fraction of cycles link `i` carried a flit (each directed link
+    /// starts at most one flit per cycle, so this is in `[0, 1]`).
+    pub fn link_utilization(&self, i: usize) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.link_flits[i] as f64 / self.cycles as f64
+        }
+    }
+
+    /// Index of the busiest link, by flit count (None when linkless).
+    pub fn peak_link(&self) -> Option<usize> {
+        (0..self.links.len()).max_by_key(|&i| (self.link_flits[i], std::cmp::Reverse(i)))
+    }
+
+    /// Fold the dense counters into a named [`Registry`] under `prefix`
+    /// (e.g. `nop.link.0->1`).
+    pub fn registry(&self, prefix: &str) -> Registry {
+        let mut reg = Registry::default();
+        reg.add(&format!("{prefix}.injected"), self.injected_total());
+        reg.add(&format!("{prefix}.ejected"), self.ejected_total());
+        for (i, &(a, b)) in self.links.iter().enumerate() {
+            reg.add(&format!("{prefix}.link.{a}->{b}"), self.link_flits[i]);
+        }
+        *reg.histogram(&format!("{prefix}.occupancy")) = self.occupancy.clone();
+        reg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_moments() {
+        let mut h = Histogram::default();
+        for v in [0.0, 0.5, 1.0, 1.9, 2.0, 7.9, 8.0, 1e9] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.buckets()[0], 2); // 0.0, 0.5
+        assert_eq!(h.buckets()[1], 2); // [1, 2)
+        assert_eq!(h.buckets()[2], 1); // [2, 4)
+        assert_eq!(h.buckets()[4], 1); // [8, 16)
+        assert_eq!(h.buckets()[BUCKETS - 1], 1); // 1e9 clamps to the top
+        assert!(h.mean() > 0.0 && h.max_sample() == 1e9);
+        assert_eq!(Histogram::bucket_floor(0), 0.0);
+        assert_eq!(Histogram::bucket_floor(3), 4.0);
+        let json = h.to_json();
+        assert!(json.starts_with("{\"count\":8,"), "{json}");
+    }
+
+    #[test]
+    fn registry_counters_and_json_sorted() {
+        let mut r = Registry::default();
+        r.add("b.flits", 2);
+        r.add("a.flits", 1);
+        r.add("b.flits", 3);
+        r.histogram("occ").record(4.0);
+        assert_eq!(r.counter("b.flits"), Some(5));
+        assert_eq!(r.counter("a.flits"), Some(1));
+        assert_eq!(r.counter("missing"), None);
+        assert_eq!(r.get_histogram("occ").unwrap().count(), 1);
+        let json = r.to_json();
+        // Sorted keys: a.flits before b.flits.
+        let a = json.find("a.flits").unwrap();
+        let b = json.find("b.flits").unwrap();
+        assert!(a < b, "{json}");
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn sim_telemetry_totals_and_utilization() {
+        let mut t = SimTelemetry::sized(vec![(0, 1), (1, 0)], 2);
+        t.injected[0] = 10;
+        t.ejected[1] = 10;
+        t.link_flits[0] = 10;
+        t.cycles = 40;
+        assert_eq!(t.injected_total(), 10);
+        assert_eq!(t.ejected_total(), 10);
+        assert_eq!(t.transit_total(), 10);
+        assert_eq!(t.peak_link(), Some(0));
+        assert!((t.link_utilization(0) - 0.25).abs() < 1e-12);
+        assert_eq!(t.link_utilization(1), 0.0);
+        let reg = t.registry("nop");
+        assert_eq!(reg.counter("nop.link.0->1"), Some(10));
+        assert_eq!(reg.counter("nop.injected"), Some(10));
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+        assert_eq!(escape("plain"), "plain");
+    }
+}

@@ -1,0 +1,157 @@
+//! Request lifecycle spans: every request a serving scheduler sees carries
+//! the timestamps of its phases — admission, NoP ingress, queue wait,
+//! chiplet service — or the instant it was dropped/shed. Spans are the raw
+//! material for the per-model latency breakdown on
+//! [`crate::coordinator::server::ServeReport`] and for the Chrome trace
+//! export ([`super::trace::spans_to_trace`]).
+
+/// Marker for spans that never reached a chiplet (dropped/shed requests).
+pub const NO_CHIPLET: usize = usize::MAX;
+
+/// How a request's lifecycle ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Served to completion.
+    Completed,
+    /// Rejected at admission: the routed queue was full.
+    Dropped,
+    /// Rejected by deadline-aware admission: it could no longer hit.
+    Shed,
+}
+
+/// One request's lifecycle, in seconds on the serving clock. Phase order
+/// on this scheduler is admission → NoP ingress (`arrival..ready`) → queue
+/// wait (`ready..service_start`) → chiplet service incl. egress
+/// (`service_start..complete`). Rejected requests collapse every timestamp
+/// onto `arrival`.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestSpan {
+    /// Mix model index (0 for the single-model scheduler).
+    pub model: usize,
+    /// Serving chiplet, or [`NO_CHIPLET`] when never routed.
+    pub chiplet: usize,
+    /// Admission time (the request's arrival event).
+    pub arrival: f64,
+    /// NoP ingress complete: the input payload reached the chiplet.
+    pub ready: f64,
+    /// Service start (batch slot granted).
+    pub service_start: f64,
+    /// Completion (result egressed), or `arrival` when rejected.
+    pub complete: f64,
+    /// How the lifecycle ended.
+    pub outcome: SpanOutcome,
+}
+
+impl RequestSpan {
+    /// Span for a request admitted to `chiplet` whose ingress finishes at
+    /// `ready`; service timestamps are filled in when the batch starts.
+    pub fn admitted(model: usize, chiplet: usize, arrival: f64, ready: f64) -> Self {
+        Self {
+            model,
+            chiplet,
+            arrival,
+            ready,
+            service_start: ready,
+            complete: ready,
+            outcome: SpanOutcome::Completed,
+        }
+    }
+
+    /// Zero-duration span for a rejected request.
+    pub fn rejected(model: usize, arrival: f64, outcome: SpanOutcome) -> Self {
+        Self {
+            model,
+            chiplet: NO_CHIPLET,
+            arrival,
+            ready: arrival,
+            service_start: arrival,
+            complete: arrival,
+            outcome,
+        }
+    }
+
+    /// NoP ingress time, seconds.
+    pub fn ingress_s(&self) -> f64 {
+        self.ready - self.arrival
+    }
+
+    /// Queue wait between ingress completion and service start, seconds.
+    pub fn queue_s(&self) -> f64 {
+        self.service_start - self.ready
+    }
+
+    /// Chiplet service (occupancy + egress), seconds.
+    pub fn service_s(&self) -> f64 {
+        self.complete - self.service_start
+    }
+
+    /// End-to-end latency, seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.complete - self.arrival
+    }
+}
+
+/// Mean phase durations in milliseconds over the *completed* spans of one
+/// model (or all models with `model = None`): `(ingress, queue, service)`.
+pub fn mean_breakdown_ms(spans: &[RequestSpan], model: Option<usize>) -> (f64, f64, f64) {
+    let mut n = 0u64;
+    let (mut ing, mut que, mut ser) = (0.0, 0.0, 0.0);
+    for s in spans {
+        if s.outcome != SpanOutcome::Completed || model.is_some_and(|m| m != s.model) {
+            continue;
+        }
+        n += 1;
+        ing += s.ingress_s();
+        que += s.queue_s();
+        ser += s.service_s();
+    }
+    if n == 0 {
+        (0.0, 0.0, 0.0)
+    } else {
+        let k = 1e3 / n as f64;
+        (ing * k, que * k, ser * k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_durations_add_up() {
+        let mut s = RequestSpan::admitted(0, 2, 1.0, 1.25);
+        s.service_start = 1.5;
+        s.complete = 2.0;
+        assert!((s.ingress_s() - 0.25).abs() < 1e-12);
+        assert!((s.queue_s() - 0.25).abs() < 1e-12);
+        assert!((s.service_s() - 0.5).abs() < 1e-12);
+        assert!((s.latency_s() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejected_spans_are_zero_duration() {
+        let s = RequestSpan::rejected(3, 7.0, SpanOutcome::Shed);
+        assert_eq!(s.chiplet, NO_CHIPLET);
+        assert_eq!(s.latency_s(), 0.0);
+        assert_eq!(s.outcome, SpanOutcome::Shed);
+    }
+
+    #[test]
+    fn breakdown_averages_completed_only() {
+        let mut a = RequestSpan::admitted(0, 0, 0.0, 0.1);
+        a.service_start = 0.3;
+        a.complete = 0.4;
+        let mut b = RequestSpan::admitted(1, 1, 0.0, 0.3);
+        b.service_start = 0.5;
+        b.complete = 1.0;
+        let dropped = RequestSpan::rejected(0, 0.0, SpanOutcome::Dropped);
+        let spans = [a, b, dropped];
+        let (ing, que, ser) = mean_breakdown_ms(&spans, None);
+        assert!((ing - 200.0).abs() < 1e-9, "{ing}");
+        assert!((que - 200.0).abs() < 1e-9, "{que}");
+        assert!((ser - 300.0).abs() < 1e-9, "{ser}");
+        let (ing0, _, _) = mean_breakdown_ms(&spans, Some(0));
+        assert!((ing0 - 100.0).abs() < 1e-9, "{ing0}");
+        assert_eq!(mean_breakdown_ms(&spans, Some(9)), (0.0, 0.0, 0.0));
+    }
+}

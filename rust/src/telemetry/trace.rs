@@ -1,0 +1,286 @@
+//! Chrome trace-event JSON export (the `chrome://tracing` / Perfetto
+//! format): serving spans become per-chiplet tracks of `ingress` / `queue`
+//! / `service` slices, rejected requests become instants, and per-chiplet
+//! queue depths become counter series. All floats are emitted with fixed
+//! precision so the same run always serializes to the identical byte
+//! string (the determinism contract extends PR 4's replay guarantee to the
+//! telemetry layer).
+
+use super::registry::escape;
+use super::span::{RequestSpan, SpanOutcome, NO_CHIPLET};
+
+/// Microsecond timestamp with fixed sub-microsecond precision
+/// (deterministic across runs, unlike shortest-round-trip floats combined
+/// with accumulated state).
+fn us(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+/// An append-only Chrome trace-event log. Events are serialized eagerly to
+/// JSON fragments; [`ChromeTrace::to_json`] wraps them in the object form
+/// (`traceEvents` + `otherData`) Perfetto accepts.
+#[derive(Clone, Debug, Default)]
+pub struct ChromeTrace {
+    events: Vec<String>,
+    meta: Vec<(String, u64)>,
+}
+
+impl ChromeTrace {
+    /// Empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of trace events recorded.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no event has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn args_json(args: &[(&str, String)]) -> String {
+        let parts: Vec<String> = args
+            .iter()
+            .map(|(k, v)| format!("\"{}\":\"{}\"", escape(k), escape(v)))
+            .collect();
+        format!("{{{}}}", parts.join(","))
+    }
+
+    /// A complete ("X") event: a slice of `dur_us` on thread `tid`.
+    pub fn complete(
+        &mut self,
+        name: &str,
+        cat: &str,
+        tid: u64,
+        ts_us: f64,
+        dur_us: f64,
+        args: &[(&str, String)],
+    ) {
+        self.events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":1,\"tid\":{tid},\"args\":{}}}",
+            escape(name),
+            escape(cat),
+            us(ts_us),
+            us(dur_us),
+            Self::args_json(args)
+        ));
+    }
+
+    /// An instant ("i") event on thread `tid`.
+    pub fn instant(
+        &mut self,
+        name: &str,
+        cat: &str,
+        tid: u64,
+        ts_us: f64,
+        args: &[(&str, String)],
+    ) {
+        self.events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\
+             \"pid\":1,\"tid\":{tid},\"args\":{}}}",
+            escape(name),
+            escape(cat),
+            us(ts_us),
+            Self::args_json(args)
+        ));
+    }
+
+    /// A counter ("C") event: one sample of each named series.
+    pub fn counter(&mut self, name: &str, ts_us: f64, series: &[(&str, f64)]) {
+        let parts: Vec<String> = series
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", escape(k), us(*v)))
+            .collect();
+        self.events.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"C\",\"ts\":{},\"pid\":1,\"tid\":0,\"args\":{{{}}}}}",
+            escape(name),
+            us(ts_us),
+            parts.join(",")
+        ));
+    }
+
+    /// A metadata ("M") event: `kind` is `process_name` or `thread_name`.
+    pub fn name_track(&mut self, kind: &str, tid: u64, name: &str) {
+        self.events.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            escape(kind),
+            escape(name)
+        ));
+    }
+
+    /// Attach a reconciliation total to the export's `otherData` object
+    /// (e.g. `completed`, `dropped`, `shed` from the `ServeReport`).
+    pub fn set_meta(&mut self, key: &str, value: u64) {
+        if let Some(e) = self.meta.iter_mut().find(|(k, _)| k == key) {
+            e.1 = value;
+        } else {
+            self.meta.push((key.to_string(), value));
+        }
+    }
+
+    /// Serialize to the Chrome trace object form. Event order is exactly
+    /// insertion order; `otherData` keys are sorted.
+    pub fn to_json(&self) -> String {
+        let mut meta: Vec<&(String, u64)> = self.meta.iter().collect();
+        meta.sort_by(|a, b| a.0.cmp(&b.0));
+        let other: Vec<String> = meta
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{v}", escape(k)))
+            .collect();
+        format!(
+            "{{\"traceEvents\":[\n{}\n],\"displayTimeUnit\":\"ms\",\"otherData\":{{{}}}}}\n",
+            self.events.join(",\n"),
+            other.join(",")
+        )
+    }
+}
+
+/// Convert serving spans into a Chrome trace: track 0 carries admission
+/// instants (`dropped`/`shed`), track `c + 1` carries chiplet `c`'s
+/// `ingress` → `queue` → `service` slices, and a `queue c` counter series
+/// tracks each chiplet's queue depth. `model_names` maps span model
+/// indices to display names.
+pub fn spans_to_trace(spans: &[RequestSpan], model_names: &[&str]) -> ChromeTrace {
+    let mut t = ChromeTrace::new();
+    t.name_track("process_name", 0, "imcnoc serving");
+    t.name_track("thread_name", 0, "admission");
+    let mut chiplets: Vec<usize> = spans
+        .iter()
+        .filter(|s| s.chiplet != NO_CHIPLET)
+        .map(|s| s.chiplet)
+        .collect();
+    chiplets.sort_unstable();
+    chiplets.dedup();
+    for &c in &chiplets {
+        t.name_track("thread_name", c as u64 + 1, &format!("chiplet {c}"));
+    }
+    let name_of = |m: usize| -> String {
+        model_names
+            .get(m)
+            .map_or_else(|| format!("model{m}"), |n| n.to_string())
+    };
+    for (req, s) in spans.iter().enumerate() {
+        let args = [("model", name_of(s.model)), ("req", req.to_string())];
+        match s.outcome {
+            SpanOutcome::Completed => {
+                let tid = s.chiplet as u64 + 1;
+                t.complete(
+                    "ingress",
+                    "serve",
+                    tid,
+                    s.arrival * 1e6,
+                    s.ingress_s() * 1e6,
+                    &args,
+                );
+                t.complete(
+                    "queue",
+                    "serve",
+                    tid,
+                    s.ready * 1e6,
+                    s.queue_s() * 1e6,
+                    &args,
+                );
+                t.complete(
+                    "service",
+                    "serve",
+                    tid,
+                    s.service_start * 1e6,
+                    s.service_s() * 1e6,
+                    &args,
+                );
+            }
+            SpanOutcome::Dropped => t.instant("dropped", "admission", 0, s.arrival * 1e6, &args),
+            SpanOutcome::Shed => t.instant("shed", "admission", 0, s.arrival * 1e6, &args),
+        }
+    }
+    // Queue-depth counters: +1 at admission, -1 at service start.
+    for &c in &chiplets {
+        let mut deltas: Vec<(f64, i64)> = Vec::new();
+        for s in spans {
+            if s.chiplet == c && s.outcome == SpanOutcome::Completed {
+                deltas.push((s.arrival, 1));
+                deltas.push((s.service_start, -1));
+            }
+        }
+        deltas.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut depth = 0i64;
+        let name = format!("queue c{c}");
+        for (at, d) in deltas {
+            depth += d;
+            t.counter(&name, at * 1e6, &[("depth", depth as f64)]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::span::RequestSpan;
+
+    fn sample_spans() -> Vec<RequestSpan> {
+        let mut a = RequestSpan::admitted(0, 0, 0.0, 0.1);
+        a.service_start = 0.2;
+        a.complete = 0.5;
+        let mut b = RequestSpan::admitted(1, 2, 0.1, 0.15);
+        b.service_start = 0.3;
+        b.complete = 0.9;
+        vec![
+            a,
+            b,
+            RequestSpan::rejected(0, 0.2, SpanOutcome::Dropped),
+            RequestSpan::rejected(1, 0.3, SpanOutcome::Shed),
+        ]
+    }
+
+    #[test]
+    fn trace_shape_and_reconciliation_counts() {
+        let spans = sample_spans();
+        let mut trace = spans_to_trace(&spans, &["MLP", "LeNet-5"]);
+        trace.set_meta("completed", 2);
+        trace.set_meta("dropped", 1);
+        trace.set_meta("shed", 1);
+        let json = trace.to_json();
+        assert_eq!(json.matches("\"name\":\"service\"").count(), 2, "{json}");
+        assert_eq!(json.matches("\"name\":\"dropped\"").count(), 1);
+        assert_eq!(json.matches("\"name\":\"shed\"").count(), 1);
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("chiplet 2"));
+        assert!(json.contains("\"otherData\":{\"completed\":2,\"dropped\":1,\"shed\":1}"));
+        assert!(json.contains("\"model\":\"LeNet-5\""));
+        // Counter events track the queue depth.
+        assert!(json.contains("queue c0"), "{json}");
+    }
+
+    #[test]
+    fn export_is_byte_deterministic() {
+        let spans = sample_spans();
+        let j1 = spans_to_trace(&spans, &["A", "B"]).to_json();
+        let j2 = spans_to_trace(&spans, &["A", "B"]).to_json();
+        assert_eq!(j1, j2);
+    }
+
+    #[test]
+    fn names_are_escaped() {
+        let mut t = ChromeTrace::new();
+        t.complete("a\"b", "c\\d", 0, 1.0, 2.0, &[("k", "v\n".to_string())]);
+        let json = t.to_json();
+        assert!(json.contains("a\\\"b"), "{json}");
+        assert!(json.contains("c\\\\d"), "{json}");
+        assert!(json.contains("\\n"), "{json}");
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn unknown_model_index_falls_back() {
+        let spans = vec![RequestSpan::rejected(7, 0.0, SpanOutcome::Dropped)];
+        let json = spans_to_trace(&spans, &[]).to_json();
+        assert!(json.contains("model7"), "{json}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny leveled stderr logger — no external crates in the offline build.
+//!
+//! Diagnostics that previously went through ad-hoc `eprintln!` calls now
+//! route through the `log_warn!`/`log_info!`/`log_debug!` macros
+//! (exported at the crate root, as `#[macro_export]` requires, and
+//! re-exported here as `log::warn!` etc.), filtered by a global
+//! level. The level comes from the `REPRO_LOG` environment variable
+//! (`warn`, `info` or `debug`; read once, lazily) and can be overridden
+//! programmatically via [`set_level`] — the CLI maps `--verbose` to
+//! [`Level::Debug`]. Messages print to stderr as `[warn] …` so machine
+//! output on stdout (tables, JSON) stays clean.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered: `Warn < Info < Debug`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Something is off but the run continues (fallbacks, clamps).
+    Warn = 1,
+    /// High-level progress worth seeing by default.
+    Info = 2,
+    /// Per-step detail for debugging runs.
+    Debug = 3,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "warn" | "warning" | "error" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// 0 = uninitialized (read `REPRO_LOG` on first use), else a `Level`.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn env_level() -> Level {
+    std::env::var("REPRO_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info)
+}
+
+/// Current filter level, initializing from `REPRO_LOG` on first call.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => {
+            let l = env_level();
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// Override the filter level (e.g. `--verbose` → [`Level::Debug`]).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// `true` if a message at `l` would print — lets callers skip building
+/// expensive log strings.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Print one formatted line to stderr; prefer the level macros.
+pub fn emit(l: Level, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{}] {}", l.tag(), msg);
+    }
+}
+
+/// Log at [`Level::Warn`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+pub use crate::{log_debug as debug, log_info as info, log_warn as warn};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Debug));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn set_level_filters() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        // Restore the default so other tests see stock behavior.
+        set_level(Level::Info);
+    }
+}

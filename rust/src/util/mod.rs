@@ -1,9 +1,10 @@
 //! Small self-contained utilities: deterministic PRNGs, statistics helpers,
 //! a dense-matrix type with LU inversion (needed by the analytical NoC model,
-//! Eq. 8 of the paper), table rendering for experiment output, and a tiny
-//! hand-rolled property-testing harness (no external crates are available in
-//! the offline build environment).
+//! Eq. 8 of the paper), table rendering for experiment output, a leveled
+//! stderr logger, and a tiny hand-rolled property-testing harness (no
+//! external crates are available in the offline build environment).
 
+pub mod log;
 pub mod matrix;
 pub mod prng;
 pub mod proptest;

@@ -127,6 +127,22 @@ fn serve_mix_and_workload_experiment() {
 }
 
 #[test]
+fn serve_trace_out_and_chiplet_heatmap() {
+    // Telemetry surfaces end to end: `--trace-out` writes a Perfetto-
+    // loadable Chrome trace reconciling with the report, `--heatmap`
+    // renders the per-topology NoP link grids.
+    let path = std::env::temp_dir().join("imcnoc_cli_integration_trace.json");
+    let path = path.to_str().unwrap().to_string();
+    run(&argv(&["serve", "--fast", "--trace-out", path.as_str()])).unwrap();
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert!(json.contains("\"traceEvents\""), "not a chrome trace");
+    assert!(json.contains("\"completed\""), "missing reconciliation meta");
+    run(&argv(&["chiplet", "--model", "MLP", "--heatmap"])).unwrap();
+    // --heatmap-out writes one file, so the topology must be pinned.
+    assert!(run(&argv(&["chiplet", "--model", "MLP", "--heatmap-out", "/tmp/x"])).is_err());
+}
+
+#[test]
 fn unknown_inputs_error_cleanly() {
     assert!(run(&argv(&["figure", "99"])).is_err());
     assert!(run(&argv(&["table"])).is_err());

@@ -5,9 +5,9 @@
 
 use imcnoc::config::{
     Admission, ArchConfig, Config, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig,
-    WorkloadConfig,
+    TelemetryConfig, WorkloadConfig,
 };
-use imcnoc::coordinator::mix::{MixScheduler, MixServingModel};
+use imcnoc::coordinator::mix::{serve_mix_traced, MixScheduler, MixServingModel};
 use imcnoc::coordinator::scheduler::{ChipletScheduler, Policy, ServingModel};
 use imcnoc::dnn::{model_zoo, models};
 use imcnoc::mapping::{ChipletPartition, InjectionMatrix, Mapping};
@@ -16,6 +16,7 @@ use imcnoc::noc::topology::{Network, Topology};
 use imcnoc::noc::AnalyticalModel;
 use imcnoc::nop::sim::{analytical_latency, saturation_rate, uniform_nop_flows, NopSim};
 use imcnoc::nop::topology::{NopNetwork, NopTopology};
+use imcnoc::telemetry::spans_to_trace;
 use imcnoc::util::proptest::check;
 use imcnoc::workload::{ArrivalKind, ArrivalProcess, PlacementPolicy, Trace, WorkloadMix};
 
@@ -487,6 +488,11 @@ fn prop_config_ini_roundtrip() {
                 frames_alpha: g.f64_in(0.0, 2.0).round(),
                 frames_max: g.usize_in(1, 16),
             },
+            telemetry: TelemetryConfig {
+                enabled: *g.pick(&[false, true]),
+                trace_out: "trace.json".to_string(),
+                heatmap: *g.pick(&[false, true]),
+            },
             sim: Default::default(),
         };
         let parsed = Config::from_ini(&cfg.to_ini()).map_err(|e| e.to_string())?;
@@ -719,4 +725,120 @@ fn prop_serving_scheduler_conserves_requests() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_telemetry_link_counters_conserve_flits() {
+    // Satellite contract: under random drain workloads the instrumented
+    // per-endpoint flit counters reconcile exactly with the `SimStats`
+    // totals, on both the NoC and the NoP flit simulator.
+    check("telemetry-conservation", 30, |g| {
+        let topo = *g.pick(&Topology::all());
+        let terminals = g.usize_in(2, 30);
+        let flows = random_flows(g, terminals, 30);
+        let expected: u64 = flows.iter().map(|f| f.flits).sum();
+        let cfg = NocConfig::default();
+        let (stats, telem) = NocSim::new(
+            topo,
+            terminals,
+            &cfg,
+            &flows,
+            Mode::Drain {
+                max_cycles: 10_000 + expected * 128,
+            },
+            g.u64(),
+        )
+        .instrument(true)
+        .run_instrumented();
+        if !stats.drained {
+            return Err(format!("NoC {topo:?} did not drain"));
+        }
+        if telem.injected_total() != stats.injected || telem.ejected_total() != stats.delivered {
+            return Err(format!(
+                "NoC {topo:?}: telem {}/{} vs stats {}/{}",
+                telem.injected_total(),
+                telem.ejected_total(),
+                stats.injected,
+                stats.delivered
+            ));
+        }
+        if telem.cycles != stats.cycles {
+            return Err(format!("NoC cycles {} != {}", telem.cycles, stats.cycles));
+        }
+
+        let nop_topo = *g.pick(&NopTopology::all());
+        let k = g.usize_in(2, 20);
+        let nop_flows = random_flows(g, k, 40);
+        let nop_expected: u64 = nop_flows.iter().map(|f| f.flits).sum();
+        let nop_cfg = NopConfig::default();
+        let (nop_stats, nop_telem) = NopSim::new(
+            nop_topo,
+            k,
+            &nop_cfg,
+            &nop_flows,
+            Mode::Drain {
+                max_cycles: 50_000 + nop_expected * 256,
+            },
+            g.u64(),
+        )
+        .instrument(true)
+        .run_instrumented();
+        if !nop_stats.drained {
+            return Err(format!("NoP {nop_topo:?} k={k} did not drain"));
+        }
+        let (inj, ej) = (nop_telem.injected_total(), nop_telem.ejected_total());
+        if inj != nop_stats.injected || ej != nop_stats.delivered {
+            return Err(format!(
+                "NoP {nop_topo:?} k={k}: telem {inj}/{ej} vs stats {}/{}",
+                nop_stats.injected, nop_stats.delivered
+            ));
+        }
+        // Every cross-chiplet flit traverses at least one package link.
+        if nop_telem.transit_total() < nop_stats.delivered {
+            return Err(format!(
+                "NoP link transits {} < delivered {}",
+                nop_telem.transit_total(),
+                nop_stats.delivered
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_export_deterministic_for_identical_seed() {
+    // Satellite contract: an identical `[serving] seed` yields a
+    // byte-identical Chrome-trace export (lifecycle spans are derived from
+    // the deterministic serving clock; no hidden randomness).
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let nop = NopConfig {
+        topology: NopTopology::Ring,
+        chiplets: 2,
+        ..NopConfig::default()
+    };
+    let serving = ServingConfig {
+        requests: 120,
+        seed: 0xFACE,
+        ..ServingConfig::default()
+    };
+    let workload = WorkloadConfig {
+        mix: WorkloadMix::parse("MLP:1:0,LeNet-5:1:0").unwrap(),
+        arrival: ArrivalKind::Bursty,
+        ..WorkloadConfig::default()
+    };
+    let export = || {
+        let (model, _, report, spans) =
+            serve_mix_traced(&arch, &noc, &nop, &sim, &serving, &workload).unwrap();
+        let names: Vec<&str> = model.models.iter().map(|m| m.name.as_str()).collect();
+        let mut tr = spans_to_trace(&spans, &names);
+        tr.set_meta("requests", report.requests as u64);
+        tr.to_json()
+    };
+    let first = export();
+    let second = export();
+    assert!(first.contains("\"traceEvents\""), "not a chrome trace");
+    assert!(first.len() > 200, "suspiciously small export: {first}");
+    assert_eq!(first, second, "equal seeds must export identical traces");
 }

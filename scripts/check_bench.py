@@ -31,18 +31,37 @@ def parse_thresholds(args):
     return thresholds
 
 
+def load_entries(path, role):
+    """Load a bench JSON file, failing the gate (exit 2) on a missing or
+    malformed file instead of silently passing a broken baseline."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        print(f"ERROR: cannot read {role} file {path}: {e}")
+        sys.exit(2)
+    except json.JSONDecodeError as e:
+        print(f"ERROR: {role} file {path} is not valid JSON: {e}")
+        sys.exit(2)
+    if not isinstance(data, list) or not all(
+        isinstance(e, dict) and isinstance(e.get("name"), str) for e in data
+    ):
+        print(f"ERROR: {role} file {path} must be a JSON list of objects with 'name'")
+        sys.exit(2)
+    return {e["name"]: e for e in data}
+
+
 def main() -> int:
     if len(sys.argv) < 4:
         print(__doc__)
         return 2
     measured_path, baseline_path = sys.argv[1], sys.argv[2]
     thresholds = parse_thresholds(sys.argv[3:])
-    with open(measured_path) as f:
-        measured = {e["name"]: e for e in json.load(f)}
-    with open(baseline_path) as f:
-        baseline = {e["name"]: e for e in json.load(f)}
+    measured = load_entries(measured_path, "measured")
+    baseline = load_entries(baseline_path, "baseline")
 
     regressions = []
+    worst = {}
     print(
         f"{'bench':<48} {'metric':>8} {'measured_ms':>12} {'baseline_ms':>12} {'ratio':>7}"
     )
@@ -65,10 +84,25 @@ def main() -> int:
             )
             if ratio > max_ratio:
                 regressions.append((name, metric, ratio, max_ratio))
+            if metric not in worst or ratio > worst[metric][1]:
+                worst[metric] = (name, ratio)
 
     missing = sorted(set(baseline) - set(measured))
     for name in missing:
         print(f"{name:<48} {'(not measured this run)':>12}")
+
+    # Per-metric summary, printed on pass as well as fail, so green runs
+    # still show how much headroom each budget has left.
+    print("\nper-metric deltas vs baseline:")
+    for metric in sorted(thresholds):
+        if metric in worst:
+            name, ratio = worst[metric]
+            print(
+                f"  {metric}: worst {ratio:.2f}x of budget"
+                f" {thresholds[metric]:.2f}x ({name})"
+            )
+        else:
+            print(f"  {metric}: no comparable benches")
 
     print("\nmeasured snapshot (commit as the new baseline to ratchet):")
     snapshot = sorted(measured.values(), key=lambda e: e["name"])

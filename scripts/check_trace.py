@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Chrome-trace sanity gate for CI.
+
+Usage: check_trace.py TRACE.json
+
+Validates a `repro serve --trace-out` export: the file must be valid JSON
+in the Chrome trace object form, every event must carry a legal phase and
+timestamps, at least one lifecycle slice must be present, and the span
+population must reconcile exactly with the `ServeReport` totals stamped
+into `otherData` (service slices == completed, dropped/shed instants ==
+dropped/shed, and completed + dropped + shed == requests).
+"""
+
+import json
+import sys
+
+LEGAL_PHASES = {"X", "i", "C", "M"}
+
+
+def fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if not isinstance(trace, dict):
+        fail("top level must be the Chrome trace object form")
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty list")
+
+    slices = []
+    instants = {"dropped": 0, "shed": 0}
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fail(f"event {i} is not an object")
+        ph = e.get("ph")
+        if ph not in LEGAL_PHASES:
+            fail(f"event {i} has illegal phase {ph!r}")
+        if not isinstance(e.get("name"), str):
+            fail(f"event {i} has no name")
+        if ph != "M" and not isinstance(e.get("ts"), (int, float)):
+            fail(f"event {i} ({e['name']}) has no numeric ts")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"slice {i} ({e['name']}) has bad dur {dur!r}")
+            slices.append(e)
+        if ph == "i" and e["name"] in instants:
+            instants[e["name"]] += 1
+
+    if not slices:
+        fail("no lifecycle slices (ph 'X') in the trace")
+
+    other = trace.get("otherData")
+    if not isinstance(other, dict):
+        fail("otherData reconciliation object missing")
+    totals = {}
+    for key in ("completed", "dropped", "shed", "requests"):
+        v = other.get(key)
+        if not isinstance(v, int) or v < 0:
+            fail(f"otherData.{key} missing or not a count: {v!r}")
+        totals[key] = v
+    if totals["completed"] + totals["dropped"] + totals["shed"] != totals["requests"]:
+        fail(
+            "span totals do not reconcile: "
+            f"{totals['completed']} + {totals['dropped']} + {totals['shed']}"
+            f" != {totals['requests']} requests"
+        )
+    services = sum(1 for e in slices if e["name"] == "service")
+    if services != totals["completed"]:
+        fail(f"{services} service slices != {totals['completed']} completed")
+    for key in ("dropped", "shed"):
+        if instants[key] != totals[key]:
+            fail(f"{instants[key]} {key} instants != {totals[key]} reported")
+
+    print(
+        f"OK: {len(events)} events, {len(slices)} slices,"
+        f" {services} service spans == completed;"
+        f" {totals['completed']}+{totals['dropped']}+{totals['shed']}"
+        f" == {totals['requests']} requests"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
