@@ -19,8 +19,8 @@ use crate::config::{
     Admission, ArchConfig, Config, MemTech, NocConfig, NopConfig, NopMode, ServingConfig,
     SimConfig, WorkloadConfig,
 };
-use crate::coordinator::mix::{replay_mix_traced, serve_mix_traced, MixServingModel};
-use crate::coordinator::scheduler::{serve_modeled_traced, Policy};
+use crate::coordinator::mix::{replay_mix_metrics, serve_mix_metrics, MixServingModel};
+use crate::coordinator::scheduler::{serve_modeled_metrics, Policy};
 use crate::coordinator::server::{synthetic_requests, InferenceServer, ServeReport};
 use crate::dnn::{by_name, DnnGraph};
 use crate::experiments::{find, registry, Options};
@@ -30,7 +30,7 @@ use crate::nop::evaluator::{evaluate_package, package_flows};
 use crate::nop::sim::NopSim;
 use crate::nop::topology::{NopNetwork, NopTopology};
 use crate::telemetry::span::RequestSpan;
-use crate::telemetry::{heatmap_json, heatmap_text, spans_to_trace};
+use crate::telemetry::{heatmap_json, heatmap_text, spans_to_trace, TimeSeries};
 use crate::util::{fmt_sig, log, Table};
 use crate::workload::{ArrivalKind, PlacementPolicy, Trace, WorkloadMix};
 
@@ -123,6 +123,9 @@ fn flag_takes_value(name: &str) -> bool {
             | "record-trace"
             | "trace-out"
             | "heatmap-out"
+            | "metrics-out"
+            | "metrics-format"
+            | "metrics-window-ms"
     )
 }
 
@@ -644,7 +647,9 @@ fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
     let arch = ArchConfig::default();
     let noc = NocConfig::default();
     let sim = SimConfig::default();
-    let (model, report, spans) = serve_modeled_traced(&g, &arch, &noc, &nop, &sim, &cfg);
+    let window_ms = args.get_f64("metrics-window-ms", Config::default().telemetry.window_ms)?;
+    let (model, report, spans, ts) =
+        serve_modeled_metrics(&g, &arch, &noc, &nop, &sim, &cfg, window_ms);
 
     let mut t = Table::new(
         format!(
@@ -694,8 +699,10 @@ fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
         report.mean_ms
     );
     if let Some(path) = trace_out_path(args) {
-        write_trace(&path, &spans, &[g.name.as_str()], &report)?;
+        write_trace(&path, &spans, &[g.name.as_str()], &report, &ts)?;
     }
+    write_metrics_if_requested(args, &ts, &report)?;
+    serve_heatmap(args, topo, chiplets, &ts)?;
     Ok(())
 }
 
@@ -708,16 +715,79 @@ fn trace_out_path(args: &Args) -> Option<String> {
     })
 }
 
+/// `--metrics-out` path, falling back to the `[telemetry] metrics_out`
+/// config default (empty = no metrics file).
+fn metrics_out_path(args: &Args) -> Option<String> {
+    args.get("metrics-out").map(str::to_string).or_else(|| {
+        let m = Config::default().telemetry.metrics_out;
+        (!m.is_empty()).then_some(m)
+    })
+}
+
+/// Export the windowed serving metrics when `--metrics-out` (or the
+/// config default) names a file: deterministic JSON by default,
+/// Prometheus text exposition with `--metrics-format prom`.
+fn write_metrics_if_requested(args: &Args, ts: &TimeSeries, report: &ServeReport) -> Result<()> {
+    let Some(path) = metrics_out_path(args) else {
+        if args.has("metrics-format") {
+            bail!("--metrics-format requires --metrics-out (or [telemetry] metrics_out)");
+        }
+        return Ok(());
+    };
+    let text = match args.get("metrics-format").unwrap_or("json") {
+        "json" => ts.to_json(report.requests, report.completed, report.dropped, report.shed),
+        "prom" | "prometheus" => {
+            ts.to_prom(report.requests, report.completed, report.dropped, report.shed)
+        }
+        other => bail!("unknown --metrics-format '{other}' (valid: json, prom)"),
+    };
+    std::fs::write(&path, text).map_err(|e| anyhow!("write {path}: {e}"))?;
+    log::info!(
+        "wrote {} metric window(s), {} drift event(s) to {path}",
+        ts.windows().len(),
+        ts.drift_events().len()
+    );
+    Ok(())
+}
+
+/// `repro serve … --heatmap[-out f]`: render the end-of-run NoP link
+/// heatmap from the time series' cumulative per-link busy seconds (the
+/// serving counterpart of `repro chiplet --heatmap`).
+fn serve_heatmap(
+    args: &Args,
+    topology: NopTopology,
+    chiplets: usize,
+    ts: &TimeSeries,
+) -> Result<()> {
+    let heatmap_out = args.get("heatmap-out");
+    if !args.has("heatmap") && heatmap_out.is_none() {
+        return Ok(());
+    }
+    let net = NopNetwork::build(topology, chiplets);
+    let telem = ts.to_sim_telemetry();
+    println!("{}", heatmap_text(&net, &telem));
+    if let Some(path) = heatmap_out {
+        std::fs::write(path, heatmap_json(&net, &telem))
+            .map_err(|e| anyhow!("write {path}: {e}"))?;
+        log::info!("wrote NoP heatmap JSON to {path}");
+    }
+    Ok(())
+}
+
 /// Write serving spans as Chrome trace-event JSON (Perfetto-loadable),
 /// stamped with the offered-request total so downstream checkers can
-/// reconcile the trace against the report.
+/// reconcile the trace against the report, plus the time series'
+/// counter tracks (cumulative totals, queue depth, per-link NoP
+/// utilization) so Perfetto shows windowed load next to the slices.
 fn write_trace(
     path: &str,
     spans: &[RequestSpan],
     names: &[&str],
     report: &ServeReport,
+    ts: &TimeSeries,
 ) -> Result<()> {
     let mut tr = spans_to_trace(spans, names);
+    ts.counter_tracks(&mut tr);
     tr.set_meta("requests", report.requests as u64);
     tr.set_meta("completed", report.completed as u64);
     tr.set_meta("dropped", report.dropped as u64);
@@ -848,7 +918,8 @@ fn serve_mix_cmd(args: &Args, fast: bool) -> Result<()> {
     let noc = NocConfig::default();
     let sim = SimConfig::default();
 
-    let (model, report, spans) = if let Some(path) = args.get("trace") {
+    let window_ms = args.get_f64("metrics-window-ms", config.telemetry.window_ms)?;
+    let (model, report, spans, ts) = if let Some(path) = args.get("trace") {
         // Replay: the trace pins the mix, the rate, and every event —
         // reject flags that would silently change nothing (scheduler
         // knobs like --placement/--admission/--policy legitimately vary).
@@ -866,21 +937,25 @@ fn serve_mix_cmd(args: &Args, fast: bool) -> Result<()> {
             trace.events.len(),
             trace.mix.models.len()
         );
-        replay_mix_traced(&trace, &arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?
+        replay_mix_metrics(&trace, &arch, &noc, &nop, &sim, &serving, &wl, window_ms)
+            .map_err(|e| anyhow!(e))?
     } else {
-        let (model, trace, report, spans) =
-            serve_mix_traced(&arch, &noc, &nop, &sim, &serving, &wl).map_err(|e| anyhow!(e))?;
+        let (model, trace, report, spans, ts) =
+            serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &wl, window_ms)
+                .map_err(|e| anyhow!(e))?;
         if let Some(path) = args.get("record-trace") {
             trace.save(path).map_err(|e| anyhow!(e))?;
             log::info!("recorded {} events to {path}", trace.events.len());
         }
-        (model, report, spans)
+        (model, report, spans, ts)
     };
     print_mix_report(&model, &report, args.has("csv"));
     if let Some(path) = trace_out_path(args) {
         let names: Vec<&str> = model.models.iter().map(|m| m.name.as_str()).collect();
-        write_trace(&path, &spans, &names, &report)?;
+        write_trace(&path, &spans, &names, &report, &ts)?;
     }
+    write_metrics_if_requested(args, &ts, &report)?;
+    serve_heatmap(args, model.topology, model.chiplets, &ts)?;
     Ok(())
 }
 
@@ -998,14 +1073,16 @@ USAGE:
               [--policy round-robin|least-latency|          per-chiplet queues, NoP-priced
                congestion-aware] [--rate RPS] [--batch N]   routing, modeled p50/p99
               [--queue-depth N] [--requests N] [--seed N]   (--fast: small smoke config)
-              [--sim] [--trace-out f]
+              [--sim] [--trace-out f] [--metrics-out f]
+              [--heatmap] [--heatmap-out f]
   repro serve --mix [name[:weight[:deadline_ms]],...]       multi-model serving: replica
               [--placement round-robin|nop-aware]           placement per model, deadline
               [--admission drop-on-full|deadline-aware]     hit-rate headline, shed/drop
               [--arrival poisson|bursty|diurnal]            accounting (deadline 0 = auto,
               [--record-trace f] [--chiplets N] [--seed N]  inf = none; default mix
               [--topology t] [--rate RPS] [--requests N]    VGG-19 + SqueezeNet)
-              [--trace-out f]
+              [--trace-out f] [--metrics-out f]
+              [--heatmap] [--heatmap-out f]
   repro serve --trace <file> [--placement p] [--admission a] replay a recorded trace
                                                             bit-exactly
   repro sweep [--tech sram|reram] [--exact]                 parallel zoo sweep
@@ -1019,9 +1096,17 @@ FLAGS:
   --fast    restrict sweeps to the small-DNN subset
   --csv     emit CSV instead of ASCII tables
   --verbose debug-level logging (REPRO_LOG=warn|info|debug sets the default)
-  --trace-out <f>    serve: write request lifecycle spans as Chrome
-            trace-event JSON (load in Perfetto / chrome://tracing)
-  --heatmap[-out f]  chiplet: per-link NoP utilization heatmap (text/JSON)"
+  --trace-out <f>    serve: write request lifecycle spans + windowed
+            counter tracks as Chrome trace-event JSON (load in
+            Perfetto / chrome://tracing)
+  --metrics-out <f>  serve: write windowed serving metrics (per-window
+            arrivals/completions/drops/sheds, queue depth, per-model
+            p50/p99, NoP link utilization, drift events);
+            --metrics-format json (default, byte-deterministic) or prom
+  --metrics-window-ms <w>  serve: metrics window width (default 0 =
+            auto: run horizon / 32; also [telemetry] window_ms)
+  --heatmap[-out f]  chiplet/serve: per-link NoP utilization heatmap
+            (text/JSON); serve renders the end-of-run serving traffic"
 }
 
 #[cfg(test)]
@@ -1286,6 +1371,100 @@ mod tests {
         let text = std::fs::read_to_string(&mix_path).unwrap();
         assert!(text.contains("\"displayTimeUnit\""), "{text}");
         assert!(text.contains("MLP"), "{text}");
+    }
+
+    #[test]
+    fn run_serve_metrics_out_writes_windows() {
+        let path = std::env::temp_dir().join("imcnoc_cli_serve_metrics.json");
+        let path = path.to_str().unwrap().to_string();
+        run(&[
+            "serve".into(),
+            "--fast".into(),
+            "--metrics-out".into(),
+            path.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"windows\""), "{text}");
+        assert!(text.contains("\"totals\""), "{text}");
+        assert!(text.contains("\"drift_events\""), "{text}");
+        // Prometheus text exposition.
+        let prom = std::env::temp_dir().join("imcnoc_cli_serve_metrics.prom");
+        let prom = prom.to_str().unwrap().to_string();
+        run(&[
+            "serve".into(),
+            "--fast".into(),
+            "--metrics-out".into(),
+            prom.clone(),
+            "--metrics-format".into(),
+            "prom".into(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&prom).unwrap();
+        assert!(text.contains("imcnoc_requests_total"), "{text}");
+        // The mix path exports metrics too.
+        let mix = std::env::temp_dir().join("imcnoc_cli_mix_metrics.json");
+        let mix = mix.to_str().unwrap().to_string();
+        run(&[
+            "serve".into(),
+            "--mix".into(),
+            "MLP:1:0,LeNet-5:1:0".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--requests".into(),
+            "32".into(),
+            "--metrics-out".into(),
+            mix.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&mix).unwrap();
+        assert!(text.contains("\"models\""), "{text}");
+        assert!(text.contains("MLP"), "{text}");
+        // Bad format / orphaned --metrics-format error cleanly.
+        let err = run(&[
+            "serve".into(),
+            "--fast".into(),
+            "--metrics-out".into(),
+            path.clone(),
+            "--metrics-format".into(),
+            "yaml".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("json, prom"), "{err}");
+        let err = run(&[
+            "serve".into(),
+            "--fast".into(),
+            "--metrics-format".into(),
+            "prom".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("--metrics-out"), "{err}");
+    }
+
+    #[test]
+    fn run_serve_heatmap_renders_serving_traffic() {
+        run(&[
+            "serve".into(),
+            "--fast".into(),
+            "--heatmap".into(),
+        ])
+        .unwrap();
+        let path = std::env::temp_dir().join("imcnoc_cli_serve_heatmap.json");
+        let path = path.to_str().unwrap().to_string();
+        run(&[
+            "serve".into(),
+            "--mix".into(),
+            "MLP:1:0,LeNet-5:1:0".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--requests".into(),
+            "32".into(),
+            "--heatmap-out".into(),
+            path.clone(),
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"links\""), "{text}");
     }
 
     #[test]

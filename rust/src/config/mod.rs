@@ -521,6 +521,13 @@ pub struct TelemetryConfig {
     /// Print the NoP link-utilization heatmap after `repro chiplet`
     /// (same as passing `--heatmap`).
     pub heatmap: bool,
+    /// Serving metrics window width in milliseconds (0 = auto: the run
+    /// horizon divided into [`crate::telemetry::timeseries::AUTO_WINDOWS`]
+    /// windows).
+    pub window_ms: f64,
+    /// Default windowed-metrics output path for `repro serve` (empty =
+    /// no metrics file; the `--metrics-out` flag overrides).
+    pub metrics_out: String,
 }
 
 /// Simulation-control parameters.
@@ -695,6 +702,10 @@ impl Config {
                 ("telemetry", "heatmap") => {
                     cfg.telemetry.heatmap = v.parse().map_err(|_| parse_err(key))?
                 }
+                ("telemetry", "window_ms") => {
+                    cfg.telemetry.window_ms = v.parse().map_err(|_| parse_err(key))?
+                }
+                ("telemetry", "metrics_out") => cfg.telemetry.metrics_out = v.to_string(),
                 _ => return Err(format!("unknown config key: [{section}] {key}")),
             }
         }
@@ -729,7 +740,8 @@ impl Config {
              burst_factor = {}\non_fraction = {}\ncycle_s = {}\n\
              frames_alpha = {}\nframes_max = {}\n\n[sim]\nseed = {}\n\
              warmup_cycles = {}\nmeasure_cycles = {}\ndrain_cycles = {}\n\n\
-             [telemetry]\nenabled = {}\ntrace_out = {}\nheatmap = {}\n",
+             [telemetry]\nenabled = {}\ntrace_out = {}\nheatmap = {}\n\
+             window_ms = {}\nmetrics_out = {}\n",
             self.arch.pe_size,
             self.arch.cell_bits,
             self.arch.n_bits,
@@ -777,6 +789,8 @@ impl Config {
             self.telemetry.enabled,
             self.telemetry.trace_out,
             self.telemetry.heatmap,
+            self.telemetry.window_ms,
+            self.telemetry.metrics_out,
         )
     }
 }
@@ -812,13 +826,17 @@ mod tests {
     #[test]
     fn telemetry_section_parses_and_roundtrips() {
         let cfg = Config::from_ini(
-            "[telemetry]\nenabled = true\ntrace_out = /tmp/trace.json\nheatmap = true\n",
+            "[telemetry]\nenabled = true\ntrace_out = /tmp/trace.json\nheatmap = true\n\
+             window_ms = 2.5\nmetrics_out = /tmp/metrics.json\n",
         )
         .unwrap();
         assert!(cfg.telemetry.enabled);
         assert_eq!(cfg.telemetry.trace_out, "/tmp/trace.json");
         assert!(cfg.telemetry.heatmap);
+        assert_eq!(cfg.telemetry.window_ms, 2.5);
+        assert_eq!(cfg.telemetry.metrics_out, "/tmp/metrics.json");
         assert!(Config::from_ini("[telemetry]\nenabled = yes\n").is_err());
+        assert!(Config::from_ini("[telemetry]\nwindow_ms = soon\n").is_err());
         let back = Config::from_ini(&cfg.to_ini()).unwrap();
         assert_eq!(back, cfg);
     }

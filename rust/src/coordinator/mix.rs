@@ -40,7 +40,8 @@ use crate::mapping::Mapping;
 use crate::nop::evaluator::nop_transfer_cycles;
 use crate::nop::topology::{NopNetwork, NopTopology};
 use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
-use crate::util::{mean, percentile};
+use crate::telemetry::timeseries::AUTO_WINDOWS;
+use crate::telemetry::{link_union, QuantileSketch, TimeSeries};
 use crate::workload::{place_replicas, Event, Placement, PlacementPolicy, Trace, WorkloadMix};
 
 /// Auto deadline (`deadline_ms = 0` in a mix spec): this multiple of the
@@ -312,10 +313,16 @@ pub struct MixScheduler {
     shed: Vec<usize>,
     deadline_offered: Vec<usize>,
     deadline_hits: Vec<usize>,
-    latencies_ms: Vec<Vec<f64>>,
+    /// Per-model streaming latency sketches (bounded memory; the global
+    /// report merges them).
+    latency: Vec<QuantileSketch>,
     batches: usize,
     /// One lifecycle span per offered request, in event order.
     spans: Vec<RequestSpan>,
+    /// Windowed serving metrics of the most recent run.
+    timeseries: TimeSeries,
+    /// Metrics window override, seconds (0 = auto: event span / 32).
+    metrics_window_s: f64,
 }
 
 impl MixScheduler {
@@ -351,9 +358,11 @@ impl MixScheduler {
             shed: Vec::new(),
             deadline_offered: Vec::new(),
             deadline_hits: Vec::new(),
-            latencies_ms: Vec::new(),
+            latency: Vec::new(),
             batches: 0,
             spans: Vec::new(),
+            timeseries: TimeSeries::default(),
+            metrics_window_s: 0.0,
         };
         sched.reset();
         sched
@@ -363,6 +372,19 @@ impl MixScheduler {
     /// offered request — completed, dropped and shed alike).
     pub fn spans(&self) -> &[RequestSpan] {
         &self.spans
+    }
+
+    /// Windowed serving metrics of the most recent run.
+    pub fn timeseries(&self) -> &TimeSeries {
+        &self.timeseries
+    }
+
+    /// Override the metrics window width (`[telemetry] window_ms` /
+    /// `--metrics-window-ms`); `0` restores the auto width (the event
+    /// span divided by [`AUTO_WINDOWS`]). Survives [`MixScheduler::run`]'s
+    /// reset — it is configuration, not per-run state.
+    pub fn set_metrics_window_s(&mut self, window_s: f64) {
+        self.metrics_window_s = window_s.max(0.0);
     }
 
     /// Reset every per-run accumulator so one scheduler can host several
@@ -385,9 +407,12 @@ impl MixScheduler {
         self.shed = vec![0; n];
         self.deadline_offered = vec![0; n];
         self.deadline_hits = vec![0; n];
-        self.latencies_ms = (0..n).map(|_| Vec::new()).collect();
+        self.latency = (0..n).map(|_| QuantileSketch::new()).collect();
         self.batches = 0;
         self.spans.clear();
+        // Disabled placeholder; `run` installs the sized instance once the
+        // event span (and thus the auto window width) is known.
+        self.timeseries = TimeSeries::default();
     }
 
     /// Modeled completion delta of a `frames`-frame request of `m`
@@ -486,6 +511,7 @@ impl MixScheduler {
     fn ingress(&mut self, c: usize, m: usize, frames: u32, t: f64) -> f64 {
         // One input payload per frame, streamed back to back.
         let ser_s = self.model.link_busy_s[m] * frames.max(1) as f64;
+        let flits = self.model.models[m].ingress_flits * frames.max(1) as u64;
         let hop_s = self.model.hop_s;
         let window_s = self.window_s;
         let mut head = t;
@@ -497,8 +523,14 @@ impl MixScheduler {
             self.link_free.insert(link, finish);
             let win = self.link_util.entry(link).or_default();
             win.add(start, finish - start, window_s);
+            // Bill the true serialization time, not `finish - start`: the
+            // `.max(done)` pipelining stretch would double-count tail hops.
+            self.timeseries.record_link_busy(start, link, ser_s, flits);
             head = start + hop_s;
             done = finish + hop_s;
+        }
+        if !self.model.paths[c].is_empty() {
+            self.timeseries.record_ejected(c, flits);
         }
         done
     }
@@ -523,7 +555,8 @@ impl MixScheduler {
                 self.queued_s[c] = (self.queued_s[c] - occupied).max(0.0);
                 let complete = start + occupied + self.model.egress_s[head.model][c];
                 let latency_s = complete - head.arrival;
-                self.latencies_ms[head.model].push(latency_s * 1e3);
+                self.latency[head.model].record(latency_s * 1e3);
+                self.timeseries.record_completion(complete, head.model, latency_s * 1e3);
                 let sp = &mut self.spans[head.span];
                 sp.service_start = start;
                 sp.complete = complete;
@@ -547,6 +580,21 @@ impl MixScheduler {
     pub fn run(&mut self, events: &[Event]) -> ServeReport {
         self.reset();
         let n = self.model.models.len();
+        // Metrics windows: explicit override, else the arrival span split
+        // into AUTO_WINDOWS windows (events are time-sorted).
+        let last_t = events.last().map_or(0.0, |e| e.t_s);
+        let window_s = if self.metrics_window_s > 0.0 {
+            self.metrics_window_s
+        } else {
+            (last_t / AUTO_WINDOWS).max(1e-9)
+        };
+        self.timeseries = TimeSeries::new(
+            window_s,
+            self.model.models.iter().map(|m| m.name.clone()).collect(),
+            link_union(&self.model.paths),
+            self.model.chiplets,
+            self.model.gateway,
+        );
         let mut t = 0.0f64;
         for (i, e) in events.iter().enumerate() {
             assert!(
@@ -558,6 +606,7 @@ impl MixScheduler {
             let m = e.model;
             self.advance(t);
             self.offered[m] += 1;
+            self.timeseries.record_arrival(t, m);
             let costs = &self.model.models[m];
             let deadline_s = costs.deadline_s;
             let has_deadline = deadline_s.is_finite();
@@ -567,6 +616,7 @@ impl MixScheduler {
             match self.pick(m, e.frames, t) {
                 None => {
                     self.dropped[m] += 1;
+                    self.timeseries.record_drop(t, m);
                     self.spans.push(RequestSpan::rejected(m, t, SpanOutcome::Dropped));
                 }
                 Some(mut c) => {
@@ -580,6 +630,7 @@ impl MixScheduler {
                             Some((c2, p2)) if p2 <= deadline_s => c = c2,
                             _ => {
                                 self.shed[m] += 1;
+                                self.timeseries.record_shed(t, m);
                                 self.spans.push(RequestSpan::rejected(m, t, SpanOutcome::Shed));
                                 continue;
                             }
@@ -598,6 +649,7 @@ impl MixScheduler {
                     });
                     self.queued_s[c] += occupied;
                     self.peak_queue[c] = self.peak_queue[c].max(self.queues[c].len());
+                    self.timeseries.record_depth(t, self.queues[c].len());
                 }
             }
         }
@@ -628,6 +680,7 @@ impl MixScheduler {
         }
 
         let end = self.free_at.iter().copied().fold(t, f64::max).max(1e-12);
+        self.timeseries.finalize(end);
         let mut per_chiplet = Vec::with_capacity(self.model.chiplets);
         for c in 0..self.model.chiplets {
             per_chiplet.push(ChipletQueueStats {
@@ -638,9 +691,9 @@ impl MixScheduler {
             });
         }
         let mut per_model = Vec::with_capacity(n);
-        let mut all_latencies: Vec<f64> = Vec::new();
+        let mut all = QuantileSketch::new();
         for m in 0..n {
-            let lat = &self.latencies_ms[m];
+            let lat = &self.latency[m];
             let (ing, que, ser) = mean_breakdown_ms(&self.spans, Some(m));
             per_model.push(ModelServeStats {
                 model: self.model.models[m].name.clone(),
@@ -651,22 +704,22 @@ impl MixScheduler {
                 shed: self.shed[m],
                 deadline_offered: self.deadline_offered[m],
                 deadline_hits: self.deadline_hits[m],
-                mean_ms: mean(lat),
-                p50_ms: percentile(lat, 50.0),
-                p99_ms: percentile(lat, 99.0),
+                mean_ms: lat.mean(),
+                p50_ms: lat.quantile(50.0),
+                p99_ms: lat.quantile(99.0),
                 mean_ingress_ms: ing,
                 mean_queue_ms: que,
                 mean_service_ms: ser,
             });
-            all_latencies.extend_from_slice(lat);
+            all.merge(lat);
         }
-        let mut report = ServeReport::from_latencies_ms(
+        let mut report = ServeReport::from_sketch(
             events.len(),
             self.completed.iter().sum(),
             self.dropped.iter().sum(),
             1,
             self.batches,
-            &all_latencies,
+            &all,
             end,
         );
         report.shed = self.shed.iter().sum();
@@ -708,6 +761,24 @@ pub fn serve_mix_traced(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
 ) -> Result<(MixServingModel, Trace, ServeReport, Vec<RequestSpan>), String> {
+    let (model, trace, report, spans, _) =
+        serve_mix_metrics(arch, noc, nop, sim, serving, workload, 0.0)?;
+    Ok((model, trace, report, spans))
+}
+
+/// [`serve_mix_traced`] variant that also returns the windowed
+/// [`TimeSeries`] (`repro serve --mix … --metrics-out`). `window_ms > 0`
+/// overrides the auto metrics window width.
+#[allow(clippy::type_complexity)]
+pub fn serve_mix_metrics(
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    serving: &ServingConfig,
+    workload: &WorkloadConfig,
+    window_ms: f64,
+) -> Result<(MixServingModel, Trace, ServeReport, Vec<RequestSpan>, TimeSeries), String> {
     workload.validate()?;
     serving.validate()?;
     let model = MixServingModel::build(&workload.mix, workload.placement, arch, noc, nop, sim)?;
@@ -721,10 +792,12 @@ pub fn serve_mix_traced(
         .generate(&workload.mix, rate, serving.requests, serving.seed);
     let trace = Trace::new(workload.mix.clone(), rate, events);
     let mut sched = MixScheduler::new(model, serving, workload.admission);
+    sched.set_metrics_window_s(window_ms * 1e-3);
     let mut report = sched.run(&trace.events);
     report.offered_rps = rate;
     let spans = std::mem::take(&mut sched.spans);
-    Ok((sched.model, trace, report, spans))
+    let ts = std::mem::take(&mut sched.timeseries);
+    Ok((sched.model, trace, report, spans, ts))
 }
 
 /// Replay a recorded trace: rebuild the mix model from the trace's own mix
@@ -754,12 +827,33 @@ pub fn replay_mix_traced(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
 ) -> Result<(MixServingModel, ServeReport, Vec<RequestSpan>), String> {
+    let (model, report, spans, _) =
+        replay_mix_metrics(trace, arch, noc, nop, sim, serving, workload, 0.0)?;
+    Ok((model, report, spans))
+}
+
+/// [`replay_mix_traced`] variant that also returns the windowed
+/// [`TimeSeries`]. Identical configuration and trace reproduce the
+/// metrics export byte-for-byte, like the report.
+#[allow(clippy::type_complexity)]
+pub fn replay_mix_metrics(
+    trace: &Trace,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    serving: &ServingConfig,
+    workload: &WorkloadConfig,
+    window_ms: f64,
+) -> Result<(MixServingModel, ServeReport, Vec<RequestSpan>, TimeSeries), String> {
     let model = MixServingModel::build(&trace.mix, workload.placement, arch, noc, nop, sim)?;
     let mut sched = MixScheduler::new(model, serving, workload.admission);
+    sched.set_metrics_window_s(window_ms * 1e-3);
     let mut report = sched.run(&trace.events);
     report.offered_rps = trace.offered_rps;
     let spans = std::mem::take(&mut sched.spans);
-    Ok((sched.model, report, spans))
+    let ts = std::mem::take(&mut sched.timeseries);
+    Ok((sched.model, report, spans, ts))
 }
 
 #[cfg(test)]
@@ -961,6 +1055,58 @@ mod tests {
         let (_, replayed) =
             replay_mix(&parsed, &arch, &noc, &nop, &sim, &serving, &workload).unwrap();
         assert_eq!(format!("{report:?}"), format!("{replayed:?}"));
+    }
+
+    #[test]
+    fn mix_timeseries_reconciles_with_report() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Mesh,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let serving = ServingConfig {
+            requests: 200,
+            ..ServingConfig::default()
+        };
+        let workload = WorkloadConfig {
+            mix: small_mix(),
+            ..WorkloadConfig::default()
+        };
+        let (_, _, report, _, ts) =
+            serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &workload, 0.0).unwrap();
+        assert!(ts.is_enabled());
+        let (arr, comp, drop, shed) = ts.totals();
+        assert_eq!(arr as usize, report.requests);
+        assert_eq!(comp as usize, report.completed);
+        assert_eq!(drop as usize, report.dropped);
+        assert_eq!(shed as usize, report.shed);
+        // Window sums reconcile exactly with the cumulative totals, and
+        // per-model window slices with the per-model report rows.
+        let (mut a, mut c, mut d, mut s) = (0u64, 0u64, 0u64, 0u64);
+        let mut model_done = vec![0u64; report.per_model.len()];
+        for w in ts.windows() {
+            a += w.arrivals;
+            c += w.completions;
+            d += w.drops;
+            s += w.sheds;
+            for (m, mw) in w.models.iter().enumerate() {
+                model_done[m] += mw.completions;
+            }
+        }
+        assert_eq!((a, c, d, s), (arr, comp, drop, shed));
+        for (m, pm) in report.per_model.iter().enumerate() {
+            assert_eq!(model_done[m] as usize, pm.completed, "model {}", pm.model);
+        }
+        // Off-gateway replicas pulled payloads over real NoP links.
+        assert!(!ts.links().is_empty());
+        assert!(ts.to_sim_telemetry().transit_total() > 0);
+        // An explicit window override reshapes the axis deterministically.
+        let (_, _, _, _, ts2) =
+            serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &workload, 0.0).unwrap();
+        let json = ts.to_json(report.requests, report.completed, report.dropped, report.shed);
+        let json2 = ts2.to_json(report.requests, report.completed, report.dropped, report.shed);
+        assert_eq!(json, json2, "same seed must export byte-identical metrics");
     }
 
     #[test]

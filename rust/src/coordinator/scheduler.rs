@@ -47,7 +47,8 @@ use crate::nop::evaluator::{evaluate_package, nop_transfer_cycles};
 use crate::nop::sim::{saturation_rate, NopSim};
 use crate::nop::topology::{NopNetwork, NopTopology};
 use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
-use crate::telemetry::Histogram;
+use crate::telemetry::timeseries::AUTO_WINDOWS;
+use crate::telemetry::{link_union, Histogram, QuantileSketch, TimeSeries};
 use crate::util::Pcg32;
 
 pub use crate::config::Policy;
@@ -349,11 +350,18 @@ pub struct ChipletScheduler {
     served: Vec<usize>,
     peak_queue: Vec<usize>,
     batches: usize,
-    latencies_ms: Vec<f64>,
+    /// Streaming latency sketch over completed requests, ms — O(1)
+    /// memory however many requests the run serves.
+    latency: QuantileSketch,
     /// One lifecycle span per offered request, in admission order.
     spans: Vec<RequestSpan>,
     /// Queue depth observed at each admission.
-    queue_depth: Histogram,
+    depth_hist: Histogram,
+    /// Windowed serving metrics (installed by `run`, sized from the
+    /// arrival horizon unless `set_metrics_window_s` pinned a width).
+    timeseries: TimeSeries,
+    /// `[telemetry] window_ms` override, seconds (0 = auto).
+    metrics_window_s: f64,
 }
 
 impl ChipletScheduler {
@@ -378,10 +386,20 @@ impl ChipletScheduler {
             served: vec![0; k],
             peak_queue: vec![0; k],
             batches: 0,
-            latencies_ms: Vec::new(),
+            latency: QuantileSketch::new(),
             spans: Vec::new(),
-            queue_depth: Histogram::default(),
+            depth_hist: Histogram::default(),
+            timeseries: TimeSeries::default(),
+            metrics_window_s: 0.0,
         }
+    }
+
+    /// Pin the time-series window width (seconds). 0 (the default) sizes
+    /// the window automatically so a run spans about
+    /// [`AUTO_WINDOWS`](crate::telemetry::timeseries::AUTO_WINDOWS)
+    /// windows; the CLI threads `[telemetry] window_ms` through here.
+    pub fn set_metrics_window_s(&mut self, window_s: f64) {
+        self.metrics_window_s = window_s.max(0.0);
     }
 
     /// Reset every per-run accumulator so one scheduler can host several
@@ -397,9 +415,10 @@ impl ChipletScheduler {
         self.served = vec![0; k];
         self.peak_queue = vec![0; k];
         self.batches = 0;
-        self.latencies_ms.clear();
+        self.latency = QuantileSketch::new();
         self.spans.clear();
-        self.queue_depth = Histogram::default();
+        self.depth_hist = Histogram::default();
+        self.timeseries = TimeSeries::default();
     }
 
     /// Lifecycle spans of the most recent run, in admission order (one per
@@ -410,7 +429,12 @@ impl ChipletScheduler {
 
     /// Queue depth observed at each admission of the most recent run.
     pub fn queue_depth_hist(&self) -> &Histogram {
-        &self.queue_depth
+        &self.depth_hist
+    }
+
+    /// Windowed serving metrics of the most recent run.
+    pub fn timeseries(&self) -> &TimeSeries {
+        &self.timeseries
     }
 
     /// Modeled completion time of a request admitted to chiplet `c` at
@@ -477,6 +501,7 @@ impl ChipletScheduler {
     /// hop by hop, matching `nop_transfer_cycles` at zero load.
     fn ingress(&mut self, c: usize, t: f64) -> f64 {
         let ser_s = self.model.link_busy_s;
+        let flits = self.model.ingress_flits;
         let hop_s = self.model.hop_s;
         let window_s = self.window_s;
         let mut head = t;
@@ -488,8 +513,15 @@ impl ChipletScheduler {
             self.link_free.insert(link, finish);
             let win = self.link_util.entry(link).or_default();
             win.add(start, finish - start, window_s);
+            // The time series records the true serialization occupancy
+            // (ser_s), not finish - start, which the pipelining `.max`
+            // can inflate past the link's own busy time.
+            self.timeseries.record_link_busy(start, link, ser_s, flits);
             head = start + hop_s;
             done = finish + hop_s;
+        }
+        if !self.model.paths[c].is_empty() {
+            self.timeseries.record_ejected(c, flits);
         }
         done
     }
@@ -521,7 +553,9 @@ impl ChipletScheduler {
                 let egress = self.model.egress_s[c];
                 for (j, p) in taken.iter().enumerate() {
                     let complete = start + service_s + j as f64 * stage_s + egress;
-                    self.latencies_ms.push((complete - p.arrival) * 1e3);
+                    let latency_ms = (complete - p.arrival) * 1e3;
+                    self.latency.record(latency_ms);
+                    self.timeseries.record_completion(complete, 0, latency_ms);
                     let sp = &mut self.spans[p.span];
                     sp.service_start = start;
                     sp.complete = complete;
@@ -544,15 +578,32 @@ impl ChipletScheduler {
         } else {
             AUTO_LOAD_FACTOR * self.model.capacity_rps(self.batch)
         };
+        // Windowed metrics are always on (every recorder is O(1)); the
+        // window width defaults to the expected arrival horizon split
+        // into AUTO_WINDOWS windows.
+        let window_s = if self.metrics_window_s > 0.0 {
+            self.metrics_window_s
+        } else {
+            (cfg.requests as f64 / rate / AUTO_WINDOWS).max(1e-9)
+        };
+        self.timeseries = TimeSeries::new(
+            window_s,
+            vec![self.model.dnn.clone()],
+            link_union(&self.model.paths),
+            self.model.chiplets,
+            self.model.gateway,
+        );
         let mut rng = Pcg32::seeded(seed);
         let mut t = 0.0f64;
         let mut dropped = 0usize;
         for _ in 0..cfg.requests {
             t += -(1.0 - rng.next_f64()).ln() / rate;
             self.advance(t);
+            self.timeseries.record_arrival(t, 0);
             match self.pick(t) {
                 None => {
                     dropped += 1;
+                    self.timeseries.record_drop(t, 0);
                     self.spans.push(RequestSpan::rejected(0, t, SpanOutcome::Dropped));
                 }
                 Some(c) => {
@@ -565,7 +616,8 @@ impl ChipletScheduler {
                         span,
                     });
                     self.peak_queue[c] = self.peak_queue[c].max(self.queues[c].len());
-                    self.queue_depth.record(self.queues[c].len() as f64);
+                    self.depth_hist.record(self.queues[c].len() as f64);
+                    self.timeseries.record_depth(t, self.queues[c].len());
                 }
             }
         }
@@ -598,13 +650,14 @@ impl ChipletScheduler {
                 peak_queue: self.peak_queue[c],
             });
         }
-        let mut report = ServeReport::from_latencies_ms(
+        self.timeseries.finalize(end);
+        let mut report = ServeReport::from_sketch(
             cfg.requests,
-            self.latencies_ms.len(),
+            self.latency.count() as usize,
             dropped,
             self.batch,
             self.batches,
-            &self.latencies_ms,
+            &self.latency,
             end,
         );
         report.per_chiplet = per_chiplet;
@@ -641,13 +694,32 @@ pub fn serve_modeled_traced(
     sim: &SimConfig,
     cfg: &ServingConfig,
 ) -> (ServingModel, ServeReport, Vec<RequestSpan>) {
+    let (model, report, spans, _) = serve_modeled_metrics(graph, arch, noc, nop, sim, cfg, 0.0);
+    (model, report, spans)
+}
+
+/// Like [`serve_modeled_traced`], also returning the windowed
+/// [`TimeSeries`] (the raw material for `repro serve --metrics-out` and
+/// `--heatmap`). `window_ms` pins the window width; 0 sizes it
+/// automatically from the arrival horizon.
+pub fn serve_modeled_metrics(
+    graph: &DnnGraph,
+    arch: &ArchConfig,
+    noc: &NocConfig,
+    nop: &NopConfig,
+    sim: &SimConfig,
+    cfg: &ServingConfig,
+    window_ms: f64,
+) -> (ServingModel, ServeReport, Vec<RequestSpan>, TimeSeries) {
     let (model, part) = ServingModel::build(graph, arch, noc, nop, sim);
     let mut sched = ChipletScheduler::new(model, part, cfg);
+    sched.set_metrics_window_s(window_ms * 1e-3);
     // Arrivals are seeded by `[serving] seed`, not `[sim] seed`, so serving
     // runs reseed independently of the NoC/NoP simulators.
     let report = sched.run(cfg, cfg.seed);
     let spans = std::mem::take(&mut sched.spans);
-    (sched.model, report, spans)
+    let timeseries = std::mem::take(&mut sched.timeseries);
+    (sched.model, report, spans, timeseries)
 }
 
 #[cfg(test)]
@@ -838,6 +910,74 @@ mod tests {
                 assert!(s.complete >= s.service_start);
             }
         }
+    }
+
+    #[test]
+    fn timeseries_windows_reconcile_with_report() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Mesh,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let (model, part) = ServingModel::build(&models::lenet5(), &arch, &noc, &nop, &sim);
+        let cfg = ServingConfig {
+            policy: Policy::LeastLatency,
+            queue_depth: 2,
+            arrival_rps: 2.0 * model.capacity_rps(1),
+            requests: 250,
+            batch: 1,
+            ..ServingConfig::default()
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        let report = sched.run(&cfg, 9);
+        let ts = sched.timeseries();
+        assert!(ts.is_enabled());
+        let (arrivals, completions, drops, sheds) = ts.totals();
+        assert_eq!(arrivals as usize, report.requests);
+        assert_eq!(completions as usize, report.completed);
+        assert_eq!(drops as usize, report.dropped);
+        assert_eq!(sheds, 0);
+        // Window sums equal the cumulative totals, exactly.
+        let wsum: u64 = ts.windows().iter().map(|w| w.arrivals).sum();
+        assert_eq!(wsum, arrivals);
+        let csum: u64 = ts.windows().iter().map(|w| w.completions).sum();
+        assert_eq!(csum, completions);
+        // Links saw ingress traffic (k = 4 mesh, non-gateway chiplets).
+        assert!(!ts.links().is_empty());
+        let telem = ts.to_sim_telemetry();
+        assert!(telem.transit_total() > 0);
+        // Overloaded at 2x capacity: queue depth samples exist.
+        assert!(ts.windows().iter().any(|w| w.depth.count() > 0));
+    }
+
+    #[test]
+    fn metrics_window_override_controls_window_count() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            chiplets: 2,
+            ..NopConfig::default()
+        };
+        let (model, part) = ServingModel::build(&models::mlp(), &arch, &noc, &nop, &sim);
+        let cfg = ServingConfig {
+            arrival_rps: 0.5 * model.capacity_rps(1),
+            requests: 100,
+            batch: 1,
+            ..ServingConfig::default()
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        sched.run(&cfg, 5);
+        let auto_windows = sched.timeseries().windows().len();
+        // Halve the auto width: about twice the windows.
+        let half = sched.timeseries().window_s() / 2.0;
+        sched.set_metrics_window_s(half);
+        sched.run(&cfg, 5);
+        let fine = sched.timeseries().windows().len();
+        assert!(
+            fine > auto_windows,
+            "halving the window must add windows: {fine} vs {auto_windows}"
+        );
+        assert!((sched.timeseries().window_s() - half).abs() < 1e-15);
     }
 
     #[test]

@@ -16,7 +16,8 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::runtime::{LoadedModel, Runtime};
-use crate::util::{mean, percentile, Pcg32};
+use crate::telemetry::QuantileSketch;
+use crate::util::Pcg32;
 
 /// Queue statistics for one chiplet of a modeled serving run.
 #[derive(Clone, Debug)]
@@ -121,7 +122,12 @@ pub struct ServeReport {
 
 impl ServeReport {
     /// Assemble a report from latency samples (ms) and the wall-clock /
-    /// modeled horizon of the whole run.
+    /// modeled horizon of the whole run. Thin wrapper over
+    /// [`ServeReport::from_sketch`]: the samples are folded into a
+    /// [`QuantileSketch`] first, so both serving paths share the same
+    /// bounded-memory percentile estimator (mean and throughput stay
+    /// exact; p50/p99 carry the sketch's documented relative-error
+    /// bound, [`crate::telemetry::sketch::RELATIVE_ERROR`]).
     pub fn from_latencies_ms(
         requests: usize,
         completed: usize,
@@ -129,6 +135,27 @@ impl ServeReport {
         batch_size: usize,
         batches: usize,
         latencies_ms: &[f64],
+        horizon_s: f64,
+    ) -> Self {
+        let mut sketch = QuantileSketch::new();
+        for &v in latencies_ms {
+            sketch.record(v);
+        }
+        Self::from_sketch(
+            requests, completed, dropped, batch_size, batches, &sketch, horizon_s,
+        )
+    }
+
+    /// Assemble a report from a latency [`QuantileSketch`] (ms) — the O(1)
+    /// memory path the serving schedulers stream into, so million-request
+    /// runs never materialize a latency vector.
+    pub fn from_sketch(
+        requests: usize,
+        completed: usize,
+        dropped: usize,
+        batch_size: usize,
+        batches: usize,
+        latency_ms: &QuantileSketch,
         horizon_s: f64,
     ) -> Self {
         Self {
@@ -140,9 +167,9 @@ impl ServeReport {
             deadline_hits: 0,
             batch_size,
             batches,
-            mean_ms: mean(latencies_ms),
-            p50_ms: percentile(latencies_ms, 50.0),
-            p99_ms: percentile(latencies_ms, 99.0),
+            mean_ms: latency_ms.mean(),
+            p50_ms: latency_ms.quantile(50.0),
+            p99_ms: latency_ms.quantile(99.0),
             mean_ingress_ms: 0.0,
             mean_queue_ms: 0.0,
             mean_service_ms: 0.0,
@@ -325,13 +352,21 @@ mod tests {
         assert_eq!(one.p50_ms, 4.0);
         assert_eq!(one.p99_ms, 4.0);
         assert_eq!(one.throughput_rps, 0.5);
-        // Four samples: p50 interpolates, p99 approaches the max.
+        // Four samples: p50 interpolates (within the sketch's documented
+        // relative-error bound of the exact 2.5), p99 approaches the max.
         let xs = [1.0, 2.0, 3.0, 4.0];
         let four = ServeReport::from_latencies_ms(5, 4, 1, 2, 2, &xs, 8.0);
         assert_eq!(four.completed, 4);
         assert_eq!(four.dropped, 1);
-        assert!((four.p50_ms - 2.5).abs() < 1e-12);
-        assert!(four.p99_ms > 3.9 && four.p99_ms <= 4.0);
+        let bound = crate::telemetry::sketch::RELATIVE_ERROR;
+        assert!(
+            (four.p50_ms - 2.5).abs() <= bound * 2.5,
+            "p50 {} vs exact 2.5",
+            four.p50_ms
+        );
+        assert!(four.p99_ms > 3.8 && four.p99_ms <= 4.0, "{}", four.p99_ms);
+        // Mean and throughput stay exact through the sketch.
+        assert!((four.mean_ms - 2.5).abs() < 1e-12);
         assert_eq!(four.throughput_rps, 0.5);
         // Empty samples degrade to zeros, not NaNs.
         let none = ServeReport::from_latencies_ms(3, 0, 3, 1, 0, &[], 1.0);

@@ -95,6 +95,8 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
             "ingress_ms",
             "queue_ms",
             "service_ms",
+            "windows",
+            "drift_events",
         ],
     );
     let mut context = Table::new(
@@ -156,6 +158,8 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
                 fmt_sig(report.mean_ingress_ms, 3),
                 fmt_sig(report.mean_queue_ms, 3),
                 fmt_sig(report.mean_service_ms, 3),
+                sched.timeseries().windows().len().to_string(),
+                sched.timeseries().drift_events().len().to_string(),
             ]);
         }
     }
@@ -190,6 +194,10 @@ mod tests {
             let service: f64 = row[12].parse().unwrap();
             assert!(ingress >= 0.0 && queue >= 0.0 && service > 0.0);
             assert!(service + queue + ingress <= p99.max(p50) * 2.0 + 1e-6);
+            // Time-series columns: every run collects windows.
+            let windows: usize = row[13].parse().unwrap();
+            assert!(windows > 0, "run collected no metric windows");
+            let _drift: usize = row[14].parse().unwrap();
         }
     }
 

@@ -93,6 +93,8 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
             "p99_ms",
             "queue_ms",
             "service_ms",
+            "windows",
+            "drift_events",
         ],
     );
     let mut healthy: Option<MixServingModel> = None;
@@ -135,6 +137,8 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
                     fmt_sig(report.p99_ms, 4),
                     fmt_sig(report.mean_queue_ms, 3),
                     fmt_sig(report.mean_service_ms, 3),
+                    sched.timeseries().windows().len().to_string(),
+                    sched.timeseries().drift_events().len().to_string(),
                 ]);
             }
         }
@@ -214,6 +218,10 @@ mod tests {
             let service: f64 = row[12].parse().unwrap();
             assert!(queue >= 0.0, "queue {queue}");
             assert!(service > 0.0, "service {service}");
+            // Time-series columns: every run collects windows.
+            let windows: usize = row[13].parse().unwrap();
+            assert!(windows > 0, "run collected no metric windows");
+            let _drift: usize = row[14].parse().unwrap();
         }
     }
 

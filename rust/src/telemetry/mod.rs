@@ -1,7 +1,7 @@
 //! Zero-cost-when-disabled instrumentation for the flit simulators and the
 //! serving schedulers (DESIGN.md §5).
 //!
-//! Three pillars, no external dependencies (consistent with the offline
+//! Five pillars, no external dependencies (consistent with the offline
 //! vendored-shim policy):
 //!
 //! * [`registry`] — named counters and log2-bucket histograms
@@ -15,17 +15,34 @@
 //!   timestamps recorded by both serving schedulers and rolled up into the
 //!   per-model latency breakdown on
 //!   [`crate::coordinator::server::ServeReport`].
+//! * [`sketch`] — a bounded-memory streaming quantile sketch
+//!   ([`QuantileSketch`], log-bucket with 16 sub-buckets per octave) that
+//!   replaces unbounded latency vectors in the serving planes: O(1)
+//!   memory per stream, percentiles within a documented relative-error
+//!   bound.
+//! * [`timeseries`] — fixed-width windowed serving metrics
+//!   ([`TimeSeries`]): per-window arrival/completion/drop/shed counters,
+//!   queue-depth samples, per-model p50/p99 from sketches, per-link NoP
+//!   busy time (heatmap over time), and per-model EWMA drift detectors
+//!   emitting typed [`DriftEvent`]s. Exported as deterministic JSON or
+//!   Prometheus text (`repro serve --metrics-out`), and as Chrome trace
+//!   counter tracks.
 //! * [`heatmap`] + [`trace`] — exporters: per-topology link-utilization
-//!   heatmaps (text grid + JSON, `repro chiplet --heatmap`) and a Chrome
-//!   trace-event JSON writer ([`ChromeTrace`], loadable in Perfetto /
-//!   `chrome://tracing`, `repro serve --trace-out <path>`).
+//!   heatmaps (text grid + JSON, `repro chiplet --heatmap` and
+//!   `repro serve --heatmap`) and a Chrome trace-event JSON writer
+//!   ([`ChromeTrace`], loadable in Perfetto / `chrome://tracing`,
+//!   `repro serve --trace-out <path>`).
 
 pub mod heatmap;
 pub mod registry;
+pub mod sketch;
 pub mod span;
+pub mod timeseries;
 pub mod trace;
 
 pub use heatmap::{heatmap_json, heatmap_text};
 pub use registry::{Histogram, Registry, SimTelemetry};
+pub use sketch::QuantileSketch;
 pub use span::{RequestSpan, SpanOutcome};
+pub use timeseries::{link_union, DriftEvent, DriftMetric, TimeSeries};
 pub use trace::{spans_to_trace, ChromeTrace};

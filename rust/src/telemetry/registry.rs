@@ -71,6 +71,34 @@ impl Histogram {
         }
     }
 
+    /// Estimate of the `p`-th percentile (`p` in 0..=100) from the log2
+    /// buckets: the bucket holding the target rank is read back at its
+    /// arithmetic midpoint (bucket 0 as 0), clamped to the exact tracked
+    /// maximum. Coarse by design — one-octave buckets — which is enough
+    /// for the queue-depth tails the serving time series reports; the
+    /// fine-grained latency path uses
+    /// [`crate::telemetry::sketch::QuantileSketch`] instead.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (self.total - 1) as f64;
+        let target = rank.floor() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > target {
+                let est = if i == 0 {
+                    0.0
+                } else {
+                    1.5 * Self::bucket_floor(i)
+                };
+                return est.min(self.max);
+            }
+        }
+        self.max
+    }
+
     /// `{"count":..,"mean":..,"max":..,"buckets":[..]}` with trailing empty
     /// buckets trimmed. Fixed-precision floats keep the export
     /// byte-deterministic.
@@ -270,6 +298,23 @@ mod tests {
         assert_eq!(Histogram::bucket_floor(3), 4.0);
         let json = h.to_json();
         assert!(json.starts_with("{\"count\":8,"), "{json}");
+    }
+
+    #[test]
+    fn histogram_quantile_tracks_bucket_tails() {
+        let mut h = Histogram::default();
+        assert_eq!(h.quantile(99.0), 0.0);
+        for _ in 0..90 {
+            h.record(0.0);
+        }
+        for _ in 0..10 {
+            h.record(9.0); // bucket [8, 16), midpoint 12, clamped to 9
+        }
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.quantile(99.0), 9.0);
+        let mut one = Histogram::default();
+        one.record(3.0);
+        assert_eq!(one.quantile(50.0), 3.0);
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Bounded-memory streaming quantile sketch.
+//!
+//! [`QuantileSketch`] accepts an unbounded stream of non-negative samples
+//! (serving latencies in milliseconds) in O(1) time and O(1) memory and
+//! answers percentile queries to a documented relative-error bound
+//! ([`RELATIVE_ERROR`]). It extends the log2 histogram idiom of
+//! [`crate::telemetry::registry::Histogram`] with 16 geometric sub-buckets
+//! per octave: a sample `v > 0` lands in bucket `floor(log2(v) * 16)`, so
+//! adjacent bucket edges are a factor `2^(1/16) ≈ 1.0443` apart and any
+//! estimate read back from a bucket midpoint is within ~4.4% of the
+//! samples it summarizes. The bucket range covers `[2^-20, 2^24)`
+//! (≈ 1 ns – 4.7 h when samples are milliseconds); values outside clamp
+//! into the end buckets, and quantile estimates additionally clamp into
+//! the exact tracked `[min, max]`, which makes single-sample and
+//! constant-stream quantiles exact.
+//!
+//! The mean is exact (tracked running sum), merging two sketches is
+//! bucket-wise exact, and all state is deterministic in record order —
+//! two identical streams produce identical sketches, which the serving
+//! export paths rely on for byte-identical output per seed.
+
+/// Sub-buckets per octave (power of two). 16 gives bucket-edge ratio
+/// `2^(1/16) ≈ 1.0443`.
+const SUB: i32 = 16;
+
+/// Lowest representable bucket index: values below `2^-20` clamp here.
+const MIN_IDX: i32 = -20 * SUB;
+
+/// Highest representable bucket index: values at or above `2^24` clamp.
+const MAX_IDX: i32 = 24 * SUB;
+
+/// Number of positive-value buckets (the zero bucket is tracked apart).
+const NBUCKETS: usize = (MAX_IDX - MIN_IDX + 1) as usize;
+
+/// Worst-case relative error of [`QuantileSketch::quantile`] against the
+/// exact sorted-sample percentile, for in-range samples. The geometric
+/// bucket width is `2^(1/16) - 1 ≈ 0.0443`; the bound is rounded up to
+/// cover floating-point edge rounding. Property-tested in
+/// `tests/properties.rs`.
+pub const RELATIVE_ERROR: f64 = 0.045;
+
+/// Streaming log-bucket quantile sketch over non-negative samples.
+///
+/// `Default` is the empty sketch; bucket storage is allocated lazily on
+/// the first positive sample (~5.6 KB), so unused sketches stay tiny.
+#[derive(Clone, Debug, Default)]
+pub struct QuantileSketch {
+    /// Samples that were zero, negative, or NaN (all recorded as 0.0).
+    zeros: u64,
+    /// Lazily allocated positive-value buckets, `NBUCKETS` long.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Bucket index for a strictly positive finite sample.
+fn bucket_of(v: f64) -> usize {
+    let idx = (v.log2() * SUB as f64).floor() as i64;
+    let idx = idx.clamp(MIN_IDX as i64, MAX_IDX as i64);
+    (idx - MIN_IDX as i64) as usize
+}
+
+/// Geometric midpoint of bucket `b` (estimate returned for its samples).
+fn midpoint_of(b: usize) -> f64 {
+    let idx = b as i32 + MIN_IDX;
+    // Lower edge 2^(idx/16) times half a sub-bucket, 2^(1/32).
+    ((idx as f64 + 0.5) / SUB as f64).exp2()
+}
+
+impl QuantileSketch {
+    /// An empty sketch (same as `Default`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. Non-positive and non-finite samples count as
+    /// exact zeros (serving latencies are never negative; this keeps the
+    /// sketch total in lock-step with the completion count).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        if v > 0.0 {
+            if self.counts.is_empty() {
+                self.counts = vec![0; NBUCKETS];
+            }
+            self.counts[bucket_of(v)] += 1;
+        } else {
+            self.zeros += 1;
+        }
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True if no sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of the recorded samples; 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact sum of the recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact smallest recorded sample; 0.0 when empty.
+    pub fn min_sample(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded sample; 0.0 when empty.
+    pub fn max_sample(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Estimate of the `p`-th percentile (`p` in 0..=100), within
+    /// [`RELATIVE_ERROR`] of [`crate::util::percentile`] over the same
+    /// samples. Matches its rank convention: linear interpolation at rank
+    /// `p/100 * (count - 1)` between adjacent order statistics, here
+    /// approximated by bucket midpoints and clamped into the exact
+    /// tracked `[min, max]`.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let lo = rank.floor() as u64;
+        let hi = rank.ceil() as u64;
+        let est_lo = self.order_stat(lo);
+        let est = if lo == hi {
+            est_lo
+        } else {
+            est_lo + (rank - lo as f64) * (self.order_stat(hi) - est_lo)
+        };
+        est.clamp(self.min, self.max)
+    }
+
+    /// Midpoint estimate of the 0-indexed `k`-th smallest sample.
+    fn order_stat(&self, k: u64) -> f64 {
+        if k < self.zeros {
+            return 0.0;
+        }
+        let mut seen = self.zeros;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > k {
+                return midpoint_of(b);
+            }
+        }
+        // Unreachable when k < count; fall back to the tracked max.
+        self.max
+    }
+
+    /// Fold `other` into `self` (bucket-wise; exact).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.zeros += other.zeros;
+        self.count += other.count;
+        self.sum += other.sum;
+        if !other.counts.is_empty() {
+            if self.counts.is_empty() {
+                self.counts = vec![0; NBUCKETS];
+            }
+            for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+                *a += b;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{percentile, Pcg32};
+
+    #[test]
+    fn empty_sketch_is_all_zeros() {
+        let s = QuantileSketch::new();
+        assert_eq!(s.count(), 0);
+        assert!(s.is_empty());
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.quantile(50.0), 0.0);
+        assert_eq!(s.min_sample(), 0.0);
+        assert_eq!(s.max_sample(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        let mut s = QuantileSketch::new();
+        s.record(3.7);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.quantile(p), 3.7, "p{p}");
+        }
+        assert_eq!(s.mean(), 3.7);
+    }
+
+    #[test]
+    fn constant_stream_is_exact_via_min_max_clamp() {
+        let mut s = QuantileSketch::new();
+        for _ in 0..1000 {
+            s.record(0.125);
+        }
+        assert_eq!(s.quantile(50.0), 0.125);
+        assert_eq!(s.quantile(99.0), 0.125);
+    }
+
+    #[test]
+    fn zeros_and_negatives_land_in_the_zero_bucket() {
+        let mut s = QuantileSketch::new();
+        s.record(0.0);
+        s.record(-1.0);
+        s.record(f64::NAN);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.quantile(99.0), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_track_exact_percentiles_within_bound() {
+        let mut rng = Pcg32::seeded(0xC0FFEE);
+        let mut s = QuantileSketch::new();
+        let mut exact = Vec::new();
+        for _ in 0..5000 {
+            // Log-uniform over ~6 decades, the serving latency regime.
+            let v = 10f64.powf(rng.next_f64() * 6.0 - 3.0);
+            s.record(v);
+            exact.push(v);
+        }
+        for p in [1.0, 10.0, 50.0, 90.0, 99.0, 99.9] {
+            let want = percentile(&exact, p);
+            let got = s.quantile(p);
+            let rel = (got - want).abs() / want;
+            assert!(
+                rel <= RELATIVE_ERROR,
+                "p{p}: sketch {got} vs exact {want} (rel {rel})"
+            );
+        }
+        // Mean is exact, not approximate.
+        let mean = exact.iter().sum::<f64>() / exact.len() as f64;
+        assert!((s.mean() - mean).abs() <= 1e-9 * mean);
+    }
+
+    #[test]
+    fn quantile_is_monotone_in_p() {
+        let mut rng = Pcg32::seeded(7);
+        let mut s = QuantileSketch::new();
+        for _ in 0..300 {
+            s.record(rng.next_f64() * 50.0);
+        }
+        let mut prev = 0.0;
+        for p in 0..=100 {
+            let q = s.quantile(p as f64);
+            assert!(q >= prev, "p{p}: {q} < {prev}");
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn merge_matches_single_sketch_over_concatenation() {
+        let mut rng = Pcg32::seeded(42);
+        let (mut a, mut b, mut all) = (
+            QuantileSketch::new(),
+            QuantileSketch::new(),
+            QuantileSketch::new(),
+        );
+        for i in 0..400 {
+            let v = rng.next_f64() * 100.0;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.quantile(50.0), all.quantile(50.0));
+        assert_eq!(a.quantile(99.0), all.quantile(99.0));
+        assert!((a.mean() - all.mean()).abs() < 1e-12 * all.mean().abs().max(1.0));
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp_into_end_buckets() {
+        let mut s = QuantileSketch::new();
+        s.record(1e-12);
+        s.record(1e12);
+        assert_eq!(s.count(), 2);
+        // Clamped estimates still honor the exact tracked min/max.
+        assert_eq!(s.quantile(0.0), 1e-12);
+        assert_eq!(s.quantile(100.0), 1e12);
+    }
+}

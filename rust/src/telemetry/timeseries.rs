@@ -1,0 +1,878 @@
+//! Fixed-width windowed time series for the serving planes.
+//!
+//! [`TimeSeries`] is the time-resolved layer on top of PR 5's end-of-run
+//! aggregates: both serving schedulers feed it per-event recorders
+//! (arrival / admission depth / drop / shed / completion / NoP link busy
+//! time), and it buckets them into fixed-width windows of `window_s`
+//! seconds. Each window holds global and per-model counters, a
+//! queue-depth histogram, a per-model latency [`QuantileSketch`] (so
+//! per-window p50/p99 are bounded-memory), and per-link busy seconds (a
+//! link-utilization heatmap over time). [`TimeSeries::finalize`] freezes
+//! the scalars and runs per-model EWMA drift detectors over the arrival
+//! rate and the window p99, emitting typed [`DriftEvent`]s — the signal a
+//! future online re-placement controller subscribes to.
+//!
+//! Export surfaces: deterministic JSON ([`TimeSeries::to_json`]),
+//! Prometheus-style text exposition ([`TimeSeries::to_prom`]), Chrome
+//! trace counter tracks ([`TimeSeries::counter_tracks`], rendered by
+//! Perfetto as queue-depth and link-utilization timelines next to the
+//! lifecycle spans), and a [`SimTelemetry`] synthesis
+//! ([`TimeSeries::to_sim_telemetry`]) that reuses the PR 5 heatmap
+//! renderers for `repro serve --heatmap`.
+//!
+//! Memory is proportional to windows x models + links — independent of
+//! the request count. All recorders are O(1).
+
+use std::collections::HashMap;
+
+use super::registry::{escape, Histogram, SimTelemetry};
+use super::sketch::QuantileSketch;
+use super::trace::ChromeTrace;
+
+/// EWMA smoothing factor for the drift detectors' mean/variance.
+pub const DRIFT_ALPHA: f64 = 0.25;
+
+/// Drift triggers when a window deviates from the EWMA mean by more than
+/// `DRIFT_SIGMA` EWMA standard deviations...
+pub const DRIFT_SIGMA: f64 = 3.0;
+
+/// ...and by more than this fraction of the mean (absolute floor, so a
+/// near-constant series with tiny variance does not page on noise).
+pub const DRIFT_MIN_REL: f64 = 0.2;
+
+/// Windows observed before a detector may fire (EWMA settle time).
+pub const DRIFT_WARMUP: u64 = 8;
+
+/// Auto-sizing target: when `[telemetry] window_ms = 0`, schedulers size
+/// the window so a run spans about this many windows.
+pub const AUTO_WINDOWS: f64 = 32.0;
+
+/// Hard cap on the window vector, so a wild timestamp cannot OOM the
+/// collector (~2 weeks at the default auto window of a 1 s run).
+const MAX_WINDOWS: usize = 1 << 20;
+
+/// Which per-model signal a drift detector watched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftMetric {
+    /// Per-window arrivals divided by the window width (req/s).
+    ArrivalRate,
+    /// Per-window p99 latency (ms), windows with completions only.
+    P99,
+}
+
+impl DriftMetric {
+    /// Stable export label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftMetric::ArrivalRate => "arrival_rate",
+            DriftMetric::P99 => "p99_ms",
+        }
+    }
+}
+
+/// Direction of a detected shift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftDirection {
+    /// The window value jumped above the EWMA baseline.
+    Up,
+    /// The window value fell below the EWMA baseline.
+    Down,
+}
+
+impl DriftDirection {
+    /// Stable export label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftDirection::Up => "up",
+            DriftDirection::Down => "down",
+        }
+    }
+}
+
+/// A typed drift event emitted by [`TimeSeries::finalize`].
+#[derive(Clone, Debug)]
+pub struct DriftEvent {
+    /// Window index the deviating sample came from.
+    pub window: usize,
+    /// Start time of that window (seconds).
+    pub t_s: f64,
+    /// Model index (into [`TimeSeries::model_names`]).
+    pub model: usize,
+    /// Signal that drifted.
+    pub metric: DriftMetric,
+    /// Direction of the shift.
+    pub direction: DriftDirection,
+    /// The deviating window value.
+    pub value: f64,
+    /// EWMA mean just before the deviating window.
+    pub baseline: f64,
+    /// EWMA standard deviation just before the deviating window.
+    pub sigma: f64,
+}
+
+/// Online EWMA mean/variance change detector (one per model per metric).
+#[derive(Clone, Debug, Default)]
+struct EwmaDetector {
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+impl EwmaDetector {
+    /// Feed one sample; returns `(baseline, sigma, went_up)` when the
+    /// sample deviates from the pre-update EWMA by more than
+    /// `max(DRIFT_SIGMA * sigma, DRIFT_MIN_REL * |mean|)` after warmup.
+    fn observe(&mut self, x: f64) -> Option<(f64, f64, bool)> {
+        self.n += 1;
+        if self.n == 1 {
+            self.mean = x;
+            self.var = 0.0;
+            return None;
+        }
+        let baseline = self.mean;
+        let sigma = self.var.max(0.0).sqrt();
+        let diff = x - self.mean;
+        let incr = DRIFT_ALPHA * diff;
+        self.mean += incr;
+        self.var = (1.0 - DRIFT_ALPHA) * (self.var + diff * incr);
+        if self.n <= DRIFT_WARMUP {
+            return None;
+        }
+        let threshold = (DRIFT_SIGMA * sigma).max(DRIFT_MIN_REL * baseline.abs());
+        if (x - baseline).abs() > threshold {
+            Some((baseline, sigma, x > baseline))
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-model slice of one window.
+#[derive(Clone, Debug, Default)]
+pub struct ModelWindow {
+    /// Requests of this model that arrived in the window.
+    pub arrivals: u64,
+    /// Requests of this model that completed in the window.
+    pub completions: u64,
+    /// Live latency sketch; frozen into the scalars by `finalize`.
+    sketch: QuantileSketch,
+    /// Window p50 latency (ms); 0 until `finalize`, 0 when empty.
+    pub p50_ms: f64,
+    /// Window p99 latency (ms); 0 until `finalize`, 0 when empty.
+    pub p99_ms: f64,
+    /// Window mean latency (ms, exact); 0 until `finalize`.
+    pub mean_ms: f64,
+}
+
+/// One fixed-width collection window.
+#[derive(Clone, Debug, Default)]
+pub struct Window {
+    /// Requests that arrived in the window (all models).
+    pub arrivals: u64,
+    /// Requests that completed in the window (by completion time).
+    pub completions: u64,
+    /// Requests dropped at admission in the window.
+    pub drops: u64,
+    /// Requests shed by deadline-aware admission in the window.
+    pub sheds: u64,
+    /// Queue depth observed at each admission in the window.
+    pub depth: Histogram,
+    /// Per-model slices (index-aligned with `TimeSeries::model_names`).
+    pub models: Vec<ModelWindow>,
+    /// Busy seconds per NoP link (index-aligned with `TimeSeries::links`).
+    pub link_busy_s: Vec<f64>,
+    /// Window p50 over all models (ms); set by `finalize`.
+    pub p50_ms: f64,
+    /// Window p99 over all models (ms); set by `finalize`.
+    pub p99_ms: f64,
+}
+
+/// Sorted, deduplicated union of per-chiplet NoP paths — the link axis of
+/// the time series.
+pub fn link_union(paths: &[Vec<(usize, usize)>]) -> Vec<(usize, usize)> {
+    let mut links: Vec<(usize, usize)> = paths.iter().flatten().copied().collect();
+    links.sort_unstable();
+    links.dedup();
+    links
+}
+
+/// Windowed serving metrics collector. `Default` is a disabled collector
+/// (every recorder is a no-op) so scheduler `reset()` stays cheap; `run()`
+/// installs a live one via [`TimeSeries::new`] once the horizon is known.
+#[derive(Clone, Debug, Default)]
+pub struct TimeSeries {
+    window_s: f64,
+    model_names: Vec<String>,
+    links: Vec<(usize, usize)>,
+    link_index: HashMap<(usize, usize), usize>,
+    chiplets: usize,
+    gateway: usize,
+    windows: Vec<Window>,
+    // Cumulative totals (kept in lock-step with the window sums).
+    arrivals: u64,
+    completions: u64,
+    drops: u64,
+    sheds: u64,
+    link_busy_s: Vec<f64>,
+    link_flits: Vec<u64>,
+    chiplet_flits: Vec<u64>,
+    end_s: f64,
+    drift: Vec<DriftEvent>,
+    finalized: bool,
+}
+
+impl TimeSeries {
+    /// A live collector with `window_s`-second windows over the given
+    /// model names, NoP links (see [`link_union`]) and package shape.
+    /// `window_s` must be positive; non-positive widths fall back to 1 s.
+    pub fn new(
+        window_s: f64,
+        model_names: Vec<String>,
+        links: Vec<(usize, usize)>,
+        chiplets: usize,
+        gateway: usize,
+    ) -> Self {
+        let n_links = links.len();
+        let link_index = links.iter().enumerate().map(|(i, &l)| (l, i)).collect();
+        Self {
+            window_s: if window_s > 0.0 { window_s } else { 1.0 },
+            model_names,
+            links,
+            link_index,
+            chiplets,
+            gateway,
+            link_busy_s: vec![0.0; n_links],
+            link_flits: vec![0; n_links],
+            chiplet_flits: vec![0; chiplets],
+            ..Self::default()
+        }
+    }
+
+    /// True when constructed via [`TimeSeries::new`] (recorders are live).
+    pub fn is_enabled(&self) -> bool {
+        self.window_s > 0.0
+    }
+
+    /// Window width in seconds (0 when disabled).
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// The collected windows (empty until the first recorded event).
+    pub fn windows(&self) -> &[Window] {
+        &self.windows
+    }
+
+    /// Model display names (window model slices align with this).
+    pub fn model_names(&self) -> &[String] {
+        &self.model_names
+    }
+
+    /// The NoP link axis (window `link_busy_s` aligns with this).
+    pub fn links(&self) -> &[(usize, usize)] {
+        &self.links
+    }
+
+    /// Drift events (populated by [`TimeSeries::finalize`]).
+    pub fn drift_events(&self) -> &[DriftEvent] {
+        &self.drift
+    }
+
+    /// Cumulative `(arrivals, completions, drops, sheds)`.
+    pub fn totals(&self) -> (u64, u64, u64, u64) {
+        (self.arrivals, self.completions, self.drops, self.sheds)
+    }
+
+    /// End-of-run time in seconds (set by [`TimeSeries::finalize`]).
+    pub fn end_s(&self) -> f64 {
+        self.end_s
+    }
+
+    fn window_mut(&mut self, t: f64) -> &mut Window {
+        let idx = if t > 0.0 {
+            ((t / self.window_s) as usize).min(MAX_WINDOWS - 1)
+        } else {
+            0
+        };
+        if idx >= self.windows.len() {
+            let (models, links) = (self.model_names.len(), self.links.len());
+            self.windows.resize_with(idx + 1, || Window {
+                models: vec![ModelWindow::default(); models],
+                link_busy_s: vec![0.0; links],
+                ..Window::default()
+            });
+        }
+        &mut self.windows[idx]
+    }
+
+    /// A request of `model` arrived at `t`.
+    pub fn record_arrival(&mut self, t: f64, model: usize) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.arrivals += 1;
+        let w = self.window_mut(t);
+        w.arrivals += 1;
+        if let Some(m) = w.models.get_mut(model) {
+            m.arrivals += 1;
+        }
+    }
+
+    /// Queue depth observed when admitting a request at `t`.
+    pub fn record_depth(&mut self, t: f64, depth: usize) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.window_mut(t).depth.record(depth as f64);
+    }
+
+    /// A request of `model` was dropped at admission at `t`.
+    pub fn record_drop(&mut self, t: f64, model: usize) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.drops += 1;
+        self.window_mut(t).drops += 1;
+        let _ = model;
+    }
+
+    /// A request of `model` was shed by admission control at `t`.
+    pub fn record_shed(&mut self, t: f64, model: usize) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.sheds += 1;
+        self.window_mut(t).sheds += 1;
+        let _ = model;
+    }
+
+    /// A request of `model` completed at `t` with the given latency.
+    pub fn record_completion(&mut self, t: f64, model: usize, latency_ms: f64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.completions += 1;
+        let w = self.window_mut(t);
+        w.completions += 1;
+        if let Some(m) = w.models.get_mut(model) {
+            m.completions += 1;
+            m.sketch.record(latency_ms);
+        }
+    }
+
+    /// NoP link `link` was busy for `busy_s` seconds serializing `flits`
+    /// flits, starting at `t` (attributed whole to `t`'s window).
+    pub fn record_link_busy(&mut self, t: f64, link: (usize, usize), busy_s: f64, flits: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        if let Some(&i) = self.link_index.get(&link) {
+            self.link_busy_s[i] += busy_s;
+            self.link_flits[i] += flits;
+            self.window_mut(t).link_busy_s[i] += busy_s;
+        }
+    }
+
+    /// `flits` flits were delivered to `chiplet` (heatmap endpoints).
+    pub fn record_ejected(&mut self, chiplet: usize, flits: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        if let Some(c) = self.chiplet_flits.get_mut(chiplet) {
+            *c += flits;
+        }
+    }
+
+    /// Freeze the per-window quantile scalars and run the drift
+    /// detectors. Idempotent; recorders called afterwards are ignored by
+    /// the exports' contract (the schedulers finalize after draining).
+    pub fn finalize(&mut self, end_s: f64) {
+        if !self.is_enabled() || self.finalized {
+            return;
+        }
+        self.finalized = true;
+        self.end_s = end_s.max(0.0);
+        for w in &mut self.windows {
+            let mut all = QuantileSketch::new();
+            for m in &mut w.models {
+                if !m.sketch.is_empty() {
+                    m.p50_ms = m.sketch.quantile(50.0);
+                    m.p99_ms = m.sketch.quantile(99.0);
+                    m.mean_ms = m.sketch.mean();
+                    all.merge(&m.sketch);
+                }
+            }
+            if !all.is_empty() {
+                w.p50_ms = all.quantile(50.0);
+                w.p99_ms = all.quantile(99.0);
+            }
+        }
+        // Per-model drift: arrival rate over every window, p99 over
+        // windows that completed at least one request of the model.
+        for m in 0..self.model_names.len() {
+            let mut rate = EwmaDetector::default();
+            let mut p99 = EwmaDetector::default();
+            for (wi, w) in self.windows.iter().enumerate() {
+                let mw = &w.models[m];
+                let t_s = wi as f64 * self.window_s;
+                if let Some((baseline, sigma, up)) =
+                    rate.observe(mw.arrivals as f64 / self.window_s)
+                {
+                    self.drift.push(DriftEvent {
+                        window: wi,
+                        t_s,
+                        model: m,
+                        metric: DriftMetric::ArrivalRate,
+                        direction: if up {
+                            DriftDirection::Up
+                        } else {
+                            DriftDirection::Down
+                        },
+                        value: mw.arrivals as f64 / self.window_s,
+                        baseline,
+                        sigma,
+                    });
+                }
+                if mw.completions > 0 {
+                    if let Some((baseline, sigma, up)) = p99.observe(mw.p99_ms) {
+                        self.drift.push(DriftEvent {
+                            window: wi,
+                            t_s,
+                            model: m,
+                            metric: DriftMetric::P99,
+                            direction: if up {
+                                DriftDirection::Up
+                            } else {
+                                DriftDirection::Down
+                            },
+                            value: mw.p99_ms,
+                            baseline,
+                            sigma,
+                        });
+                    }
+                }
+            }
+        }
+        // Deterministic export order: by window, then model, then metric.
+        self.drift.sort_by(|a, b| {
+            (a.window, a.model, a.metric.name()).cmp(&(b.window, b.model, b.metric.name()))
+        });
+    }
+
+    /// Deterministic JSON time series. The caller passes the
+    /// `ServeReport` totals so the export carries its own reconciliation
+    /// block (`totals` must mirror `report`; `scripts/check_metrics.py`
+    /// and a property test gate this).
+    pub fn to_json(&self, requests: usize, completed: usize, dropped: usize, shed: usize) -> String {
+        let mut windows = Vec::with_capacity(self.windows.len());
+        for (wi, w) in self.windows.iter().enumerate() {
+            let models: Vec<String> = self
+                .model_names
+                .iter()
+                .zip(&w.models)
+                .map(|(name, m)| {
+                    format!(
+                        "{{\"name\":\"{}\",\"arrivals\":{},\"completions\":{},\
+                         \"p50_ms\":{:.6},\"p99_ms\":{:.6},\"mean_ms\":{:.6}}}",
+                        escape(name),
+                        m.arrivals,
+                        m.completions,
+                        m.p50_ms,
+                        m.p99_ms,
+                        m.mean_ms
+                    )
+                })
+                .collect();
+            let links: Vec<String> = self
+                .links
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| self.link_busy_s[i] > 0.0)
+                .map(|(i, &(a, b))| {
+                    format!(
+                        "{{\"src\":{a},\"dst\":{b},\"utilization\":{:.6}}}",
+                        w.link_busy_s[i] / self.window_s
+                    )
+                })
+                .collect();
+            windows.push(format!(
+                "{{\"t_s\":{:.6},\"arrivals\":{},\"completions\":{},\"drops\":{},\
+                 \"sheds\":{},\"queue_depth\":{{\"mean\":{:.6},\"max\":{:.6},\"p99\":{:.6}}},\
+                 \"p50_ms\":{:.6},\"p99_ms\":{:.6},\"models\":[{}],\"links\":[{}]}}",
+                wi as f64 * self.window_s,
+                w.arrivals,
+                w.completions,
+                w.drops,
+                w.sheds,
+                w.depth.mean(),
+                w.depth.max_sample(),
+                w.depth.quantile(99.0),
+                w.p50_ms,
+                w.p99_ms,
+                models.join(","),
+                links.join(",")
+            ));
+        }
+        let drift: Vec<String> = self
+            .drift
+            .iter()
+            .map(|d| {
+                format!(
+                    "{{\"window\":{},\"t_s\":{:.6},\"model\":\"{}\",\"metric\":\"{}\",\
+                     \"direction\":\"{}\",\"value\":{:.6},\"baseline\":{:.6},\"sigma\":{:.6}}}",
+                    d.window,
+                    d.t_s,
+                    escape(self.model_name(d.model)),
+                    d.metric.name(),
+                    d.direction.name(),
+                    d.value,
+                    d.baseline,
+                    d.sigma
+                )
+            })
+            .collect();
+        format!(
+            "{{\"window_s\":{:.6},\"end_s\":{:.6},\"windows\":[\n{}\n],\
+             \"totals\":{{\"arrivals\":{},\"completions\":{},\"drops\":{},\"sheds\":{}}},\
+             \"report\":{{\"requests\":{},\"completed\":{},\"dropped\":{},\"shed\":{}}},\
+             \"drift_events\":[{}]}}\n",
+            self.window_s,
+            self.end_s,
+            windows.join(",\n"),
+            self.arrivals,
+            self.completions,
+            self.drops,
+            self.sheds,
+            requests,
+            completed,
+            dropped,
+            shed,
+            drift.join(",")
+        )
+    }
+
+    fn model_name(&self, m: usize) -> &str {
+        self.model_names.get(m).map_or("?", |s| s.as_str())
+    }
+
+    /// Prometheus-style text exposition of the run's totals, latency
+    /// quantiles (from the merged window sketches), drift-event count and
+    /// per-link NoP utilization. Deterministic for a given run.
+    pub fn to_prom(&self, requests: usize, completed: usize, dropped: usize, shed: usize) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE imcnoc_requests_total counter\n");
+        out.push_str(&format!("imcnoc_requests_total {requests}\n"));
+        out.push_str("# TYPE imcnoc_requests_outcome_total counter\n");
+        for (outcome, v) in [("completed", completed), ("dropped", dropped), ("shed", shed)] {
+            out.push_str(&format!(
+                "imcnoc_requests_outcome_total{{outcome=\"{outcome}\"}} {v}\n"
+            ));
+        }
+        // Global and per-model latency quantiles from the merged sketches.
+        let mut global = QuantileSketch::new();
+        let mut per_model: Vec<QuantileSketch> =
+            vec![QuantileSketch::new(); self.model_names.len()];
+        for w in &self.windows {
+            for (m, mw) in w.models.iter().enumerate() {
+                global.merge(&mw.sketch);
+                per_model[m].merge(&mw.sketch);
+            }
+        }
+        out.push_str("# TYPE imcnoc_latency_ms summary\n");
+        for (q, p) in [("0.5", 50.0), ("0.99", 99.0)] {
+            out.push_str(&format!(
+                "imcnoc_latency_ms{{quantile=\"{q}\"}} {:.6}\n",
+                global.quantile(p)
+            ));
+        }
+        out.push_str(&format!("imcnoc_latency_ms_sum {:.6}\n", global.sum()));
+        out.push_str(&format!("imcnoc_latency_ms_count {}\n", global.count()));
+        out.push_str("# TYPE imcnoc_model_latency_ms summary\n");
+        for (name, s) in self.model_names.iter().zip(&per_model) {
+            for (q, p) in [("0.5", 50.0), ("0.99", 99.0)] {
+                out.push_str(&format!(
+                    "imcnoc_model_latency_ms{{model=\"{}\",quantile=\"{q}\"}} {:.6}\n",
+                    escape(name),
+                    s.quantile(p)
+                ));
+            }
+        }
+        out.push_str("# TYPE imcnoc_windows_total counter\n");
+        out.push_str(&format!("imcnoc_windows_total {}\n", self.windows.len()));
+        out.push_str("# TYPE imcnoc_drift_events_total counter\n");
+        out.push_str(&format!("imcnoc_drift_events_total {}\n", self.drift.len()));
+        out.push_str("# TYPE imcnoc_nop_link_utilization gauge\n");
+        let denom = if self.end_s > 0.0 { self.end_s } else { 1.0 };
+        for (i, &(a, b)) in self.links.iter().enumerate() {
+            if self.link_busy_s[i] > 0.0 {
+                out.push_str(&format!(
+                    "imcnoc_nop_link_utilization{{link=\"{a}->{b}\"}} {:.6}\n",
+                    self.link_busy_s[i] / denom
+                ));
+            }
+        }
+        out
+    }
+
+    /// Append counter tracks to a Chrome trace: one cumulative
+    /// `serving totals` track (its final values reconcile with the
+    /// `otherData` report totals — gated by `scripts/check_trace.py`),
+    /// one `queue depth` track (per-window mean/max), and one
+    /// `nop link a-b` utilization track per link that saw traffic. Each
+    /// window emits at its end time, so every track's timestamps are
+    /// strictly increasing.
+    pub fn counter_tracks(&self, trace: &mut ChromeTrace) {
+        if !self.is_enabled() {
+            return;
+        }
+        let (mut completed, mut dropped, mut shed) = (0u64, 0u64, 0u64);
+        for (wi, w) in self.windows.iter().enumerate() {
+            let ts = (wi as f64 + 1.0) * self.window_s * 1e6;
+            completed += w.completions;
+            dropped += w.drops;
+            shed += w.sheds;
+            trace.counter_int(
+                "serving totals",
+                ts,
+                &[("completed", completed), ("dropped", dropped), ("shed", shed)],
+            );
+            trace.counter(
+                "queue depth",
+                ts,
+                &[("mean", w.depth.mean()), ("max", w.depth.max_sample())],
+            );
+            for (i, &(a, b)) in self.links.iter().enumerate() {
+                if self.link_busy_s[i] > 0.0 {
+                    trace.counter(
+                        &format!("nop link {a}-{b}"),
+                        ts,
+                        &[("utilization", w.link_busy_s[i] / self.window_s)],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Synthesize a [`SimTelemetry`] from the cumulative totals so the
+    /// PR 5 heatmap renderers work on serving runs. Link flits are the
+    /// real recorded counts when the scheduler knew them (cycles derived
+    /// from the implied per-flit serialization time); otherwise busy
+    /// fractions are scaled onto a synthetic 10^6-cycle clock. Either
+    /// way `link_utilization(i) == busy_s[i] / end_s` up to rounding.
+    pub fn to_sim_telemetry(&self) -> SimTelemetry {
+        let mut t = SimTelemetry::sized(self.links.clone(), self.chiplets.max(1));
+        let total_flits: u64 = self.link_flits.iter().sum();
+        let total_busy: f64 = self.link_busy_s.iter().sum();
+        let end = if self.end_s > 0.0 { self.end_s } else { 1.0 };
+        if total_flits > 0 {
+            let cycle_s = total_busy / total_flits as f64;
+            t.cycles = if cycle_s > 0.0 {
+                (end / cycle_s).round() as u64
+            } else {
+                0
+            };
+            t.link_flits.copy_from_slice(&self.link_flits);
+        } else if total_busy > 0.0 {
+            const SCALE: f64 = 1e6;
+            t.cycles = SCALE as u64;
+            for (i, f) in t.link_flits.iter_mut().enumerate() {
+                *f = ((self.link_busy_s[i] / end) * SCALE).round() as u64;
+            }
+        }
+        for (c, &f) in self.chiplet_flits.iter().enumerate() {
+            t.ejected[c] = f;
+        }
+        let delivered: u64 = self.chiplet_flits.iter().sum();
+        if let Some(g) = t.injected.get_mut(self.gateway) {
+            *g = delivered;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collector() -> TimeSeries {
+        TimeSeries::new(
+            0.1,
+            vec!["A".into(), "B".into()],
+            vec![(0, 1), (1, 2)],
+            3,
+            0,
+        )
+    }
+
+    #[test]
+    fn disabled_default_ignores_recorders() {
+        let mut ts = TimeSeries::default();
+        assert!(!ts.is_enabled());
+        ts.record_arrival(0.0, 0);
+        ts.record_completion(0.1, 0, 1.0);
+        ts.finalize(1.0);
+        assert!(ts.windows().is_empty());
+        assert_eq!(ts.totals(), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn events_land_in_the_right_windows_and_totals_reconcile() {
+        let mut ts = collector();
+        ts.record_arrival(0.01, 0); // window 0
+        ts.record_depth(0.01, 1);
+        ts.record_arrival(0.15, 1); // window 1
+        ts.record_drop(0.15, 1);
+        ts.record_arrival(0.31, 0); // window 3
+        ts.record_shed(0.31, 0);
+        ts.record_completion(0.09, 0, 2.0); // window 0
+        ts.finalize(0.4);
+        assert_eq!(ts.windows().len(), 4);
+        assert_eq!(ts.windows()[0].arrivals, 1);
+        assert_eq!(ts.windows()[0].completions, 1);
+        assert_eq!(ts.windows()[1].drops, 1);
+        assert_eq!(ts.windows()[3].sheds, 1);
+        assert_eq!(ts.windows()[0].models[0].arrivals, 1);
+        assert_eq!(ts.windows()[1].models[1].arrivals, 1);
+        let (a, c, d, s) = ts.totals();
+        assert_eq!((a, c, d, s), (3, 1, 1, 1));
+        let wa: u64 = ts.windows().iter().map(|w| w.arrivals).sum();
+        assert_eq!(wa, a);
+        // Per-window quantiles frozen by finalize (single sample: exact).
+        assert_eq!(ts.windows()[0].models[0].p50_ms, 2.0);
+        assert_eq!(ts.windows()[0].p99_ms, 2.0);
+    }
+
+    #[test]
+    fn link_busy_feeds_windows_totals_and_sim_telemetry() {
+        let mut ts = collector();
+        ts.record_link_busy(0.05, (0, 1), 0.02, 10);
+        ts.record_link_busy(0.15, (0, 1), 0.04, 20);
+        ts.record_link_busy(0.15, (9, 9), 1.0, 5); // unknown link ignored
+        ts.record_ejected(1, 30);
+        ts.finalize(0.2);
+        assert_eq!(ts.windows().len(), 2);
+        assert!((ts.windows()[0].link_busy_s[0] - 0.02).abs() < 1e-12);
+        assert!((ts.windows()[1].link_busy_s[0] - 0.04).abs() < 1e-12);
+        let telem = ts.to_sim_telemetry();
+        assert_eq!(telem.link_flits[0], 30);
+        assert_eq!(telem.ejected[1], 30);
+        assert_eq!(telem.injected[0], 30); // gateway injects all
+        // utilization == busy / end: 0.06 / 0.2 = 0.3.
+        assert!((telem.link_utilization(0) - 0.3).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sim_telemetry_falls_back_to_synthetic_cycles_without_flits() {
+        let mut ts = collector();
+        ts.record_link_busy(0.0, (1, 2), 0.05, 0);
+        ts.finalize(0.2);
+        let telem = ts.to_sim_telemetry();
+        assert_eq!(telem.cycles, 1_000_000);
+        assert!((telem.link_utilization(1) - 0.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn drift_detector_fires_on_a_step_change() {
+        let mut ts = TimeSeries::new(1.0, vec!["A".into()], vec![], 1, 0);
+        // 12 calm windows at 10 req/s, then a 5x burst.
+        for w in 0..12 {
+            for i in 0..10 {
+                ts.record_arrival(w as f64 + i as f64 / 10.0 + 0.01, 0);
+            }
+        }
+        for i in 0..50 {
+            ts.record_arrival(12.0 + i as f64 / 50.0 + 0.001, 0);
+        }
+        ts.finalize(13.0);
+        let events = ts.drift_events();
+        assert!(
+            events
+                .iter()
+                .any(|d| d.metric == DriftMetric::ArrivalRate
+                    && d.direction == DriftDirection::Up
+                    && d.window == 12),
+            "no up-drift at the burst window: {events:?}"
+        );
+        // No event during the calm warmup plateau.
+        assert!(events.iter().all(|d| d.window >= 12), "{events:?}");
+    }
+
+    #[test]
+    fn constant_series_never_drifts() {
+        let mut ts = TimeSeries::new(1.0, vec!["A".into()], vec![], 1, 0);
+        for w in 0..40 {
+            for i in 0..8 {
+                ts.record_arrival(w as f64 + i as f64 / 8.0 + 0.01, 0);
+                ts.record_completion(w as f64 + i as f64 / 8.0 + 0.02, 0, 5.0);
+            }
+        }
+        ts.finalize(40.0);
+        assert!(ts.drift_events().is_empty(), "{:?}", ts.drift_events());
+    }
+
+    #[test]
+    fn json_export_is_deterministic_and_reconciles() {
+        let mut ts = collector();
+        ts.record_arrival(0.01, 0);
+        ts.record_completion(0.05, 0, 1.5);
+        ts.record_link_busy(0.01, (0, 1), 0.01, 4);
+        ts.finalize(0.1);
+        let j1 = ts.to_json(1, 1, 0, 0);
+        let j2 = ts.to_json(1, 1, 0, 0);
+        assert_eq!(j1, j2);
+        assert!(j1.contains("\"totals\":{\"arrivals\":1,\"completions\":1"), "{j1}");
+        assert!(j1.contains("\"report\":{\"requests\":1,\"completed\":1"), "{j1}");
+        assert!(j1.contains("\"window_s\":0.100000"), "{j1}");
+        assert!(j1.contains("\"name\":\"A\""), "{j1}");
+        assert!(j1.contains("\"src\":0,\"dst\":1"), "{j1}");
+    }
+
+    #[test]
+    fn prom_export_has_totals_quantiles_and_links() {
+        let mut ts = collector();
+        ts.record_arrival(0.01, 0);
+        ts.record_completion(0.05, 0, 1.5);
+        ts.record_link_busy(0.01, (0, 1), 0.01, 4);
+        ts.finalize(0.1);
+        let prom = ts.to_prom(1, 1, 0, 0);
+        assert!(prom.contains("imcnoc_requests_total 1"), "{prom}");
+        assert!(
+            prom.contains("imcnoc_requests_outcome_total{outcome=\"completed\"} 1"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("imcnoc_latency_ms{quantile=\"0.99\"} 1.500000"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("imcnoc_model_latency_ms{model=\"A\",quantile=\"0.5\"} 1.500000"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("imcnoc_nop_link_utilization{link=\"0->1\"} 0.100000"),
+            "{prom}"
+        );
+    }
+
+    #[test]
+    fn counter_tracks_are_cumulative_and_monotonic() {
+        let mut ts = collector();
+        ts.record_arrival(0.01, 0);
+        ts.record_completion(0.05, 0, 1.0);
+        ts.record_arrival(0.15, 1);
+        ts.record_completion(0.18, 1, 1.0);
+        ts.record_drop(0.15, 0);
+        ts.record_link_busy(0.01, (0, 1), 0.01, 2);
+        ts.finalize(0.2);
+        let mut trace = ChromeTrace::new();
+        ts.counter_tracks(&mut trace);
+        let json = trace.to_json();
+        // Final cumulative totals: 2 completed, 1 dropped, 0 shed.
+        assert!(
+            json.contains("\"completed\":2,\"dropped\":1,\"shed\":0"),
+            "{json}"
+        );
+        assert!(json.contains("\"name\":\"queue depth\""), "{json}");
+        assert!(json.contains("\"name\":\"nop link 0-1\""), "{json}");
+    }
+}

@@ -103,6 +103,23 @@ impl ChromeTrace {
         ));
     }
 
+    /// A counter ("C") event with integer series values (no decimal
+    /// point), for counts whose exports must reconcile exactly — e.g.
+    /// the cumulative `serving totals` track checked by
+    /// `scripts/check_trace.py` against the `otherData` report totals.
+    pub fn counter_int(&mut self, name: &str, ts_us: f64, series: &[(&str, u64)]) {
+        let parts: Vec<String> = series
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{v}", escape(k)))
+            .collect();
+        self.events.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"C\",\"ts\":{},\"pid\":1,\"tid\":0,\"args\":{{{}}}}}",
+            escape(name),
+            us(ts_us),
+            parts.join(",")
+        ));
+    }
+
     /// A metadata ("M") event: `kind` is `process_name` or `thread_name`.
     pub fn name_track(&mut self, kind: &str, tid: u64, name: &str) {
         self.events.push(format!(
@@ -263,6 +280,18 @@ mod tests {
         let j1 = spans_to_trace(&spans, &["A", "B"]).to_json();
         let j2 = spans_to_trace(&spans, &["A", "B"]).to_json();
         assert_eq!(j1, j2);
+    }
+
+    #[test]
+    fn counter_int_emits_integer_args() {
+        let mut t = ChromeTrace::new();
+        t.counter_int("serving totals", 1000.0, &[("completed", 5), ("dropped", 0)]);
+        let json = t.to_json();
+        assert!(
+            json.contains("\"args\":{\"completed\":5,\"dropped\":0}"),
+            "{json}"
+        );
+        assert!(json.contains("\"ph\":\"C\""), "{json}");
     }
 
     #[test]

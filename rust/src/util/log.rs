@@ -7,10 +7,14 @@
 //! level. The level comes from the `REPRO_LOG` environment variable
 //! (`warn`, `info` or `debug`; read once, lazily) and can be overridden
 //! programmatically via [`set_level`] — the CLI maps `--verbose` to
-//! [`Level::Debug`]. Messages print to stderr as `[warn] …` so machine
+//! [`Level::Debug`]. Messages print to stderr as `[   1.234s warn] …` —
+//! seconds elapsed since the first log call plus the level — so
+//! long-running serving sweeps can be read as a timeline while machine
 //! output on stdout (tables, JSON) stays clean.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Log severity, ordered: `Warn < Info < Debug`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -77,10 +81,21 @@ pub fn enabled(l: Level) -> bool {
     l <= level()
 }
 
+/// Process-relative clock epoch: set by the first log call (not process
+/// start — a `OnceLock<Instant>` is the only portable zero-dependency
+/// anchor), so the first line reads `0.000s` and later lines measure
+/// elapsed wall time from there.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Seconds elapsed since the first log call.
+pub fn elapsed_s() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
 /// Print one formatted line to stderr; prefer the level macros.
 pub fn emit(l: Level, msg: std::fmt::Arguments<'_>) {
     if enabled(l) {
-        eprintln!("[{}] {}", l.tag(), msg);
+        eprintln!("[{:>8.3}s {}] {}", elapsed_s(), l.tag(), msg);
     }
 }
 
@@ -134,5 +149,13 @@ mod tests {
         assert!(enabled(Level::Debug));
         // Restore the default so other tests see stock behavior.
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn elapsed_clock_is_monotonic() {
+        let a = elapsed_s();
+        let b = elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
     }
 }

@@ -143,6 +143,20 @@ fn serve_trace_out_and_chiplet_heatmap() {
 }
 
 #[test]
+fn serve_mix_metrics_out_smoke() {
+    // The tier-1 CI smoke run for the time-series surface: the default
+    // mix under --fast writes a windowed metrics document that the
+    // scripts/check_metrics.py gate can reconcile.
+    let path = std::env::temp_dir().join("imcnoc_cli_integration_metrics.json");
+    let path = path.to_str().unwrap().to_string();
+    run(&argv(&["serve", "--mix", "--fast", "--metrics-out", path.as_str()])).unwrap();
+    let json = std::fs::read_to_string(&path).unwrap();
+    assert!(json.contains("\"windows\""), "no windows array");
+    assert!(json.contains("\"totals\""), "no totals object");
+    assert!(json.contains("\"drift_events\""), "no drift array");
+}
+
+#[test]
 fn unknown_inputs_error_cleanly() {
     assert!(run(&argv(&["figure", "99"])).is_err());
     assert!(run(&argv(&["table"])).is_err());

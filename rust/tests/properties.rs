@@ -7,7 +7,7 @@ use imcnoc::config::{
     Admission, ArchConfig, Config, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig,
     TelemetryConfig, WorkloadConfig,
 };
-use imcnoc::coordinator::mix::{serve_mix_traced, MixScheduler, MixServingModel};
+use imcnoc::coordinator::mix::{serve_mix_metrics, serve_mix_traced, MixScheduler, MixServingModel};
 use imcnoc::coordinator::scheduler::{ChipletScheduler, Policy, ServingModel};
 use imcnoc::dnn::{model_zoo, models};
 use imcnoc::mapping::{ChipletPartition, InjectionMatrix, Mapping};
@@ -16,7 +16,9 @@ use imcnoc::noc::topology::{Network, Topology};
 use imcnoc::noc::AnalyticalModel;
 use imcnoc::nop::sim::{analytical_latency, saturation_rate, uniform_nop_flows, NopSim};
 use imcnoc::nop::topology::{NopNetwork, NopTopology};
-use imcnoc::telemetry::spans_to_trace;
+use imcnoc::telemetry::sketch::RELATIVE_ERROR;
+use imcnoc::telemetry::{spans_to_trace, QuantileSketch};
+use imcnoc::util::percentile;
 use imcnoc::util::proptest::check;
 use imcnoc::workload::{ArrivalKind, ArrivalProcess, PlacementPolicy, Trace, WorkloadMix};
 
@@ -492,6 +494,8 @@ fn prop_config_ini_roundtrip() {
                 enabled: *g.pick(&[false, true]),
                 trace_out: "trace.json".to_string(),
                 heatmap: *g.pick(&[false, true]),
+                window_ms: g.f64_in(0.0, 100.0).round(),
+                metrics_out: "metrics.json".to_string(),
             },
             sim: Default::default(),
         };
@@ -606,6 +610,85 @@ fn prop_mix_serving_conserves_requests_across_policies_and_generators() {
         }
         if report.p99_ms < report.p50_ms {
             return Err(format!("p99 {} < p50 {}", report.p99_ms, report.p50_ms));
+        }
+        // Tentpole contract: the windowed time-series closes the books
+        // against the report exactly — totals, per-window sums, per-window
+        // model splits, and per-model sums across windows.
+        let ts = sched.timeseries();
+        let expect = (
+            report.requests as u64,
+            report.completed as u64,
+            report.dropped as u64,
+            report.shed as u64,
+        );
+        if ts.totals() != expect {
+            return Err(format!(
+                "time-series totals {:?} != report {expect:?}",
+                ts.totals()
+            ));
+        }
+        let mut win = (0u64, 0u64, 0u64, 0u64);
+        let mut per_model = vec![(0u64, 0u64); ts.model_names().len()];
+        for w in ts.windows() {
+            let m_arr: u64 = w.models.iter().map(|m| m.arrivals).sum();
+            let m_comp: u64 = w.models.iter().map(|m| m.completions).sum();
+            if m_arr != w.arrivals || m_comp != w.completions {
+                return Err(format!(
+                    "window model splits ({m_arr}, {m_comp}) != window counters ({}, {})",
+                    w.arrivals, w.completions
+                ));
+            }
+            win.0 += w.arrivals;
+            win.1 += w.completions;
+            win.2 += w.drops;
+            win.3 += w.sheds;
+            for (acc, m) in per_model.iter_mut().zip(&w.models) {
+                acc.0 += m.arrivals;
+                acc.1 += m.completions;
+            }
+        }
+        if win != expect {
+            return Err(format!("window sums {win:?} != report {expect:?}"));
+        }
+        for (pm, acc) in report.per_model.iter().zip(&per_model) {
+            if (pm.offered as u64, pm.completed as u64) != *acc {
+                return Err(format!(
+                    "{}: summed windows {acc:?} != per-model ({}, {})",
+                    pm.model, pm.offered, pm.completed
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sketch_quantiles_within_documented_error_bound() {
+    // Tentpole contract: the streaming log-bucket sketch reproduces any
+    // quantile of an arbitrary positive sample set within its documented
+    // relative-error bound of the exact sort-based percentile, at any
+    // sample count (including n = 1, where every quantile is that sample).
+    check("sketch-quantile-error", 60, |g| {
+        let n = g.usize_in(1, 400);
+        let mut xs = Vec::with_capacity(n);
+        let mut sk = QuantileSketch::new();
+        for _ in 0..n {
+            // Log-uniform over six decades — microsecond to minute
+            // latencies in ms, the sketch's intended dynamic range.
+            let v = 10f64.powf(g.f64_in(-3.0, 3.0));
+            xs.push(v);
+            sk.record(v);
+        }
+        if sk.count() != n as u64 {
+            return Err(format!("count {} != {n}", sk.count()));
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let exact = percentile(&xs, p);
+            let got = sk.quantile(p);
+            let tol = RELATIVE_ERROR * exact.abs() + 1e-12;
+            if (got - exact).abs() > tol {
+                return Err(format!("p{p}: sketch {got} vs exact {exact} (tol {tol})"));
+            }
         }
         Ok(())
     });
@@ -841,4 +924,42 @@ fn trace_export_deterministic_for_identical_seed() {
     assert!(first.contains("\"traceEvents\""), "not a chrome trace");
     assert!(first.len() > 200, "suspiciously small export: {first}");
     assert_eq!(first, second, "equal seeds must export identical traces");
+}
+
+#[test]
+fn metrics_export_deterministic_for_identical_seed() {
+    // Satellite contract: an identical `[serving] seed` yields a
+    // byte-identical `--metrics-out` JSON document (windowed counters,
+    // sketch quantiles and drift events are all derived from the
+    // deterministic serving clock; floats print at fixed precision).
+    let arch = ArchConfig::default();
+    let noc = NocConfig::default();
+    let sim = SimConfig::default();
+    let nop = NopConfig {
+        topology: NopTopology::Mesh,
+        chiplets: 4,
+        ..NopConfig::default()
+    };
+    let serving = ServingConfig {
+        requests: 150,
+        seed: 0xFEED,
+        ..ServingConfig::default()
+    };
+    let workload = WorkloadConfig {
+        mix: WorkloadMix::parse("MLP:1:0,LeNet-5:1:0").unwrap(),
+        arrival: ArrivalKind::Bursty,
+        frames_alpha: 1.5,
+        ..WorkloadConfig::default()
+    };
+    let export = || {
+        let (_, _, report, _, ts) =
+            serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &workload, 0.0).unwrap();
+        ts.to_json(report.requests, report.completed, report.dropped, report.shed)
+    };
+    let first = export();
+    let second = export();
+    assert!(first.contains("\"windows\""), "no windows array: {first}");
+    assert!(first.contains("\"drift_events\""), "no drift array");
+    assert!(first.len() > 200, "suspiciously small export: {first}");
+    assert_eq!(first, second, "equal seeds must export identical metrics");
 }

@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Windowed-metrics sanity gate for CI.
+
+Usage: check_metrics.py METRICS.json
+
+Validates a `repro serve --metrics-out` export (the JSON form): the
+document must parse, windows must tile the run (t_s == index * window_s,
+strictly increasing), every counter must be a non-negative integer, the
+per-window model splits must sum to the window counters, the summed
+windows must equal the cumulative `totals` block, and `totals` must
+mirror the `report` block stamped from the `ServeReport` (arrivals ==
+requests, completions == completed, drops == dropped, sheds == shed).
+Quantiles must satisfy p99 >= p50 >= 0, link utilizations must be finite
+and non-negative (a serialization burst recorded at its start time may
+nudge one window past 1.0, so the per-window ceiling is 2.0), and drift
+events must reference real windows/models with legal metric/direction
+labels.
+"""
+
+import json
+import math
+import sys
+
+DRIFT_METRICS = {"arrival_rate", "p99_ms"}
+DRIFT_DIRECTIONS = {"up", "down"}
+# Binned-at-start tolerance for a single window's link utilization.
+UTIL_CEILING = 2.0
+
+
+def fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def count(obj, key, where):
+    v = obj.get(key)
+    if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+        fail(f"{where}.{key} missing or not a count: {v!r}")
+    return v
+
+
+def num(obj, key, where):
+    v = obj.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool) or not math.isfinite(v):
+        fail(f"{where}.{key} missing or not finite: {v!r}")
+    return v
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    window_s = num(doc, "window_s", "doc")
+    if window_s <= 0:
+        fail(f"window_s {window_s} must be positive")
+    end_s = num(doc, "end_s", "doc")
+    if end_s < 0:
+        fail(f"end_s {end_s} must be non-negative")
+
+    windows = doc.get("windows")
+    if not isinstance(windows, list) or not windows:
+        fail("windows must be a non-empty list")
+    model_names = None
+    sums = {"arrivals": 0, "completions": 0, "drops": 0, "sheds": 0}
+    per_model = {}
+    for wi, w in enumerate(windows):
+        where = f"windows[{wi}]"
+        if not isinstance(w, dict):
+            fail(f"{where} is not an object")
+        t_s = num(w, "t_s", where)
+        if abs(t_s - wi * window_s) > 1e-6 * max(1.0, wi * window_s):
+            fail(f"{where}.t_s {t_s} != {wi} * window_s {window_s}")
+        for key in sums:
+            sums[key] += count(w, key, where)
+        p50 = num(w, "p50_ms", where)
+        p99 = num(w, "p99_ms", where)
+        if not 0 <= p50 <= p99:
+            fail(f"{where}: p99 {p99} < p50 {p50} (or negative)")
+        depth = w.get("queue_depth")
+        if not isinstance(depth, dict):
+            fail(f"{where}.queue_depth missing")
+        d_mean = num(depth, "mean", f"{where}.queue_depth")
+        d_max = num(depth, "max", f"{where}.queue_depth")
+        if d_mean < 0 or d_max < 0 or d_mean > d_max + 1e-9:
+            fail(f"{where}: queue depth mean {d_mean} / max {d_max}")
+        models = w.get("models")
+        if not isinstance(models, list):
+            fail(f"{where}.models missing")
+        names = [m.get("name") for m in models]
+        if model_names is None:
+            model_names = names
+        elif names != model_names:
+            fail(f"{where}: model order {names} != {model_names}")
+        m_arr = m_comp = 0
+        for m in models:
+            mw = f"{where}.models[{m.get('name')!r}]"
+            m_arr += count(m, "arrivals", mw)
+            m_comp += count(m, "completions", mw)
+            mp50 = num(m, "p50_ms", mw)
+            mp99 = num(m, "p99_ms", mw)
+            if not 0 <= mp50 <= mp99:
+                fail(f"{mw}: p99 {mp99} < p50 {mp50} (or negative)")
+            if num(m, "mean_ms", mw) < 0:
+                fail(f"{mw}: negative mean")
+            acc = per_model.setdefault(m["name"], [0, 0])
+            acc[0] += m["arrivals"]
+            acc[1] += m["completions"]
+        if m_arr != w["arrivals"] or m_comp != w["completions"]:
+            fail(
+                f"{where}: model splits ({m_arr}, {m_comp}) != window"
+                f" counters ({w['arrivals']}, {w['completions']})"
+            )
+        links = w.get("links")
+        if not isinstance(links, list):
+            fail(f"{where}.links missing")
+        for li, link in enumerate(links):
+            lw = f"{where}.links[{li}]"
+            count(link, "src", lw)
+            count(link, "dst", lw)
+            util = num(link, "utilization", lw)
+            if not 0 <= util <= UTIL_CEILING:
+                fail(f"{lw}: utilization {util} outside [0, {UTIL_CEILING}]")
+
+    totals = doc.get("totals")
+    if not isinstance(totals, dict):
+        fail("totals block missing")
+    for key in sums:
+        if count(totals, key, "totals") != sums[key]:
+            fail(f"window sums {key} {sums[key]} != totals {totals[key]}")
+
+    report = doc.get("report")
+    if not isinstance(report, dict):
+        fail("report block missing")
+    pairs = [
+        ("arrivals", "requests"),
+        ("completions", "completed"),
+        ("drops", "dropped"),
+        ("sheds", "shed"),
+    ]
+    for t_key, r_key in pairs:
+        if totals[t_key] != count(report, r_key, "report"):
+            fail(f"totals.{t_key} {totals[t_key]} != report.{r_key} {report[r_key]}")
+
+    drift = doc.get("drift_events")
+    if not isinstance(drift, list):
+        fail("drift_events must be a list")
+    for di, d in enumerate(drift):
+        dw = f"drift_events[{di}]"
+        if count(d, "window", dw) >= len(windows):
+            fail(f"{dw}: window {d['window']} out of range")
+        if d.get("model") not in (model_names or []):
+            fail(f"{dw}: unknown model {d.get('model')!r}")
+        if d.get("metric") not in DRIFT_METRICS:
+            fail(f"{dw}: illegal metric {d.get('metric')!r}")
+        if d.get("direction") not in DRIFT_DIRECTIONS:
+            fail(f"{dw}: illegal direction {d.get('direction')!r}")
+        num(d, "value", dw)
+        num(d, "baseline", dw)
+        if num(d, "sigma", dw) < 0:
+            fail(f"{dw}: negative sigma")
+
+    print(
+        f"OK: {len(windows)} windows reconcile with report"
+        f" ({totals['arrivals']} == {report['requests']} requests,"
+        f" {totals['completions']} completed, {totals['drops']} dropped,"
+        f" {totals['sheds']} shed); {len(drift)} drift events"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

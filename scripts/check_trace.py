@@ -9,6 +9,12 @@ timestamps, at least one lifecycle slice must be present, and the span
 population must reconcile exactly with the `ServeReport` totals stamped
 into `otherData` (service slices == completed, dropped/shed instants ==
 dropped/shed, and completed + dropped + shed == requests).
+
+Counter tracks (ph "C", appended by the windowed time-series) are held to
+their own contract: per counter name, timestamps are strictly increasing
+and every args value is a non-negative number; the "serving totals" track
+must be present with cumulative (non-decreasing) series whose final
+values equal the otherData completed/dropped/shed totals.
 """
 
 import json
@@ -43,6 +49,7 @@ def main() -> int:
 
     slices = []
     instants = {"dropped": 0, "shed": 0}
+    counters = {}  # name -> list of (ts, args)
     for i, e in enumerate(events):
         if not isinstance(e, dict):
             fail(f"event {i} is not an object")
@@ -60,9 +67,33 @@ def main() -> int:
             slices.append(e)
         if ph == "i" and e["name"] in instants:
             instants[e["name"]] += 1
+        if ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args:
+                fail(f"counter {i} ({e['name']}) has no args object")
+            for k, v in args.items():
+                if not isinstance(v, (int, float)) or v < 0:
+                    fail(f"counter {e['name']} arg {k} not a count: {v!r}")
+            counters.setdefault(e["name"], []).append((e["ts"], args))
 
     if not slices:
         fail("no lifecycle slices (ph 'X') in the trace")
+
+    for name, samples in counters.items():
+        prev_ts = None
+        for ts, _ in samples:
+            if prev_ts is not None and ts <= prev_ts:
+                fail(f"counter {name!r} ts not strictly increasing at {ts}")
+            prev_ts = ts
+    totals_track = counters.get("serving totals")
+    if not totals_track:
+        fail("no 'serving totals' counter track in the trace")
+    prev = {}
+    for ts, args in totals_track:
+        for k, v in args.items():
+            if v < prev.get(k, 0):
+                fail(f"serving totals {k} not cumulative at ts {ts}")
+            prev[k] = v
 
     other = trace.get("otherData")
     if not isinstance(other, dict):
@@ -85,12 +116,20 @@ def main() -> int:
     for key in ("dropped", "shed"):
         if instants[key] != totals[key]:
             fail(f"{instants[key]} {key} instants != {totals[key]} reported")
+    final = totals_track[-1][1]
+    for key in ("completed", "dropped", "shed"):
+        if final.get(key) != totals[key]:
+            fail(
+                f"serving totals final {key} {final.get(key)!r}"
+                f" != otherData {totals[key]}"
+            )
 
     print(
         f"OK: {len(events)} events, {len(slices)} slices,"
         f" {services} service spans == completed;"
         f" {totals['completed']}+{totals['dropped']}+{totals['shed']}"
-        f" == {totals['requests']} requests"
+        f" == {totals['requests']} requests;"
+        f" {len(counters)} counter tracks reconciled"
     )
     return 0
 
