@@ -25,20 +25,29 @@ pub enum CommBackend {
 /// Full evaluation result for one (DNN, technology, topology) point.
 #[derive(Clone, Debug)]
 pub struct ArchEvaluation {
+    /// Zoo model name.
     pub dnn: String,
+    /// Tile-level topology the point was priced under.
     pub topology: Topology,
+    /// Tiles the mapping occupies.
     pub tiles: usize,
+    /// Crossbars the mapping occupies.
     pub crossbars: usize,
-    /// Compute-side numbers (circuit model).
+    /// Compute latency per frame, seconds (circuit model).
     pub compute_latency_s: f64,
+    /// Compute energy per frame, joules.
     pub compute_energy_j: f64,
+    /// Compute area, mm².
     pub compute_area_mm2: f64,
     /// Interconnect-side numbers. `comm_cycles` is the raw per-layer sum;
     /// `comm_latency_s` is the *exposed* (non-overlapped with compute)
     /// communication time that actually extends the frame.
     pub comm_cycles: u64,
+    /// Exposed communication latency per frame, seconds.
     pub comm_latency_s: f64,
+    /// Interconnect energy per frame, joules.
     pub comm_energy_j: f64,
+    /// NoC router + link area, mm².
     pub noc_area_mm2: f64,
     /// Per-layer communication cycles (for Fig. 3-style breakdowns).
     pub comm_per_layer: Vec<(usize, u64)>,

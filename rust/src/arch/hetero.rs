@@ -14,12 +14,16 @@ use crate::noc::topology::Topology;
 /// The proposed architecture: per-DNN optimal tile-level NoC.
 #[derive(Clone, Debug)]
 pub struct HeteroArchitecture {
+    /// Architecture (crossbar / tile) parameters.
     pub arch: ArchConfig,
+    /// Base NoC parameters; the topology is chosen per DNN.
     pub noc: NocConfig,
+    /// Simulation-control parameters.
     pub sim: SimConfig,
 }
 
 impl HeteroArchitecture {
+    /// Wrap `arch` with default NoC and sim parameters.
     pub fn new(arch: ArchConfig) -> Self {
         Self {
             arch,

@@ -21,9 +21,11 @@ use crate::nop::topology::NopTopology;
 /// Advisor output.
 #[derive(Clone, Debug)]
 pub struct Recommendation {
+    /// The recommended tile-level topology.
     pub topology: Topology,
-    /// EDAP of tree and mesh under the analytical backend (J·ms·mm²).
+    /// EDAP of tree under the analytical backend (J·ms·mm²).
     pub edap_tree: f64,
+    /// EDAP of mesh under the analytical backend (J·ms·mm²).
     pub edap_mesh: f64,
     /// The Fig. 20 closed-form classification for reference.
     pub rule_of_thumb: Topology,
@@ -33,8 +35,9 @@ pub struct Recommendation {
     pub neurons: usize,
 }
 
-/// Fig. 20 thresholds on synaptic connection density.
+/// Fig. 20 upper threshold: mesh above this density.
 pub const DENSITY_MESH_THRESHOLD: f64 = 2.0e3;
+/// Fig. 20 lower threshold: tree below this density.
 pub const DENSITY_TREE_THRESHOLD: f64 = 1.0e3;
 
 /// The paper's closed-form guidance: mesh above 2×10³ connections/neuron,
@@ -112,7 +115,9 @@ pub struct ScaleoutRecommendation {
     pub best_edap: f64,
     /// Chiplet count of the winner (1 = single chip).
     pub chiplets: usize,
+    /// Package-level topology of the winner.
     pub nop_topology: NopTopology,
+    /// Tile-level topology of the winner.
     pub noc_topology: Topology,
     /// Every candidate evaluated, as (chiplets, NoP, NoC, EDAP), in search
     /// order — for reporting the full design-space slice. Under sim

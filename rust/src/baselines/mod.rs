@@ -14,6 +14,7 @@ use crate::dnn::models;
 /// One row of the Table 4 comparison.
 #[derive(Clone, Debug)]
 pub struct BaselineRow {
+    /// Accelerator name as printed in Table 4.
     pub name: &'static str,
     /// Inference latency for VGG-19, ms.
     pub latency_ms: f64,

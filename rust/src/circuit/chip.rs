@@ -30,6 +30,7 @@ pub struct LayerCost {
 /// Whole-chip compute rollup for one DNN.
 #[derive(Clone, Debug)]
 pub struct ChipCost {
+    /// Per-layer costs, in mapping order.
     pub per_layer: Vec<LayerCost>,
     /// Total compute latency, s (layer-by-layer sum).
     pub latency_s: f64,

@@ -28,6 +28,7 @@ pub struct PeCost {
 }
 
 impl PeCost {
+    /// Price one crossbar PE under `cfg`.
     pub fn new(cfg: &ArchConfig) -> Self {
         let dev = DeviceParams::from_arch(cfg);
         let logic = LogicParams::new(cfg.tech_nm);

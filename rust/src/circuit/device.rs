@@ -30,6 +30,7 @@ fn scale(base_32nm: f64, tech_nm: f64, exponent: f64) -> f64 {
 }
 
 impl DeviceParams {
+    /// Bitcell constants for `tech`, scaled to `tech_nm`.
     pub fn new(tech: MemTech, tech_nm: f64) -> Self {
         match tech {
             MemTech::Sram => Self {
@@ -53,6 +54,7 @@ impl DeviceParams {
         }
     }
 
+    /// Bitcell constants from an [`ArchConfig`].
     pub fn from_arch(cfg: &ArchConfig) -> Self {
         Self::new(cfg.tech, cfg.tech_nm)
     }
@@ -74,6 +76,7 @@ pub struct LogicParams {
 }
 
 impl LogicParams {
+    /// Logic constants scaled to `tech_nm`.
     pub fn new(tech_nm: f64) -> Self {
         Self {
             shift_add_energy_per_bit_j: scale(2.0e-15, tech_nm, 1.0),

@@ -37,6 +37,7 @@ pub struct Cost {
 }
 
 impl Cost {
+    /// The all-zero cost (additive identity).
     pub fn zero() -> Self {
         Self::default()
     }

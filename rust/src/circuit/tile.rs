@@ -12,13 +12,16 @@ use crate::config::ArchConfig;
 /// One computing element: `pes_per_ce` PEs + bus + partial-sum accumulator.
 #[derive(Clone, Copy, Debug)]
 pub struct CeCost {
+    /// Cost of one constituent PE.
     pub pe: PeCost,
+    /// CE area incl. bus and accumulator, mm².
     pub area_mm2: f64,
     /// Bus + accumulator energy per PE read routed through the CE, J.
     pub overhead_per_read_j: f64,
 }
 
 impl CeCost {
+    /// Price one CE under `cfg`.
     pub fn new(cfg: &ArchConfig) -> Self {
         let pe = PeCost::new(cfg);
         let logic = LogicParams::new(cfg.tech_nm);
@@ -43,7 +46,9 @@ impl CeCost {
 /// One tile: `ces_per_tile` CEs + H-tree + I/O buffer + activation unit.
 #[derive(Clone, Copy, Debug)]
 pub struct TileCost {
+    /// Cost of one constituent CE.
     pub ce: CeCost,
+    /// Tile area incl. H-tree, buffer, and activation unit, mm².
     pub area_mm2: f64,
     /// Buffer bits provisioned per tile.
     pub buffer_bits: usize,
@@ -54,6 +59,7 @@ pub struct TileCost {
 }
 
 impl TileCost {
+    /// Price one tile under `cfg`.
     pub fn new(cfg: &ArchConfig) -> Self {
         let ce = CeCost::new(cfg);
         let logic = LogicParams::new(cfg.tech_nm);

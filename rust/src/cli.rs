@@ -8,9 +8,15 @@
 //! repro advise <dnn>
 //! repro chiplet [--model <dnn>] [--chiplets N] [--noc t] [--nop t] [--advise] [--heatmap]
 //! repro serve <artifact> [--requests N] [--batch N] [--in-dim N] [--trace-out f]
-//! repro config [--show] [--load path]
+//! repro serve --model <dnn> | --mix [spec] | --trace <file>    (modeled serving)
+//! repro sweep [--tech sram|reram] [--exact]
+//! repro config [--load path]
 //! repro list
 //! ```
+//!
+//! `repro help` prints the full per-flag reference (see `usage()` below —
+//! kept in sync with the subcommand dispatch; `cli_integration` tests pin
+//! the behavior).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -37,11 +43,15 @@ use crate::workload::{ArrivalKind, PlacementPolicy, Trace, WorkloadMix};
 /// Parsed flag set: positionals + `--key value` / `--flag` options.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Non-flag tokens in order (subcommand, then its arguments).
     pub positional: Vec<String>,
+    /// `--name [value]` pairs in order of appearance.
     pub flags: Vec<(String, Option<String>)>,
 }
 
 impl Args {
+    /// Split raw argv into positionals and flags. Only flags named in
+    /// `flag_takes_value` consume a following value token.
     pub fn parse(argv: &[String]) -> Self {
         let mut args = Args::default();
         let mut i = 0;
@@ -67,10 +77,12 @@ impl Args {
         args
     }
 
+    /// Was `--name` passed (with or without a value)?
     pub fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|(n, _)| n == name)
     }
 
+    /// The value of `--name`, if the flag was passed with one.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags
             .iter()
@@ -78,6 +90,7 @@ impl Args {
             .and_then(|(_, v)| v.as_deref())
     }
 
+    /// Integer value of `--name`, or `default` when absent.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -87,6 +100,7 @@ impl Args {
         }
     }
 
+    /// Float value of `--name`, or `default` when absent.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),

@@ -20,6 +20,7 @@ pub enum MemTech {
 }
 
 impl MemTech {
+    /// Display name ("SRAM" / "ReRAM").
     pub fn name(self) -> &'static str {
         match self {
             MemTech::Sram => "SRAM",
@@ -27,6 +28,7 @@ impl MemTech {
         }
     }
 
+    /// Parse a case-insensitive technology name.
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "sram" => Some(MemTech::Sram),
@@ -79,6 +81,7 @@ impl Default for ArchConfig {
 }
 
 impl ArchConfig {
+    /// Table-2 defaults with SRAM PEs.
     pub fn sram() -> Self {
         Self {
             tech: MemTech::Sram,
@@ -86,6 +89,7 @@ impl ArchConfig {
         }
     }
 
+    /// Table-2 defaults with ReRAM PEs (same as `default()`).
     pub fn reram() -> Self {
         Self::default()
     }
@@ -95,6 +99,7 @@ impl ArchConfig {
         self.pes_per_ce * self.ces_per_tile
     }
 
+    /// Range-check all fields; `Err` carries the offending knob.
     pub fn validate(&self) -> Result<(), String> {
         if !self.pe_size.is_power_of_two() || !(64..=512).contains(&self.pe_size) {
             return Err(format!(
@@ -124,6 +129,7 @@ impl ArchConfig {
 /// NoC parameters (paper Table 2 + §2.3 defaults).
 #[derive(Clone, Debug, PartialEq)]
 pub struct NocConfig {
+    /// Tile-level NoC topology.
     pub topology: Topology,
     /// Link/bus width in bits. Paper default: 32.
     pub bus_width: usize,
@@ -152,6 +158,7 @@ impl Default for NocConfig {
 }
 
 impl NocConfig {
+    /// Defaults with the given topology.
     pub fn with_topology(topology: Topology) -> Self {
         Self {
             topology,
@@ -159,6 +166,7 @@ impl NocConfig {
         }
     }
 
+    /// Range-check all fields; `Err` carries the offending knob.
     pub fn validate(&self) -> Result<(), String> {
         if self.bus_width == 0 || self.bus_width > 1024 {
             return Err("bus_width must be in [1, 1024]".into());
@@ -191,6 +199,7 @@ pub enum NopMode {
 }
 
 impl NopMode {
+    /// Display name ("analytical" / "sim").
     pub fn name(self) -> &'static str {
         match self {
             NopMode::Analytical => "analytical",
@@ -198,6 +207,7 @@ impl NopMode {
         }
     }
 
+    /// Parse a case-insensitive mode name.
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "analytical" | "ana" => Some(NopMode::Analytical),
@@ -265,6 +275,7 @@ impl Default for NopConfig {
 }
 
 impl NopConfig {
+    /// Defaults with the given package topology.
     pub fn with_topology(topology: NopTopology) -> Self {
         Self {
             topology,
@@ -272,6 +283,7 @@ impl NopConfig {
         }
     }
 
+    /// Defaults with the given chiplet count.
     pub fn with_chiplets(chiplets: usize) -> Self {
         Self {
             chiplets,
@@ -279,6 +291,7 @@ impl NopConfig {
         }
     }
 
+    /// Range-check all fields; `Err` carries the offending knob.
     pub fn validate(&self) -> Result<(), String> {
         if self.chiplets == 0 || self.chiplets > 256 {
             return Err("chiplets must be in [1, 256]".into());
@@ -319,6 +332,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Display name (the canonical `parse` spelling).
     pub fn name(self) -> &'static str {
         match self {
             Policy::RoundRobin => "round-robin",
@@ -327,6 +341,7 @@ impl Policy {
         }
     }
 
+    /// Parse a case-insensitive policy name (aliases: rr, ll, ca).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "round-robin" | "roundrobin" | "rr" => Some(Policy::RoundRobin),
@@ -336,6 +351,7 @@ impl Policy {
         }
     }
 
+    /// Every policy, in sweep order.
     pub fn all() -> [Policy; 3] {
         [
             Policy::RoundRobin,
@@ -364,6 +380,7 @@ pub enum Admission {
 }
 
 impl Admission {
+    /// Display name (the canonical `parse` spelling).
     pub fn name(self) -> &'static str {
         match self {
             Admission::DropOnFull => "drop-on-full",
@@ -371,6 +388,7 @@ impl Admission {
         }
     }
 
+    /// Parse a case-insensitive admission name (aliases: drop, shed).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "drop-on-full" | "drop" | "full" => Some(Admission::DropOnFull),
@@ -379,6 +397,7 @@ impl Admission {
         }
     }
 
+    /// Every admission mode, in sweep order.
     pub fn all() -> [Admission; 2] {
         [Admission::DropOnFull, Admission::DeadlineAware]
     }
@@ -424,6 +443,7 @@ impl Default for ServingConfig {
 }
 
 impl ServingConfig {
+    /// Range-check all fields; `Err` carries the offending knob.
     pub fn validate(&self) -> Result<(), String> {
         if self.queue_depth == 0 || self.queue_depth > 4096 {
             return Err("serving queue_depth must be in [1, 4096]".into());
@@ -495,6 +515,7 @@ impl WorkloadConfig {
         }
     }
 
+    /// Validate the mix, frame cap, and arrival-process shape.
     pub fn validate(&self) -> Result<(), String> {
         self.mix.validate()?;
         if self.frames_max == 0 || self.frames_max > 1024 {
@@ -557,17 +578,32 @@ impl Default for SimConfig {
 /// Bundle of all configs, loadable from an INI file.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
+    /// Architecture (crossbar / tile) parameters.
     pub arch: ArchConfig,
+    /// On-chip network parameters.
     pub noc: NocConfig,
+    /// Network-on-Package parameters.
     pub nop: NopConfig,
+    /// Serving-scheduler parameters.
     pub serving: ServingConfig,
+    /// Multi-model workload parameters.
     pub workload: WorkloadConfig,
+    /// Simulation-control parameters.
     pub sim: SimConfig,
+    /// Observability knobs.
     pub telemetry: TelemetryConfig,
 }
 
 impl Config {
     /// Load from INI text. Unknown keys are rejected so typos surface.
+    ///
+    /// ```
+    /// use imcnoc::config::{Config, MemTech};
+    /// let cfg = Config::from_ini("[arch]\npe_size = 128\ntech = sram\n").unwrap();
+    /// assert_eq!(cfg.arch.pe_size, 128);
+    /// assert_eq!(cfg.arch.tech, MemTech::Sram);
+    /// assert!(Config::from_ini("[arch]\nnot_a_key = 1\n").is_err());
+    /// ```
     pub fn from_ini(text: &str) -> Result<Self, String> {
         let doc = parse_ini(text).map_err(|e| e.to_string())?;
         let mut cfg = Config::default();

@@ -4,9 +4,12 @@
 
 use std::fmt;
 
+/// Syntax error with the 1-based line it occurred on.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// 1-based line number of the offending line.
     pub line: usize,
+    /// What was wrong with it.
     pub message: String,
 }
 
@@ -41,10 +44,12 @@ impl IniDoc {
             .map(|(_, _, v)| v.as_str())
     }
 
+    /// Number of parsed entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the document has no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -59,18 +59,24 @@ where
 /// Cache key for one evaluation point.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct EvalKey {
+    /// Zoo model name.
     pub dnn: String,
+    /// Memory technology (SRAM / ReRAM).
     pub tech: MemTech,
+    /// Tile-level NoC topology.
     pub topology: Topology,
     /// Distinguishing NoC parameters (bus width, VCs) and backend.
     pub bus_width: usize,
+    /// NoC virtual channels.
     pub virtual_channels: usize,
+    /// True when the analytical comm backend priced the point.
     pub analytical: bool,
     /// PE size (for the §5.2 crossbar-size study).
     pub pe_size: usize,
 }
 
 impl EvalKey {
+    /// Extract the cache key of one (model, arch, noc, backend) point.
     pub fn new(
         graph: &DnnGraph,
         arch: &ArchConfig,
@@ -99,6 +105,7 @@ pub struct Driver {
 }
 
 impl Driver {
+    /// A driver with an empty cache and default thread count.
     pub fn new() -> Self {
         Self::default()
     }
@@ -146,6 +153,7 @@ impl Driver {
         .collect()
     }
 
+    /// Number of memoized evaluation points (test observability).
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
     }

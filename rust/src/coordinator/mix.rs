@@ -61,8 +61,9 @@ pub struct MixModelCosts {
     pub service_s: f64,
     /// Steady-state layer-pipeline inter-frame interval, seconds.
     pub stage_s: f64,
-    /// NoP flits of one request's input / output payload.
+    /// NoP flits of one request's input payload.
     pub ingress_flits: u64,
+    /// NoP flits of one request's output payload.
     pub egress_flits: u64,
 }
 
@@ -84,10 +85,15 @@ impl MixModelCosts {
 /// the replica placement the queues sit over.
 #[derive(Clone, Debug)]
 pub struct MixServingModel {
+    /// Package size the mix is served on.
     pub chiplets: usize,
+    /// Package topology the transfers were priced on.
     pub topology: NopTopology,
+    /// Per-model costs, in mix order.
     pub models: Vec<MixModelCosts>,
+    /// Replica chiplet assignment per model.
     pub placement: Placement,
+    /// Policy that produced `placement`.
     pub placement_policy: PlacementPolicy,
     /// Package I/O entry chiplet (0 by convention; the NoP-aware placement
     /// optimizes proximity to it).
@@ -288,6 +294,7 @@ struct MixPending {
 /// Per-chiplet request queues over a [`Placement`], plus the
 /// discrete-event multi-model serving simulation that drives them.
 pub struct MixScheduler {
+    /// The priced serving model the queues run over.
     pub model: MixServingModel,
     policy: Policy,
     admission: Admission,
@@ -326,6 +333,7 @@ pub struct MixScheduler {
 }
 
 impl MixScheduler {
+    /// A scheduler over `model`'s placement with empty queues.
     pub fn new(model: MixServingModel, cfg: &ServingConfig, admission: Admission) -> Self {
         let n = model.models.len();
         let replicas: Vec<Vec<usize>> = (0..n).map(|m| model.placement.replicas(m)).collect();

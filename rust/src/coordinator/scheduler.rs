@@ -20,7 +20,8 @@
 //!   evaluator), the layer-pipeline interval that batching amortizes
 //!   against, per-chiplet ingress/egress transfer times over the
 //!   [`NopNetwork`] route (analytical `nop_transfer_cycles`, or a
-//!   flit-level [`NopSim`] drain under `[nop] mode = sim`), the
+//!   flit-level [`NopSim`](crate::nop::sim::NopSim) drain under
+//!   `[nop] mode = sim`), the
 //!   model-parallel alternative (the same DNN partitioned over all
 //!   chiplets), and the per-link busy fraction at the package saturation
 //!   rate measured by [`crate::nop::sim::saturation_rate`].
@@ -42,9 +43,9 @@ use crate::config::{ArchConfig, NocConfig, NopConfig, NopMode, ServingConfig, Si
 use crate::coordinator::server::{ChipletQueueStats, ServeReport};
 use crate::dnn::DnnGraph;
 use crate::mapping::{ChipletPartition, Mapping};
-use crate::noc::sim::{FlowSpec, Mode};
+use crate::noc::sim::FlowSpec;
 use crate::nop::evaluator::{evaluate_package, nop_transfer_cycles};
-use crate::nop::sim::{saturation_rate, NopSim};
+use crate::nop::sim::saturation_rate;
 use crate::nop::topology::{NopNetwork, NopTopology};
 use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
 use crate::telemetry::timeseries::AUTO_WINDOWS;
@@ -65,9 +66,13 @@ pub const AUTO_LOAD_FACTOR: f64 = 0.85;
 /// Modeled serving costs for one (DNN, package) configuration.
 #[derive(Clone, Debug)]
 pub struct ServingModel {
+    /// Zoo model name being served.
     pub dnn: String,
+    /// Package size (replica count upper bound).
     pub chiplets: usize,
+    /// Package topology the transfers were priced on.
     pub topology: NopTopology,
+    /// How the package legs were priced (analytical vs flit-level sim).
     pub mode: NopMode,
     /// One frame through one chiplet replica, seconds (the single-chip
     /// modeled latency, via `evaluate_package` on a 1-chiplet package).
@@ -75,8 +80,9 @@ pub struct ServingModel {
     /// Steady-state inter-frame interval when the frames of a batch
     /// pipeline through the replica's layers, seconds (slowest stage).
     pub stage_s: f64,
-    /// NoP flits of one request's input / output payload.
+    /// NoP flits of one request's input payload.
     pub ingress_flits: u64,
+    /// NoP flits of one request's output payload.
     pub egress_flits: u64,
     /// Directed package links of the gateway→chiplet route, per chiplet.
     pub paths: Vec<Vec<(usize, usize)>>,
@@ -101,6 +107,7 @@ pub struct ServingModel {
     pub partitioned_latency_s: f64,
     /// Populated chiplets / cut bits of that partition.
     pub partition_populated: usize,
+    /// Activation bits crossing chiplet boundaries in that partition.
     pub partition_cut_bits: u64,
 }
 
@@ -110,7 +117,9 @@ impl ServingModel {
     /// scheduler's queues sit over. The per-chiplet legs stay analytical
     /// (the scheduler prices thousands of admissions); the *package* legs
     /// honor `nop.mode` — ingress transfers are priced either by
-    /// `nop_transfer_cycles` or by a flit-level [`NopSim`] drain.
+    /// `nop_transfer_cycles` or by a memoized flit-level
+    /// [`NopSim`](crate::nop::sim::NopSim) drain
+    /// ([`crate::sim::memo::drain_makespan`]).
     pub fn build(
         graph: &DnnGraph,
         arch: &ArchConfig,
@@ -162,15 +171,16 @@ impl ServingModel {
                         + ingress_flits
                             .saturating_mul(4)
                             .saturating_mul(nop.hop_latency_cycles + 2);
-                    let stats = NopSim::new(
+                    // Memoized: single- and multi-model serving builds
+                    // price the same gateway→chiplet transfers repeatedly.
+                    let stats = crate::sim::memo::drain_makespan(
                         nop.topology,
                         k,
                         nop,
                         &flows,
-                        Mode::Drain { max_cycles: budget },
+                        budget,
                         sim.seed ^ c as u64,
-                    )
-                    .run();
+                    );
                     let cycles = if stats.drained { stats.makespan } else { budget };
                     cycles as f64 * nop_cycle_s
                 }
@@ -334,7 +344,9 @@ struct Pending {
 /// Per-chiplet request queues over a [`ChipletPartition`], plus the
 /// discrete-event serving simulation that drives them.
 pub struct ChipletScheduler {
+    /// The priced serving model the queues run over.
     pub model: ServingModel,
+    /// Layer→chiplet partition the replicas host.
     pub partition: ChipletPartition,
     policy: Policy,
     queue_depth: usize,
@@ -365,6 +377,7 @@ pub struct ChipletScheduler {
 }
 
 impl ChipletScheduler {
+    /// A scheduler over `partition` with empty queues.
     pub fn new(model: ServingModel, partition: ChipletPartition, cfg: &ServingConfig) -> Self {
         let k = model.chiplets;
         // Utilization window: long enough to smooth tens of payloads on a

@@ -22,6 +22,7 @@ use crate::util::Pcg32;
 /// Queue statistics for one chiplet of a modeled serving run.
 #[derive(Clone, Debug)]
 pub struct ChipletQueueStats {
+    /// Chiplet id the stats describe.
     pub chiplet: usize,
     /// Requests this chiplet served.
     pub served: usize,
@@ -35,28 +36,34 @@ pub struct ChipletQueueStats {
 /// ([`crate::coordinator::mix::MixScheduler`]).
 #[derive(Clone, Debug)]
 pub struct ModelServeStats {
+    /// Model name within the mix.
     pub model: String,
     /// Replica chiplets this model was pinned to.
     pub replicas: usize,
-    /// Requests offered / completed / dropped (queues full) / shed
-    /// (deadline-aware admission declined them).
+    /// Requests offered to this model.
     pub offered: usize,
+    /// Requests that produced a result.
     pub completed: usize,
+    /// Requests dropped on full queues.
     pub dropped: usize,
+    /// Requests declined by deadline-aware admission.
     pub shed: usize,
-    /// Offered requests carrying a finite deadline, and how many completed
-    /// within it (dropped/shed/late ones are misses).
+    /// Offered requests carrying a finite deadline.
     pub deadline_offered: usize,
+    /// Deadline-carrying requests completed within it
+    /// (dropped/shed/late ones are misses).
     pub deadline_hits: usize,
-    /// Latency statistics over this model's completed requests, ms.
+    /// Mean latency over this model's completed requests, ms.
     pub mean_ms: f64,
+    /// Median latency, ms.
     pub p50_ms: f64,
+    /// 99th-percentile latency, ms.
     pub p99_ms: f64,
-    /// Mean lifecycle-phase durations over this model's completed
-    /// requests, ms (NoP ingress / queue wait / chiplet service incl.
-    /// egress — they sum to `mean_ms`).
+    /// Mean NoP ingress duration, ms (phases sum to `mean_ms`).
     pub mean_ingress_ms: f64,
+    /// Mean queue wait, ms.
     pub mean_queue_ms: f64,
+    /// Mean chiplet service incl. egress, ms.
     pub mean_service_ms: f64,
 }
 
@@ -79,32 +86,40 @@ impl ModelServeStats {
 /// that only one path produces are empty on the other.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Total requests offered to the run.
     pub requests: usize,
     /// Requests that produced a result (modeled runs can drop on full
     /// queues; the PJRT path always completes everything).
     pub completed: usize,
+    /// Requests dropped on full queues.
     pub dropped: usize,
     /// Requests declined by deadline-aware admission (their modeled
     /// completion already exceeded the deadline). Always 0 under
     /// drop-on-full admission and on the PJRT path. Conservation:
     /// `completed + dropped + shed == requests`.
     pub shed: usize,
-    /// Offered requests carrying a finite deadline / completed within it
-    /// (multi-model runs only; both 0 elsewhere).
+    /// Offered requests carrying a finite deadline (multi-model runs
+    /// only; 0 elsewhere).
     pub deadline_offered: usize,
+    /// Deadline-carrying requests completed within their deadline.
     pub deadline_hits: usize,
+    /// Requests per batch the run was driven at.
     pub batch_size: usize,
+    /// Number of batches executed.
     pub batches: usize,
-    /// Latency statistics over the run's samples, ms.
+    /// Mean latency over the run's samples, ms.
     pub mean_ms: f64,
+    /// Median latency, ms.
     pub p50_ms: f64,
+    /// 99th-percentile latency, ms.
     pub p99_ms: f64,
-    /// Mean lifecycle-phase durations over completed requests, ms: NoP
-    /// ingress, queue wait, chiplet service incl. egress. They sum to
-    /// `mean_ms` on the modeled paths; all 0 on the PJRT path, which has
-    /// no modeled phases.
+    /// Mean NoP ingress duration over completed requests, ms. The three
+    /// phase means sum to `mean_ms` on the modeled paths; all 0 on the
+    /// PJRT path, which has no modeled phases.
     pub mean_ingress_ms: f64,
+    /// Mean queue wait, ms.
     pub mean_queue_ms: f64,
+    /// Mean chiplet service incl. egress, ms.
     pub mean_service_ms: f64,
     /// Completed requests per second end to end.
     pub throughput_rps: f64,
@@ -219,6 +234,7 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
+    /// A server backed by a CPU PJRT client (errors on stub builds).
     pub fn new(batch_size: usize) -> Result<Self> {
         Ok(Self {
             runtime: Runtime::cpu()?,
@@ -226,6 +242,7 @@ impl InferenceServer {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu"; "stub" on stub builds).
     pub fn platform(&self) -> String {
         self.runtime.platform()
     }

@@ -8,8 +8,11 @@ use super::Dataset;
 /// node; edges point from producer to consumer via `Layer::inputs`.
 #[derive(Clone, Debug)]
 pub struct DnnGraph {
+    /// Display name (zoo key), e.g. "VGG-19".
     pub name: String,
+    /// Dataset the model is defined for (fixes input resolution).
     pub dataset: Dataset,
+    /// All layers in insertion order; index 0 is the input node.
     pub layers: Vec<Layer>,
 }
 
@@ -22,9 +25,13 @@ pub struct DnnGraph {
 ///   the Fig. 20 guidance rule and Eq. 16).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DensityReport {
+    /// Total neurons over all weight layers.
     pub neurons: usize,
+    /// Layer-level producer→consumer edges, neuron-weighted.
     pub structural_connections: usize,
+    /// Outgoing layer-level connections per neuron (linear nets = 1.0).
     pub structural_density: f64,
+    /// Average synaptic fan-in per neuron.
     pub synaptic_density: f64,
 }
 
@@ -41,6 +48,7 @@ impl DensityReport {
 }
 
 impl DnnGraph {
+    /// An empty graph holding only the dataset's input node.
     pub fn new(name: impl Into<String>, dataset: Dataset) -> Self {
         let (h, w, c) = dataset.input_dims();
         Self {
@@ -185,6 +193,7 @@ impl DnnGraph {
             .collect()
     }
 
+    /// Count of weight-bearing layers.
     pub fn num_weight_layers(&self) -> usize {
         self.weight_layers().len()
     }

@@ -32,6 +32,7 @@ impl LayerKind {
         matches!(self, LayerKind::Conv { .. } | LayerKind::Fc { .. })
     }
 
+    /// Short kind label for printing ("conv", "fc", …).
     pub fn name(&self) -> &'static str {
         match self {
             LayerKind::Input => "input",
@@ -50,12 +51,15 @@ impl LayerKind {
 pub struct Layer {
     /// Human-readable name, e.g. "conv3_2".
     pub name: String,
+    /// What the layer computes (conv, FC, pool, add, …).
     pub kind: LayerKind,
     /// Indices (into `DnnGraph::layers`) of the layers feeding this one.
     pub inputs: Vec<usize>,
-    /// Output spatial size and channels.
+    /// Output spatial width.
     pub out_x: usize,
+    /// Output spatial height.
     pub out_y: usize,
+    /// Output channel count.
     pub out_c: usize,
 }
 

@@ -19,8 +19,11 @@ pub use layer::{Layer, LayerKind};
 /// models by dataset).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dataset {
+    /// 28×28×1 grayscale digits.
     Mnist,
+    /// 32×32×3 natural images.
     Cifar,
+    /// 224×224×3 natural images.
     ImageNet,
 }
 
@@ -34,6 +37,7 @@ impl Dataset {
         }
     }
 
+    /// Canonical display name.
     pub fn name(self) -> &'static str {
         match self {
             Dataset::Mnist => "MNIST",

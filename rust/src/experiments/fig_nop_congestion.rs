@@ -102,40 +102,52 @@ pub fn nop_congestion(opts: &Options) -> Result<Vec<Table>, String> {
         format!("NoP drain — one frame of {model}'s inter-chiplet traffic (NoP cycles)"),
         &["chiplets", "NoP", "flows", "flits", "makespan", "drained"],
     );
-    for &k in &ks {
-        let part = ChipletPartition::build(&g, &mapping, &arch, k);
-        let flows: Vec<FlowSpec> = part
-            .nop_flows(nop.link_width)
-            .into_iter()
-            .map(|(s, d, flits)| FlowSpec {
-                src: s,
-                dst: d,
-                rate: 0.0,
-                flits,
-            })
-            .collect();
+    // Partition once per k (serial — cheap), then fan the (k × topology)
+    // drains out over the driver. Makespans are memoized process-wide, so
+    // repeat runs (benches, CLI re-invocations in one process) are free.
+    let drain_points: Vec<(usize, Vec<FlowSpec>, NopTopology)> = ks
+        .iter()
+        .map(|&k| {
+            let part = ChipletPartition::build(&g, &mapping, &arch, k);
+            let flows: Vec<FlowSpec> = part
+                .nop_flows(nop.link_width)
+                .into_iter()
+                .map(|(s, d, flits)| FlowSpec {
+                    src: s,
+                    dst: d,
+                    rate: 0.0,
+                    flits,
+                })
+                .collect();
+            (k, flows)
+        })
+        .flat_map(|(k, flows)| {
+            NopTopology::all()
+                .into_iter()
+                .map(move |t| (k, flows.clone(), t))
+        })
+        .collect();
+    let drain_rows = par_map(&drain_points, None, |(k, flows, topo)| {
         let total: u64 = flows.iter().map(|f| f.flits).sum();
-        for topo in NopTopology::all() {
-            let stats = NopSim::new(
-                topo,
-                k,
-                &nop,
-                &flows,
-                Mode::Drain {
-                    max_cycles: 10_000 + total.saturating_mul(64),
-                },
-                seed,
-            )
-            .run();
-            drain.add_row(vec![
-                k.to_string(),
-                topo.name().into(),
-                flows.len().to_string(),
-                total.to_string(),
-                stats.makespan.to_string(),
-                stats.drained.to_string(),
-            ]);
-        }
+        let stats = crate::sim::memo::drain_makespan(
+            *topo,
+            *k,
+            &nop,
+            flows,
+            10_000 + total.saturating_mul(64),
+            seed,
+        );
+        vec![
+            k.to_string(),
+            topo.name().into(),
+            flows.len().to_string(),
+            total.to_string(),
+            stats.makespan.to_string(),
+            stats.drained.to_string(),
+        ]
+    });
+    for row in drain_rows {
+        drain.add_row(row);
     }
 
     Ok(vec![sweep, drain])

@@ -107,40 +107,49 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
         let events = wl
             .arrival_process()
             .generate(&wl.mix, rate, requests, opts.seed);
-        for placement in PlacementPolicy::all() {
+        // The 2 placements × 2 admissions fan out over the driver: each
+        // run is an independent scheduler over the same event trace, and
+        // `with_placement` only re-derives the replica layout from the
+        // already-priced model.
+        let combos: Vec<(PlacementPolicy, Admission)> = PlacementPolicy::all()
+            .into_iter()
+            .flat_map(|p| Admission::all().into_iter().map(move |a| (p, a)))
+            .collect();
+        let combo_rows = par_map(&combos, None, |&(placement, admission)| {
             let model = if placement == PlacementPolicy::NopAware {
                 aware.clone()
             } else {
                 aware.with_placement(placement)?
             };
-            for admission in Admission::all() {
-                let cfg = ServingConfig {
-                    requests,
-                    seed: opts.seed,
-                    ..ServingConfig::default()
-                };
-                let mut sched = MixScheduler::new(model.clone(), &cfg, admission);
-                let mut report = sched.run(&events);
-                report.offered_rps = rate;
-                let pct = |n: usize| 100.0 * n as f64 / report.requests.max(1) as f64;
-                sweep.add_row(vec![
-                    mix_name.clone(),
-                    k.to_string(),
-                    topo.name().to_string(),
-                    placement.name().to_string(),
-                    admission.name().to_string(),
-                    fmt_sig(report.offered_rps, 4),
-                    fmt_sig(report.throughput_rps, 4),
-                    fmt_sig(report.hit_rate(), 3),
-                    fmt_sig(pct(report.shed), 3),
-                    fmt_sig(pct(report.dropped), 3),
-                    fmt_sig(report.p99_ms, 4),
-                    fmt_sig(report.mean_queue_ms, 3),
-                    fmt_sig(report.mean_service_ms, 3),
-                    sched.timeseries().windows().len().to_string(),
-                    sched.timeseries().drift_events().len().to_string(),
-                ]);
-            }
+            let cfg = ServingConfig {
+                requests,
+                seed: opts.seed,
+                ..ServingConfig::default()
+            };
+            let mut sched = MixScheduler::new(model, &cfg, admission);
+            let mut report = sched.run(&events);
+            report.offered_rps = rate;
+            let pct = |n: usize| 100.0 * n as f64 / report.requests.max(1) as f64;
+            Ok::<Vec<String>, String>(vec![
+                mix_name.clone(),
+                k.to_string(),
+                topo.name().to_string(),
+                placement.name().to_string(),
+                admission.name().to_string(),
+                fmt_sig(report.offered_rps, 4),
+                fmt_sig(report.throughput_rps, 4),
+                fmt_sig(report.hit_rate(), 3),
+                fmt_sig(pct(report.shed), 3),
+                fmt_sig(pct(report.dropped), 3),
+                fmt_sig(report.p99_ms, 4),
+                fmt_sig(report.mean_queue_ms, 3),
+                fmt_sig(report.mean_service_ms, 3),
+                sched.timeseries().windows().len().to_string(),
+                sched.timeseries().drift_events().len().to_string(),
+            ])
+        });
+        for row in combo_rows {
+            sweep.add_row(row?);
         }
         if healthy.is_none() {
             healthy = Some(aware);
@@ -166,7 +175,8 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
         ("diurnal", ArrivalKind::Diurnal, 0.0),
         ("poisson+heavy-tail", ArrivalKind::Poisson, 1.5),
     ];
-    for (label, kind, frames_alpha) in shapes {
+    // Four independent trace generations + runs — driver-parallel too.
+    let shape_rows = par_map(&shapes, None, |&(label, kind, frames_alpha)| {
         let shaped = WorkloadConfig {
             arrival: kind,
             frames_alpha,
@@ -183,12 +193,15 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
         };
         let mut sched = MixScheduler::new(model.clone(), &cfg, Admission::DeadlineAware);
         let report = sched.run(&events);
-        gens.add_row(vec![
+        vec![
             label.to_string(),
             fmt_sig(report.hit_rate(), 3),
             fmt_sig(100.0 * report.shed as f64 / report.requests.max(1) as f64, 3),
             fmt_sig(report.p99_ms, 4),
-        ]);
+        ]
+    });
+    for row in shape_rows {
+        gens.add_row(row);
     }
 
     Ok(vec![sweep, gens])

@@ -48,7 +48,9 @@ impl Default for Options {
 pub struct Experiment {
     /// Canonical id: "fig1" … "fig21", "table2" … "table4".
     pub id: &'static str,
+    /// Human-readable title printed above the tables.
     pub title: &'static str,
+    /// Generator producing the experiment's tables.
     pub run: fn(&Options) -> Result<Vec<Table>, String>,
 }
 

@@ -16,6 +16,9 @@
 //!   * [`dnn`] — DNN layer graphs + connection-density accounting (Fig. 1/2),
 //!   * [`mapping`] — crossbar/tile mapping (Eq. 2) and injection matrices (Eq. 3),
 //!   * [`circuit`] — NeuroSim-class circuit-level estimator for SRAM/ReRAM tiles,
+//!   * [`sim`] — the shared flit-level event engine (traffic sources, run
+//!     loops, statistics) both cycle simulators adapt, plus process-wide
+//!     memo caches for simulator-backed sweeps,
 //!   * [`noc`] — BookSim-class cycle-accurate NoC simulator (P2P, tree, mesh,
 //!     c-mesh, torus, hypercube) plus the analytical model of Algorithm 2,
 //!   * [`nop`] — network-on-package scale-out: packages of IMC chiplets
@@ -39,6 +42,8 @@
 //! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+#![warn(missing_docs)]
+
 pub mod arch;
 pub mod baselines;
 pub mod circuit;
@@ -51,6 +56,7 @@ pub mod mapping;
 pub mod noc;
 pub mod nop;
 pub mod runtime;
+pub mod sim;
 pub mod telemetry;
 pub mod util;
 pub mod workload;

@@ -42,7 +42,9 @@ impl TrafficFlow {
 /// The full injection specification for one DNN on one mapping.
 #[derive(Clone, Debug)]
 pub struct InjectionMatrix {
+    /// Every inter-layer flow bundle.
     pub flows: Vec<TrafficFlow>,
+    /// Tiles the mapping occupies (the network size).
     pub total_tiles: usize,
 }
 

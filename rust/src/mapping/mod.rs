@@ -48,6 +48,7 @@ pub struct LayerTiles {
 }
 
 impl LayerTiles {
+    /// Global tile-id range owned by this layer.
     pub fn tiles(&self) -> std::ops::Range<usize> {
         self.start..self.start + self.count
     }
@@ -58,7 +59,9 @@ impl LayerTiles {
 pub struct Mapping {
     /// One entry per weight layer, in topological order.
     pub layers: Vec<LayerTiles>,
+    /// Tiles the whole DNN occupies.
     pub total_tiles: usize,
+    /// Crossbars the whole DNN occupies.
     pub total_crossbars: usize,
 }
 

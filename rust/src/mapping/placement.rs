@@ -6,8 +6,11 @@
 /// Physical positions of `n` tiles on a `cols`-wide row-major grid.
 #[derive(Clone, Debug)]
 pub struct Placement {
+    /// Number of placed tiles.
     pub n: usize,
+    /// Grid width.
     pub cols: usize,
+    /// Grid height.
     pub rows: usize,
 }
 

@@ -49,6 +49,7 @@ struct RouterTraffic {
 }
 
 impl<'a> AnalyticalModel<'a> {
+    /// A model over an already-built network.
     pub fn new(net: &'a Network, cfg: &'a NocConfig) -> Self {
         Self { net, cfg }
     }

@@ -30,6 +30,7 @@ pub struct LayerSim {
 /// Whole-DNN result from the cycle-accurate backend.
 #[derive(Clone, Debug)]
 pub struct DnnCommSim {
+    /// Per-layer simulation results, in layer order.
     pub per_layer: Vec<LayerSim>,
     /// End-to-end communication cycles per frame (Σ makespans, Eq. 5).
     pub total_cycles: u64,
@@ -159,12 +160,14 @@ pub fn simulate_dnn(
 /// Per-layer + total estimate from the analytical model (Algorithm 2).
 #[derive(Clone, Debug)]
 pub struct DnnCommEstimate {
+    /// (layer index, estimated cycles) pairs, in layer order.
     pub per_layer: Vec<(usize, f64)>,
     /// Rate-weighted average per-flit latency over all layers (compare
     /// with [`DnnCommSim::avg_flit_latency`], Fig. 11).
     pub avg_flit_latency: f64,
     /// Σ_l L_avg^l (Eq. 11).
     pub total_latency: f64,
+    /// True when any layer's offered load exceeded a link's capacity.
     pub saturated: bool,
 }
 

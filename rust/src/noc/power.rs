@@ -19,8 +19,9 @@ pub struct NocPower {
     pub energy_per_link_j: f64,
     /// Static/leakage power of the whole fabric, W.
     pub leakage_w: f64,
-    /// Routers and links in the fabric (for reporting).
+    /// Routers in the fabric (for reporting).
     pub routers: usize,
+    /// Links in the fabric (for reporting).
     pub links: usize,
 }
 

@@ -25,13 +25,16 @@ pub struct Flit {
 /// Per-input-port buffer: `vcs` FIFOs of `depth` flits each.
 #[derive(Clone, Debug)]
 pub struct InputPort {
+    /// The per-VC FIFO queues.
     pub vcs: Vec<VecDeque<Flit>>,
+    /// Capacity of each VC FIFO, flits.
     pub depth: usize,
     /// Round-robin pointer for VC selection at this port.
     pub next_vc: usize,
 }
 
 impl InputPort {
+    /// An empty port with `num_vcs` FIFOs of `depth` flits.
     pub fn new(num_vcs: usize, depth: usize) -> Self {
         Self {
             vcs: (0..num_vcs).map(|_| VecDeque::new()).collect(),
@@ -71,12 +74,14 @@ impl InputPort {
 /// arbitration pointers per output port.
 #[derive(Clone, Debug)]
 pub struct RouterState {
+    /// One buffered input per port.
     pub inputs: Vec<InputPort>,
     /// Last input (port, vc) served per output port, for round-robin.
     pub rr: Vec<usize>,
 }
 
 impl RouterState {
+    /// An empty router with `ports` input ports.
     pub fn new(ports: usize, vcs: usize, depth: usize) -> Self {
         Self {
             inputs: (0..ports).map(|_| InputPort::new(vcs, depth)).collect(),
@@ -84,6 +89,7 @@ impl RouterState {
         }
     }
 
+    /// Total flits buffered across all input ports.
     pub fn total_occupancy(&self) -> usize {
         self.inputs.iter().map(|p| p.occupancy()).sum()
     }

@@ -1,7 +1,8 @@
 //! Cycle-accurate NoC simulation (the customized-BookSim substrate,
-//! paper §3.2).
+//! paper §3.2) — a thin fabric adapter over the shared
+//! [`crate::sim::engine`] event core.
 //!
-//! Two operating modes:
+//! Two operating modes (see [`Mode`]):
 //!
 //! * **Steady** — every source–destination pair injects with an independent
 //!   Bernoulli process at its Eq.-3 rate; statistics (average/worst flit
@@ -12,150 +13,40 @@
 //!   network is empty and reports the makespan. Used for the end-to-end
 //!   per-layer communication latency of Algorithm 1 (Eq. 4/5).
 //!
-//! The engine is flit-level with single-cycle links, credit-based
-//! backpressure, round-robin arbitration, and a configurable router
-//! pipeline depth. P2P "networks" are modeled on the same grid but without
-//! routers: every tile advances at most one flit per cycle across all of
-//! its ports (store-and-forward over a shared medium), which is what makes
-//! P2P collapse under high connection density.
-
-use std::collections::HashMap;
+//! Traffic generation, the run loops, warm-up gating and all statistics
+//! live in the engine core; this module contributes only what is
+//! on-chip-specific: flit-level routers with single-cycle links,
+//! credit-based backpressure, round-robin arbitration, and a configurable
+//! router pipeline depth. P2P "networks" are modeled on the same grid but
+//! without routers: every tile advances at most one flit per cycle across
+//! all of its ports (store-and-forward over a shared medium), which is
+//! what makes P2P collapse under high connection density.
 
 use super::router::{Flit, RouterState};
 use super::topology::{Network, Topology, NONE};
 use crate::config::NocConfig;
+use crate::sim::engine::{run_engine, EngineCore, Fabric};
 use crate::telemetry::SimTelemetry;
-use crate::util::Pcg32;
 
-/// One source→destination traffic specification.
-#[derive(Clone, Copy, Debug)]
-pub struct FlowSpec {
-    pub src: usize,
-    pub dst: usize,
-    /// Injection rate in flits/cycle (steady mode).
-    pub rate: f64,
-    /// Total flits to send (drain mode); ignored in steady mode.
-    pub flits: u64,
-}
+pub use crate::sim::engine::{FlowSpec, Mode, PairStat, SimStats};
 
-/// Simulation mode.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Mode {
-    /// Bernoulli injection; warm up, then measure for a fixed window.
-    Steady { warmup: u64, measure: u64 },
-    /// Inject `FlowSpec::flits` per pair, run until drained (or `max_cycles`).
-    Drain { max_cycles: u64 },
-}
-
-/// Aggregated results of one simulation run.
-#[derive(Clone, Debug, Default)]
-pub struct SimStats {
-    /// Cycles simulated.
-    pub cycles: u64,
-    /// Flits injected into source FIFOs.
-    pub injected: u64,
-    /// Flits delivered to their destination terminal.
-    pub delivered: u64,
-    /// Mean flit latency (generation → ejection), cycles.
-    pub avg_latency: f64,
-    /// Worst flit latency, cycles.
-    pub max_latency: u64,
-    /// Drain mode: cycle at which the last flit ejected.
-    pub makespan: u64,
-    /// Drain mode: did the network fully drain within the cycle budget?
-    pub drained: bool,
-    /// Router-buffer arrivals observed (occupancy sampling, Fig. 13).
-    pub arrivals: u64,
-    /// Arrivals that found the target queue empty.
-    pub arrivals_zero: u64,
-    /// Sum/count of occupancies for arrivals at non-empty queues (Fig. 14).
-    pub nonzero_occ_sum: f64,
-    pub nonzero_occ_count: u64,
-    /// Per-pair latency stats, keyed by `(src << 32) | dst` (Fig. 15 /
-    /// Table 3). Only filled when `track_pairs` is enabled.
-    pub per_pair: HashMap<u64, PairStat>,
-}
-
-/// Latency statistics for one source–destination pair.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct PairStat {
-    pub count: u64,
-    pub sum_latency: u64,
-    pub max_latency: u64,
-}
-
-impl PairStat {
-    pub fn avg(&self) -> f64 {
-        if self.count == 0 {
-            0.0
-        } else {
-            self.sum_latency as f64 / self.count as f64
-        }
-    }
-}
-
-impl SimStats {
-    /// Fraction of buffer arrivals that found the queue empty (Fig. 13).
-    pub fn zero_occupancy_fraction(&self) -> f64 {
-        if self.arrivals == 0 {
-            1.0
-        } else {
-            self.arrivals_zero as f64 / self.arrivals as f64
-        }
-    }
-
-    /// Mean occupancy of non-empty queues at arrival (Fig. 14).
-    pub fn mean_nonzero_occupancy(&self) -> f64 {
-        if self.nonzero_occ_count == 0 {
-            0.0
-        } else {
-            self.nonzero_occ_sum / self.nonzero_occ_count as f64
-        }
-    }
-}
-
-/// Per-source injection state: either a Bernoulli process over a dst
-/// distribution (steady) or a finite interleaved flit list (drain).
-struct SourceState {
-    /// Aggregate injection rate (steady).
-    rate: f64,
-    /// Destination CDF for steady mode: (cumulative rate, dst).
-    dst_cdf: Vec<(f64, u32)>,
-    /// Remaining (dst, count) entries for drain mode, drawn round-robin.
-    pending: Vec<(u32, u64)>,
-    next_pending: usize,
-    /// Generated-but-not-yet-injected flits (unbounded source FIFO),
-    /// stored as (dst, born).
-    fifo: std::collections::VecDeque<(u32, u64)>,
-}
-
-/// The cycle-accurate simulator.
-pub struct NocSim {
+/// The on-chip fabric: routers, ports and the switching state the shared
+/// engine core knows nothing about.
+struct NocFabric {
     net: Network,
     cfg: NocConfig,
-    mode: Mode,
     routers: Vec<RouterState>,
-    sources: Vec<SourceState>,
     /// Routers with queued flits (worklist).
     active: Vec<usize>,
     active_flag: Vec<bool>,
     /// reverse[r][slot] = input port index on the neighbor reached via slot.
     reverse: Vec<Vec<usize>>,
-    rng: Pcg32,
-    track_pairs: bool,
-    stats: SimStats,
-    now: u64,
-    in_warmup: bool,
     /// Terminals that still generate or hold traffic (worklist).
     live_sources: Vec<usize>,
     /// P2P only: earliest cycle each node may forward again (store-and-
     /// forward is half-duplex: receive cycle + transmit cycle, so a node
     /// sustains at most one flit every 2 cycles).
     node_free: Vec<u64>,
-    /// Flits generated but not yet delivered (drain-mode bookkeeping).
-    in_flight: u64,
-    /// Flits not yet generated (drain mode).
-    ungenerated: u64,
     /// Reusable per-cycle move buffer: (router, in_port, vc, out_port).
     /// Kept across cycles to avoid one allocation per simulated cycle.
     moves: Vec<(u32, u8, u8, u8)>,
@@ -166,15 +57,21 @@ pub struct NocSim {
     /// the switch loop skip routers whose flits are all mid-pipeline with
     /// one compare instead of a 5-port queue scan.
     next_ready: Vec<u64>,
-    /// Per-link telemetry, collected only when built with `instrument(true)`
-    /// (boxed so the disabled path stays one pointer wide).
-    telem: Option<Box<SimTelemetry>>,
     /// link_ids[r][slot] = telemetry link index for the (r, slot) hop
     /// (`NONE` for absent slots). Empty unless instrumented.
     link_ids: Vec<Vec<usize>>,
 }
 
+/// The cycle-accurate simulator: a shared [`EngineCore`] plus the on-chip
+/// [`NocFabric`].
+pub struct NocSim {
+    core: EngineCore,
+    fab: NocFabric,
+}
+
 impl NocSim {
+    /// Build a simulator for `terminals` tiles on `topology`. Flow
+    /// endpoints are tile ids; self-flows never enter the NoC.
     pub fn new(
         topology: Topology,
         terminals: usize,
@@ -215,85 +112,41 @@ impl NocSim {
             })
             .collect();
 
-        // Group flows by source.
-        let mut sources: Vec<SourceState> = (0..terminals)
-            .map(|_| SourceState {
-                rate: 0.0,
-                dst_cdf: Vec::new(),
-                pending: Vec::new(),
-                next_pending: 0,
-                fifo: std::collections::VecDeque::new(),
-            })
-            .collect();
-        for f in flows {
-            assert!(f.src < terminals && f.dst < terminals, "flow out of range");
-            if f.src == f.dst {
-                continue; // intra-tile traffic never enters the NoC
-            }
-            let s = &mut sources[f.src];
-            s.rate += f.rate;
-            s.dst_cdf.push((s.rate, f.dst as u32));
-            if f.flits > 0 {
-                s.pending.push((f.dst as u32, f.flits));
-            }
-        }
-
-        let steady = matches!(mode, Mode::Steady { .. });
+        let core = EngineCore::new(terminals, flows, mode, seed);
+        let steady = mode.is_steady();
         let live_sources: Vec<usize> = (0..terminals)
             .filter(|&t| {
                 if steady {
-                    sources[t].rate > 0.0
+                    core.sources[t].rate > 0.0
                 } else {
-                    !sources[t].pending.is_empty()
+                    !core.sources[t].pending.is_empty()
                 }
             })
             .collect();
-        let ungenerated: u64 = sources
-            .iter()
-            .flat_map(|s| s.pending.iter().map(|&(_, c)| c))
-            .sum();
 
         let net_routers = net.routers;
-        let mut sim = Self {
-            active: Vec::with_capacity(net.routers),
-            active_flag: vec![false; net.routers],
-            routers,
-            reverse,
-            net,
-            cfg: cfg.clone(),
-            mode,
-            sources,
-            rng: Pcg32::seeded(seed),
-            track_pairs: false,
-            stats: SimStats::default(),
-            now: 0,
-            in_warmup: steady,
-            live_sources,
-            node_free: vec![0; net_routers],
-            in_flight: 0,
-            ungenerated,
-            moves: Vec::with_capacity(256),
-            spare: Vec::with_capacity(64),
-            next_ready: vec![0; net_routers],
-            telem: None,
-            link_ids: Vec::new(),
-        };
-        // Saturation guard: clamp aggregate per-source rate at 1 flit/cycle.
-        for s in &mut sim.sources {
-            if s.rate > 1.0 {
-                let scale = 1.0 / s.rate;
-                for e in &mut s.dst_cdf {
-                    e.0 *= scale;
-                }
-                s.rate = 1.0;
-            }
+        Self {
+            core,
+            fab: NocFabric {
+                active: Vec::with_capacity(net.routers),
+                active_flag: vec![false; net.routers],
+                routers,
+                reverse,
+                net,
+                cfg: cfg.clone(),
+                live_sources,
+                node_free: vec![0; net_routers],
+                moves: Vec::with_capacity(256),
+                spare: Vec::with_capacity(64),
+                next_ready: vec![0; net_routers],
+                link_ids: Vec::new(),
+            },
         }
-        sim
     }
 
     /// Enable per-pair latency tracking (Fig. 15 / Table 3).
     pub fn track_pairs(mut self, on: bool) -> Self {
-        self.track_pairs = on;
+        self.core.track_pairs = on;
         self
     }
 
@@ -303,16 +156,16 @@ impl NocSim {
     /// costs one branch per hook site and allocates nothing.
     pub fn instrument(mut self, on: bool) -> Self {
         if !on {
-            self.telem = None;
-            self.link_ids = Vec::new();
+            self.core.telem = None;
+            self.fab.link_ids = Vec::new();
             return self;
         }
         // Enumerate directed links in deterministic (router, slot) order.
         let mut links = Vec::new();
-        let mut link_ids = Vec::with_capacity(self.net.routers);
-        for r in 0..self.net.routers {
-            let mut ids = Vec::with_capacity(self.net.neighbors[r].len());
-            for &n in &self.net.neighbors[r] {
+        let mut link_ids = Vec::with_capacity(self.fab.net.routers);
+        for r in 0..self.fab.net.routers {
+            let mut ids = Vec::with_capacity(self.fab.net.neighbors[r].len());
+            for &n in &self.fab.net.neighbors[r] {
                 if n == NONE {
                     ids.push(NONE);
                 } else {
@@ -322,11 +175,38 @@ impl NocSim {
             }
             link_ids.push(ids);
         }
-        self.telem = Some(Box::new(SimTelemetry::sized(links, self.sources.len())));
-        self.link_ids = link_ids;
+        self.core.telem = Some(Box::new(SimTelemetry::sized(
+            links,
+            self.core.sources.len(),
+        )));
+        self.fab.link_ids = link_ids;
         self
     }
 
+    /// Run to completion per the configured mode.
+    pub fn run(self) -> SimStats {
+        self.run_instrumented().0
+    }
+
+    /// Run to completion, also returning the collected telemetry (empty
+    /// unless built with [`NocSim::instrument`]).
+    pub fn run_instrumented(mut self) -> (SimStats, SimTelemetry) {
+        run_engine(&mut self.core, &mut self.fab);
+        let telem = self.core.take_telem();
+        (self.core.stats, telem)
+    }
+}
+
+impl Fabric for NocFabric {
+    fn step(&mut self, core: &mut EngineCore) {
+        self.inject(core);
+        self.switch(core);
+    }
+    // Single-cycle links: the NoC never idle-waits, so the default
+    // `queued_work`/`next_arrival` (step one cycle at a time) apply.
+}
+
+impl NocFabric {
     #[inline]
     fn mark_active(&mut self, r: usize) {
         if !self.active_flag[r] {
@@ -337,26 +217,24 @@ impl NocSim {
 
     /// Push a flit into router `r` input port `port`, sampling occupancy.
     /// Returns false when the buffer is full.
-    fn push_router(&mut self, r: usize, port: usize, mut flit: Flit, sample: bool) -> bool {
+    fn push_router(
+        &mut self,
+        core: &mut EngineCore,
+        r: usize,
+        port: usize,
+        mut flit: Flit,
+        sample: bool,
+    ) -> bool {
         let occ = self.routers[r].inputs[port].occupancy();
-        flit.ready = self.now + self.pipeline_delay();
+        flit.ready = core.now + self.pipeline_delay();
         if !self.routers[r].inputs[port].push(flit) {
             return false;
         }
         if flit.ready < self.next_ready[r] {
             self.next_ready[r] = flit.ready;
         }
-        if sample && !self.in_warmup {
-            self.stats.arrivals += 1;
-            if occ == 0 {
-                self.stats.arrivals_zero += 1;
-            } else {
-                self.stats.nonzero_occ_sum += occ as f64;
-                self.stats.nonzero_occ_count += 1;
-            }
-            if let Some(tm) = &mut self.telem {
-                tm.occupancy.record(occ as f64);
-            }
+        if sample {
+            core.sample_occupancy(occ);
         }
         self.mark_active(r);
         true
@@ -371,56 +249,24 @@ impl NocSim {
         }
     }
 
-    /// Injection phase: generate per-mode traffic and move source-FIFO
-    /// heads into the attached router's local input port. Only terminals on
-    /// the `live_sources` worklist are visited; a terminal retires once it
-    /// has nothing left to generate or inject (drain mode).
-    fn inject(&mut self) {
-        let steady = matches!(self.mode, Mode::Steady { .. });
+    /// Injection phase: generate per-mode traffic (delegated to the engine
+    /// core) and move source-FIFO heads into the attached router's local
+    /// input port. Only terminals on the `live_sources` worklist are
+    /// visited; a terminal retires once it has nothing left to generate or
+    /// inject (drain mode).
+    fn inject(&mut self, core: &mut EngineCore) {
+        let steady = core.mode.is_steady();
         let mut i = 0;
         while i < self.live_sources.len() {
             let t = self.live_sources[i];
             // Generate.
             if steady {
-                let s = &mut self.sources[t];
-                if s.rate > 0.0 && self.rng.bernoulli(s.rate) {
-                    let u = self.rng.next_f64() * s.rate;
-                    let dst = match s
-                        .dst_cdf
-                        .binary_search_by(|probe| probe.0.partial_cmp(&u).unwrap())
-                    {
-                        Ok(i) => s.dst_cdf[(i + 1).min(s.dst_cdf.len() - 1)].1,
-                        Err(i) => s.dst_cdf[i.min(s.dst_cdf.len() - 1)].1,
-                    };
-                    s.fifo.push_back((dst, self.now));
-                    self.stats.injected += 1;
-                    self.in_flight += 1;
-                    if let Some(tm) = &mut self.telem {
-                        tm.injected[t] += 1;
-                    }
-                }
-            } else if self.sources[t].fifo.is_empty() && !self.sources[t].pending.is_empty() {
-                // Drain mode: keep the FIFO primed with the next flit,
-                // round-robin across destination entries.
-                let s = &mut self.sources[t];
-                let k = s.next_pending % s.pending.len();
-                let (dst, remaining) = s.pending[k];
-                s.fifo.push_back((dst, self.now));
-                self.stats.injected += 1;
-                self.in_flight += 1;
-                self.ungenerated -= 1;
-                if let Some(tm) = &mut self.telem {
-                    tm.injected[t] += 1;
-                }
-                if remaining <= 1 {
-                    s.pending.swap_remove(k);
-                } else {
-                    s.pending[k].1 = remaining - 1;
-                }
-                s.next_pending = s.next_pending.wrapping_add(1);
+                core.generate_steady(t);
+            } else {
+                core.generate_drain(t);
             }
             // Inject FIFO head into the router if there is buffer space.
-            if let Some(&(dst, born)) = self.sources[t].fifo.front() {
+            if let Some(&(dst, born)) = core.sources[t].fifo.front() {
                 let r = self.net.attach[t];
                 let port = self.net.attach_port[t];
                 if self.routers[r].inputs[port].has_space() {
@@ -430,15 +276,15 @@ impl NocSim {
                         born,
                         ready: 0,
                     };
-                    let ok = self.push_router(r, port, flit, false);
+                    let ok = self.push_router(core, r, port, flit, false);
                     debug_assert!(ok);
-                    self.sources[t].fifo.pop_front();
+                    core.sources[t].fifo.pop_front();
                 }
             }
             // Retire exhausted drain-mode sources.
             if !steady
-                && self.sources[t].fifo.is_empty()
-                && self.sources[t].pending.is_empty()
+                && core.sources[t].fifo.is_empty()
+                && core.sources[t].pending.is_empty()
             {
                 self.live_sources.swap_remove(i);
             } else {
@@ -448,22 +294,23 @@ impl NocSim {
     }
 
     /// One switching cycle over all active routers (two-phase).
-    fn switch(&mut self) {
+    fn switch(&mut self, core: &mut EngineCore) {
         // Phase A: collect moves (router, in_port, vc, out_port) into the
         // reusable buffer; claims live in a fixed stack array (no per-router
         // heap allocation — this path dominates whole-framework runtime).
         self.moves.clear();
         let p2p = !self.net.topology.has_routers();
+        let now = core.now;
         // Swap in the spare buffer so `mark_active` pushes reuse capacity.
         let old_active = std::mem::replace(&mut self.active, std::mem::take(&mut self.spare));
         for &r in &old_active {
             self.active_flag[r] = false;
-            if p2p && self.node_free[r] > self.now {
+            if p2p && self.node_free[r] > now {
                 // Half-duplex P2P node still busy with the previous flit.
                 self.mark_active(r);
                 continue;
             }
-            if self.next_ready[r] > self.now {
+            if self.next_ready[r] > now {
                 // All heads still in the router pipeline: skip the scan.
                 self.mark_active(r);
                 continue;
@@ -485,7 +332,7 @@ impl NocSim {
                     let vc = (port.next_vc + dv) % nvc;
                     if let Some(head) = port.vcs[vc].front() {
                         occupied = true;
-                        if head.ready <= self.now {
+                        if head.ready <= now {
                             let out = self.net.route(r, head.dst as usize);
                             if !claims[..n_claims].iter().any(|&(o, _, _)| o as usize == out)
                             {
@@ -508,9 +355,9 @@ impl NocSim {
             if n_claims > 0 {
                 self.routers[r].rr[0] = (rr_base + 1) % ports;
                 if p2p {
-                    self.node_free[r] = self.now + 2;
+                    self.node_free[r] = now + 2;
                 }
-                self.next_ready[r] = self.now; // moved: rescan next cycle
+                self.next_ready[r] = now; // moved: rescan next cycle
             } else if occupied {
                 self.next_ready[r] = min_unready;
             }
@@ -531,7 +378,7 @@ impl NocSim {
             if out < self.net.local_ports {
                 let flit = self.routers[r].inputs[ip].vcs[vc].pop_front().unwrap();
                 self.routers[r].inputs[ip].next_vc = (vc + 1) % self.cfg.virtual_channels;
-                self.deliver(flit);
+                core.deliver(flit.src, flit.dst, flit.born);
                 if self.routers[r].total_occupancy() > 0 {
                     self.mark_active(r);
                 }
@@ -546,9 +393,9 @@ impl NocSim {
                 self.routers[r].inputs[ip].next_vc = (vc + 1) % self.cfg.virtual_channels;
                 flit.ready = 0; // set by push_router
                 // +1 cycle link traversal is folded into arrival at now+pipe.
-                let ok = self.push_router(next, in_port, flit, true);
+                let ok = self.push_router(core, next, in_port, flit, true);
                 debug_assert!(ok);
-                if let Some(tm) = &mut self.telem {
+                if let Some(tm) = &mut core.telem {
                     tm.link_flits[self.link_ids[r][slot]] += 1;
                 }
             }
@@ -561,102 +408,12 @@ impl NocSim {
         spare.clear();
         self.spare = spare;
     }
-
-    fn deliver(&mut self, flit: Flit) {
-        let latency = self.now - flit.born + 1;
-        self.in_flight -= 1;
-        if self.in_warmup {
-            return;
-        }
-        self.stats.delivered += 1;
-        if let Some(tm) = &mut self.telem {
-            tm.ejected[flit.dst as usize] += 1;
-        }
-        self.stats.avg_latency += latency as f64; // running sum; divided at end
-        self.stats.max_latency = self.stats.max_latency.max(latency);
-        self.stats.makespan = self.now + 1;
-        if self.track_pairs {
-            let key = ((flit.src as u64) << 32) | flit.dst as u64;
-            let p = self.stats.per_pair.entry(key).or_default();
-            p.count += 1;
-            p.sum_latency += latency;
-            p.max_latency = p.max_latency.max(latency);
-        }
-    }
-
-    /// Any flits anywhere (source FIFOs, pending lists, router buffers)?
-    #[inline]
-    fn busy(&self) -> bool {
-        self.in_flight > 0 || self.ungenerated > 0
-    }
-
-    /// Run to completion per the configured mode.
-    pub fn run(self) -> SimStats {
-        self.run_instrumented().0
-    }
-
-    /// Run to completion, also returning the collected telemetry (empty
-    /// unless built with [`NocSim::instrument`]).
-    pub fn run_instrumented(mut self) -> (SimStats, SimTelemetry) {
-        match self.mode {
-            Mode::Steady { warmup, measure } => {
-                while self.now < warmup {
-                    self.inject();
-                    self.switch();
-                    self.now += 1;
-                }
-                self.in_warmup = false;
-                let end = warmup + measure;
-                while self.now < end {
-                    self.inject();
-                    self.switch();
-                    self.now += 1;
-                }
-            }
-            Mode::Drain { max_cycles } => {
-                self.in_warmup = false;
-                while self.busy() && self.now < max_cycles {
-                    self.inject();
-                    self.switch();
-                    self.now += 1;
-                }
-                self.stats.drained = !self.busy();
-            }
-        }
-        self.stats.cycles = self.now;
-        if self.stats.delivered > 0 {
-            self.stats.avg_latency /= self.stats.delivered as f64;
-        }
-        let mut telem = match self.telem.take() {
-            Some(b) => *b,
-            None => SimTelemetry::default(),
-        };
-        telem.cycles = self.stats.cycles;
-        (self.stats, telem)
-    }
 }
 
 /// Convenience: uniform-random traffic at a given per-node injection rate
 /// (flits/node/cycle) — the classic BookSim benchmark behind Fig. 5.
 pub fn uniform_random_flows(terminals: usize, rate_per_node: f64) -> Vec<FlowSpec> {
-    let mut flows = Vec::new();
-    if terminals < 2 {
-        return flows;
-    }
-    let pair_rate = rate_per_node / (terminals - 1) as f64;
-    for s in 0..terminals {
-        for d in 0..terminals {
-            if s != d {
-                flows.push(FlowSpec {
-                    src: s,
-                    dst: d,
-                    rate: pair_rate,
-                    flits: 0,
-                });
-            }
-        }
-    }
-    flows
+    crate::sim::engine::uniform_flows(terminals, rate_per_node)
 }
 
 #[cfg(test)]
@@ -963,6 +720,76 @@ mod tests {
         .run();
         assert_eq!(s.injected, 0);
         assert!(s.drained);
+    }
+
+    #[test]
+    fn golden_determinism_same_seed_same_stats() {
+        // Golden equivalence anchor for the engine refactor: a fixed seed
+        // must reproduce every statistic bit-for-bit, in both modes, with
+        // and without instrumentation.
+        let drain_flows = [
+            FlowSpec {
+                src: 0,
+                dst: 5,
+                rate: 0.0,
+                flits: 60,
+            },
+            FlowSpec {
+                src: 7,
+                dst: 2,
+                rate: 0.0,
+                flits: 33,
+            },
+        ];
+        let run_drain = |instrument: bool| {
+            NocSim::new(
+                Topology::Mesh,
+                9,
+                &cfg(),
+                &drain_flows,
+                Mode::Drain { max_cycles: 100_000 },
+                0xD00D,
+            )
+            .track_pairs(true)
+            .instrument(instrument)
+            .run()
+        };
+        let a = run_drain(false);
+        let b = run_drain(false);
+        let c = run_drain(true);
+        for other in [&b, &c] {
+            assert_eq!(a.injected, other.injected);
+            assert_eq!(a.delivered, other.delivered);
+            assert_eq!(a.makespan, other.makespan);
+            assert_eq!(a.cycles, other.cycles);
+            assert_eq!(a.avg_latency, other.avg_latency);
+            assert_eq!(a.max_latency, other.max_latency);
+            assert_eq!(a.per_pair[&5u64].sum_latency, other.per_pair[&5u64].sum_latency);
+        }
+
+        let run_steady = || {
+            NocSim::new(
+                Topology::Torus,
+                16,
+                &cfg(),
+                &uniform_random_flows(16, 0.1),
+                Mode::Steady {
+                    warmup: 300,
+                    measure: 2_000,
+                },
+                0xBEE5,
+            )
+            .run()
+        };
+        let s1 = run_steady();
+        let s2 = run_steady();
+        assert!(s1.delivered > 0);
+        assert_eq!(s1.injected, s2.injected);
+        assert_eq!(s1.delivered, s2.delivered);
+        assert_eq!(s1.avg_latency, s2.avg_latency);
+        assert_eq!(s1.arrivals, s2.arrivals);
+        assert_eq!(s1.arrivals_zero, s2.arrivals_zero);
+        assert_eq!(s1.nonzero_occ_sum, s2.nonzero_occ_sum);
     }
 
     #[test]

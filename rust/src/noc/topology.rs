@@ -28,6 +28,7 @@ pub enum Topology {
 }
 
 impl Topology {
+    /// Display name as printed in the paper's tables.
     pub fn name(self) -> &'static str {
         match self {
             Topology::P2P => "P2P",
@@ -39,6 +40,7 @@ impl Topology {
         }
     }
 
+    /// Parse a case-insensitive topology name (`noc-` prefix optional).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().replace("noc-", "").as_str() {
             "p2p" => Some(Topology::P2P),
@@ -56,6 +58,7 @@ impl Topology {
         !matches!(self, Topology::P2P)
     }
 
+    /// Every topology, in sweep order.
     pub fn all() -> [Topology; 6] {
         [
             Topology::P2P,
@@ -76,6 +79,7 @@ impl Topology {
 /// A built network: routers, links, and a routing function.
 #[derive(Clone, Debug)]
 pub struct Network {
+    /// The topology this network was built as.
     pub topology: Topology,
     /// Number of terminals (tiles).
     pub terminals: usize,
@@ -96,6 +100,7 @@ pub struct Network {
     pub local_ports: usize,
 }
 
+/// Sentinel for an unconnected / local port in `neighbors`.
 pub const NONE: usize = usize::MAX;
 
 impl Network {

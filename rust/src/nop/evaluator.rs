@@ -24,33 +24,45 @@ use crate::noc::latency::flits_per_pair;
 use crate::noc::sim::{FlowSpec, Mode, NocSim};
 use crate::noc::topology::{Network, Topology};
 use crate::noc::NocPower;
-use crate::nop::sim::NopSim;
 use crate::nop::topology::{NopNetwork, NopTopology};
 
 /// Full evaluation result for one (DNN, chiplet count, NoP, NoC) point.
 #[derive(Clone, Debug)]
 pub struct NopEvaluation {
+    /// Zoo model name.
     pub dnn: String,
+    /// Tile-level topology inside each chiplet.
     pub noc_topology: Topology,
+    /// Package-level topology.
     pub nop_topology: NopTopology,
-    /// Package size (requested chiplets) and how many hold layers.
+    /// Package size (requested chiplets).
     pub chiplets: usize,
+    /// Chiplets that actually hold layers.
     pub populated: usize,
+    /// Total tiles across the package.
     pub tiles: usize,
+    /// Tiles mapped onto each chiplet, by chiplet id.
     pub tiles_per_chiplet: Vec<usize>,
     /// Bits/frame crossing chiplet boundaries (the NoP load).
     pub cross_bits: u64,
-    /// Compute fabric (circuit model), identical to the single-chip path.
+    /// Compute latency per frame, seconds (circuit model, identical to
+    /// the single-chip path).
     pub compute_latency_s: f64,
+    /// Compute energy per frame, joules.
     pub compute_energy_j: f64,
+    /// Compute area, mm².
     pub compute_area_mm2: f64,
-    /// Exposed (non-overlapped) latency attributed to the on-chiplet NoCs
-    /// and to the package NoP, plus their energy/area.
+    /// Exposed (non-overlapped) latency of the on-chiplet NoCs, seconds.
     pub noc_latency_s: f64,
+    /// On-chiplet NoC energy per frame, joules.
     pub noc_energy_j: f64,
+    /// On-chiplet NoC area, mm².
     pub noc_area_mm2: f64,
+    /// Exposed latency of the package NoP, seconds.
     pub nop_latency_s: f64,
+    /// NoP transfer energy per frame, joules.
     pub nop_energy_j: f64,
+    /// SerDes PHY area, mm².
     pub nop_area_mm2: f64,
 }
 
@@ -70,10 +82,12 @@ impl NopEvaluation {
         self.compute_area_mm2 + self.noc_area_mm2 + self.nop_area_mm2
     }
 
+    /// Throughput in frames/s (1 / latency).
     pub fn fps(&self) -> f64 {
         1.0 / self.latency_s()
     }
 
+    /// Average power draw, watts.
     pub fn power_w(&self) -> f64 {
         self.energy_j() / self.latency_s()
     }
@@ -257,15 +271,17 @@ pub fn evaluate_package(
                         + total
                             .saturating_mul(4)
                             .saturating_mul(nop.hop_latency_cycles + 2);
-                    let stats = NopSim::new(
+                    // Memoized: repeated evaluations of the same layer's
+                    // package flows (sweeps, the advisor, serving-model
+                    // builds) simulate once.
+                    let stats = crate::sim::memo::drain_makespan(
                         nop.topology,
                         nop.chiplets,
                         nop,
                         &nop_dflows,
-                        Mode::Drain { max_cycles: budget },
+                        budget,
                         sim.seed ^ lt.layer as u64,
-                    )
-                    .run();
+                    );
                     let nop_native = if stats.drained { stats.makespan } else { budget };
                     nop_native as f64 * (arch.freq_hz / nop.freq_hz)
                 }
@@ -410,7 +426,8 @@ pub fn evaluate_package(
 /// total NoP flits per (producer chiplet, consumer chiplet) pair over all
 /// layers, in sorted pair order. This is the traffic the telemetry link
 /// heatmap visualizes (`repro chiplet --heatmap`); running it through an
-/// instrumented [`NopSim`] drain shows which package links the partition
+/// instrumented [`NopSim`](crate::nop::sim::NopSim) drain shows which
+/// package links the partition
 /// actually loads.
 pub fn package_flows(
     graph: &DnnGraph,

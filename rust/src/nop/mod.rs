@@ -27,5 +27,5 @@ pub mod sim;
 pub mod topology;
 
 pub use evaluator::{evaluate_package, nop_transfer_cycles, NopEvaluation};
-pub use sim::{saturation_rate, uniform_nop_flows, NopAudit, NopSim};
+pub use sim::{saturation_rate, saturation_rate_scan, uniform_nop_flows, NopAudit, NopSim};
 pub use topology::{NopNetwork, NopTopology};

@@ -23,6 +23,7 @@ pub enum NopTopology {
 }
 
 impl NopTopology {
+    /// Display name as printed in tables.
     pub fn name(self) -> &'static str {
         match self {
             NopTopology::P2p => "P2P",
@@ -31,6 +32,7 @@ impl NopTopology {
         }
     }
 
+    /// Parse a case-insensitive topology name (`nop-` prefix optional).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().replace("nop-", "").as_str() {
             "p2p" => Some(NopTopology::P2p),
@@ -40,6 +42,7 @@ impl NopTopology {
         }
     }
 
+    /// Every package topology, in sweep order.
     pub fn all() -> [NopTopology; 3] {
         [NopTopology::P2p, NopTopology::Ring, NopTopology::Mesh]
     }
@@ -54,6 +57,7 @@ impl NopTopology {
 /// mesh grids may contain passive relay sites beyond `k - 1`).
 #[derive(Clone, Debug)]
 pub struct NopNetwork {
+    /// The topology this package was built as.
     pub topology: NopTopology,
     /// Chiplets in the package.
     pub chiplets: usize,
@@ -64,6 +68,7 @@ pub struct NopNetwork {
 }
 
 impl NopNetwork {
+    /// Build a package network over `k` chiplets.
     pub fn build(topology: NopTopology, k: usize) -> Self {
         assert!(k > 0, "package needs at least one chiplet");
         let (nodes, dims) = match topology {

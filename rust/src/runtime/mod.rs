@@ -65,10 +65,12 @@ mod backend {
             })
         }
 
+        /// PJRT platform name reported by the client.
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
+        /// Number of PJRT devices on the client.
         pub fn device_count(&self) -> usize {
             self.client.device_count()
         }
@@ -147,18 +149,22 @@ mod backend {
     }
 
     impl Runtime {
+        /// Always fails: the stub has no PJRT client.
         pub fn cpu() -> Result<Self> {
             bail!(UNAVAILABLE);
         }
 
+        /// Stub platform name (`"stub"`).
         pub fn platform(&self) -> String {
             "stub".into()
         }
 
+        /// Always 0 on the stub.
         pub fn device_count(&self) -> usize {
             0
         }
 
+        /// Always fails: the stub cannot load artifacts.
         pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&LoadedModel> {
             let _ = path.as_ref();
             bail!(UNAVAILABLE);
@@ -166,6 +172,7 @@ mod backend {
     }
 
     impl LoadedModel {
+        /// Always fails (never constructed on the stub).
         pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
             bail!(UNAVAILABLE);
         }

@@ -1,0 +1,517 @@
+//! The generic flit-level event engine.
+//!
+//! [`EngineCore`] owns every piece of simulator state that is independent
+//! of the network fabric: the operating [`Mode`], the per-source traffic
+//! generators, the PCG32 stream, the simulation clock, warm-up gating,
+//! in-flight accounting, the aggregated [`SimStats`] and the optional
+//! telemetry sink. A fabric (the NoC router mesh or the NoP SerDes graph)
+//! implements [`Fabric`] and is stepped by [`run_engine`], which provides
+//! the two canonical run loops:
+//!
+//! * **Steady** — warm up, then measure for a fixed window, one cycle per
+//!   iteration.
+//! * **Drain** — run until every generated flit is delivered (or the cycle
+//!   budget is exhausted), jumping the clock straight to the next
+//!   scheduled arrival whenever all traffic is mid-flight
+//!   ([`Fabric::queued_work`] / [`Fabric::next_arrival`] — the
+//!   event-skipping idiom that makes long-latency package hops cheap).
+//!
+//! In-flight messages carry their origin (`src`, `dst`, `born`); the
+//! route-progress state (cursor, per-hop countdown) lives in the fabric,
+//! which knows its own link geometry. Both adapters feed deliveries back
+//! through [`EngineCore::deliver`] so latency, makespan and per-pair
+//! statistics are computed in exactly one place.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::telemetry::SimTelemetry;
+use crate::util::Pcg32;
+
+/// One source→destination traffic specification.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowSpec {
+    /// Source terminal (tile or chiplet id).
+    pub src: usize,
+    /// Destination terminal (tile or chiplet id).
+    pub dst: usize,
+    /// Injection rate in flits/cycle (steady mode).
+    pub rate: f64,
+    /// Total flits to send (drain mode); ignored in steady mode.
+    pub flits: u64,
+}
+
+/// Simulation mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Bernoulli injection; warm up, then measure for a fixed window.
+    Steady {
+        /// Warm-up cycles excluded from statistics.
+        warmup: u64,
+        /// Measured cycles after warm-up.
+        measure: u64,
+    },
+    /// Inject `FlowSpec::flits` per pair, run until drained (or `max_cycles`).
+    Drain {
+        /// Cycle budget after which an undrained run is abandoned.
+        max_cycles: u64,
+    },
+}
+
+impl Mode {
+    /// Is this the Bernoulli steady-state mode?
+    #[inline]
+    pub fn is_steady(&self) -> bool {
+        matches!(self, Mode::Steady { .. })
+    }
+}
+
+/// Aggregated results of one simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Cycles simulated.
+    pub cycles: u64,
+    /// Flits injected into source FIFOs.
+    pub injected: u64,
+    /// Flits delivered to their destination terminal.
+    pub delivered: u64,
+    /// Mean flit latency (generation → ejection), cycles.
+    pub avg_latency: f64,
+    /// Worst flit latency, cycles.
+    pub max_latency: u64,
+    /// Drain mode: cycle at which the last flit ejected.
+    pub makespan: u64,
+    /// Drain mode: did the network fully drain within the cycle budget?
+    pub drained: bool,
+    /// Router-buffer arrivals observed (occupancy sampling, Fig. 13).
+    pub arrivals: u64,
+    /// Arrivals that found the target queue empty.
+    pub arrivals_zero: u64,
+    /// Sum of occupancies for arrivals at non-empty queues (Fig. 14).
+    pub nonzero_occ_sum: f64,
+    /// Count of arrivals at non-empty queues (Fig. 14).
+    pub nonzero_occ_count: u64,
+    /// Per-pair latency stats, keyed by `(src << 32) | dst` (Fig. 15 /
+    /// Table 3). Only filled when `track_pairs` is enabled.
+    pub per_pair: HashMap<u64, PairStat>,
+}
+
+/// Latency statistics for one source–destination pair.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairStat {
+    /// Flits delivered for this pair.
+    pub count: u64,
+    /// Sum of per-flit latencies, cycles.
+    pub sum_latency: u64,
+    /// Worst per-flit latency, cycles.
+    pub max_latency: u64,
+}
+
+impl PairStat {
+    /// Mean flit latency for this pair, cycles.
+    pub fn avg(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_latency as f64 / self.count as f64
+        }
+    }
+}
+
+impl SimStats {
+    /// Fraction of buffer arrivals that found the queue empty (Fig. 13).
+    pub fn zero_occupancy_fraction(&self) -> f64 {
+        if self.arrivals == 0 {
+            1.0
+        } else {
+            self.arrivals_zero as f64 / self.arrivals as f64
+        }
+    }
+
+    /// Mean occupancy of non-empty queues at arrival (Fig. 14).
+    pub fn mean_nonzero_occupancy(&self) -> f64 {
+        if self.nonzero_occ_count == 0 {
+            0.0
+        } else {
+            self.nonzero_occ_sum / self.nonzero_occ_count as f64
+        }
+    }
+}
+
+/// Per-source injection state: either a Bernoulli process over a dst
+/// distribution (steady) or a finite interleaved flit list (drain).
+#[derive(Default)]
+pub(crate) struct SourceState {
+    /// Aggregate injection rate (steady).
+    pub(crate) rate: f64,
+    /// Destination CDF for steady mode: (cumulative rate, dst).
+    pub(crate) dst_cdf: Vec<(f64, u32)>,
+    /// Remaining (dst, count) entries for drain mode, drawn round-robin.
+    pub(crate) pending: Vec<(u32, u64)>,
+    pub(crate) next_pending: usize,
+    /// Generated-but-not-yet-injected flits (unbounded source FIFO),
+    /// stored as (dst, born).
+    pub(crate) fifo: VecDeque<(u32, u64)>,
+}
+
+/// Fabric-independent simulator state: mode, clock, RNG, traffic sources,
+/// statistics and telemetry. Both `NocSim` and `NopSim` embed one of these
+/// and keep only topology/link state of their own.
+pub(crate) struct EngineCore {
+    pub(crate) mode: Mode,
+    pub(crate) sources: Vec<SourceState>,
+    pub(crate) rng: Pcg32,
+    pub(crate) track_pairs: bool,
+    pub(crate) stats: SimStats,
+    pub(crate) now: u64,
+    pub(crate) in_warmup: bool,
+    /// Flits generated but not yet delivered.
+    pub(crate) in_flight: u64,
+    /// Drain mode: flits not yet generated.
+    pub(crate) ungenerated: u64,
+    /// Telemetry sink, collected only when instrumented (boxed so the
+    /// disabled path stays one pointer wide).
+    pub(crate) telem: Option<Box<SimTelemetry>>,
+}
+
+impl EngineCore {
+    /// Group `flows` by source, apply the saturation guard (a terminal
+    /// injects at most one flit per cycle — rates above 1.0 are clamped
+    /// and the destination CDF rescaled), and seed the PCG32 stream.
+    /// Self-flows never enter the network.
+    pub(crate) fn new(terminals: usize, flows: &[FlowSpec], mode: Mode, seed: u64) -> Self {
+        let mut sources: Vec<SourceState> =
+            (0..terminals).map(|_| SourceState::default()).collect();
+        for f in flows {
+            assert!(
+                f.src < terminals && f.dst < terminals,
+                "flow endpoint out of range"
+            );
+            if f.src == f.dst {
+                continue; // intra-terminal traffic never enters the network
+            }
+            let s = &mut sources[f.src];
+            s.rate += f.rate;
+            s.dst_cdf.push((s.rate, f.dst as u32));
+            if f.flits > 0 {
+                s.pending.push((f.dst as u32, f.flits));
+            }
+        }
+        // Saturation guard: clamp aggregate per-source rate at 1 flit/cycle.
+        for s in &mut sources {
+            if s.rate > 1.0 {
+                let scale = 1.0 / s.rate;
+                for e in &mut s.dst_cdf {
+                    e.0 *= scale;
+                }
+                s.rate = 1.0;
+            }
+        }
+        let ungenerated: u64 = sources
+            .iter()
+            .flat_map(|s| s.pending.iter().map(|&(_, c)| c))
+            .sum();
+        let steady = mode.is_steady();
+        Self {
+            mode,
+            sources,
+            rng: Pcg32::seeded(seed),
+            track_pairs: false,
+            stats: SimStats::default(),
+            now: 0,
+            in_warmup: steady,
+            in_flight: 0,
+            ungenerated,
+            telem: None,
+        }
+    }
+
+    /// Steady-mode generation for terminal `t`: one Bernoulli trial at the
+    /// aggregate source rate, destination drawn from the per-source CDF by
+    /// binary search. Generated flits land in the source FIFO.
+    pub(crate) fn generate_steady(&mut self, t: usize) {
+        let s = &mut self.sources[t];
+        if s.rate > 0.0 && self.rng.bernoulli(s.rate) {
+            let u = self.rng.next_f64() * s.rate;
+            let dst = match s
+                .dst_cdf
+                .binary_search_by(|probe| probe.0.partial_cmp(&u).unwrap())
+            {
+                Ok(i) => s.dst_cdf[(i + 1).min(s.dst_cdf.len() - 1)].1,
+                Err(i) => s.dst_cdf[i.min(s.dst_cdf.len() - 1)].1,
+            };
+            s.fifo.push_back((dst, self.now));
+            self.stats.injected += 1;
+            self.in_flight += 1;
+            if let Some(tm) = &mut self.telem {
+                tm.injected[t] += 1;
+            }
+        }
+    }
+
+    /// Drain-mode generation for terminal `t`: keep the source FIFO primed
+    /// with the next flit, round-robin across the pending destination
+    /// entries. No-op while the FIFO holds a flit or nothing remains.
+    pub(crate) fn generate_drain(&mut self, t: usize) {
+        if !self.sources[t].fifo.is_empty() || self.sources[t].pending.is_empty() {
+            return;
+        }
+        let s = &mut self.sources[t];
+        let k = s.next_pending % s.pending.len();
+        let (dst, remaining) = s.pending[k];
+        s.fifo.push_back((dst, self.now));
+        self.stats.injected += 1;
+        self.in_flight += 1;
+        self.ungenerated -= 1;
+        if let Some(tm) = &mut self.telem {
+            tm.injected[t] += 1;
+        }
+        if remaining <= 1 {
+            s.pending.swap_remove(k);
+        } else {
+            s.pending[k].1 = remaining - 1;
+        }
+        s.next_pending = s.next_pending.wrapping_add(1);
+    }
+
+    /// Record a delivery: latency (generation → ejection, inclusive),
+    /// makespan, telemetry ejection counters and optional per-pair stats.
+    /// Warm-up deliveries only settle the in-flight accounting.
+    pub(crate) fn deliver(&mut self, src: u32, dst: u32, born: u64) {
+        let latency = self.now - born + 1;
+        self.in_flight -= 1;
+        if self.in_warmup {
+            return;
+        }
+        self.stats.delivered += 1;
+        if let Some(tm) = &mut self.telem {
+            tm.ejected[dst as usize] += 1;
+        }
+        self.stats.avg_latency += latency as f64; // running sum; divided at end
+        self.stats.max_latency = self.stats.max_latency.max(latency);
+        self.stats.makespan = self.now + 1;
+        if self.track_pairs {
+            let key = ((src as u64) << 32) | dst as u64;
+            let p = self.stats.per_pair.entry(key).or_default();
+            p.count += 1;
+            p.sum_latency += latency;
+            p.max_latency = p.max_latency.max(latency);
+        }
+    }
+
+    /// Arrival-time occupancy sampling (Fig. 13/14) — no-op during warm-up.
+    pub(crate) fn sample_occupancy(&mut self, occ: usize) {
+        if self.in_warmup {
+            return;
+        }
+        self.stats.arrivals += 1;
+        if occ == 0 {
+            self.stats.arrivals_zero += 1;
+        } else {
+            self.stats.nonzero_occ_sum += occ as f64;
+            self.stats.nonzero_occ_count += 1;
+        }
+        if let Some(tm) = &mut self.telem {
+            tm.occupancy.record(occ as f64);
+        }
+    }
+
+    /// Any flits anywhere (source FIFOs, pending lists, fabric buffers)?
+    #[inline]
+    pub(crate) fn busy(&self) -> bool {
+        self.in_flight > 0 || self.ungenerated > 0
+    }
+
+    /// Extract the telemetry sink (empty unless instrumented), stamping the
+    /// final cycle count. Call after [`run_engine`].
+    pub(crate) fn take_telem(&mut self) -> SimTelemetry {
+        let mut telem = match self.telem.take() {
+            Some(b) => *b,
+            None => SimTelemetry::default(),
+        };
+        telem.cycles = self.stats.cycles;
+        telem
+    }
+}
+
+/// What a network fabric must provide to be driven by [`run_engine`].
+/// The fabric owns buffers, links and routing; the core owns everything
+/// else and is handed in mutably each cycle.
+pub(crate) trait Fabric {
+    /// Simulate one cycle at `core.now`: deliver due arrivals, generate and
+    /// inject traffic, switch/forward flits. Deliveries go through
+    /// [`EngineCore::deliver`].
+    fn step(&mut self, core: &mut EngineCore);
+
+    /// Is any flit sitting in a buffer or source queue (i.e. work may be
+    /// possible next cycle, as opposed to everything being mid-flight)?
+    /// Fabrics with single-cycle links never idle-wait and keep the
+    /// default.
+    fn queued_work(&self, core: &EngineCore) -> bool {
+        let _ = core;
+        true
+    }
+
+    /// Next scheduled in-flight arrival cycle, if any — the drain clock
+    /// jumps straight to it when no queued work remains.
+    fn next_arrival(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Run `fab` to completion per `core.mode`, then finalize the statistics
+/// (cycle count, latency mean). This is the one event loop both simulators
+/// share.
+pub(crate) fn run_engine<F: Fabric>(core: &mut EngineCore, fab: &mut F) {
+    match core.mode {
+        Mode::Steady { warmup, measure } => {
+            let end = warmup + measure;
+            while core.now < end {
+                core.in_warmup = core.now < warmup;
+                fab.step(core);
+                core.now += 1;
+            }
+        }
+        Mode::Drain { max_cycles } => {
+            core.in_warmup = false;
+            while core.busy() && core.now < max_cycles {
+                fab.step(core);
+                if fab.queued_work(core) {
+                    core.now += 1;
+                } else if let Some(t) = fab.next_arrival() {
+                    // Everything is mid-flight: jump to the next event.
+                    core.now = t.max(core.now + 1);
+                } else {
+                    break;
+                }
+            }
+            core.stats.drained = !core.busy();
+        }
+    }
+    core.stats.cycles = core.now;
+    if core.stats.delivered > 0 {
+        core.stats.avg_latency /= core.stats.delivered as f64;
+    }
+}
+
+/// Uniform-random all-to-all traffic at `rate_per_terminal` flits per
+/// terminal per cycle, split evenly over the other terminals.
+pub(crate) fn uniform_flows(terminals: usize, rate_per_terminal: f64) -> Vec<FlowSpec> {
+    let mut flows = Vec::new();
+    if terminals < 2 {
+        return flows;
+    }
+    let pair_rate = rate_per_terminal / (terminals - 1) as f64;
+    for s in 0..terminals {
+        for d in 0..terminals {
+            if s != d {
+                flows.push(FlowSpec {
+                    src: s,
+                    dst: d,
+                    rate: pair_rate,
+                    flits: 0,
+                });
+            }
+        }
+    }
+    flows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_grouping_and_saturation_guard() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 1,
+                rate: 0.9,
+                flits: 5,
+            },
+            FlowSpec {
+                src: 0,
+                dst: 2,
+                rate: 0.9,
+                flits: 7,
+            },
+            FlowSpec {
+                src: 1,
+                dst: 1, // self-flow: ignored
+                rate: 0.5,
+                flits: 10,
+            },
+        ];
+        let core = EngineCore::new(3, &flows, Mode::Drain { max_cycles: 10 }, 1);
+        // Source 0: rate clamped to 1.0, CDF rescaled, both drain entries.
+        assert!((core.sources[0].rate - 1.0).abs() < 1e-12);
+        let cdf = &core.sources[0].dst_cdf;
+        assert_eq!(cdf.len(), 2);
+        assert!((cdf[0].0 - 0.5).abs() < 1e-12);
+        assert!((cdf[1].0 - 1.0).abs() < 1e-12);
+        assert_eq!(core.sources[0].pending, vec![(1, 5), (2, 7)]);
+        // Self-flow contributed nothing.
+        assert!(core.sources[1].pending.is_empty());
+        assert_eq!(core.ungenerated, 12);
+    }
+
+    #[test]
+    fn drain_generation_round_robins_destinations() {
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 1,
+                rate: 0.0,
+                flits: 2,
+            },
+            FlowSpec {
+                src: 0,
+                dst: 2,
+                rate: 0.0,
+                flits: 1,
+            },
+        ];
+        let mut core = EngineCore::new(3, &flows, Mode::Drain { max_cycles: 10 }, 1);
+        let mut order = Vec::new();
+        for _ in 0..3 {
+            core.generate_drain(0);
+            let (dst, _) = core.sources[0].fifo.pop_back().unwrap();
+            order.push(dst);
+        }
+        assert_eq!(order, vec![1, 2, 1]);
+        assert_eq!(core.ungenerated, 0);
+        assert_eq!(core.stats.injected, 3);
+        // Nothing left: further calls are no-ops.
+        core.generate_drain(0);
+        assert_eq!(core.stats.injected, 3);
+    }
+
+    #[test]
+    fn deliver_skips_statistics_during_warmup() {
+        let mut core = EngineCore::new(
+            2,
+            &[FlowSpec {
+                src: 0,
+                dst: 1,
+                rate: 0.5,
+                flits: 0,
+            }],
+            Mode::Steady {
+                warmup: 10,
+                measure: 10,
+            },
+            1,
+        );
+        core.in_flight = 2;
+        core.now = 3;
+        core.deliver(0, 1, 1);
+        assert_eq!(core.stats.delivered, 0, "warm-up delivery must not count");
+        core.in_warmup = false;
+        core.now = 7;
+        core.deliver(0, 1, 2);
+        assert_eq!(core.stats.delivered, 1);
+        assert_eq!(core.stats.max_latency, 6);
+        assert_eq!(core.stats.makespan, 8);
+        assert_eq!(core.in_flight, 0);
+    }
+}

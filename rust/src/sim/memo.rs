@@ -1,0 +1,222 @@
+//! Process-wide memo caches for simulator-backed sweeps.
+//!
+//! Both caches exploit the same fact: a simulation result is a pure
+//! function of the handful of inputs the simulator actually reads.
+//! `NopSim` dynamics depend only on the topology, the chiplet count,
+//! `hop_latency_cycles`, `buffer_flits`, the flow list and the seed —
+//! every other `NopConfig` field (link width, frequency, energy) is
+//! applied by callers after the fact. Sweeps, the advisor, serving-model
+//! builds and the benches repeatedly evaluate identical points; keying on
+//! exactly those inputs lets every repeat hit a `HashMap` instead of
+//! re-simulating thousands of cycles.
+//!
+//! The caches live behind `OnceLock<Mutex<…>>` so concurrent
+//! [`crate::coordinator::par_map`] workers share them. The lock is never
+//! held across a simulation: two workers racing on the same key may both
+//! compute it (identical results — the sims are deterministic), but
+//! neither ever blocks behind a multi-millisecond run.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use super::engine::{FlowSpec, Mode, SimStats};
+use crate::config::NopConfig;
+use crate::nop::topology::NopTopology;
+
+/// Drain-run cache key: (topology, chiplets, hop latency, buffer depth,
+/// cycle budget, seed, cross-chiplet flow list in caller order). The flow
+/// list is kept **in order** — drain sources round-robin over their
+/// pending entries in insertion order, so reordered flow lists are
+/// genuinely different workloads and must not collide.
+type DrainKey = (u8, usize, u64, usize, u64, u64, Vec<(u32, u32, u64)>);
+
+static DRAIN_CACHE: OnceLock<Mutex<HashMap<DrainKey, SimStats>>> = OnceLock::new();
+
+fn drain_cache() -> &'static Mutex<HashMap<DrainKey, SimStats>> {
+    DRAIN_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Run (or recall) an uninstrumented `NopSim` drain of `flows` on
+/// `topology` × `k` and return its [`SimStats`]. Results are memoized
+/// process-wide on everything the simulator reads, so sweeping the same
+/// (partition, topology) point across experiments, the advisor and the
+/// benches pays for the simulation once.
+pub fn drain_makespan(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    flows: &[FlowSpec],
+    max_cycles: u64,
+    seed: u64,
+) -> SimStats {
+    let fl: Vec<(u32, u32, u64)> = flows
+        .iter()
+        .filter(|f| f.src != f.dst && f.flits > 0)
+        .map(|f| (f.src as u32, f.dst as u32, f.flits))
+        .collect();
+    let key = (
+        topology as u8,
+        k,
+        cfg.hop_latency_cycles,
+        cfg.buffer_flits,
+        max_cycles,
+        seed,
+        fl,
+    );
+    if let Some(hit) = drain_cache().lock().unwrap().get(&key) {
+        return hit.clone();
+    }
+    let stats = crate::nop::sim::NopSim::new(
+        topology,
+        k,
+        cfg,
+        flows,
+        Mode::Drain { max_cycles },
+        seed,
+    )
+    .run();
+    drain_cache()
+        .lock()
+        .unwrap()
+        .insert(key, stats.clone());
+    stats
+}
+
+/// Saturation-search cache key: (topology, chiplets, hop latency, buffer
+/// depth, seed) — the full input set of
+/// [`crate::nop::sim::saturation_rate`].
+type SatKey = (u8, usize, u64, usize, u64);
+
+static SAT_CACHE: OnceLock<Mutex<HashMap<SatKey, Option<f64>>>> = OnceLock::new();
+
+fn sat_cache() -> &'static Mutex<HashMap<SatKey, Option<f64>>> {
+    SAT_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Memoize a saturation search: return the cached rate for this
+/// (topology, k, cfg, seed) point or run `compute` and remember it.
+pub(crate) fn memo_saturation(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    seed: u64,
+    compute: impl FnOnce() -> Option<f64>,
+) -> Option<f64> {
+    let key = (
+        topology as u8,
+        k,
+        cfg.hop_latency_cycles,
+        cfg.buffer_flits,
+        seed,
+    );
+    if let Some(&hit) = sat_cache().lock().unwrap().get(&key) {
+        return hit;
+    }
+    let val = compute();
+    sat_cache().lock().unwrap().insert(key, val);
+    val
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memoized_drain_is_identical_to_direct_simulation() {
+        // Identity contract: the cache must be invisible — first call
+        // (miss), second call (hit) and a direct `NopSim` run all agree
+        // on every statistic.
+        let cfg = NopConfig::default();
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 3,
+                rate: 0.0,
+                flits: 90,
+            },
+            FlowSpec {
+                src: 2,
+                dst: 1,
+                rate: 0.0,
+                flits: 41,
+            },
+        ];
+        let budget = 200_000;
+        let first = drain_makespan(NopTopology::Mesh, 4, &cfg, &flows, budget, 0xA5);
+        let second = drain_makespan(NopTopology::Mesh, 4, &cfg, &flows, budget, 0xA5);
+        let direct = crate::nop::sim::NopSim::new(
+            NopTopology::Mesh,
+            4,
+            &cfg,
+            &flows,
+            Mode::Drain { max_cycles: budget },
+            0xA5,
+        )
+        .run();
+        assert!(direct.drained);
+        for s in [&first, &second] {
+            assert_eq!(s.makespan, direct.makespan);
+            assert_eq!(s.injected, direct.injected);
+            assert_eq!(s.delivered, direct.delivered);
+            assert_eq!(s.drained, direct.drained);
+            assert_eq!(s.cycles, direct.cycles);
+            assert_eq!(s.avg_latency, direct.avg_latency);
+            assert_eq!(s.max_latency, direct.max_latency);
+        }
+    }
+
+    #[test]
+    fn reordered_flow_lists_do_not_collide() {
+        // Drain priming round-robins over pending entries in insertion
+        // order, so [a, b] and [b, a] are different workloads; the cache
+        // must key on the ordered list.
+        let cfg = NopConfig::default();
+        let ab = [
+            FlowSpec {
+                src: 0,
+                dst: 1,
+                rate: 0.0,
+                flits: 30,
+            },
+            FlowSpec {
+                src: 0,
+                dst: 2,
+                rate: 0.0,
+                flits: 60,
+            },
+        ];
+        let ba = [ab[1], ab[0]];
+        let budget = 100_000;
+        let fwd = drain_makespan(NopTopology::Ring, 3, &cfg, &ab, budget, 7);
+        let rev = drain_makespan(NopTopology::Ring, 3, &cfg, &ba, budget, 7);
+        let rev_direct = crate::nop::sim::NopSim::new(
+            NopTopology::Ring,
+            3,
+            &cfg,
+            &ba,
+            Mode::Drain { max_cycles: budget },
+            7,
+        )
+        .run();
+        assert_eq!(fwd.injected, rev.injected);
+        assert_eq!(rev.makespan, rev_direct.makespan);
+        assert_eq!(rev.avg_latency, rev_direct.avg_latency);
+    }
+
+    #[test]
+    fn saturation_memo_returns_cached_value() {
+        let cfg = NopConfig::default();
+        let mut calls = 0;
+        let probe = |calls: &mut usize| {
+            *calls += 1;
+            Some(0.42)
+        };
+        // Unlikely-to-collide key for this test: k = 0 never occurs in
+        // real searches (saturation_rate returns None below k = 2).
+        let a = memo_saturation(NopTopology::P2p, 0, &cfg, u64::MAX, || probe(&mut calls));
+        let b = memo_saturation(NopTopology::P2p, 0, &cfg, u64::MAX, || probe(&mut calls));
+        assert_eq!(a, Some(0.42));
+        assert_eq!(b, Some(0.42));
+        assert_eq!(calls, 1, "second lookup must hit the cache");
+    }
+}

@@ -1,0 +1,30 @@
+//! The shared flit-level event engine behind both cycle simulators.
+//!
+//! The on-chip NoC simulator ([`crate::noc::sim::NocSim`]) and the
+//! Network-on-Package simulator ([`crate::nop::sim::NopSim`]) grew up as
+//! near-identical siblings: both carry Bernoulli/drain traffic sources, a
+//! warm-up/measure or drain-until-empty run loop, per-pair latency
+//! tracking, occupancy sampling and optional telemetry. This module is the
+//! single home for everything the two engines share:
+//!
+//! * [`engine`] — the traffic vocabulary ([`FlowSpec`], [`Mode`],
+//!   [`SimStats`], [`PairStat`]), the per-source generator state, the
+//!   engine core that owns clocks/RNG/statistics, and the unified run loop
+//!   (with drain-clock event skipping) that both simulators drive through
+//!   the `Fabric` trait.
+//! * [`memo`] — process-wide keyed caches for simulator-backed sweeps:
+//!   drain makespans and saturation rates are pure functions of a small
+//!   configuration key, so repeated sweep points (experiments, the
+//!   advisor, serving-model builds, benches) hit the cache instead of
+//!   re-simulating.
+//!
+//! The fabric adapters stay in `noc::sim` / `nop::sim` and hold only what
+//! is genuinely topology-specific: router pipelines, port claims and
+//! store-and-forward P2P rules below; SerDes links, credit/bubble flow
+//! control and the arrival event queue above.
+
+pub mod engine;
+pub mod memo;
+
+pub use engine::{FlowSpec, Mode, PairStat, SimStats};
+pub use memo::drain_makespan;

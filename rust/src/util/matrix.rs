@@ -9,6 +9,7 @@
 use std::fmt;
 use std::ops::{Add, Index, IndexMut, Mul, Sub};
 
+/// Dense row-major f64 matrix.
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
     rows: usize,
@@ -17,6 +18,7 @@ pub struct Matrix {
 }
 
 impl Matrix {
+    /// All-zero `rows` × `cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self {
             rows,
@@ -25,6 +27,7 @@ impl Matrix {
         }
     }
 
+    /// The n × n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -33,6 +36,7 @@ impl Matrix {
         m
     }
 
+    /// Build from row slices; panics on ragged input.
     pub fn from_rows(rows: &[&[f64]]) -> Self {
         let r = rows.len();
         let c = if r == 0 { 0 } else { rows[0].len() };
@@ -53,18 +57,22 @@ impl Matrix {
         m
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Scalar multiple of the matrix.
     pub fn scale(&self, s: f64) -> Matrix {
         let mut out = self.clone();
         for v in &mut out.data {
@@ -73,6 +81,7 @@ impl Matrix {
         out
     }
 
+    /// Matrix transpose.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -186,6 +195,7 @@ impl Matrix {
         Some(inv)
     }
 
+    /// Determinant via LU (0 for singular matrices).
     pub fn determinant(&self) -> f64 {
         match self.lu() {
             None => 0.0,

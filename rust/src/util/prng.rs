@@ -16,10 +16,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Start a generator at `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -38,6 +40,7 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// The LCG multiplier of the reference PCG implementation.
     pub const MULT: u64 = 6364136223846793005;
 
     /// Construct from a seed and a stream id (any values are fine).
@@ -58,6 +61,7 @@ impl Pcg32 {
         Self::new(sm.next_u64(), sm.next_u64())
     }
 
+    /// Next 32-bit output (the generator's native step).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -67,6 +71,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 bits (two native steps).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

@@ -11,36 +11,45 @@ use super::prng::Pcg32;
 /// Random value source handed to each property case.
 pub struct Gen {
     rng: Pcg32,
+    /// Index of the current case within the property run.
     pub case: usize,
+    /// Exact seed of this case — quote it to replay a failure.
     pub seed: u64,
 }
 
 impl Gen {
+    /// Uniform integer in `[lo, hi]` (inclusive).
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo <= hi);
         lo + self.rng.next_below((hi - lo + 1) as u32) as usize
     }
 
+    /// Uniform 64-bit value.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// Uniform float in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.next_f64() * (hi - lo)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.bernoulli(0.5)
     }
 
+    /// Uniformly pick one element of a non-empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.usize_in(0, xs.len() - 1)]
     }
 
+    /// `len` uniform floats in `[lo, hi)`.
     pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
         (0..len).map(|_| self.f64_in(lo, hi)).collect()
     }
 
+    /// Direct access to the underlying generator for ad-hoc draws.
     pub fn rng(&mut self) -> &mut Pcg32 {
         &mut self.rng
     }

@@ -64,13 +64,18 @@ pub fn mapd(avg: &[f64], worst: &[f64]) -> f64 {
 /// Online accumulator for mean/max/count without storing samples.
 #[derive(Clone, Debug, Default)]
 pub struct Accum {
+    /// Number of samples added.
     pub count: u64,
+    /// Running sum of all samples.
     pub sum: f64,
+    /// Largest sample seen (−∞ when empty).
     pub max: f64,
+    /// Smallest sample seen (+∞ when empty).
     pub min: f64,
 }
 
 impl Accum {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self {
             count: 0,
@@ -80,6 +85,7 @@ impl Accum {
         }
     }
 
+    /// Fold one sample into the running statistics.
     #[inline]
     pub fn add(&mut self, x: f64) {
         self.count += 1;
@@ -92,6 +98,7 @@ impl Accum {
         }
     }
 
+    /// Sample mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0

@@ -2,14 +2,19 @@
 //! / `repro table N` command prints one of these, matching the rows/series
 //! the paper reports.
 
+/// One titled result table: fixed headers, string cells.
 #[derive(Clone, Debug)]
 pub struct Table {
+    /// Caption printed above the table.
     pub title: String,
+    /// Column names; every row must match this width.
     pub headers: Vec<String>,
+    /// Row-major cells, already formatted.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and column headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Self {
             title: title.into(),
@@ -18,6 +23,7 @@ impl Table {
         }
     }
 
+    /// Append one row; panics if its width does not match the headers.
     pub fn add_row(&mut self, cells: Vec<String>) {
         assert_eq!(
             cells.len(),
@@ -32,6 +38,8 @@ impl Table {
         self.add_row(cells.iter().map(|c| c.to_string()).collect());
     }
 
+    /// Render headers + rows as plain CSV (no quoting — cells are numeric
+    /// or simple names).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         out.push_str(&self.headers.join(","));
@@ -43,6 +51,7 @@ impl Table {
         out
     }
 
+    /// Render as a boxed ASCII table with column-width alignment.
     pub fn render(&self) -> String {
         let ncols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();

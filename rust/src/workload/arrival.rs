@@ -37,6 +37,7 @@ pub enum ArrivalKind {
 }
 
 impl ArrivalKind {
+    /// Display name (the canonical `parse` spelling).
     pub fn name(self) -> &'static str {
         match self {
             ArrivalKind::Poisson => "poisson",
@@ -45,6 +46,7 @@ impl ArrivalKind {
         }
     }
 
+    /// Parse a case-insensitive shape name (aliases: mmpp, daily, …).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "poisson" | "fixed" => Some(ArrivalKind::Poisson),
@@ -54,6 +56,7 @@ impl ArrivalKind {
         }
     }
 
+    /// Every arrival shape, in sweep order.
     pub fn all() -> [ArrivalKind; 3] {
         [
             ArrivalKind::Poisson,
@@ -83,6 +86,7 @@ pub struct Event {
 /// description can drive any load point.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArrivalProcess {
+    /// Which arrival shape to generate.
     pub kind: ArrivalKind,
     /// Bursty: ON-state rate multiplier, >= 1. The OFF rate is derived so
     /// the long-run mean stays at the requested rate (`burst_factor *
@@ -114,6 +118,7 @@ impl Default for ArrivalProcess {
 }
 
 impl ArrivalProcess {
+    /// Range-check the shape knobs; `Err` carries the offending one.
     pub fn validate(&self) -> Result<(), String> {
         if !(self.burst_factor.is_finite() && self.burst_factor >= 1.0) {
             return Err("burst_factor must be >= 1".into());

@@ -24,6 +24,7 @@ pub struct ModelSpec {
 /// (auto).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadMix {
+    /// The mix entries, in spec order.
     pub models: Vec<ModelSpec>,
 }
 

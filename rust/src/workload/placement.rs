@@ -33,6 +33,7 @@ pub enum PlacementPolicy {
 }
 
 impl PlacementPolicy {
+    /// Display name (the canonical `parse` spelling).
     pub fn name(self) -> &'static str {
         match self {
             PlacementPolicy::RoundRobin => "round-robin",
@@ -40,6 +41,7 @@ impl PlacementPolicy {
         }
     }
 
+    /// Parse a case-insensitive policy name (aliases: rr, nop, …).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "round-robin" | "roundrobin" | "rr" | "naive" => Some(PlacementPolicy::RoundRobin),
@@ -48,6 +50,7 @@ impl PlacementPolicy {
         }
     }
 
+    /// Every placement policy, in sweep order.
     pub fn all() -> [PlacementPolicy; 2] {
         [PlacementPolicy::RoundRobin, PlacementPolicy::NopAware]
     }
@@ -61,6 +64,7 @@ impl PlacementPolicy {
 /// A chiplet → model assignment for one package.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Placement {
+    /// Package size the placement covers.
     pub chiplets: usize,
     /// `model_of[c]` = mix model index served by chiplet `c`.
     pub model_of: Vec<usize>,

@@ -27,14 +27,17 @@ pub const TRACE_HEADER: &str = "# imcnoc-trace v1";
 /// A recorded workload: the mix it indexes into plus the event sequence.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Trace {
+    /// The mix the events' model indices refer to.
     pub mix: WorkloadMix,
     /// Offered arrival rate the generator targeted, requests/s (stamped
     /// into replayed reports so they match the recorded run).
     pub offered_rps: f64,
+    /// The recorded arrivals, in time order.
     pub events: Vec<Event>,
 }
 
 impl Trace {
+    /// Assemble a trace from its parts.
     pub fn new(mix: WorkloadMix, offered_rps: f64, events: Vec<Event>) -> Self {
         Self {
             mix,
