@@ -6,9 +6,11 @@
 //!
 //! For CI regression tracking, a [`Reporter`] collects per-bench samples
 //! and, when the `BENCH_JSON` environment variable names a file, writes
-//! (or merges into) a JSON array with the schema
-//! `{"name": …, "mean_ns": …, "p50": …, "p99": …}` — the artifact the
-//! bench workflow uploads and gates against a checked-in baseline.
+//! (or merges into) a JSON object `{"commit": …, "date": …, "entries":
+//! [{"name": …, "mean_ns": …, "p50": …, "p99": …}, …]}` — the artifact
+//! the bench workflow uploads and gates against a checked-in baseline
+//! (commit from `BENCH_COMMIT` else `GITHUB_SHA`, date from `BENCH_DATE`;
+//! both "unknown" when unset, keeping local runs deterministic).
 //! `BENCH_QUICK=1` asks bench mains for their reduced CI workload.
 
 #![allow(dead_code)]
@@ -90,7 +92,8 @@ impl Reporter {
 
     /// Write (or merge into) the `BENCH_JSON` file, if requested. Entries
     /// with the same name are replaced, so several bench binaries can
-    /// share one artifact; the result is sorted by name.
+    /// share one artifact; the result is sorted by name and wrapped with
+    /// commit/date metadata so uploaded artifacts are self-describing.
     pub fn finish(self) {
         let Ok(path) = std::env::var("BENCH_JSON") else {
             return;
@@ -104,7 +107,15 @@ impl Reporter {
             merged.push(e);
         }
         merged.sort_by(|a, b| a.name.cmp(&b.name));
-        let mut out = String::from("[\n");
+        // The `parse_entries` brace-scanner skips the wrapper fragment
+        // (it lacks the four entry fields), so re-merging keeps working.
+        let commit = std::env::var("BENCH_COMMIT")
+            .or_else(|_| std::env::var("GITHUB_SHA"))
+            .unwrap_or_else(|_| "unknown".to_string());
+        let date = std::env::var("BENCH_DATE").unwrap_or_else(|_| "unknown".to_string());
+        let mut out = format!(
+            "{{\"commit\": \"{commit}\", \"date\": \"{date}\", \"entries\": [\n"
+        );
         for (i, e) in merged.iter().enumerate() {
             let sep = if i + 1 == merged.len() { "" } else { "," };
             out.push_str(&format!(
@@ -112,7 +123,7 @@ impl Reporter {
                 e.name, e.mean_ns, e.p50, e.p99, sep
             ));
         }
-        out.push_str("]\n");
+        out.push_str("]}\n");
         if let Err(e) = std::fs::write(&path, out) {
             eprintln!("bench: failed to write {path}: {e}");
         } else {

@@ -41,7 +41,8 @@ use crate::nop::evaluator::nop_transfer_cycles;
 use crate::nop::topology::{NopNetwork, NopTopology};
 use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
 use crate::telemetry::timeseries::AUTO_WINDOWS;
-use crate::telemetry::{link_union, QuantileSketch, TimeSeries};
+use crate::telemetry::{link_union, IngressTrace, LayerBlame, QuantileSketch, TimeSeries};
+use crate::util::log;
 use crate::workload::{place_replicas, Event, Placement, PlacementPolicy, Trace, WorkloadMix};
 
 /// Auto deadline (`deadline_ms = 0` in a mix spec): this multiple of the
@@ -65,6 +66,9 @@ pub struct MixModelCosts {
     pub ingress_flits: u64,
     /// NoP flits of one request's output payload.
     pub egress_flits: u64,
+    /// Per-layer compute/communication blame rows (NoC drain vs. compute
+    /// overlap), in mapped-layer order — the explain report's layer table.
+    pub layers: Vec<LayerBlame>,
 }
 
 impl MixModelCosts {
@@ -153,7 +157,7 @@ impl MixServingModel {
                 )
             })?;
             let mapping = Mapping::build(&g, arch);
-            let (service_s, stage_s) = replica_costs(&g, &mapping, arch, noc, nop, sim);
+            let (service_s, stage_s, layers) = replica_costs(&g, &mapping, arch, noc, nop, sim);
             let ib = g.input_bits(arch.n_bits);
             let ob = g.output_bits(arch.n_bits);
             let deadline_s = if spec.deadline_ms == 0.0 {
@@ -169,6 +173,7 @@ impl MixServingModel {
                 stage_s,
                 ingress_flits: ib.div_ceil(nop.link_width as u64).max(1),
                 egress_flits: ob.div_ceil(nop.link_width as u64).max(1),
+                layers,
             });
             in_bits.push(ib);
             out_bits.push(ob);
@@ -326,6 +331,9 @@ pub struct MixScheduler {
     batches: usize,
     /// One lifecycle span per offered request, in event order.
     spans: Vec<RequestSpan>,
+    /// One causal ingress trace per offered request, index-aligned with
+    /// `spans` (default/empty for rejected requests).
+    ingress_traces: Vec<IngressTrace>,
     /// Windowed serving metrics of the most recent run.
     timeseries: TimeSeries,
     /// Metrics window override, seconds (0 = auto: event span / 32).
@@ -369,6 +377,7 @@ impl MixScheduler {
             latency: Vec::new(),
             batches: 0,
             spans: Vec::new(),
+            ingress_traces: Vec::new(),
             timeseries: TimeSeries::default(),
             metrics_window_s: 0.0,
         };
@@ -380,6 +389,12 @@ impl MixScheduler {
     /// offered request — completed, dropped and shed alike).
     pub fn spans(&self) -> &[RequestSpan] {
         &self.spans
+    }
+
+    /// Causal ingress traces of the most recent run, index-aligned with
+    /// [`MixScheduler::spans`] (default/empty for rejected requests).
+    pub fn ingress_traces(&self) -> &[IngressTrace] {
+        &self.ingress_traces
     }
 
     /// Windowed serving metrics of the most recent run.
@@ -418,6 +433,7 @@ impl MixScheduler {
         self.latency = (0..n).map(|_| QuantileSketch::new()).collect();
         self.batches = 0;
         self.spans.clear();
+        self.ingress_traces.clear();
         // Disabled placeholder; `run` installs the sized instance once the
         // event span (and thus the auto window width) is known.
         self.timeseries = TimeSeries::default();
@@ -522,11 +538,23 @@ impl MixScheduler {
         let flits = self.model.models[m].ingress_flits * frames.max(1) as u64;
         let hop_s = self.model.hop_s;
         let window_s = self.window_s;
+        let n_hops = self.model.paths[c].len();
+        let mut waits = Vec::with_capacity(n_hops);
         let mut head = t;
         let mut done = t;
         for &link in &self.model.paths[c] {
             let free = *self.link_free.get(&link).unwrap_or(&0.0);
             let start = head.max(free);
+            let wait = start - head;
+            waits.push((link, wait));
+            if wait > 0.0 {
+                log::trace!(
+                    "mix ingress hop {}-{}: waited {:.3} us on busy link",
+                    link.0,
+                    link.1,
+                    wait * 1e6
+                );
+            }
             let finish = (start + ser_s).max(done);
             self.link_free.insert(link, finish);
             let win = self.link_util.entry(link).or_default();
@@ -537,9 +565,14 @@ impl MixScheduler {
             head = start + hop_s;
             done = finish + hop_s;
         }
-        if !self.model.paths[c].is_empty() {
+        if n_hops > 0 {
             self.timeseries.record_ejected(c, flits);
         }
+        self.ingress_traces.push(IngressTrace {
+            waits,
+            ser_s: if n_hops > 0 { ser_s } else { 0.0 },
+            prop_s: n_hops as f64 * hop_s,
+        });
         done
     }
 
@@ -626,6 +659,7 @@ impl MixScheduler {
                     self.dropped[m] += 1;
                     self.timeseries.record_drop(t, m);
                     self.spans.push(RequestSpan::rejected(m, t, SpanOutcome::Dropped));
+                    self.ingress_traces.push(IngressTrace::default());
                 }
                 Some(mut c) => {
                     if self.admission == Admission::DeadlineAware
@@ -640,6 +674,7 @@ impl MixScheduler {
                                 self.shed[m] += 1;
                                 self.timeseries.record_shed(t, m);
                                 self.spans.push(RequestSpan::rejected(m, t, SpanOutcome::Shed));
+                                self.ingress_traces.push(IngressTrace::default());
                                 continue;
                             }
                         }
@@ -769,14 +804,16 @@ pub fn serve_mix_traced(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
 ) -> Result<(MixServingModel, Trace, ServeReport, Vec<RequestSpan>), String> {
-    let (model, trace, report, spans, _) =
+    let (model, trace, report, spans, _, _) =
         serve_mix_metrics(arch, noc, nop, sim, serving, workload, 0.0)?;
     Ok((model, trace, report, spans))
 }
 
-/// [`serve_mix_traced`] variant that also returns the windowed
-/// [`TimeSeries`] (`repro serve --mix … --metrics-out`). `window_ms > 0`
-/// overrides the auto metrics window width.
+/// [`serve_mix_traced`] variant that also returns the causal per-request
+/// [`IngressTrace`]s (index-aligned with the spans; the explain report's
+/// input) and the windowed [`TimeSeries`] (`repro serve --mix …
+/// --metrics-out`). `window_ms > 0` overrides the auto metrics window
+/// width.
 #[allow(clippy::type_complexity)]
 pub fn serve_mix_metrics(
     arch: &ArchConfig,
@@ -786,7 +823,17 @@ pub fn serve_mix_metrics(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
     window_ms: f64,
-) -> Result<(MixServingModel, Trace, ServeReport, Vec<RequestSpan>, TimeSeries), String> {
+) -> Result<
+    (
+        MixServingModel,
+        Trace,
+        ServeReport,
+        Vec<RequestSpan>,
+        Vec<IngressTrace>,
+        TimeSeries,
+    ),
+    String,
+> {
     workload.validate()?;
     serving.validate()?;
     let model = MixServingModel::build(&workload.mix, workload.placement, arch, noc, nop, sim)?;
@@ -804,8 +851,9 @@ pub fn serve_mix_metrics(
     let mut report = sched.run(&trace.events);
     report.offered_rps = rate;
     let spans = std::mem::take(&mut sched.spans);
+    let traces = std::mem::take(&mut sched.ingress_traces);
     let ts = std::mem::take(&mut sched.timeseries);
-    Ok((sched.model, trace, report, spans, ts))
+    Ok((sched.model, trace, report, spans, traces, ts))
 }
 
 /// Replay a recorded trace: rebuild the mix model from the trace's own mix
@@ -835,14 +883,15 @@ pub fn replay_mix_traced(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
 ) -> Result<(MixServingModel, ServeReport, Vec<RequestSpan>), String> {
-    let (model, report, spans, _) =
+    let (model, report, spans, _, _) =
         replay_mix_metrics(trace, arch, noc, nop, sim, serving, workload, 0.0)?;
     Ok((model, report, spans))
 }
 
-/// [`replay_mix_traced`] variant that also returns the windowed
-/// [`TimeSeries`]. Identical configuration and trace reproduce the
-/// metrics export byte-for-byte, like the report.
+/// [`replay_mix_traced`] variant that also returns the causal per-request
+/// [`IngressTrace`]s and the windowed [`TimeSeries`]. Identical
+/// configuration and trace reproduce the metrics export byte-for-byte,
+/// like the report.
 #[allow(clippy::type_complexity)]
 pub fn replay_mix_metrics(
     trace: &Trace,
@@ -853,15 +902,25 @@ pub fn replay_mix_metrics(
     serving: &ServingConfig,
     workload: &WorkloadConfig,
     window_ms: f64,
-) -> Result<(MixServingModel, ServeReport, Vec<RequestSpan>, TimeSeries), String> {
+) -> Result<
+    (
+        MixServingModel,
+        ServeReport,
+        Vec<RequestSpan>,
+        Vec<IngressTrace>,
+        TimeSeries,
+    ),
+    String,
+> {
     let model = MixServingModel::build(&trace.mix, workload.placement, arch, noc, nop, sim)?;
     let mut sched = MixScheduler::new(model, serving, workload.admission);
     sched.set_metrics_window_s(window_ms * 1e-3);
     let mut report = sched.run(&trace.events);
     report.offered_rps = trace.offered_rps;
     let spans = std::mem::take(&mut sched.spans);
+    let traces = std::mem::take(&mut sched.ingress_traces);
     let ts = std::mem::take(&mut sched.timeseries);
-    Ok((sched.model, report, spans, ts))
+    Ok((sched.model, report, spans, traces, ts))
 }
 
 #[cfg(test)]
@@ -900,6 +959,7 @@ mod tests {
             assert!(m.stage_s <= m.service_s);
             assert!(m.deadline_s.is_finite() && m.deadline_s > m.service_s);
             assert!(m.ingress_flits >= 1 && m.egress_flits >= 1);
+            assert!(!m.layers.is_empty(), "layer blame rows priced per model");
         }
         // Ingress costs grow with distance from the gateway, per model.
         assert_eq!(model.ingress_s[0][0], 0.0);
@@ -1081,7 +1141,7 @@ mod tests {
             mix: small_mix(),
             ..WorkloadConfig::default()
         };
-        let (_, _, report, _, ts) =
+        let (_, _, report, _, _, ts) =
             serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &workload, 0.0).unwrap();
         assert!(ts.is_enabled());
         let (arr, comp, drop, shed) = ts.totals();
@@ -1110,7 +1170,7 @@ mod tests {
         assert!(!ts.links().is_empty());
         assert!(ts.to_sim_telemetry().transit_total() > 0);
         // An explicit window override reshapes the axis deterministically.
-        let (_, _, _, _, ts2) =
+        let (_, _, _, _, _, ts2) =
             serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &workload, 0.0).unwrap();
         let json = ts.to_json(report.requests, report.completed, report.dropped, report.shed);
         let json2 = ts2.to_json(report.requests, report.completed, report.dropped, report.shed);
@@ -1163,5 +1223,82 @@ mod tests {
             assert!(s.service_start >= s.ready);
             assert!(s.complete >= s.service_start);
         }
+    }
+
+    #[test]
+    fn mix_ingress_traces_reconcile_with_spans() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Mesh,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let serving = ServingConfig {
+            requests: 200,
+            ..ServingConfig::default()
+        };
+        let workload = WorkloadConfig {
+            mix: small_mix(),
+            ..WorkloadConfig::default()
+        };
+        let (_, trace, _, spans, traces, _) =
+            serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &workload, 0.0).unwrap();
+        assert_eq!(traces.len(), spans.len());
+        assert_eq!(traces.len(), trace.events.len());
+        let mut checked = 0usize;
+        for (s, tr) in spans.iter().zip(&traces) {
+            if s.outcome != SpanOutcome::Completed {
+                // Rejected requests never touched a link.
+                assert!(tr.waits.is_empty() && tr.total_s() == 0.0);
+                continue;
+            }
+            // The causal decomposition reproduces the span's ingress phase
+            // (tolerance: summing in a different order can differ by ulps).
+            let ingress_s = s.ready - s.arrival;
+            let tol = 1e-9 * ingress_s.max(1.0);
+            assert!(
+                (tr.total_s() - ingress_s).abs() <= tol,
+                "trace total {} vs span ingress {}",
+                tr.total_s(),
+                ingress_s
+            );
+            checked += 1;
+        }
+        assert!(checked > 0, "at least one completed request expected");
+    }
+
+    #[test]
+    fn mix_explain_report_is_byte_deterministic() {
+        use crate::telemetry::BlameReport;
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Ring,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let serving = ServingConfig {
+            requests: 150,
+            ..ServingConfig::default()
+        };
+        let workload = WorkloadConfig {
+            mix: small_mix(),
+            ..WorkloadConfig::default()
+        };
+        let explain = || {
+            let (model, _, _, spans, traces, _) =
+                serve_mix_metrics(&arch, &noc, &nop, &sim, &serving, &workload, 0.0).unwrap();
+            let names: Vec<String> = model.models.iter().map(|m| m.name.clone()).collect();
+            let deadlines: Vec<f64> = model.models.iter().map(|m| m.deadline_s).collect();
+            let layers: Vec<LayerBlame> = model
+                .models
+                .iter()
+                .flat_map(|m| m.layers.iter().cloned())
+                .collect();
+            BlameReport::build(&spans, &traces, &names, &deadlines, &layers).to_json()
+        };
+        let a = explain();
+        let b = explain();
+        assert!(a.contains("imcnoc-explain-v1"));
+        assert_eq!(a, b, "same [serving] seed must export byte-identical blame");
     }
 }

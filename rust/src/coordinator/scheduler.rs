@@ -49,8 +49,8 @@ use crate::nop::sim::saturation_rate;
 use crate::nop::topology::{NopNetwork, NopTopology};
 use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
 use crate::telemetry::timeseries::AUTO_WINDOWS;
-use crate::telemetry::{link_union, Histogram, QuantileSketch, TimeSeries};
-use crate::util::Pcg32;
+use crate::telemetry::{link_union, Histogram, IngressTrace, LayerBlame, QuantileSketch, TimeSeries};
+use crate::util::{log, Pcg32};
 
 pub use crate::config::Policy;
 
@@ -109,6 +109,9 @@ pub struct ServingModel {
     pub partition_populated: usize,
     /// Activation bits crossing chiplet boundaries in that partition.
     pub partition_cut_bits: u64,
+    /// Per-layer compute/communication blame for one replica frame (the
+    /// per-layer rows of the `--explain` report), exposed-comm ranked.
+    pub layer_blame: Vec<LayerBlame>,
 }
 
 impl ServingModel {
@@ -129,7 +132,8 @@ impl ServingModel {
     ) -> (Self, ChipletPartition) {
         let k = nop.chiplets;
         let mapping = Mapping::build(graph, arch);
-        let (service_s, stage_s) = replica_costs(graph, &mapping, arch, noc, nop, sim);
+        let (service_s, stage_s, layer_blame) =
+            replica_costs(graph, &mapping, arch, noc, nop, sim);
 
         // The model-parallel alternative and the partition the queues sit
         // over (which also fixes the package I/O gateway).
@@ -212,6 +216,7 @@ impl ServingModel {
             partitioned_latency_s: pkg.latency_s(),
             partition_populated: pkg.populated,
             partition_cut_bits: pkg.cross_bits,
+            layer_blame,
         };
         (model, part)
     }
@@ -245,6 +250,11 @@ impl ServingModel {
 /// slowest per-layer stage. `comm_per_layer` is sparse (layers with no
 /// inbound on-chip flows are skipped) and keyed by graph layer id, so the
 /// join is on that id rather than a zip.
+///
+/// The third element is the per-layer blame table the `--explain` report
+/// surfaces: compute vs NoC-communication milliseconds per mapped layer,
+/// with the comm time *exposed* beyond compute (the layer's contribution
+/// to a frame's critical path under compute/communication overlap).
 pub(crate) fn replica_costs(
     graph: &DnnGraph,
     mapping: &Mapping,
@@ -252,7 +262,7 @@ pub(crate) fn replica_costs(
     noc: &NocConfig,
     nop: &NopConfig,
     sim: &SimConfig,
-) -> (f64, f64) {
+) -> (f64, f64, Vec<LayerBlame>) {
     let solo = NopConfig {
         chiplets: 1,
         ..nop.clone()
@@ -262,14 +272,23 @@ pub(crate) fn replica_costs(
     let flat = evaluate(graph, noc.topology, arch, noc, sim, CommBackend::Analytical);
     let chip = ChipCost::evaluate(graph, mapping, arch);
     let comm_of: HashMap<usize, u64> = flat.comm_per_layer.iter().copied().collect();
+    let ms = 1e3 / arch.freq_hz;
     let mut stage_cycles = 1.0f64;
+    let mut layers = Vec::with_capacity(mapping.layers.len());
     for (i, lt) in mapping.layers.iter().enumerate() {
         let compute = chip.per_layer[i].cycles as f64;
         let comm = comm_of.get(&lt.layer).copied().unwrap_or(0) as f64;
         stage_cycles = stage_cycles.max(compute.max(comm));
+        layers.push(LayerBlame {
+            model: graph.name.clone(),
+            layer: graph.layers[lt.layer].name.clone(),
+            compute_ms: compute * ms,
+            comm_ms: comm * ms,
+            exposed_ms: (comm - compute).max(0.0) * ms,
+        });
     }
     let stage_s = (stage_cycles / arch.freq_hz).min(service_s);
-    (service_s, stage_s)
+    (service_s, stage_s, layers)
 }
 
 /// Convert the measured package saturation rate (uniform flits per chiplet
@@ -367,6 +386,9 @@ pub struct ChipletScheduler {
     latency: QuantileSketch,
     /// One lifecycle span per offered request, in admission order.
     spans: Vec<RequestSpan>,
+    /// One hop-by-hop ingress trace per offered request, index-aligned
+    /// with `spans` (default/empty for rejected requests).
+    ingress_traces: Vec<IngressTrace>,
     /// Queue depth observed at each admission.
     depth_hist: Histogram,
     /// Windowed serving metrics (installed by `run`, sized from the
@@ -401,6 +423,7 @@ impl ChipletScheduler {
             batches: 0,
             latency: QuantileSketch::new(),
             spans: Vec::new(),
+            ingress_traces: Vec::new(),
             depth_hist: Histogram::default(),
             timeseries: TimeSeries::default(),
             metrics_window_s: 0.0,
@@ -430,6 +453,7 @@ impl ChipletScheduler {
         self.batches = 0;
         self.latency = QuantileSketch::new();
         self.spans.clear();
+        self.ingress_traces.clear();
         self.depth_hist = Histogram::default();
         self.timeseries = TimeSeries::default();
     }
@@ -438,6 +462,12 @@ impl ChipletScheduler {
     /// offered request — completed and dropped alike).
     pub fn spans(&self) -> &[RequestSpan] {
         &self.spans
+    }
+
+    /// Hop-by-hop ingress traces of the most recent run, index-aligned
+    /// with [`spans`](Self::spans) (default/empty for rejected requests).
+    pub fn ingress_traces(&self) -> &[IngressTrace] {
+        &self.ingress_traces
     }
 
     /// Queue depth observed at each admission of the most recent run.
@@ -517,11 +547,23 @@ impl ChipletScheduler {
         let flits = self.model.ingress_flits;
         let hop_s = self.model.hop_s;
         let window_s = self.window_s;
+        let n_hops = self.model.paths[c].len();
+        let mut waits = Vec::with_capacity(n_hops);
         let mut head = t;
         let mut done = t;
         for &link in &self.model.paths[c] {
             let free = *self.link_free.get(&link).unwrap_or(&0.0);
             let start = head.max(free);
+            let wait = start - head;
+            waits.push((link, wait));
+            if wait > 0.0 {
+                log::trace!(
+                    "ingress hop {}-{}: waited {:.3} us on busy link",
+                    link.0,
+                    link.1,
+                    wait * 1e6
+                );
+            }
             let finish = (start + ser_s).max(done);
             self.link_free.insert(link, finish);
             let win = self.link_util.entry(link).or_default();
@@ -533,9 +575,18 @@ impl ChipletScheduler {
             head = start + hop_s;
             done = finish + hop_s;
         }
-        if !self.model.paths[c].is_empty() {
+        if n_hops > 0 {
             self.timeseries.record_ejected(c, flits);
         }
+        // Decomposition of `done - t`: per-link occupancy waits, one
+        // payload serialization (links pipeline, so it counts once) and
+        // the fixed per-hop propagation. The critical-path extractor
+        // ([`crate::telemetry::BlameReport`]) consumes these components.
+        self.ingress_traces.push(IngressTrace {
+            waits,
+            ser_s: if n_hops > 0 { ser_s } else { 0.0 },
+            prop_s: n_hops as f64 * hop_s,
+        });
         done
     }
 
@@ -618,6 +669,7 @@ impl ChipletScheduler {
                     dropped += 1;
                     self.timeseries.record_drop(t, 0);
                     self.spans.push(RequestSpan::rejected(0, t, SpanOutcome::Dropped));
+                    self.ingress_traces.push(IngressTrace::default());
                 }
                 Some(c) => {
                     let ready = self.ingress(c, t);
@@ -707,14 +759,18 @@ pub fn serve_modeled_traced(
     sim: &SimConfig,
     cfg: &ServingConfig,
 ) -> (ServingModel, ServeReport, Vec<RequestSpan>) {
-    let (model, report, spans, _) = serve_modeled_metrics(graph, arch, noc, nop, sim, cfg, 0.0);
+    let (model, report, spans, _, _) =
+        serve_modeled_metrics(graph, arch, noc, nop, sim, cfg, 0.0);
     (model, report, spans)
 }
 
-/// Like [`serve_modeled_traced`], also returning the windowed
-/// [`TimeSeries`] (the raw material for `repro serve --metrics-out` and
-/// `--heatmap`). `window_ms` pins the window width; 0 sizes it
-/// automatically from the arrival horizon.
+/// Like [`serve_modeled_traced`], also returning the per-request
+/// [`IngressTrace`]s (index-aligned with the spans — the raw material for
+/// `repro serve --explain`) and the windowed [`TimeSeries`] (the raw
+/// material for `repro serve --metrics-out` and `--heatmap`).
+/// `window_ms` pins the window width; 0 sizes it automatically from the
+/// arrival horizon.
+#[allow(clippy::type_complexity)]
 pub fn serve_modeled_metrics(
     graph: &DnnGraph,
     arch: &ArchConfig,
@@ -723,7 +779,13 @@ pub fn serve_modeled_metrics(
     sim: &SimConfig,
     cfg: &ServingConfig,
     window_ms: f64,
-) -> (ServingModel, ServeReport, Vec<RequestSpan>, TimeSeries) {
+) -> (
+    ServingModel,
+    ServeReport,
+    Vec<RequestSpan>,
+    Vec<IngressTrace>,
+    TimeSeries,
+) {
     let (model, part) = ServingModel::build(graph, arch, noc, nop, sim);
     let mut sched = ChipletScheduler::new(model, part, cfg);
     sched.set_metrics_window_s(window_ms * 1e-3);
@@ -731,8 +793,9 @@ pub fn serve_modeled_metrics(
     // runs reseed independently of the NoC/NoP simulators.
     let report = sched.run(cfg, cfg.seed);
     let spans = std::mem::take(&mut sched.spans);
+    let traces = std::mem::take(&mut sched.ingress_traces);
     let timeseries = std::mem::take(&mut sched.timeseries);
-    (sched.model, report, spans, timeseries)
+    (sched.model, report, spans, traces, timeseries)
 }
 
 #[cfg(test)]
@@ -923,6 +986,87 @@ mod tests {
                 assert!(s.complete >= s.service_start);
             }
         }
+    }
+
+    #[test]
+    fn ingress_traces_reconcile_with_spans_and_report() {
+        // Critical-path property: for every offered request the trace's
+        // component sum (waits + serialization + propagation) equals the
+        // span's ingress phase, and the per-request sums average to the
+        // report's mean_ingress_ms. Overload on a 4-chiplet mesh makes
+        // link waits real, so the reconciliation is non-trivial.
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            topology: NopTopology::Mesh,
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let (model, part) = ServingModel::build(&models::lenet5(), &arch, &noc, &nop, &sim);
+        let cfg = ServingConfig {
+            policy: Policy::LeastLatency,
+            queue_depth: 4,
+            arrival_rps: 2.0 * model.capacity_rps(1),
+            requests: 250,
+            batch: 1,
+            ..ServingConfig::default()
+        };
+        let mut sched = ChipletScheduler::new(model, part, &cfg);
+        let report = sched.run(&cfg, 9);
+        assert_eq!(sched.ingress_traces().len(), sched.spans().len());
+        let mut sum_ms = 0.0f64;
+        let mut n = 0usize;
+        for (span, trace) in sched.spans().iter().zip(sched.ingress_traces()) {
+            if span.outcome == SpanOutcome::Dropped {
+                assert!(trace.waits.is_empty() && trace.total_s() == 0.0);
+                continue;
+            }
+            let ingress = span.ready - span.arrival;
+            assert!(
+                (trace.total_s() - ingress).abs() <= 1e-9 * ingress.max(1.0),
+                "trace components {} vs span ingress {ingress}",
+                trace.total_s()
+            );
+            if span.outcome == SpanOutcome::Completed {
+                sum_ms += trace.total_s() * 1e3;
+                n += 1;
+            }
+        }
+        let mean = sum_ms / n.max(1) as f64;
+        assert!(
+            (mean - report.mean_ingress_ms).abs() <= 1e-9 * mean.max(1.0),
+            "trace mean {mean} vs report {}",
+            report.mean_ingress_ms
+        );
+        // Congested mesh: at least one request waited on a busy link.
+        assert!(sched
+            .ingress_traces()
+            .iter()
+            .any(|tr| tr.waits.iter().any(|&(_, w)| w > 0.0)));
+    }
+
+    #[test]
+    fn layer_blame_rows_cover_the_mapped_layers() {
+        let (arch, noc, sim) = defaults();
+        let nop = NopConfig {
+            chiplets: 4,
+            ..NopConfig::default()
+        };
+        let g = models::squeezenet();
+        let (model, _) = ServingModel::build(&g, &arch, &noc, &nop, &sim);
+        assert!(!model.layer_blame.is_empty());
+        for lb in &model.layer_blame {
+            assert_eq!(lb.model, g.name);
+            assert!(lb.compute_ms >= 0.0 && lb.comm_ms >= 0.0);
+            assert!(lb.exposed_ms <= lb.comm_ms + 1e-12);
+        }
+        // The slowest stage the pipeline interval is built from appears in
+        // the blame rows: max(compute, comm) over rows >= stage interval.
+        let worst = model
+            .layer_blame
+            .iter()
+            .map(|l| l.compute_ms.max(l.comm_ms))
+            .fold(0.0f64, f64::max);
+        assert!(worst * 1e-3 >= model.stage_s - 1e-12);
     }
 
     #[test]

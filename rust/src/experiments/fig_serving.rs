@@ -20,6 +20,7 @@ use crate::coordinator::par_map;
 use crate::coordinator::scheduler::{ChipletScheduler, Policy, ServingModel};
 use crate::dnn::by_name;
 use crate::nop::topology::NopTopology;
+use crate::telemetry::BlameReport;
 use crate::util::{fmt_sig, Table};
 
 /// One (DNN, chiplets, NoP) sweep point.
@@ -97,6 +98,7 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
             "service_ms",
             "windows",
             "drift_events",
+            "explain",
         ],
     );
     let mut context = Table::new(
@@ -144,6 +146,15 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
             let drop_pct = 100.0 * report.dropped as f64 / report.requests.max(1) as f64;
             let util_sum: f64 = report.per_chiplet.iter().map(|s| s.utilization).sum();
             let util_mean = util_sum / report.per_chiplet.len().max(1) as f64;
+            // Critical-path attribution: the single most-blamed package
+            // link of this run ("-" when no request ever waited).
+            let blame = BlameReport::build(
+                sched.spans(),
+                sched.ingress_traces(),
+                &[name.clone()],
+                &[f64::INFINITY],
+                &model.layer_blame,
+            );
             sweep.add_row(vec![
                 name.clone(),
                 k.to_string(),
@@ -160,6 +171,7 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
                 fmt_sig(report.mean_service_ms, 3),
                 sched.timeseries().windows().len().to_string(),
                 sched.timeseries().drift_events().len().to_string(),
+                blame.top_link(),
             ]);
         }
     }
@@ -198,6 +210,8 @@ mod tests {
             let windows: usize = row[13].parse().unwrap();
             assert!(windows > 0, "run collected no metric windows");
             let _drift: usize = row[14].parse().unwrap();
+            // Explain column: either "-" (no waits) or a "from-to" link.
+            assert!(row[15] == "-" || row[15].contains('-'), "{}", row[15]);
         }
     }
 

@@ -29,6 +29,7 @@ use crate::coordinator::mix::{MixScheduler, MixServingModel};
 use crate::coordinator::par_map;
 use crate::coordinator::scheduler::AUTO_LOAD_FACTOR;
 use crate::nop::topology::NopTopology;
+use crate::telemetry::{BlameReport, LayerBlame};
 use crate::util::{fmt_sig, Table};
 use crate::workload::{ArrivalKind, PlacementPolicy};
 
@@ -95,6 +96,7 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
             "service_ms",
             "windows",
             "drift_events",
+            "explain",
         ],
     );
     let mut healthy: Option<MixServingModel> = None;
@@ -130,6 +132,25 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
             let mut report = sched.run(&events);
             report.offered_rps = rate;
             let pct = |n: usize| 100.0 * n as f64 / report.requests.max(1) as f64;
+            // Critical-path attribution: the single most-blamed package
+            // link of this run ("-" when no request ever waited).
+            let names: Vec<String> =
+                sched.model.models.iter().map(|m| m.name.clone()).collect();
+            let deadlines: Vec<f64> =
+                sched.model.models.iter().map(|m| m.deadline_s).collect();
+            let layers: Vec<LayerBlame> = sched
+                .model
+                .models
+                .iter()
+                .flat_map(|m| m.layers.iter().cloned())
+                .collect();
+            let blame = BlameReport::build(
+                sched.spans(),
+                sched.ingress_traces(),
+                &names,
+                &deadlines,
+                &layers,
+            );
             Ok::<Vec<String>, String>(vec![
                 mix_name.clone(),
                 k.to_string(),
@@ -146,6 +167,7 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
                 fmt_sig(report.mean_service_ms, 3),
                 sched.timeseries().windows().len().to_string(),
                 sched.timeseries().drift_events().len().to_string(),
+                blame.top_link(),
             ])
         });
         for row in combo_rows {
@@ -235,6 +257,8 @@ mod tests {
             let windows: usize = row[13].parse().unwrap();
             assert!(windows > 0, "run collected no metric windows");
             let _drift: usize = row[14].parse().unwrap();
+            // Explain column: either "-" (no waits) or a "from-to" link.
+            assert!(row[15] == "-" || row[15].contains('-'), "{}", row[15]);
         }
     }
 

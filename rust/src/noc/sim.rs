@@ -150,6 +150,15 @@ impl NocSim {
         self
     }
 
+    /// Arm the per-flow attribution hook: count head-of-line blocked
+    /// flit-cycles per (src, dst) flow into
+    /// [`SimStats::flow_waits`]. Purely observational — simulated
+    /// outcomes (makespan, latency, delivery) are identical either way.
+    pub fn attribute(mut self, on: bool) -> Self {
+        self.core.attrib = on;
+        self
+    }
+
     /// Collect per-link flit counters, per-terminal injection/ejection
     /// counters and buffer-occupancy telemetry while running (returned by
     /// [`NocSim::run_instrumented`]). Off by default: the disabled path
@@ -398,6 +407,10 @@ impl NocFabric {
                 if let Some(tm) = &mut core.telem {
                     tm.link_flits[self.link_ids[r][slot]] += 1;
                 }
+            } else if let Some(head) = self.routers[r].inputs[ip].vcs[vc].front() {
+                // Attribution: the claimed move lost to a full downstream
+                // buffer — this head flit stalls one more cycle.
+                self.note_blocked(core, head.src, head.dst);
             }
             if self.routers[r].total_occupancy() > 0 {
                 self.mark_active(r);
@@ -720,6 +733,45 @@ mod tests {
         .run();
         assert_eq!(s.injected, 0);
         assert!(s.drained);
+    }
+
+    #[test]
+    fn attribution_records_waits_without_changing_outcomes() {
+        // All-to-one hotspot on a 4x4 mesh: buffers at the hotspot fill,
+        // so downstream-full stalls must be recorded when armed — and
+        // every simulated outcome must match the disarmed run exactly.
+        let flows: Vec<FlowSpec> = (1..16)
+            .map(|s| FlowSpec {
+                src: s,
+                dst: 0,
+                rate: 0.0,
+                flits: 50,
+            })
+            .collect();
+        let build = || {
+            NocSim::new(
+                Topology::Mesh,
+                16,
+                &cfg(),
+                &flows,
+                Mode::Drain {
+                    max_cycles: 1_000_000,
+                },
+                3,
+            )
+        };
+        let off = build().run();
+        let on = build().attribute(true).run();
+        assert!(off.drained && on.drained);
+        assert_eq!(off.makespan, on.makespan);
+        assert_eq!(off.delivered, on.delivered);
+        assert_eq!(off.avg_latency, on.avg_latency);
+        assert!(off.flow_waits.is_empty(), "disarmed run must not allocate");
+        assert!(!on.flow_waits.is_empty(), "hotspot must record waits");
+        // Every recorded key is one of the offered flows (dst == 0).
+        for key in on.flow_waits.keys() {
+            assert_eq!(key & 0xFFFF_FFFF, 0, "unexpected flow key {key:#x}");
+        }
     }
 
     #[test]

@@ -179,6 +179,15 @@ impl NopSim {
         self
     }
 
+    /// Arm the per-flow attribution hook: count head-of-line blocked
+    /// flit-cycles per (src, dst) flow into
+    /// [`SimStats::flow_waits`]. Purely observational — simulated
+    /// outcomes (makespan, latency, delivery) are identical either way.
+    pub fn attribute(mut self, on: bool) -> Self {
+        self.core.attrib = on;
+        self
+    }
+
     /// Collect per-link flit counters, per-chiplet injection/ejection
     /// counters and buffer-occupancy telemetry while running (returned by
     /// [`NopSim::run_instrumented`]). Off by default: the disabled path
@@ -373,6 +382,12 @@ impl NopFabric {
                     } else {
                         kept.push_back(flit);
                     }
+                }
+                // Attribution: the head of the kept queue is the flit that
+                // blocks this buffer next cycle (busy link, exhausted
+                // credits or a busy ejection port).
+                if let Some(&NopFlit { src, dst, .. }) = kept.front() {
+                    self.note_blocked(core, src, dst);
                 }
                 self.bufs[buf] = kept;
             }
@@ -856,6 +871,54 @@ mod tests {
         assert_eq!(s.per_pair.len(), 2);
         assert_eq!(s.per_pair[&3u64].count, 10);
         assert_eq!(s.per_pair[&((1u64 << 32) | 2)].count, 5);
+    }
+
+    #[test]
+    fn attribution_records_waits_without_changing_outcomes() {
+        // Two flows contending for the ring link into chiplet 2: someone
+        // must block, so the armed run records waits — and every simulated
+        // outcome matches the disarmed run exactly.
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 2,
+                rate: 0.0,
+                flits: 40,
+            },
+            FlowSpec {
+                src: 1,
+                dst: 2,
+                rate: 0.0,
+                flits: 40,
+            },
+        ];
+        let build = || {
+            NopSim::new(
+                NopTopology::Ring,
+                4,
+                &cfg(),
+                &flows,
+                Mode::Drain {
+                    max_cycles: 500_000,
+                },
+                33,
+            )
+        };
+        let off = build().run();
+        let on = build().attribute(true).run();
+        assert!(off.drained && on.drained);
+        assert_eq!(off.makespan, on.makespan);
+        assert_eq!(off.delivered, on.delivered);
+        assert_eq!(off.avg_latency, on.avg_latency);
+        assert!(off.flow_waits.is_empty(), "disarmed run must not allocate");
+        assert!(!on.flow_waits.is_empty(), "contention must record waits");
+        // Every recorded key is one of the two offered flows.
+        for key in on.flow_waits.keys() {
+            assert!(
+                *key == 2 || *key == ((1u64 << 32) | 2),
+                "unexpected flow key {key:#x}"
+            );
+        }
     }
 
     #[test]

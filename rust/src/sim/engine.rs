@@ -93,6 +93,12 @@ pub struct SimStats {
     /// Per-pair latency stats, keyed by `(src << 32) | dst` (Fig. 15 /
     /// Table 3). Only filled when `track_pairs` is enabled.
     pub per_pair: HashMap<u64, PairStat>,
+    /// Head-of-line blocked flit-cycles per flow, keyed like `per_pair`:
+    /// cycles a flow's head flit sat ready-to-move but stalled on a busy
+    /// link or full downstream buffer. Only filled when the attribution
+    /// hook is armed (`.attribute(true)` on the simulator builders);
+    /// purely observational — never feeds back into simulated outcomes.
+    pub flow_waits: HashMap<u64, u64>,
 }
 
 /// Latency statistics for one source–destination pair.
@@ -161,6 +167,10 @@ pub(crate) struct EngineCore {
     pub(crate) sources: Vec<SourceState>,
     pub(crate) rng: Pcg32,
     pub(crate) track_pairs: bool,
+    /// Arm the per-flow head-of-line blocking attribution hook
+    /// ([`EngineCore::note_blocked`]); off by default so the hot switching
+    /// loops pay one branch per stalled head flit and allocate nothing.
+    pub(crate) attrib: bool,
     pub(crate) stats: SimStats,
     pub(crate) now: u64,
     pub(crate) in_warmup: bool,
@@ -216,6 +226,7 @@ impl EngineCore {
             sources,
             rng: Pcg32::seeded(seed),
             track_pairs: false,
+            attrib: false,
             stats: SimStats::default(),
             now: 0,
             in_warmup: steady,
@@ -298,6 +309,18 @@ impl EngineCore {
         }
     }
 
+    /// Attribution hook: flow `src → dst`'s head flit was ready to move
+    /// this cycle but blocked on a busy link or full downstream buffer.
+    /// No-op unless armed via the simulator builders' `.attribute(true)`
+    /// (and never during warm-up), so the default path is one branch.
+    pub(crate) fn note_blocked(&mut self, src: u32, dst: u32) {
+        if !self.attrib || self.in_warmup {
+            return;
+        }
+        let key = ((src as u64) << 32) | dst as u64;
+        *self.stats.flow_waits.entry(key).or_insert(0) += 1;
+    }
+
     /// Arrival-time occupancy sampling (Fig. 13/14) — no-op during warm-up.
     pub(crate) fn sample_occupancy(&mut self, occ: usize) {
         if self.in_warmup {
@@ -356,6 +379,14 @@ pub(crate) trait Fabric {
     fn next_arrival(&self) -> Option<u64> {
         None
     }
+
+    /// Report a head-of-line blocked flit to the attribution hook.
+    /// Fabrics call this from their switching loops when a head flit
+    /// cannot advance; the default forwards to
+    /// [`EngineCore::note_blocked`], which is gated on the arm flag.
+    fn note_blocked(&self, core: &mut EngineCore, src: u32, dst: u32) {
+        core.note_blocked(src, dst);
+    }
 }
 
 /// Run `fab` to completion per `core.mode`, then finalize the statistics
@@ -391,6 +422,7 @@ pub(crate) fn run_engine<F: Fabric>(core: &mut EngineCore, fab: &mut F) {
     if core.stats.delivered > 0 {
         core.stats.avg_latency /= core.stats.delivered as f64;
     }
+    crate::telemetry::profile::note_engine_run(core.stats.cycles);
 }
 
 /// Uniform-random all-to-all traffic at `rate_per_terminal` flits per
@@ -484,6 +516,37 @@ mod tests {
         // Nothing left: further calls are no-ops.
         core.generate_drain(0);
         assert_eq!(core.stats.injected, 3);
+    }
+
+    #[test]
+    fn note_blocked_is_gated_on_arm_flag_and_warmup() {
+        let flows = [FlowSpec {
+            src: 0,
+            dst: 1,
+            rate: 0.5,
+            flits: 0,
+        }];
+        let mode = Mode::Steady {
+            warmup: 10,
+            measure: 10,
+        };
+        let mut core = EngineCore::new(2, &flows, mode, 1);
+        // Disarmed (the default): hook is a no-op.
+        core.in_warmup = false;
+        core.note_blocked(0, 1);
+        assert!(core.stats.flow_waits.is_empty());
+        // Armed but warming up: still a no-op.
+        core.attrib = true;
+        core.in_warmup = true;
+        core.note_blocked(0, 1);
+        assert!(core.stats.flow_waits.is_empty());
+        // Armed and measuring: flit-cycles accumulate per flow key.
+        core.in_warmup = false;
+        core.note_blocked(0, 1);
+        core.note_blocked(0, 1);
+        core.note_blocked(1, 0);
+        assert_eq!(core.stats.flow_waits.get(&1), Some(&2));
+        assert_eq!(core.stats.flow_waits.get(&(1u64 << 32)), Some(&1));
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //! held across a simulation: two workers racing on the same key may both
 //! compute it (identical results — the sims are deterministic), but
 //! neither ever blocks behind a multi-millisecond run.
+//!
+//! Both caches are bounded ([`DRAIN_CACHE_CAP`] / [`SAT_CACHE_CAP`]): at
+//! capacity an arbitrary resident entry is evicted before insertion, so a
+//! long sweep session cannot grow them without bound. Eviction order is
+//! nondeterministic (`HashMap` iteration), which is safe because a cache
+//! hit and a re-simulation are identical by the identity contract below.
+//! Lookups, insertions and evictions feed the
+//! [`crate::telemetry::profile`] counters (`repro … --profile`).
 
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
@@ -22,6 +30,35 @@ use std::sync::{Mutex, OnceLock};
 use super::engine::{FlowSpec, Mode, SimStats};
 use crate::config::NopConfig;
 use crate::nop::topology::NopTopology;
+use crate::telemetry::profile;
+
+/// Maximum resident drain-run results; one arbitrary entry is evicted
+/// per insertion beyond this.
+pub(crate) const DRAIN_CACHE_CAP: usize = 256;
+
+/// Maximum resident saturation-search results.
+pub(crate) const SAT_CACHE_CAP: usize = 256;
+
+/// Insert `(key, val)` into a bounded cache map: when `key` is absent and
+/// the map is at `cap`, evict one arbitrary resident entry first. Returns
+/// whether an eviction happened (so callers can bump the profile counter
+/// for their cache).
+fn insert_bounded<K: std::hash::Hash + Eq + Clone, V>(
+    map: &mut HashMap<K, V>,
+    cap: usize,
+    key: K,
+    val: V,
+) -> bool {
+    let mut evicted = false;
+    if map.len() >= cap && !map.contains_key(&key) {
+        if let Some(victim) = map.keys().next().cloned() {
+            map.remove(&victim);
+            evicted = true;
+        }
+    }
+    map.insert(key, val);
+    evicted
+}
 
 /// Drain-run cache key: (topology, chiplets, hop latency, buffer depth,
 /// cycle budget, seed, cross-chiplet flow list in caller order). The flow
@@ -64,8 +101,13 @@ pub fn drain_makespan(
         fl,
     );
     if let Some(hit) = drain_cache().lock().unwrap().get(&key) {
+        profile::note_drain(true);
         return hit.clone();
     }
+    profile::note_drain(false);
+    // Attribution is always armed here: it only fills `flow_waits`
+    // (observational), so the memoized result stays bit-identical to an
+    // unattributed run on every simulated outcome.
     let stats = crate::nop::sim::NopSim::new(
         topology,
         k,
@@ -74,11 +116,16 @@ pub fn drain_makespan(
         Mode::Drain { max_cycles },
         seed,
     )
+    .attribute(true)
     .run();
-    drain_cache()
-        .lock()
-        .unwrap()
-        .insert(key, stats.clone());
+    if insert_bounded(
+        &mut drain_cache().lock().unwrap(),
+        DRAIN_CACHE_CAP,
+        key,
+        stats.clone(),
+    ) {
+        profile::note_drain_eviction();
+    }
     stats
 }
 
@@ -110,10 +157,14 @@ pub(crate) fn memo_saturation(
         seed,
     );
     if let Some(&hit) = sat_cache().lock().unwrap().get(&key) {
+        profile::note_sat(true);
         return hit;
     }
+    profile::note_sat(false);
     let val = compute();
-    sat_cache().lock().unwrap().insert(key, val);
+    if insert_bounded(&mut sat_cache().lock().unwrap(), SAT_CACHE_CAP, key, val) {
+        profile::note_sat_eviction();
+    }
     val
 }
 
@@ -201,6 +252,23 @@ mod tests {
         assert_eq!(fwd.injected, rev.injected);
         assert_eq!(rev.makespan, rev_direct.makespan);
         assert_eq!(rev.avg_latency, rev_direct.avg_latency);
+    }
+
+    #[test]
+    fn bounded_insert_evicts_at_capacity_only() {
+        let mut map: HashMap<u32, u32> = HashMap::new();
+        assert!(!insert_bounded(&mut map, 3, 1, 10));
+        assert!(!insert_bounded(&mut map, 3, 2, 20));
+        assert!(!insert_bounded(&mut map, 3, 3, 30));
+        assert_eq!(map.len(), 3);
+        // Overwriting a resident key at capacity evicts nothing.
+        assert!(!insert_bounded(&mut map, 3, 2, 21));
+        assert_eq!(map.len(), 3);
+        assert_eq!(map.get(&2), Some(&21));
+        // A fresh key at capacity evicts exactly one resident entry.
+        assert!(insert_bounded(&mut map, 3, 4, 40));
+        assert_eq!(map.len(), 3);
+        assert_eq!(map.get(&4), Some(&40));
     }
 
     #[test]

@@ -1,0 +1,680 @@
+//! Causal request tracing with critical-path attribution.
+//!
+//! The serving schedulers record *where each request's time went*: the
+//! hop-by-hop NoP link occupancy waits of the ingress walk (an
+//! [`IngressTrace`] per offered request, index-aligned with the lifecycle
+//! [`RequestSpan`]s), the queue wait and the chiplet service. This module
+//! folds those per-request decompositions into a ranked **blame report**:
+//! which package links, chiplets and layers account for the most
+//! critical-path milliseconds, and — for deadline-carrying mixes — which
+//! component each deadline miss is attributable to.
+//!
+//! The decomposition is exact by construction. The ingress walk computes
+//! `ready = arrival + Σ link_waits + hops · hop_s + ser_s` (each wait is
+//! `max(0, link_free − head)`, recorded as the walk runs), so per-request
+//! component sums reconcile with
+//! [`ServeReport`](crate::coordinator::server::ServeReport)'s
+//! `mean_{ingress,queue,service}_ms` breakdown — property-tested in both
+//! schedulers and gated in CI by `scripts/check_explain.py`.
+//!
+//! Everything here is deterministic: aggregation is keyed by ordered maps,
+//! ties break on link/chiplet ids, and the JSON export uses fixed-precision
+//! formatting, so `--explain-out` files are byte-identical per
+//! `[serving] seed` (golden-tested).
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::span::{RequestSpan, SpanOutcome};
+
+/// Per-request NoP ingress decomposition, recorded by the scheduler's
+/// ingress walk. One trace per *offered* request, index-aligned with the
+/// scheduler's [`RequestSpan`]s; rejected requests keep an empty default
+/// so the alignment survives drops and sheds.
+#[derive(Clone, Debug, Default)]
+pub struct IngressTrace {
+    /// Occupancy wait on each directed link of the gateway route, in walk
+    /// order, seconds (`max(0, link_free − head)` at that hop).
+    pub waits: Vec<((usize, usize), f64)>,
+    /// Payload serialization occupancy of one link, seconds (0 when the
+    /// request served on the gateway chiplet itself).
+    pub ser_s: f64,
+    /// Total fixed per-hop SerDes propagation, seconds.
+    pub prop_s: f64,
+}
+
+impl IngressTrace {
+    /// Sum of every component, seconds — equals the span's
+    /// `ingress_s()` (`ready − arrival`) up to floating-point rounding.
+    pub fn total_s(&self) -> f64 {
+        self.waits.iter().map(|&(_, w)| w).sum::<f64>() + self.ser_s + self.prop_s
+    }
+
+    /// The final link of the route (where serialization completes), if the
+    /// request left the gateway at all.
+    pub fn last_link(&self) -> Option<(usize, usize)> {
+        self.waits.last().map(|&(l, _)| l)
+    }
+}
+
+/// Per-layer replica cost breakdown (one frame through one chiplet
+/// replica), for the layer section of the blame report.
+#[derive(Clone, Debug)]
+pub struct LayerBlame {
+    /// Zoo model the layer belongs to.
+    pub model: String,
+    /// Layer name within the model.
+    pub layer: String,
+    /// Compute cycles of the layer, milliseconds at the core clock.
+    pub compute_ms: f64,
+    /// On-chiplet communication cycles of the layer, milliseconds.
+    pub comm_ms: f64,
+    /// Communication time not hidden behind compute, milliseconds —
+    /// `max(0, comm − compute)`, the paper's exposed-latency notion.
+    pub exposed_ms: f64,
+}
+
+/// Aggregate blame carried by one directed package link.
+#[derive(Clone, Debug)]
+pub struct LinkBlame {
+    /// Directed NoP link `(from, to)`.
+    pub link: (usize, usize),
+    /// Total occupancy wait charged to this link, milliseconds.
+    pub wait_ms: f64,
+    /// Total payload serialization charged to this link (the final hop of
+    /// each route serializes the payload), milliseconds.
+    pub serialization_ms: f64,
+    /// Completed requests that waited (> 0 s) on this link.
+    pub blocked_requests: usize,
+    /// Deadline misses whose dominant component was this link.
+    pub miss_count: usize,
+}
+
+impl LinkBlame {
+    /// Total critical-path milliseconds charged to this link.
+    pub fn critical_ms(&self) -> f64 {
+        self.wait_ms + self.serialization_ms
+    }
+
+    /// `"from-to"` label, as used in reports and experiment tables.
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.link.0, self.link.1)
+    }
+}
+
+/// Aggregate blame carried by one serving chiplet.
+#[derive(Clone, Debug)]
+pub struct ChipletBlame {
+    /// Chiplet id.
+    pub chiplet: usize,
+    /// Total queue wait of requests served here, milliseconds.
+    pub queue_ms: f64,
+    /// Total service (incl. egress) of requests served here, milliseconds.
+    pub service_ms: f64,
+    /// Completed requests served on this chiplet.
+    pub requests: usize,
+    /// Deadline misses whose dominant component was this chiplet's queue
+    /// or service.
+    pub miss_count: usize,
+}
+
+/// Per-model roll-up with deadline-miss attribution.
+#[derive(Clone, Debug)]
+pub struct ModelBlame {
+    /// Model name.
+    pub model: String,
+    /// Requests offered for this model.
+    pub requests: usize,
+    /// Requests completed.
+    pub completed: usize,
+    /// Completed requests that exceeded their deadline.
+    pub missed: usize,
+    /// Total ingress (waits + serialization + propagation), milliseconds.
+    pub ingress_ms: f64,
+    /// Total queue wait, milliseconds.
+    pub queue_ms: f64,
+    /// Total service, milliseconds.
+    pub service_ms: f64,
+    /// The component holding the most of this model's time: `"queue"`,
+    /// `"service"`, `"link from-to"`, or `"ingress"` (gateway-local).
+    pub top_component: String,
+}
+
+/// Ranked critical-path blame report over one serving run.
+#[derive(Clone, Debug)]
+pub struct BlameReport {
+    /// Run span (first arrival to last completion), milliseconds.
+    pub horizon_ms: f64,
+    /// Requests offered.
+    pub requests: usize,
+    /// Requests completed.
+    pub completed: usize,
+    /// Completed requests that exceeded their deadline.
+    pub missed: usize,
+    /// Total link occupancy wait over completed requests, milliseconds.
+    pub wait_ms: f64,
+    /// Total payload serialization, milliseconds.
+    pub serialization_ms: f64,
+    /// Total fixed hop propagation, milliseconds.
+    pub propagation_ms: f64,
+    /// Total queue wait, milliseconds.
+    pub queue_ms: f64,
+    /// Total service (incl. egress), milliseconds.
+    pub service_ms: f64,
+    /// Links ranked by critical-path milliseconds (descending, ties by
+    /// link id).
+    pub links: Vec<LinkBlame>,
+    /// Chiplets ranked by queue + service milliseconds.
+    pub chiplets: Vec<ChipletBlame>,
+    /// Per-model roll-ups, in model-index order.
+    pub models: Vec<ModelBlame>,
+    /// Per-layer replica cost breakdown, ranked by exposed milliseconds.
+    pub layers: Vec<LayerBlame>,
+}
+
+/// The dominant (largest) component of one request's critical path.
+enum Dominant {
+    Link((usize, usize)),
+    Chiplet(usize),
+    Other,
+}
+
+impl BlameReport {
+    /// Build the report from a run's spans and ingress traces.
+    ///
+    /// `spans` and `traces` are index-aligned (one per offered request);
+    /// `names[m]` / `deadline_s[m]` describe model index `m`
+    /// (`f64::INFINITY` = no deadline); `layers` is the per-layer replica
+    /// breakdown of every served model.
+    pub fn build(
+        spans: &[RequestSpan],
+        traces: &[IngressTrace],
+        names: &[String],
+        deadline_s: &[f64],
+        layers: &[LayerBlame],
+    ) -> Self {
+        let mut links: BTreeMap<(usize, usize), LinkBlame> = BTreeMap::new();
+        let mut chiplets: BTreeMap<usize, ChipletBlame> = BTreeMap::new();
+        let mut models: Vec<ModelBlame> = names
+            .iter()
+            .map(|n| ModelBlame {
+                model: n.clone(),
+                requests: 0,
+                completed: 0,
+                missed: 0,
+                ingress_ms: 0.0,
+                queue_ms: 0.0,
+                service_ms: 0.0,
+                top_component: "-".to_string(),
+            })
+            .collect();
+        // Per-model per-link critical ms, for the top_component labels.
+        let mut model_links: Vec<BTreeMap<(usize, usize), f64>> =
+            vec![BTreeMap::new(); names.len()];
+
+        let empty = IngressTrace::default();
+        let mut totals = [0.0f64; 5]; // wait, ser, prop, queue, service
+        let mut horizon_s = 0.0f64;
+        let mut completed = 0usize;
+        let mut missed = 0usize;
+        for (i, span) in spans.iter().enumerate() {
+            horizon_s = horizon_s.max(span.arrival);
+            if span.model < models.len() {
+                models[span.model].requests += 1;
+            }
+            if span.outcome != SpanOutcome::Completed {
+                continue;
+            }
+            completed += 1;
+            horizon_s = horizon_s.max(span.complete);
+            let trace = traces.get(i).unwrap_or(&empty);
+            let queue_s = span.queue_s();
+            let service_s = span.service_s();
+            let miss = deadline_s
+                .get(span.model)
+                .is_some_and(|&d| d.is_finite() && span.latency_s() > d);
+            if miss {
+                missed += 1;
+            }
+
+            // Per-link waits + serialization on the final hop.
+            let mut wait_sum = 0.0f64;
+            let mut dominant = Dominant::Other;
+            let mut dominant_v = f64::NEG_INFINITY;
+            for &(link, w) in &trace.waits {
+                wait_sum += w;
+                let lb = links.entry(link).or_insert_with(|| LinkBlame {
+                    link,
+                    wait_ms: 0.0,
+                    serialization_ms: 0.0,
+                    blocked_requests: 0,
+                    miss_count: 0,
+                });
+                lb.wait_ms += w * 1e3;
+                if w > 0.0 {
+                    lb.blocked_requests += 1;
+                }
+                if w > dominant_v {
+                    dominant_v = w;
+                    dominant = Dominant::Link(link);
+                }
+            }
+            if let Some(last) = trace.last_link() {
+                links
+                    .get_mut(&last)
+                    .expect("last link was inserted by the wait loop")
+                    .serialization_ms += trace.ser_s * 1e3;
+                if trace.ser_s > dominant_v {
+                    dominant_v = trace.ser_s;
+                    dominant = Dominant::Link(last);
+                }
+            }
+            if trace.prop_s > dominant_v {
+                dominant_v = trace.prop_s;
+                dominant = Dominant::Other;
+            }
+            if queue_s > dominant_v {
+                dominant_v = queue_s;
+                dominant = Dominant::Chiplet(span.chiplet);
+            }
+            if service_s > dominant_v {
+                dominant = Dominant::Chiplet(span.chiplet);
+            }
+
+            let cb = chiplets.entry(span.chiplet).or_insert_with(|| ChipletBlame {
+                chiplet: span.chiplet,
+                queue_ms: 0.0,
+                service_ms: 0.0,
+                requests: 0,
+                miss_count: 0,
+            });
+            cb.queue_ms += queue_s * 1e3;
+            cb.service_ms += service_s * 1e3;
+            cb.requests += 1;
+
+            totals[0] += wait_sum * 1e3;
+            totals[1] += trace.ser_s * 1e3;
+            totals[2] += trace.prop_s * 1e3;
+            totals[3] += queue_s * 1e3;
+            totals[4] += service_s * 1e3;
+
+            if span.model < models.len() {
+                let mb = &mut models[span.model];
+                mb.completed += 1;
+                mb.ingress_ms += trace.total_s() * 1e3;
+                mb.queue_ms += queue_s * 1e3;
+                mb.service_ms += service_s * 1e3;
+                for &(link, w) in &trace.waits {
+                    *model_links[span.model].entry(link).or_insert(0.0) += w * 1e3;
+                }
+                if let Some(last) = trace.last_link() {
+                    *model_links[span.model].entry(last).or_insert(0.0) += trace.ser_s * 1e3;
+                }
+                if miss {
+                    mb.missed += 1;
+                }
+            }
+            if miss {
+                match dominant {
+                    Dominant::Link(l) => {
+                        links
+                            .get_mut(&l)
+                            .expect("dominant link was aggregated above")
+                            .miss_count += 1;
+                    }
+                    Dominant::Chiplet(c) => {
+                        chiplets
+                            .get_mut(&c)
+                            .expect("dominant chiplet was aggregated above")
+                            .miss_count += 1;
+                    }
+                    Dominant::Other => {}
+                }
+            }
+        }
+
+        for (m, mb) in models.iter_mut().enumerate() {
+            if mb.completed == 0 {
+                continue;
+            }
+            mb.top_component = if mb.queue_ms >= mb.service_ms && mb.queue_ms >= mb.ingress_ms {
+                "queue".to_string()
+            } else if mb.service_ms >= mb.ingress_ms {
+                "service".to_string()
+            } else {
+                match model_links[m]
+                    .iter()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                {
+                    Some((&(a, b), _)) => format!("link {a}-{b}"),
+                    None => "ingress".to_string(),
+                }
+            };
+        }
+
+        let mut links: Vec<LinkBlame> = links.into_values().collect();
+        links.sort_by(|a, b| {
+            b.critical_ms()
+                .partial_cmp(&a.critical_ms())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.link.cmp(&b.link))
+        });
+        let mut chiplets: Vec<ChipletBlame> = chiplets.into_values().collect();
+        chiplets.sort_by(|a, b| {
+            (b.queue_ms + b.service_ms)
+                .partial_cmp(&(a.queue_ms + a.service_ms))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.chiplet.cmp(&b.chiplet))
+        });
+        let mut layers = layers.to_vec();
+        layers.sort_by(|a, b| {
+            b.exposed_ms
+                .partial_cmp(&a.exposed_ms)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.model.cmp(&b.model))
+                .then(a.layer.cmp(&b.layer))
+        });
+
+        Self {
+            horizon_ms: horizon_s * 1e3,
+            requests: spans.len(),
+            completed,
+            missed,
+            wait_ms: totals[0],
+            serialization_ms: totals[1],
+            propagation_ms: totals[2],
+            queue_ms: totals[3],
+            service_ms: totals[4],
+            links,
+            chiplets,
+            models,
+            layers,
+        }
+    }
+
+    /// Label of the most-blamed link (`"from-to"`), or `"-"` when the run
+    /// never left the gateway — the experiments' `explain` column.
+    pub fn top_link(&self) -> String {
+        match self.links.first() {
+            Some(l) if l.critical_ms() > 0.0 => l.label(),
+            _ => "-".to_string(),
+        }
+    }
+
+    /// Byte-deterministic JSON export (schema `imcnoc-explain-v1`),
+    /// the `--explain-out` artifact gated by `scripts/check_explain.py`.
+    pub fn to_json(&self) -> String {
+        let ms = |v: f64| format!("{v:.6}");
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n\"schema\": \"imcnoc-explain-v1\",\n");
+        out.push_str(&format!("\"horizon_ms\": {},\n", ms(self.horizon_ms)));
+        out.push_str(&format!(
+            "\"requests\": {}, \"completed\": {}, \"missed\": {},\n",
+            self.requests, self.completed, self.missed
+        ));
+        out.push_str(&format!(
+            "\"components_ms\": {{\"wait\": {}, \"serialization\": {}, \"propagation\": {}, \
+             \"queue\": {}, \"service\": {}}},\n",
+            ms(self.wait_ms),
+            ms(self.serialization_ms),
+            ms(self.propagation_ms),
+            ms(self.queue_ms),
+            ms(self.service_ms)
+        ));
+        out.push_str("\"links\": [");
+        for (i, l) in self.links.iter().enumerate() {
+            let sep = if i + 1 == self.links.len() { "" } else { "," };
+            out.push_str(&format!(
+                "\n  {{\"link\": \"{}\", \"wait_ms\": {}, \"serialization_ms\": {}, \
+                 \"critical_ms\": {}, \"blocked_requests\": {}, \"miss_count\": {}}}{}",
+                l.label(),
+                ms(l.wait_ms),
+                ms(l.serialization_ms),
+                ms(l.critical_ms()),
+                l.blocked_requests,
+                l.miss_count,
+                sep
+            ));
+        }
+        out.push_str("],\n\"chiplets\": [");
+        for (i, c) in self.chiplets.iter().enumerate() {
+            let sep = if i + 1 == self.chiplets.len() { "" } else { "," };
+            out.push_str(&format!(
+                "\n  {{\"chiplet\": {}, \"queue_ms\": {}, \"service_ms\": {}, \
+                 \"requests\": {}, \"miss_count\": {}}}{}",
+                c.chiplet,
+                ms(c.queue_ms),
+                ms(c.service_ms),
+                c.requests,
+                c.miss_count,
+                sep
+            ));
+        }
+        out.push_str("],\n\"models\": [");
+        for (i, m) in self.models.iter().enumerate() {
+            let sep = if i + 1 == self.models.len() { "" } else { "," };
+            out.push_str(&format!(
+                "\n  {{\"model\": \"{}\", \"requests\": {}, \"completed\": {}, \"missed\": {}, \
+                 \"ingress_ms\": {}, \"queue_ms\": {}, \"service_ms\": {}, \
+                 \"top_component\": \"{}\"}}{}",
+                super::registry::escape(&m.model),
+                m.requests,
+                m.completed,
+                m.missed,
+                ms(m.ingress_ms),
+                ms(m.queue_ms),
+                ms(m.service_ms),
+                super::registry::escape(&m.top_component),
+                sep
+            ));
+        }
+        out.push_str("],\n\"layers\": [");
+        for (i, l) in self.layers.iter().enumerate() {
+            let sep = if i + 1 == self.layers.len() { "" } else { "," };
+            out.push_str(&format!(
+                "\n  {{\"model\": \"{}\", \"layer\": \"{}\", \"compute_ms\": {}, \
+                 \"comm_ms\": {}, \"exposed_ms\": {}}}{}",
+                super::registry::escape(&l.model),
+                super::registry::escape(&l.layer),
+                ms(l.compute_ms),
+                ms(l.comm_ms),
+                ms(l.exposed_ms),
+                sep
+            ));
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// Human-readable blame table, the `--explain` stdout report.
+    pub fn to_text(&self) -> String {
+        let mut out = String::with_capacity(2048);
+        out.push_str(&format!(
+            "critical-path blame: {} requests, {} completed, {} deadline misses, \
+             horizon {:.3} ms\n",
+            self.requests, self.completed, self.missed, self.horizon_ms
+        ));
+        out.push_str(&format!(
+            "  totals (ms): wait {:.3} | serialization {:.3} | propagation {:.3} | \
+             queue {:.3} | service {:.3}\n",
+            self.wait_ms, self.serialization_ms, self.propagation_ms, self.queue_ms,
+            self.service_ms
+        ));
+        out.push_str("  top links by critical-path ms:\n");
+        out.push_str("    link       wait_ms      ser_ms  critical_ms  blocked  misses\n");
+        for l in self.links.iter().take(8) {
+            out.push_str(&format!(
+                "    {:<8} {:>9.3} {:>11.3} {:>12.3} {:>8} {:>7}\n",
+                l.label(),
+                l.wait_ms,
+                l.serialization_ms,
+                l.critical_ms(),
+                l.blocked_requests,
+                l.miss_count
+            ));
+        }
+        out.push_str("  chiplets by queue+service ms:\n");
+        out.push_str("    chiplet   queue_ms  service_ms  requests  misses\n");
+        for c in self.chiplets.iter().take(8) {
+            out.push_str(&format!(
+                "    {:<7} {:>10.3} {:>11.3} {:>9} {:>7}\n",
+                c.chiplet, c.queue_ms, c.service_ms, c.requests, c.miss_count
+            ));
+        }
+        out.push_str("  models:\n");
+        for m in &self.models {
+            out.push_str(&format!(
+                "    {:<12} {:>4}/{:<4} done, {} missed; ingress {:.3} ms, queue {:.3} ms, \
+                 service {:.3} ms; top: {}\n",
+                m.model,
+                m.completed,
+                m.requests,
+                m.missed,
+                m.ingress_ms,
+                m.queue_ms,
+                m.service_ms,
+                m.top_component
+            ));
+        }
+        if !self.layers.is_empty() {
+            out.push_str("  layers by exposed comm ms (per frame):\n");
+            for l in self.layers.iter().take(5) {
+                out.push_str(&format!(
+                    "    {:<12} {:<16} compute {:.6} | comm {:.6} | exposed {:.6}\n",
+                    l.model, l.layer, l.compute_ms, l.comm_ms, l.exposed_ms
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::span::mean_breakdown_ms;
+
+    fn span(model: usize, c: usize, arrival: f64, ready: f64, start: f64, done: f64) -> RequestSpan {
+        let mut s = RequestSpan::admitted(model, c, arrival, ready);
+        s.service_start = start;
+        s.complete = done;
+        s
+    }
+
+    /// Two completed requests + one drop with hand-built traces.
+    fn fixture() -> (Vec<RequestSpan>, Vec<IngressTrace>) {
+        let spans = vec![
+            // req 0: waits 2 ms on (0,1); ready = 0 + .002 + .001 + .003.
+            span(0, 1, 0.0, 0.006, 0.010, 0.020),
+            RequestSpan::rejected(0, 0.001, SpanOutcome::Dropped),
+            // req 2: no waits, pure serialization + propagation.
+            span(1, 2, 0.002, 0.006, 0.006, 0.011),
+        ];
+        let traces = vec![
+            IngressTrace {
+                waits: vec![((0, 1), 0.002)],
+                ser_s: 0.003,
+                prop_s: 0.001,
+            },
+            IngressTrace::default(),
+            IngressTrace {
+                waits: vec![((0, 2), 0.0)],
+                ser_s: 0.003,
+                prop_s: 0.001,
+            },
+        ];
+        (spans, traces)
+    }
+
+    #[test]
+    fn build_aggregates_components_and_ranks_links() {
+        let (spans, traces) = fixture();
+        let names = vec!["a".to_string(), "b".to_string()];
+        let r = BlameReport::build(&spans, &traces, &names, &[f64::INFINITY; 2], &[]);
+        assert_eq!(r.requests, 3);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.missed, 0);
+        assert!((r.wait_ms - 2.0).abs() < 1e-9);
+        assert!((r.serialization_ms - 6.0).abs() < 1e-9);
+        assert!((r.propagation_ms - 2.0).abs() < 1e-9);
+        // Link (0,1): 2 ms wait + 3 ms ser beats (0,2): 3 ms ser.
+        assert_eq!(r.links.len(), 2);
+        assert_eq!(r.links[0].link, (0, 1));
+        assert!((r.links[0].critical_ms() - 5.0).abs() < 1e-9);
+        assert_eq!(r.links[0].blocked_requests, 1);
+        assert_eq!(r.links[1].blocked_requests, 0);
+        assert_eq!(r.top_link(), "0-1");
+        // Chiplet roll-up: req 0 queued 4 ms on chiplet 1.
+        let c1 = r.chiplets.iter().find(|c| c.chiplet == 1).unwrap();
+        assert!((c1.queue_ms - 4.0).abs() < 1e-9);
+        assert_eq!(r.models[0].requests, 2);
+        assert_eq!(r.models[0].completed, 1);
+        assert_eq!(r.models[1].top_component, "service");
+    }
+
+    #[test]
+    fn component_sums_reconcile_with_mean_breakdown() {
+        let (spans, traces) = fixture();
+        let (ing, que, ser) = mean_breakdown_ms(&spans, None);
+        let names = vec!["a".to_string(), "b".to_string()];
+        let r = BlameReport::build(&spans, &traces, &names, &[f64::INFINITY; 2], &[]);
+        let n = r.completed as f64;
+        let ingress_total = r.wait_ms + r.serialization_ms + r.propagation_ms;
+        assert!((ingress_total / n - ing).abs() < 1e-9);
+        assert!((r.queue_ms / n - que).abs() < 1e-9);
+        assert!((r.service_ms / n - ser).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_misses_attribute_to_dominant_component() {
+        let (spans, traces) = fixture();
+        // Req 0 (latency 20 ms) misses a 15 ms deadline; its dominant
+        // component is the 4 ms queue wait on chiplet 1. Req 2 (9 ms) hits.
+        let names = vec!["a".to_string(), "b".to_string()];
+        let r = BlameReport::build(&spans, &traces, &names, &[0.015, 0.015], &[]);
+        assert_eq!(r.missed, 1);
+        assert_eq!(r.models[0].missed, 1);
+        assert_eq!(r.models[1].missed, 0);
+        let c1 = r.chiplets.iter().find(|c| c.chiplet == 1).unwrap();
+        assert_eq!(c1.miss_count, 1);
+        assert_eq!(r.links.iter().map(|l| l.miss_count).sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn json_is_byte_deterministic_and_schema_tagged() {
+        let (spans, traces) = fixture();
+        let names = vec!["a".to_string(), "b".to_string()];
+        let layers = vec![LayerBlame {
+            model: "a".to_string(),
+            layer: "fc1".to_string(),
+            compute_ms: 1.0,
+            comm_ms: 2.0,
+            exposed_ms: 1.0,
+        }];
+        let build = || BlameReport::build(&spans, &traces, &names, &[f64::INFINITY; 2], &layers);
+        let a = build().to_json();
+        let b = build().to_json();
+        assert_eq!(a, b);
+        assert!(a.starts_with("{\n\"schema\": \"imcnoc-explain-v1\","));
+        assert!(a.contains("\"links\": ["));
+        assert!(a.contains("\"layer\": \"fc1\""));
+        assert!(a.ends_with("}\n"));
+        let text = build().to_text();
+        assert!(text.contains("critical-path blame"));
+        assert!(text.contains("0-1"));
+    }
+
+    #[test]
+    fn empty_run_produces_empty_but_valid_report() {
+        let r = BlameReport::build(&[], &[], &[], &[], &[]);
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.top_link(), "-");
+        assert!(r.to_json().contains("\"requests\": 0"));
+        // A span that never left the gateway blames no link.
+        let spans = vec![span(0, 0, 0.0, 0.0, 0.001, 0.002)];
+        let traces = vec![IngressTrace::default()];
+        let names = vec!["a".to_string()];
+        let r = BlameReport::build(&spans, &traces, &names, &[f64::INFINITY], &[]);
+        assert!(r.links.is_empty());
+        assert_eq!(r.top_link(), "-");
+    }
+}

@@ -1,7 +1,7 @@
 //! Zero-cost-when-disabled instrumentation for the flit simulators and the
 //! serving schedulers (DESIGN.md §5).
 //!
-//! Five pillars, no external dependencies (consistent with the offline
+//! Seven pillars, no external dependencies (consistent with the offline
 //! vendored-shim policy):
 //!
 //! * [`registry`] — named counters and log2-bucket histograms
@@ -31,15 +31,27 @@
 //!   heatmaps (text grid + JSON, `repro chiplet --heatmap` and
 //!   `repro serve --heatmap`) and a Chrome trace-event JSON writer
 //!   ([`ChromeTrace`], loadable in Perfetto / `chrome://tracing`,
-//!   `repro serve --trace-out <path>`).
+//!   `repro serve --trace-out <path>`) with flow events linking each
+//!   request's lifecycle slices.
+//! * [`attribution`] — causal critical-path attribution: per-request
+//!   hop-by-hop [`IngressTrace`]s recorded by the serving schedulers,
+//!   folded into a ranked [`BlameReport`] (top links / chiplets / layers
+//!   by critical-path ms, deadline-miss attribution) behind
+//!   `repro serve … --explain[-out]`.
+//! * [`profile`] — simulator self-profiling: process-wide memo-cache
+//!   hit/miss/eviction counters, engine run/cycle totals and wall-clock
+//!   phase timers, dumped by `repro … --profile`.
 
+pub mod attribution;
 pub mod heatmap;
+pub mod profile;
 pub mod registry;
 pub mod sketch;
 pub mod span;
 pub mod timeseries;
 pub mod trace;
 
+pub use attribution::{BlameReport, IngressTrace, LayerBlame};
 pub use heatmap::{heatmap_json, heatmap_text};
 pub use registry::{Histogram, Registry, SimTelemetry};
 pub use sketch::QuantileSketch;

@@ -1,0 +1,231 @@
+//! Simulator self-profiling: process-wide memo-cache hit rates, engine
+//! throughput counters and wall-clock phase timers, dumped by
+//! `repro … --profile`.
+//!
+//! The counters exist so bench regressions are diagnosable: a slow sweep
+//! with a near-zero drain-cache hit rate points at cache-key churn; a high
+//! engine cycle count with few runs points at saturation budgets. All
+//! counters are lock-free relaxed atomics (the hot paths pay one
+//! `fetch_add` per *run*, never per cycle); phase timers take a mutex only
+//! on scope exit.
+//!
+//! Wall-clock numbers never feed a deterministic export (Chrome traces,
+//! explain reports, experiment tables) — they surface only through the
+//! human-facing `--profile` dump, so timer jitter cannot break golden
+//! tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::registry::Registry;
+
+static DRAIN_HITS: AtomicU64 = AtomicU64::new(0);
+static DRAIN_MISSES: AtomicU64 = AtomicU64::new(0);
+static DRAIN_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+static SAT_HITS: AtomicU64 = AtomicU64::new(0);
+static SAT_MISSES: AtomicU64 = AtomicU64::new(0);
+static SAT_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+static ENGINE_RUNS: AtomicU64 = AtomicU64::new(0);
+static ENGINE_CYCLES: AtomicU64 = AtomicU64::new(0);
+
+/// Accumulated wall-clock phases: name → (calls, total seconds).
+fn phases() -> &'static Mutex<Vec<(String, u64, f64)>> {
+    static PHASES: OnceLock<Mutex<Vec<(String, u64, f64)>>> = OnceLock::new();
+    PHASES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Record one drain-cache lookup ([`crate::sim::memo::drain_makespan`]).
+pub(crate) fn note_drain(hit: bool) {
+    let c = if hit { &DRAIN_HITS } else { &DRAIN_MISSES };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one drain-cache eviction (cache at capacity).
+pub(crate) fn note_drain_eviction() {
+    DRAIN_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one saturation-cache lookup ([`crate::sim::memo`]).
+pub(crate) fn note_sat(hit: bool) {
+    let c = if hit { &SAT_HITS } else { &SAT_MISSES };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one saturation-cache eviction.
+pub(crate) fn note_sat_eviction() {
+    SAT_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one completed engine run and the cycles it simulated
+/// (called once per [`crate::sim::engine::run_engine`]).
+pub(crate) fn note_engine_run(cycles: u64) {
+    ENGINE_RUNS.fetch_add(1, Ordering::Relaxed);
+    ENGINE_CYCLES.fetch_add(cycles, Ordering::Relaxed);
+}
+
+/// RAII wall-clock timer for one named phase; the elapsed time is folded
+/// into the process-wide profile on drop. Create via [`phase`].
+pub struct PhaseTimer {
+    name: String,
+    start: Instant,
+}
+
+impl Drop for PhaseTimer {
+    fn drop(&mut self) {
+        let dt = self.start.elapsed().as_secs_f64();
+        let mut ph = phases().lock().expect("profile phase lock");
+        if let Some(p) = ph.iter_mut().find(|(n, _, _)| n == &self.name) {
+            p.1 += 1;
+            p.2 += dt;
+        } else {
+            ph.push((self.name.clone(), 1, dt));
+        }
+    }
+}
+
+/// Start timing a named phase; hold the returned guard for the phase's
+/// extent (e.g. `let _t = profile::phase("serve.run");`).
+pub fn phase(name: &str) -> PhaseTimer {
+    PhaseTimer {
+        name: name.to_string(),
+        start: Instant::now(),
+    }
+}
+
+/// Snapshot every profile metric into a [`Registry`]
+/// (`profile.memo.*`, `profile.engine.*`, `profile.phase.*`).
+pub fn snapshot() -> Registry {
+    let mut reg = Registry::default();
+    reg.add("profile.memo.drain.hits", DRAIN_HITS.load(Ordering::Relaxed));
+    reg.add("profile.memo.drain.misses", DRAIN_MISSES.load(Ordering::Relaxed));
+    reg.add(
+        "profile.memo.drain.evictions",
+        DRAIN_EVICTIONS.load(Ordering::Relaxed),
+    );
+    reg.add("profile.memo.sat.hits", SAT_HITS.load(Ordering::Relaxed));
+    reg.add("profile.memo.sat.misses", SAT_MISSES.load(Ordering::Relaxed));
+    reg.add(
+        "profile.memo.sat.evictions",
+        SAT_EVICTIONS.load(Ordering::Relaxed),
+    );
+    reg.add("profile.engine.runs", ENGINE_RUNS.load(Ordering::Relaxed));
+    reg.add("profile.engine.cycles", ENGINE_CYCLES.load(Ordering::Relaxed));
+    let ph = phases().lock().expect("profile phase lock");
+    for (name, calls, secs) in ph.iter() {
+        reg.add(&format!("profile.phase.{name}.calls"), *calls);
+        reg.add(
+            &format!("profile.phase.{name}.us"),
+            (secs * 1e6).round() as u64,
+        );
+    }
+    reg
+}
+
+/// Human-readable profile dump, the `--profile` stdout report.
+pub fn text() -> String {
+    let rate = |h: u64, m: u64| {
+        let total = h + m;
+        if total == 0 {
+            0.0
+        } else {
+            100.0 * h as f64 / total as f64
+        }
+    };
+    let dh = DRAIN_HITS.load(Ordering::Relaxed);
+    let dm = DRAIN_MISSES.load(Ordering::Relaxed);
+    let sh = SAT_HITS.load(Ordering::Relaxed);
+    let sm = SAT_MISSES.load(Ordering::Relaxed);
+    let mut out = String::with_capacity(512);
+    out.push_str("simulator profile\n");
+    out.push_str(&format!(
+        "  memo drain: {dh} hits / {dm} misses ({:.1}% hit), {} evictions\n",
+        rate(dh, dm),
+        DRAIN_EVICTIONS.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "  memo sat:   {sh} hits / {sm} misses ({:.1}% hit), {} evictions\n",
+        rate(sh, sm),
+        SAT_EVICTIONS.load(Ordering::Relaxed)
+    ));
+    out.push_str(&format!(
+        "  engine:     {} runs, {} cycles simulated\n",
+        ENGINE_RUNS.load(Ordering::Relaxed),
+        ENGINE_CYCLES.load(Ordering::Relaxed)
+    ));
+    let ph = phases().lock().expect("profile phase lock");
+    if !ph.is_empty() {
+        out.push_str("  phases:\n");
+        let mut sorted: Vec<_> = ph.iter().collect();
+        sorted.sort_by(|a, b| a.0.cmp(&b.0));
+        for (name, calls, secs) in sorted {
+            out.push_str(&format!(
+                "    {name:<24} {calls:>6} calls  {:>10.3} ms total\n",
+                secs * 1e3
+            ));
+        }
+    }
+    out
+}
+
+/// Zero every profile metric (test isolation; the counters are
+/// process-wide, so concurrent tests may re-bump them immediately).
+pub fn reset() {
+    for c in [
+        &DRAIN_HITS,
+        &DRAIN_MISSES,
+        &DRAIN_EVICTIONS,
+        &SAT_HITS,
+        &SAT_MISSES,
+        &SAT_EVICTIONS,
+        &ENGINE_RUNS,
+        &ENGINE_CYCLES,
+    ] {
+        c.store(0, Ordering::Relaxed);
+    }
+    phases().lock().expect("profile phase lock").clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        // Deltas only: other tests share the process-wide counters.
+        let before = snapshot();
+        let b = |n: &str| before.counter(n).unwrap_or(0);
+        note_drain(true);
+        note_drain(false);
+        note_drain_eviction();
+        note_sat(true);
+        note_sat(false);
+        note_sat_eviction();
+        note_engine_run(123);
+        let after = snapshot();
+        let a = |n: &str| after.counter(n).unwrap_or(0);
+        assert!(a("profile.memo.drain.hits") >= b("profile.memo.drain.hits") + 1);
+        assert!(a("profile.memo.drain.misses") >= b("profile.memo.drain.misses") + 1);
+        assert!(a("profile.memo.drain.evictions") >= b("profile.memo.drain.evictions") + 1);
+        assert!(a("profile.memo.sat.hits") >= b("profile.memo.sat.hits") + 1);
+        assert!(a("profile.memo.sat.evictions") >= b("profile.memo.sat.evictions") + 1);
+        assert!(a("profile.engine.runs") >= b("profile.engine.runs") + 1);
+        assert!(a("profile.engine.cycles") >= b("profile.engine.cycles") + 123);
+        let dump = text();
+        assert!(dump.contains("memo drain:"));
+        assert!(dump.contains("engine:"));
+    }
+
+    #[test]
+    fn phase_timer_records_on_drop() {
+        {
+            let _t = phase("test.unique.phase");
+            std::hint::black_box(0u64);
+        }
+        let reg = snapshot();
+        assert!(reg.counter("profile.phase.test.unique.phase.calls").unwrap_or(0) >= 1);
+        assert!(reg.counter("profile.phase.test.unique.phase.us").is_some());
+        let dump = text();
+        assert!(dump.contains("test.unique.phase"));
+    }
+}

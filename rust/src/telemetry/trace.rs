@@ -1,7 +1,9 @@
 //! Chrome trace-event JSON export (the `chrome://tracing` / Perfetto
 //! format): serving spans become per-chiplet tracks of `ingress` / `queue`
-//! / `service` slices, rejected requests become instants, and per-chiplet
-//! queue depths become counter series. All floats are emitted with fixed
+//! / `service` slices, rejected requests become instants, per-request flow
+//! arrows ("s"/"f" pairs keyed by request index) connect admission to
+//! service start, and per-chiplet queue depths become counter series. All
+//! floats are emitted with fixed
 //! precision so the same run always serializes to the identical byte
 //! string (the determinism contract extends PR 4's replay guarantee to the
 //! telemetry layer).
@@ -120,6 +122,31 @@ impl ChromeTrace {
         ));
     }
 
+    /// A flow-start ("s") event: the tail of a causal arrow `id`, anchored
+    /// inside the slice that encloses `ts_us` on `tid`.
+    pub fn flow_start(&mut self, name: &str, cat: &str, id: u64, tid: u64, ts_us: f64) {
+        self.events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"s\",\"id\":{id},\"ts\":{},\
+             \"pid\":1,\"tid\":{tid}}}",
+            escape(name),
+            escape(cat),
+            us(ts_us),
+        ));
+    }
+
+    /// A flow-finish ("f") event: the head of causal arrow `id`.
+    /// `bp: "e"` binds it to the enclosing slice (Perfetto's recommended
+    /// binding point for next-slice arrows).
+    pub fn flow_finish(&mut self, name: &str, cat: &str, id: u64, tid: u64, ts_us: f64) {
+        self.events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"f\",\"bp\":\"e\",\"id\":{id},\"ts\":{},\
+             \"pid\":1,\"tid\":{tid}}}",
+            escape(name),
+            escape(cat),
+            us(ts_us),
+        ));
+    }
+
     /// A metadata ("M") event: `kind` is `process_name` or `thread_name`.
     pub fn name_track(&mut self, kind: &str, tid: u64, name: &str) {
         self.events.push(format!(
@@ -210,6 +237,13 @@ pub fn spans_to_trace(spans: &[RequestSpan], model_names: &[&str]) -> ChromeTrac
                     s.service_s() * 1e6,
                     &args,
                 );
+                // Causal flow arrow: admission ("s", anchored in the
+                // ingress slice) → service start ("f", anchored in the
+                // service slice), so Perfetto draws each request's path
+                // through the pipeline. `id` is the request index —
+                // unique per arrow within one export.
+                t.flow_start("request", "serve", req as u64, tid, s.arrival * 1e6);
+                t.flow_finish("request", "serve", req as u64, tid, s.service_start * 1e6);
             }
             SpanOutcome::Dropped => t.instant("dropped", "admission", 0, s.arrival * 1e6, &args),
             SpanOutcome::Shed => t.instant("shed", "admission", 0, s.arrival * 1e6, &args),
@@ -272,6 +306,27 @@ mod tests {
         assert!(json.contains("\"model\":\"LeNet-5\""));
         // Counter events track the queue depth.
         assert!(json.contains("queue c0"), "{json}");
+    }
+
+    #[test]
+    fn flow_events_pair_up_per_completed_request() {
+        let spans = sample_spans();
+        let json = spans_to_trace(&spans, &["MLP", "LeNet-5"]).to_json();
+        // Two completed requests → two "s"/"f" pairs; rejected requests
+        // get none.
+        assert_eq!(json.matches("\"ph\":\"s\"").count(), 2, "{json}");
+        assert_eq!(json.matches("\"ph\":\"f\"").count(), 2, "{json}");
+        assert_eq!(json.matches("\"bp\":\"e\"").count(), 2, "{json}");
+        // Ids are the request indices (0 and 1), present on both ends.
+        assert_eq!(json.matches("\"id\":0").count(), 2, "{json}");
+        assert_eq!(json.matches("\"id\":1").count(), 2, "{json}");
+        // Flow timestamps reuse the slice formatter, so the "s" anchor is
+        // byte-equal to the ingress slice's ts.
+        assert!(json.contains("\"ph\":\"s\",\"id\":0,\"ts\":0.000"), "{json}");
+        assert!(
+            json.contains("\"ph\":\"f\",\"bp\":\"e\",\"id\":0,\"ts\":200000.000"),
+            "{json}"
+        );
     }
 
     #[test]

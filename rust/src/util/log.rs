@@ -1,13 +1,14 @@
 //! Tiny leveled stderr logger — no external crates in the offline build.
 //!
 //! Diagnostics that previously went through ad-hoc `eprintln!` calls now
-//! route through the `log_warn!`/`log_info!`/`log_debug!` macros
-//! (exported at the crate root, as `#[macro_export]` requires, and
+//! route through the `log_warn!`/`log_info!`/`log_debug!`/`log_trace!`
+//! macros (exported at the crate root, as `#[macro_export]` requires, and
 //! re-exported here as `log::warn!` etc.), filtered by a global
 //! level. The level comes from the `REPRO_LOG` environment variable
-//! (`warn`, `info` or `debug`; read once, lazily) and can be overridden
-//! programmatically via [`set_level`] — the CLI maps `--verbose` to
-//! [`Level::Debug`]. Messages print to stderr as `[   1.234s warn] …` —
+//! (`warn`, `info`, `debug` or `trace`; read once, lazily) and composes
+//! with the CLI: `--verbose` raises the level to at least
+//! [`Level::Debug`] via [`set_level`] but never *lowers* a more verbose
+//! `REPRO_LOG=trace`. Messages print to stderr as `[   1.234s warn] …` —
 //! seconds elapsed since the first log call plus the level — so
 //! long-running serving sweeps can be read as a timeline while machine
 //! output on stdout (tables, JSON) stays clean.
@@ -16,7 +17,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-/// Log severity, ordered: `Warn < Info < Debug`.
+/// Log severity, ordered: `Warn < Info < Debug < Trace`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
     /// Something is off but the run continues (fallbacks, clamps).
@@ -25,6 +26,9 @@ pub enum Level {
     Info = 2,
     /// Per-step detail for debugging runs.
     Debug = 3,
+    /// Per-hop firehose (e.g. the attribution hook's ingress-wait lines);
+    /// only via `REPRO_LOG=trace` — `--verbose` stops at Debug.
+    Trace = 4,
 }
 
 impl Level {
@@ -33,6 +37,7 @@ impl Level {
             Level::Warn => "warn",
             Level::Info => "info",
             Level::Debug => "debug",
+            Level::Trace => "trace",
         }
     }
 
@@ -40,7 +45,8 @@ impl Level {
         match s.to_ascii_lowercase().as_str() {
             "warn" | "warning" | "error" => Some(Level::Warn),
             "info" => Some(Level::Info),
-            "debug" | "trace" => Some(Level::Debug),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
             _ => None,
         }
     }
@@ -62,6 +68,7 @@ pub fn level() -> Level {
         1 => Level::Warn,
         2 => Level::Info,
         3 => Level::Debug,
+        4 => Level::Trace,
         _ => {
             let l = env_level();
             LEVEL.store(l as u8, Ordering::Relaxed);
@@ -123,7 +130,15 @@ macro_rules! log_debug {
     };
 }
 
-pub use crate::{log_debug as debug, log_info as info, log_warn as warn};
+/// Log at [`Level::Trace`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Trace, format_args!($($arg)*))
+    };
+}
+
+pub use crate::{log_debug as debug, log_info as info, log_trace as trace, log_warn as warn};
 
 #[cfg(test)]
 mod tests {
@@ -133,10 +148,25 @@ mod tests {
     fn levels_order_and_parse() {
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
         assert_eq!(Level::parse("WARN"), Some(Level::Warn));
         assert_eq!(Level::parse("debug"), Some(Level::Debug));
-        assert_eq!(Level::parse("trace"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Trace));
         assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn verbose_composition_never_downgrades() {
+        // The CLI composes `--verbose` as max(current, Debug): a more
+        // verbose REPRO_LOG=trace must survive the flag.
+        set_level(Level::Trace);
+        set_level(level().max(Level::Debug));
+        assert_eq!(level(), Level::Trace);
+        // And a quieter default is raised to Debug.
+        set_level(Level::Info);
+        set_level(level().max(Level::Debug));
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Info);
     }
 
     #[test]

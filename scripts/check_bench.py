@@ -43,10 +43,17 @@ def load_entries(path, role):
     except json.JSONDecodeError as e:
         print(f"ERROR: {role} file {path} is not valid JSON: {e}")
         sys.exit(2)
+    # Two accepted shapes: the legacy bare list, and the wrapped object
+    # {"commit": ..., "date": ..., "entries": [...]} the harness writes.
+    if isinstance(data, dict) and isinstance(data.get("entries"), list):
+        data = data["entries"]
     if not isinstance(data, list) or not all(
         isinstance(e, dict) and isinstance(e.get("name"), str) for e in data
     ):
-        print(f"ERROR: {role} file {path} must be a JSON list of objects with 'name'")
+        print(
+            f"ERROR: {role} file {path} must be a JSON list of objects with"
+            " 'name' (bare or under an 'entries' key)"
+        )
         sys.exit(2)
     return {e["name"]: e for e in data}
 

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Critical-path blame-report gate for CI.
+
+Usage: check_explain.py EXPLAIN.json
+
+Validates a `repro serve … --explain-out` export (schema
+`imcnoc-explain-v1`):
+
+* well-formed JSON with the expected top-level keys and schema tag;
+* request accounting is sane (completed <= requests, missed <= completed);
+* every critical-path component total is finite and non-negative;
+* each ranked link row carries non-negative components whose per-link
+  serialization time fits inside the run horizon (a link cannot serialize
+  critical-path payloads for longer than the run existed);
+* link rows are sorted by critical-path ms (the "ranked" contract);
+* per-model rows reconcile: sum of model requests == total requests, and
+  each row's top_component names a known lifecycle phase;
+* layer rows carry non-negative compute/comm and exposed <= comm.
+"""
+
+import json
+import math
+import sys
+
+COMPONENTS = ("wait", "serialization", "propagation", "queue", "service")
+TOP_COMPONENTS = {"wait", "serialization", "propagation", "queue", "service", "-"}
+
+
+def fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def non_negative(obj, key, where):
+    v = obj.get(key)
+    if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+        fail(f"{where}.{key} must be a finite non-negative number, got {v!r}")
+    return v
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if not isinstance(report, dict):
+        fail("top level must be an object")
+    if report.get("schema") != "imcnoc-explain-v1":
+        fail(f"unexpected schema tag {report.get('schema')!r}")
+    for key in ("links", "chiplets", "models", "layers"):
+        if not isinstance(report.get(key), list):
+            fail(f"missing or non-list {key!r} section")
+
+    horizon = non_negative(report, "horizon_ms", "report")
+    requests = report.get("requests")
+    completed = report.get("completed")
+    missed = report.get("missed")
+    for name, v in (("requests", requests), ("completed", completed), ("missed", missed)):
+        if not isinstance(v, int) or v < 0:
+            fail(f"report.{name} must be a non-negative integer, got {v!r}")
+    if completed > requests:
+        fail(f"completed {completed} > requests {requests}")
+    if missed > completed:
+        fail(f"missed {missed} > completed {completed}")
+
+    comps = report.get("components_ms")
+    if not isinstance(comps, dict):
+        fail("components_ms object missing")
+    for c in COMPONENTS:
+        non_negative(comps, c, "components_ms")
+
+    prev_critical = None
+    for i, link in enumerate(report["links"]):
+        where = f"links[{i}]"
+        if not isinstance(link.get("link"), str) or "-" not in link["link"]:
+            fail(f"{where}.link must be a 'from-to' label, got {link.get('link')!r}")
+        non_negative(link, "wait_ms", where)
+        ser = non_negative(link, "serialization_ms", where)
+        critical = non_negative(link, "critical_ms", where)
+        for key in ("blocked_requests", "miss_count"):
+            v = link.get(key)
+            if not isinstance(v, int) or v < 0:
+                fail(f"{where}.{key} must be a non-negative integer, got {v!r}")
+        # A single link serializes critical-path payloads sequentially, so
+        # its blamed serialization time cannot exceed the run horizon.
+        if ser > horizon * (1 + 1e-9) + 1e-9:
+            fail(f"{where} serialization {ser} ms exceeds horizon {horizon} ms")
+        if prev_critical is not None and critical > prev_critical * (1 + 1e-9) + 1e-9:
+            fail(f"{where} breaks the critical_ms ranking order")
+        prev_critical = critical
+
+    model_requests = 0
+    for i, m in enumerate(report["models"]):
+        where = f"models[{i}]"
+        if not isinstance(m.get("model"), str) or not m["model"]:
+            fail(f"{where}.model must be a non-empty string")
+        for key in ("requests", "completed", "missed"):
+            v = m.get(key)
+            if not isinstance(v, int) or v < 0:
+                fail(f"{where}.{key} must be a non-negative integer, got {v!r}")
+        for key in ("ingress_ms", "queue_ms", "service_ms"):
+            non_negative(m, key, where)
+        if m.get("top_component") not in TOP_COMPONENTS:
+            fail(f"{where}.top_component {m.get('top_component')!r} unknown")
+        model_requests += m["requests"]
+    if report["models"] and model_requests != requests:
+        fail(f"per-model requests sum {model_requests} != total {requests}")
+
+    for i, layer in enumerate(report["layers"]):
+        where = f"layers[{i}]"
+        non_negative(layer, "compute_ms", where)
+        comm = non_negative(layer, "comm_ms", where)
+        exposed = non_negative(layer, "exposed_ms", where)
+        if exposed > comm * (1 + 1e-9) + 1e-9:
+            fail(f"{where} exposed {exposed} ms exceeds comm {comm} ms")
+
+    print(
+        f"OK: schema imcnoc-explain-v1; {requests} requests"
+        f" ({completed} completed, {missed} missed);"
+        f" {len(report['links'])} ranked link(s) within horizon"
+        f" {horizon:.3f} ms; {len(report['models'])} model row(s)"
+        f" reconciled; {len(report['layers'])} layer row(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

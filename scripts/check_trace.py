@@ -15,12 +15,17 @@ their own contract: per counter name, timestamps are strictly increasing
 and every args value is a non-negative number; the "serving totals" track
 must be present with cumulative (non-decreasing) series whose final
 values equal the otherData completed/dropped/shed totals.
+
+Flow events (ph "s"/"f", the per-request causal arrows) must pair up —
+every flow id carries exactly one start and one finish, no dangling ends —
+and each end must be anchored inside an enclosing complete slice on the
+same pid/tid (Perfetto silently drops unanchored flow ends).
 """
 
 import json
 import sys
 
-LEGAL_PHASES = {"X", "i", "C", "M"}
+LEGAL_PHASES = {"X", "i", "C", "M", "s", "f"}
 
 
 def fail(msg):
@@ -50,6 +55,8 @@ def main() -> int:
     slices = []
     instants = {"dropped": 0, "shed": 0}
     counters = {}  # name -> list of (ts, args)
+    flow_starts = {}  # id -> list of events
+    flow_finishes = {}  # id -> list of events
     for i, e in enumerate(events):
         if not isinstance(e, dict):
             fail(f"event {i} is not an object")
@@ -75,9 +82,42 @@ def main() -> int:
                 if not isinstance(v, (int, float)) or v < 0:
                     fail(f"counter {e['name']} arg {k} not a count: {v!r}")
             counters.setdefault(e["name"], []).append((e["ts"], args))
+        if ph in ("s", "f"):
+            fid = e.get("id")
+            if not isinstance(fid, int) or fid < 0:
+                fail(f"flow event {i} ({e['name']}) has bad id {fid!r}")
+            side = flow_starts if ph == "s" else flow_finishes
+            side.setdefault(fid, []).append(e)
 
     if not slices:
         fail("no lifecycle slices (ph 'X') in the trace")
+
+    # Flow arrows: every id pairs one start with one finish, and each end
+    # is anchored inside an enclosing slice on the same pid/tid.
+    for fid, evs in flow_starts.items():
+        if len(evs) != 1:
+            fail(f"flow id {fid} has {len(evs)} starts (want 1)")
+        if fid not in flow_finishes:
+            fail(f"flow id {fid} has a start but no finish (dangling 's')")
+    for fid, evs in flow_finishes.items():
+        if len(evs) != 1:
+            fail(f"flow id {fid} has {len(evs)} finishes (want 1)")
+        if fid not in flow_starts:
+            fail(f"flow id {fid} has a finish but no start (dangling 'f')")
+    for fid in flow_starts:
+        for e in (flow_starts[fid][0], flow_finishes[fid][0]):
+            enclosed = any(
+                s.get("pid") == e.get("pid")
+                and s.get("tid") == e.get("tid")
+                and s["ts"] <= e["ts"] <= s["ts"] + s["dur"]
+                for s in slices
+            )
+            if not enclosed:
+                fail(
+                    f"flow id {fid} end (ph {e['ph']!r}) at ts {e['ts']}"
+                    f" is not inside any slice on pid/tid"
+                    f" {e.get('pid')}/{e.get('tid')}"
+                )
 
     for name, samples in counters.items():
         prev_ts = None
@@ -113,6 +153,11 @@ def main() -> int:
     services = sum(1 for e in slices if e["name"] == "service")
     if services != totals["completed"]:
         fail(f"{services} service slices != {totals['completed']} completed")
+    if flow_starts and len(flow_starts) != totals["completed"]:
+        fail(
+            f"{len(flow_starts)} flow arrows != {totals['completed']}"
+            " completed requests"
+        )
     for key in ("dropped", "shed"):
         if instants[key] != totals[key]:
             fail(f"{instants[key]} {key} instants != {totals[key]} reported")
@@ -129,7 +174,8 @@ def main() -> int:
         f" {services} service spans == completed;"
         f" {totals['completed']}+{totals['dropped']}+{totals['shed']}"
         f" == {totals['requests']} requests;"
-        f" {len(counters)} counter tracks reconciled"
+        f" {len(counters)} counter tracks reconciled;"
+        f" {len(flow_starts)} flow arrow(s) paired and anchored"
     )
     return 0
 
