@@ -1,7 +1,8 @@
 //! Flit-level NoP simulator benchmarks: steady-state uniform traffic at
 //! low and near-saturation load, a saturation-point search, and the full
-//! hierarchical co-simulation (`mode = sim`) against the analytical
-//! package leg it replaces. `BENCH_QUICK=1` runs the reduced CI workload;
+//! hierarchical co-simulation (`mode = sim`) and its sim-anchored
+//! surrogate (`mode = surrogate`) against the analytical package leg
+//! they replace. `BENCH_QUICK=1` runs the reduced CI workload;
 //! `BENCH_JSON=<path>` records results for the bench regression gate.
 
 #[path = "harness.rs"]
@@ -58,7 +59,10 @@ fn main() {
         observe(&sat);
     });
 
-    // Hierarchical co-simulation vs the analytical package leg.
+    // Hierarchical co-simulation and its surrogate vs the analytical
+    // package leg. The surrogate's first iteration pays the anchor fit;
+    // later iterations hit the process-wide curve cache, so its mean sits
+    // between analytical and sim — exactly the trade the mode buys.
     let arch = ArchConfig::default();
     let noc = NocConfig::default();
     let sim = SimConfig::default();
@@ -66,6 +70,7 @@ fn main() {
     for (label, mode) in [
         ("analytical", NopMode::Analytical),
         ("sim", NopMode::Sim),
+        ("surrogate", NopMode::Surrogate),
     ] {
         let cfg = NopConfig {
             chiplets: 8,

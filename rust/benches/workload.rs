@@ -9,7 +9,7 @@ mod harness;
 
 use harness::{observe, quick, Reporter};
 use imcnoc::config::{
-    Admission, ArchConfig, NocConfig, NopConfig, ServingConfig, SimConfig, WorkloadConfig,
+    Admission, ArchConfig, NocConfig, NopConfig, NopMode, ServingConfig, SimConfig, WorkloadConfig,
 };
 use imcnoc::coordinator::mix::{MixScheduler, MixServingModel};
 use imcnoc::nop::topology::NopTopology;
@@ -38,6 +38,26 @@ fn main() {
             &arch,
             &noc,
             &nop,
+            &sim,
+        )
+        .unwrap();
+        observe(&model.sat_link_util);
+    });
+
+    // Same build with surrogate ingress pricing: the first iteration pays
+    // the anchor fit, later ones hit the process-wide curve cache, so the
+    // mean tracks the near-analytical steady cost the mode is for.
+    let nop_sur = NopConfig {
+        mode: NopMode::Surrogate,
+        ..nop.clone()
+    };
+    r.bench("workload_model_build_sq+mlp_k8_mesh_surrogate", 0, 2, || {
+        let model = MixServingModel::build(
+            &mix,
+            PlacementPolicy::NopAware,
+            &arch,
+            &noc,
+            &nop_sur,
             &sim,
         )
         .unwrap();

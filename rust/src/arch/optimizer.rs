@@ -124,7 +124,8 @@ pub struct ScaleoutRecommendation {
     /// calibration the EDAP is the saturation-derated ranking value.
     pub candidates: Vec<(usize, NopTopology, Topology, f64)>,
     /// True when the ranking folded in `nop::sim` measured saturation
-    /// rates (`[nop] mode = sim` on the advisor's base config).
+    /// rates (`[nop] mode = sim` or `= surrogate` on the advisor's base
+    /// config — both are backed by the same memoized saturation search).
     pub sim_calibrated: bool,
 }
 
@@ -170,10 +171,10 @@ pub const SCALEOUT_NOC_CHOICES: [Topology; 2] = [Topology::Tree, Topology::Mesh]
 /// search.
 ///
 /// Candidate evaluation always uses the fast analytical package model, but
-/// when `base_nop.mode` is `sim` the ranking folds in the *measured*
-/// saturation rate of each (NoP topology, k) from the flit-level package
-/// simulator: candidates whose per-frame NoP injection exceeds the
-/// measured rate have their latency derated before EDAP ranking
+/// when `base_nop.mode` is `sim` or `surrogate` the ranking folds in the
+/// *measured* saturation rate of each (NoP topology, k) from the
+/// flit-level package simulator: candidates whose per-frame NoP injection
+/// exceeds the measured rate have their latency derated before EDAP ranking
 /// ([`saturation_derated_latency_s`]), closing the ROADMAP gap where the
 /// advisor ranked purely analytically.
 pub fn recommend_scaleout(
@@ -183,7 +184,9 @@ pub fn recommend_scaleout(
     base_nop: &NopConfig,
 ) -> ScaleoutRecommendation {
     let sim = SimConfig::default();
-    let sim_calibrated = base_nop.mode == NopMode::Sim;
+    // Surrogate mode is sim-anchored — its saturation rates come from the
+    // same memoized search — so it calibrates the ranking like `sim`.
+    let sim_calibrated = base_nop.mode != NopMode::Analytical;
     let mut sat_cache: HashMap<(NopTopology, usize), Option<f64>> = HashMap::new();
     let mut best: Option<(f64, NopEvaluation)> = None;
     let mut candidates = Vec::new();

@@ -144,7 +144,19 @@ fn flag_takes_value(name: &str) -> bool {
             | "metrics-format"
             | "metrics-window-ms"
             | "explain-out"
+            | "surrogate-check-out"
     )
+}
+
+/// Resolve the package-leg pricing mode from the `--sim` / `--surrogate`
+/// flags (mutually exclusive; default analytical).
+fn nop_mode_from(args: &Args) -> Result<NopMode> {
+    match (args.has("sim"), args.has("surrogate")) {
+        (true, true) => bail!("--sim and --surrogate are mutually exclusive (pick one NoP mode)"),
+        (true, false) => Ok(NopMode::Sim),
+        (false, true) => Ok(NopMode::Surrogate),
+        (false, false) => Ok(NopMode::Analytical),
+    }
 }
 
 /// Parse a tile-level NoC topology, listing the valid names on failure.
@@ -165,6 +177,64 @@ fn parse_nop_topology(s: &str) -> Result<NopTopology> {
             NopTopology::valid_names()
         )
     })
+}
+
+/// Hand-rolled JSON dump for `repro chiplet --surrogate-check-out`: one
+/// record per (topology, k) point from [`crate::sim::surrogate::check`].
+/// The grid covers ring and mesh packages at k ∈ {4, 8} (`--fast`) plus
+/// k = 16 on the full tier; `scripts/check_surrogate.py` enforces the
+/// held-out error bound and the wall-clock ratio on this file.
+fn surrogate_check_json(fast: bool, seed: u64) -> Result<String> {
+    let ks: &[usize] = if fast { &[4, 8] } else { &[4, 8, 16] };
+    let mut configs = Vec::new();
+    for &k in ks {
+        for topo in [NopTopology::Ring, NopTopology::Mesh] {
+            let nop = NopConfig {
+                topology: topo,
+                chiplets: k,
+                mode: NopMode::Surrogate,
+                ..NopConfig::default()
+            };
+            let c = crate::sim::surrogate::check(topo, k, &nop, seed).ok_or_else(|| {
+                anyhow!(
+                    "surrogate check: {} k={k} has no measurable saturation",
+                    topo.name()
+                )
+            })?;
+            configs.push(c);
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{{\"seed\": {seed}, \"configs\": [\n"));
+    for (i, c) in configs.iter().enumerate() {
+        let holdout: Vec<String> = c
+            .holdout
+            .iter()
+            .map(|h| {
+                format!(
+                    "{{\"rate\": {}, \"sim\": {}, \"surrogate\": {}, \"rel_err\": {}}}",
+                    h.rate, h.sim, h.surrogate, h.rel_err
+                )
+            })
+            .collect();
+        out.push_str(&format!(
+            "  {{\"topology\": \"{}\", \"k\": {}, \"sat_rate\": {}, \
+             \"steady_anchors\": {}, \"drain_anchors\": {}, \"fallbacks\": {}, \
+             \"sim_ns\": {}, \"surrogate_ns\": {}, \"holdout\": [{}]}}{}\n",
+            c.topology.name(),
+            c.k,
+            c.sat_rate,
+            c.steady_anchors,
+            c.drain_anchors,
+            c.fallbacks,
+            c.sim_ns,
+            c.surrogate_ns,
+            holdout.join(", "),
+            if i + 1 == configs.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("]}\n");
+    Ok(out)
 }
 
 /// One-line winner summary shared by every `chiplet` view. The EDAP shown
@@ -198,6 +268,7 @@ fn options_from(args: &Args) -> Result<Options> {
             CommBackend::Analytical
         },
         fast: args.has("fast"),
+        nop_mode: nop_mode_from(args)?,
         seed: args.get_usize("seed", 0x1AC5_EED)? as u64,
     })
 }
@@ -351,13 +422,10 @@ pub fn run(argv: &[String]) -> Result<()> {
         }
         "chiplet" => {
             let base_noc = NocConfig::default();
-            let sim_mode = args.has("sim");
+            let nop_mode = nop_mode_from(&args)?;
+            let sim_mode = nop_mode != NopMode::Analytical;
             let base_nop = NopConfig {
-                mode: if sim_mode {
-                    NopMode::Sim
-                } else {
-                    NopMode::Analytical
-                },
+                mode: nop_mode,
                 ..NopConfig::default()
             };
             let arch = ArchConfig {
@@ -372,9 +440,18 @@ pub fn run(argv: &[String]) -> Result<()> {
             } else {
                 CommBackend::Analytical
             };
+            if let Some(path) = args.get("surrogate-check-out") {
+                // Sim-vs-surrogate comparison dump over a (topology, k)
+                // grid; `scripts/check_surrogate.py` gates the JSON in CI.
+                let seed = args.get_usize("seed", 0x1AC5_EED)? as u64;
+                let json = surrogate_check_json(args.has("fast"), seed)?;
+                std::fs::write(path, &json).map_err(|e| anyhow!("write {path}: {e}"))?;
+                log::info!("wrote surrogate check JSON to {path}");
+                return Ok(());
+            }
             if args.has("advise") && args.get("model").is_none() {
                 // Joint recommendation for the whole zoo.
-                for conflicting in ["chiplets", "noc", "nop", "exact", "sim"] {
+                for conflicting in ["chiplets", "noc", "nop", "exact", "sim", "surrogate"] {
                     if args.has(conflicting) {
                         bail!(
                             "--advise searches the full (chiplets x NoP x NoC) space; \
@@ -415,7 +492,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                 // Joint advise view scoped to one model: the search covers
                 // the full (chiplets x NoP x NoC) space, so point-fixing
                 // flags contradict it.
-                for conflicting in ["chiplets", "noc", "nop", "exact", "sim"] {
+                for conflicting in ["chiplets", "noc", "nop", "exact", "sim", "surrogate"] {
                     if args.has(conflicting) {
                         bail!(
                             "--advise searches the full (chiplets x NoP x NoC) space; \
@@ -489,7 +566,11 @@ pub fn run(argv: &[String]) -> Result<()> {
                     chiplets,
                     arch.tech.name(),
                     noc_topo.name(),
-                    if sim_mode { ", NoP flit-level sim" } else { "" }
+                    match nop_mode {
+                        NopMode::Analytical => "",
+                        NopMode::Sim => ", NoP flit-level sim",
+                        NopMode::Surrogate => ", NoP surrogate",
+                    }
                 ),
                 &cols,
             );
@@ -537,8 +618,8 @@ pub fn run(argv: &[String]) -> Result<()> {
                 log::info!("wrote NoP heatmap JSON to {path}");
             }
             // The joint recommendation sweep evaluates analytically, but
-            // under --sim its ranking folds in the measured (NoP, k)
-            // saturation rates (see `recommend_scaleout`).
+            // under --sim / --surrogate its ranking folds in the measured
+            // (NoP, k) saturation rates (see `recommend_scaleout`).
             let rec = recommend_scaleout(&g, &arch, &base_noc, &base_nop);
             print_scaleout_recommendation(&rec, &g.name);
         }
@@ -668,11 +749,7 @@ fn serve_modeled_cmd(args: &Args, name: &str, fast: bool) -> Result<()> {
     let nop = NopConfig {
         topology: topo,
         chiplets,
-        mode: if args.has("sim") {
-            NopMode::Sim
-        } else {
-            NopMode::Analytical
-        },
+        mode: nop_mode_from(args)?,
         ..NopConfig::default()
     };
     nop.validate().map_err(|e| anyhow!("--chiplets: {e}"))?;
@@ -967,16 +1044,13 @@ fn serve_mix_cmd(args: &Args, fast: bool) -> Result<()> {
         seed: args.get_usize("seed", config.serving.seed as usize)? as u64,
     };
     serving.validate().map_err(|e| anyhow!("serving config: {e}"))?;
-    if args.has("sim") {
-        // The mix path always prices package legs analytically (its link
-        // contention is simulated by the scheduler itself, and the
-        // saturation backoff threshold is always sim-measured); accepting
-        // the flag would silently change nothing.
-        bail!("--sim is not supported with --mix/--trace (mix ingress is priced analytically; congestion is simulated by the scheduler)");
-    }
     let nop = NopConfig {
         topology: topo,
         chiplets,
+        // `--sim` / `--surrogate` switch the per-model ingress pricing the
+        // mix scheduler ranks replicas by; its link contention is always
+        // simulated by the scheduler itself.
+        mode: nop_mode_from(args)?,
         ..NopConfig::default()
     };
     nop.validate().map_err(|e| anyhow!("--chiplets: {e}"))?;
@@ -1138,9 +1212,11 @@ USAGE:
   repro eval <dnn> [--tech sram|reram] [--topology ...]     evaluate one design point
   repro advise <dnn>                                        optimal-topology advisor
   repro chiplet --model <dnn> [--chiplets N] [--noc t]      multi-chiplet NoC+NoP evaluation
-               [--nop p2p|ring|mesh] [--exact] [--sim]      (all NoP topologies by default)
-               [--heatmap] [--heatmap-out f]                NoP link heatmaps from an
-                                                            instrumented flit-level run
+               [--nop p2p|ring|mesh] [--exact]              (all NoP topologies by default)
+               [--sim | --surrogate]                        package leg: flit sim / fitted
+               [--heatmap] [--heatmap-out f]                surrogate; NoP link heatmaps
+  repro chiplet --surrogate-check-out <f> [--fast] [--seed N]  sim-vs-surrogate validation
+                                                            JSON (gated in CI)
   repro chiplet --advise [--model <dnn>]                    joint (chiplets, NoP, NoC)
                                                             recommendation: whole zoo, or the
                                                             full design space of one model
@@ -1149,7 +1225,8 @@ USAGE:
               [--policy round-robin|least-latency|          per-chiplet queues, NoP-priced
                congestion-aware] [--rate RPS] [--batch N]   routing, modeled p50/p99
               [--queue-depth N] [--requests N] [--seed N]   (--fast: small smoke config)
-              [--sim] [--trace-out f] [--metrics-out f]
+              [--sim | --surrogate] [--trace-out f]
+              [--metrics-out f]
               [--explain] [--explain-out f]
               [--heatmap] [--heatmap-out f]
   repro serve --mix [name[:weight[:deadline_ms]],...]       multi-model serving: replica
@@ -1158,6 +1235,7 @@ USAGE:
               [--arrival poisson|bursty|diurnal]            accounting (deadline 0 = auto,
               [--record-trace f] [--chiplets N] [--seed N]  inf = none; default mix
               [--topology t] [--rate RPS] [--requests N]    VGG-19 + SqueezeNet)
+              [--sim | --surrogate]
               [--trace-out f] [--metrics-out f]
               [--explain] [--explain-out f]
               [--heatmap] [--heatmap-out f]
@@ -1169,8 +1247,15 @@ USAGE:
 
 FLAGS:
   --exact   use the cycle-accurate NoC simulator (default: analytical model)
-  --sim     chiplet: run the package leg through the flit-level NoP
-            co-simulation and report per-topology saturation rates
+  --sim     chiplet/serve: price the package leg through the flit-level
+            NoP co-simulation (chiplet also reports per-topology
+            saturation rates)
+  --surrogate  chiplet/serve: price the package leg from sim-anchored
+            fitted curves — sim-level fidelity at near-analytical cost
+            (falls back to the full simulator where the fit refuses)
+  --surrogate-check-out <f>  chiplet: fit the surrogate over a
+            (topology, k) grid, grade it against held-out simulator
+            runs and write the comparison JSON
   --fast    restrict sweeps to the small-DNN subset
   --csv     emit CSV instead of ASCII tables
   --verbose debug-level logging (REPRO_LOG=warn|info|debug sets the default)
@@ -1275,6 +1360,16 @@ mod tests {
             "--sim".into(),
         ])
         .unwrap();
+        // Surrogate-priced package leg: same view, fitted-curve pricing.
+        run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "lenet5".into(),
+            "--chiplets".into(),
+            "2".into(),
+            "--surrogate".into(),
+        ])
+        .unwrap();
         // --sim contradicts the (analytical) design-space search.
         assert!(run(&[
             "chiplet".into(),
@@ -1284,6 +1379,16 @@ mod tests {
             "--sim".into(),
         ])
         .is_err());
+        // The two NoP pricing modes are mutually exclusive.
+        let err = run(&[
+            "chiplet".into(),
+            "--model".into(),
+            "MLP".into(),
+            "--sim".into(),
+            "--surrogate".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
         assert!(run(&["chiplet".into()]).is_err()); // needs --model or --advise
         // Out-of-range chiplet counts error cleanly instead of panicking.
         assert!(run(&[
@@ -1404,10 +1509,23 @@ mod tests {
             "1".into(),
         ])
         .is_err());
-        // --sim is rejected on the mix path (it would be a silent no-op:
-        // mix ingress pricing is analytical by design).
-        let err = run(&["serve".into(), "--mix".into(), "--sim".into()]).unwrap_err();
-        assert!(err.to_string().contains("--sim"), "{err}");
+        // The mix path accepts both non-analytical ingress pricing modes
+        // but rejects combining them.
+        run(&[
+            "serve".into(),
+            "--mix".into(),
+            "--fast".into(),
+            "--surrogate".into(),
+        ])
+        .unwrap();
+        let err = run(&[
+            "serve".into(),
+            "--mix".into(),
+            "--sim".into(),
+            "--surrogate".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
         // And mix-only flags are rejected on the single-model path.
         let err = run(&[
             "serve".into(),

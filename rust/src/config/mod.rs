@@ -196,14 +196,20 @@ pub enum NopMode {
     /// Flit-level event-driven NoP simulation ([`crate::nop::sim::NopSim`])
     /// with credit-based flow control: sees queueing and saturation.
     Sim,
+    /// Sim-anchored surrogate ([`crate::sim::surrogate`]): latency curves
+    /// fit from a handful of sim anchors answer sweep queries at
+    /// near-analytical cost, falling back to the full simulator outside
+    /// the fitted range.
+    Surrogate,
 }
 
 impl NopMode {
-    /// Display name ("analytical" / "sim").
+    /// Display name ("analytical" / "sim" / "surrogate").
     pub fn name(self) -> &'static str {
         match self {
             NopMode::Analytical => "analytical",
             NopMode::Sim => "sim",
+            NopMode::Surrogate => "surrogate",
         }
     }
 
@@ -212,13 +218,14 @@ impl NopMode {
         match s.to_ascii_lowercase().as_str() {
             "analytical" | "ana" => Some(NopMode::Analytical),
             "sim" | "simulate" | "cycle-accurate" => Some(NopMode::Sim),
+            "surrogate" | "sur" => Some(NopMode::Surrogate),
             _ => None,
         }
     }
 
     /// The valid `parse` spellings, for CLI error messages.
     pub fn valid_names() -> &'static str {
-        "analytical, sim"
+        "analytical, sim, surrogate"
     }
 }
 
@@ -912,6 +919,8 @@ mod tests {
         assert_eq!(cfg.nop.buffer_flits, 16);
         assert_eq!(Config::default().nop.mode, NopMode::Analytical);
         assert_eq!(NopMode::parse("Simulate"), Some(NopMode::Sim));
+        assert_eq!(NopMode::parse("Surrogate"), Some(NopMode::Surrogate));
+        assert_eq!(NopMode::Surrogate.name(), "surrogate");
         assert_eq!(NopMode::parse("guess"), None);
         // Bubble flow control needs at least two buffer slots.
         assert!(Config::from_ini("[nop]\nbuffer_flits = 1\n").is_err());

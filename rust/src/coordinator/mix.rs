@@ -29,7 +29,8 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::config::{
-    Admission, ArchConfig, NocConfig, NopConfig, Policy, ServingConfig, SimConfig, WorkloadConfig,
+    Admission, ArchConfig, NocConfig, NopConfig, NopMode, Policy, ServingConfig, SimConfig,
+    WorkloadConfig,
 };
 use crate::coordinator::scheduler::{
     measured_sat_link_util, replica_costs, LinkWindow, AUTO_LOAD_FACTOR, SATURATION_BACKOFF,
@@ -39,6 +40,7 @@ use crate::dnn::by_name;
 use crate::mapping::Mapping;
 use crate::nop::evaluator::nop_transfer_cycles;
 use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::sim::FlowSpec;
 use crate::telemetry::span::{mean_breakdown_ms, RequestSpan, SpanOutcome};
 use crate::telemetry::timeseries::AUTO_WINDOWS;
 use crate::telemetry::{link_union, IngressTrace, LayerBlame, QuantileSketch, TimeSeries};
@@ -123,7 +125,11 @@ pub struct MixServingModel {
 impl MixServingModel {
     /// Price every mix member on a `nop.chiplets`-chiplet package and run
     /// the `policy` placement search. Fails on unknown DNN names or a
-    /// package smaller than the mix.
+    /// package smaller than the mix. Ingress legs honor `nop.mode` like
+    /// [`super::scheduler::ServingModel::build`]: analytical transfer
+    /// cycles, a memoized flit-level drain, or the fitted
+    /// [`crate::sim::surrogate`] curve with sim fallback; egress stays
+    /// analytical (result payloads are small and zero-load).
     pub fn build(
         mix: &WorkloadMix,
         policy: PlacementPolicy,
@@ -196,8 +202,54 @@ impl MixServingModel {
                     continue;
                 }
                 let hops = net.hops(gateway, c);
-                ingress_s[m][c] =
-                    nop_transfer_cycles(in_bits[m], hops, nop, arch.freq_hz) / arch.freq_hz;
+                ingress_s[m][c] = match nop.mode {
+                    NopMode::Analytical => {
+                        nop_transfer_cycles(in_bits[m], hops, nop, arch.freq_hz) / arch.freq_hz
+                    }
+                    NopMode::Sim | NopMode::Surrogate => {
+                        let flits = models[m].ingress_flits;
+                        let flows = [FlowSpec {
+                            src: gateway,
+                            dst: c,
+                            rate: 0.0,
+                            flits,
+                        }];
+                        let budget = 10_000
+                            + flits
+                                .saturating_mul(4)
+                                .saturating_mul(nop.hop_latency_cycles + 2);
+                        // Surrogate: one fitted curve (base seed) prices
+                        // every (model, chiplet) leg; `None` falls back to
+                        // the memoized drain the Sim arm runs.
+                        let estimate = if nop.mode == NopMode::Surrogate {
+                            crate::sim::surrogate::drain_estimate(
+                                nop.topology,
+                                k,
+                                nop,
+                                &flows,
+                                sim.seed,
+                            )
+                            .map(|cy| cy.min(budget))
+                        } else {
+                            None
+                        };
+                        let cycles = match estimate {
+                            Some(makespan) => makespan,
+                            None => {
+                                let stats = crate::sim::memo::drain_makespan(
+                                    nop.topology,
+                                    k,
+                                    nop,
+                                    &flows,
+                                    budget,
+                                    sim.seed ^ c as u64,
+                                );
+                                if stats.drained { stats.makespan } else { budget }
+                            }
+                        };
+                        cycles as f64 * nop_cycle_s
+                    }
+                };
                 egress_s[m][c] =
                     nop_transfer_cycles(out_bits[m], hops, nop, arch.freq_hz) / arch.freq_hz;
             }
@@ -966,6 +1018,39 @@ mod tests {
         assert!(model.ingress_s[0][5] > model.ingress_s[0][1]);
         assert!(model.capacity_rps(1.0) > 0.0);
         assert!(model.sat_link_util > 0.0 && model.sat_link_util <= 1.0);
+    }
+
+    #[test]
+    fn surrogate_ingress_pricing_tracks_sim() {
+        // `[nop] mode = surrogate` must price the gateway→chiplet legs in
+        // a tight band of the full drain sim it stands in for, with the
+        // same structure (zero at the gateway, growing with distance).
+        let (arch, noc, sim) = defaults();
+        let build = |mode: NopMode| {
+            let nop = NopConfig {
+                topology: NopTopology::Mesh,
+                chiplets: 6,
+                mode,
+                ..NopConfig::default()
+            };
+            MixServingModel::build(&small_mix(), PlacementPolicy::NopAware, &arch, &noc, &nop, &sim)
+                .unwrap()
+        };
+        let cyc = build(NopMode::Sim);
+        let sur = build(NopMode::Surrogate);
+        assert_eq!(sur.ingress_s[0][0], 0.0);
+        assert!(sur.ingress_s[0][5] > sur.ingress_s[0][1]);
+        for m in 0..2 {
+            for c in 1..6 {
+                let ratio = sur.ingress_s[m][c] / cyc.ingress_s[m][c];
+                assert!(
+                    (0.5..=2.0).contains(&ratio),
+                    "model {m} chiplet {c}: surrogate/sim ingress ratio {ratio}"
+                );
+            }
+        }
+        // Egress is analytical in both modes — identical by construction.
+        assert_eq!(cyc.egress_s, sur.egress_s);
     }
 
     #[test]

@@ -119,10 +119,11 @@ impl ServingModel {
     /// package, returning the model plus the [`ChipletPartition`] the
     /// scheduler's queues sit over. The per-chiplet legs stay analytical
     /// (the scheduler prices thousands of admissions); the *package* legs
-    /// honor `nop.mode` — ingress transfers are priced either by
-    /// `nop_transfer_cycles` or by a memoized flit-level
+    /// honor `nop.mode` — ingress transfers are priced by
+    /// `nop_transfer_cycles`, by a memoized flit-level
     /// [`NopSim`](crate::nop::sim::NopSim) drain
-    /// ([`crate::sim::memo::drain_makespan`]).
+    /// ([`crate::sim::memo::drain_makespan`]), or by the fitted
+    /// [`crate::sim::surrogate`] drain curve with sim fallback.
     pub fn build(
         graph: &DnnGraph,
         arch: &ArchConfig,
@@ -164,7 +165,7 @@ impl ServingModel {
                 NopMode::Analytical => {
                     nop_transfer_cycles(ingress_bits, hops, nop, arch.freq_hz) / arch.freq_hz
                 }
-                NopMode::Sim => {
+                NopMode::Sim | NopMode::Surrogate => {
                     let flows = [FlowSpec {
                         src: gateway,
                         dst: c,
@@ -175,17 +176,37 @@ impl ServingModel {
                         + ingress_flits
                             .saturating_mul(4)
                             .saturating_mul(nop.hop_latency_cycles + 2);
-                    // Memoized: single- and multi-model serving builds
-                    // price the same gateway→chiplet transfers repeatedly.
-                    let stats = crate::sim::memo::drain_makespan(
-                        nop.topology,
-                        k,
-                        nop,
-                        &flows,
-                        budget,
-                        sim.seed ^ c as u64,
-                    );
-                    let cycles = if stats.drained { stats.makespan } else { budget };
+                    // Surrogate: one fitted curve (base seed) prices every
+                    // gateway→chiplet transfer; `None` falls back to sim.
+                    let estimate = if nop.mode == NopMode::Surrogate {
+                        crate::sim::surrogate::drain_estimate(
+                            nop.topology,
+                            k,
+                            nop,
+                            &flows,
+                            sim.seed,
+                        )
+                        .map(|m| m.min(budget))
+                    } else {
+                        None
+                    };
+                    let cycles = match estimate {
+                        Some(makespan) => makespan,
+                        None => {
+                            // Memoized: single- and multi-model serving
+                            // builds price the same gateway→chiplet
+                            // transfers repeatedly.
+                            let stats = crate::sim::memo::drain_makespan(
+                                nop.topology,
+                                k,
+                                nop,
+                                &flows,
+                                budget,
+                                sim.seed ^ c as u64,
+                            );
+                            if stats.drained { stats.makespan } else { budget }
+                        }
+                    };
                     cycles as f64 * nop_cycle_s
                 }
             };

@@ -16,9 +16,14 @@
 //!
 //! The (k × topology) points fan out over OS threads via the coordinator's
 //! [`par_map`] — the same driver primitive the evaluation sweeps use.
+//!
+//! Under `--surrogate` ([`Options::nop_mode`]) both parts answer from the
+//! sim-anchored curves of [`crate::sim::surrogate`] — one fit per
+//! (k, topology), amortized across the grid — falling back to the full
+//! simulator wherever the surrogate refuses.
 
 use super::Options;
-use crate::config::{ArchConfig, NopConfig};
+use crate::config::{ArchConfig, NopConfig, NopMode};
 use crate::coordinator::par_map;
 use crate::dnn::by_name;
 use crate::mapping::{ChipletPartition, Mapping};
@@ -37,6 +42,7 @@ pub fn nop_congestion(opts: &Options) -> Result<Vec<Table>, String> {
     };
     let measure: u64 = if opts.fast { 3_000 } else { 6_000 };
     let seed = opts.seed;
+    let nop_mode = opts.nop_mode;
 
     // --- 1. Uniform steady sweep, driver-parallelized over (k, topo) -----
     let points: Vec<(usize, NopTopology)> = ks
@@ -47,20 +53,33 @@ pub fn nop_congestion(opts: &Options) -> Result<Vec<Table>, String> {
         let net = NopNetwork::build(topo, k);
         let flows = uniform_nop_flows(k, 0.02);
         let ana = analytical_latency(&net, &nop, &flows);
-        let sim = NopSim::new(
-            topo,
-            k,
-            &nop,
-            &flows,
-            Mode::Steady {
-                warmup: 500,
-                measure,
-            },
-            seed,
-        )
-        .run();
+        // Surrogate mode answers from the fitted curve; every other mode
+        // — and any surrogate refusal — runs the flit simulator.
+        let surrogate = if nop_mode == NopMode::Surrogate {
+            crate::sim::surrogate::steady_latency(topo, k, &nop, 0.02, seed)
+        } else {
+            None
+        };
+        let sim_lat = match surrogate {
+            Some(lat) => lat,
+            None => {
+                NopSim::new(
+                    topo,
+                    k,
+                    &nop,
+                    &flows,
+                    Mode::Steady {
+                        warmup: 500,
+                        measure,
+                    },
+                    seed,
+                )
+                .run()
+                .avg_latency
+            }
+        };
         let sat = saturation_rate(topo, k, &nop, seed);
-        (k, topo, ana, sim.avg_latency, sat)
+        (k, topo, ana, sim_lat, sat)
     });
     let mut sweep = Table::new(
         "NoP congestion — low-load latency (NoP cycles) and saturation rate, uniform traffic",
@@ -129,21 +148,26 @@ pub fn nop_congestion(opts: &Options) -> Result<Vec<Table>, String> {
         .collect();
     let drain_rows = par_map(&drain_points, None, |(k, flows, topo)| {
         let total: u64 = flows.iter().map(|f| f.flits).sum();
-        let stats = crate::sim::memo::drain_makespan(
-            *topo,
-            *k,
-            &nop,
-            flows,
-            10_000 + total.saturating_mul(64),
-            seed,
-        );
+        let budget = 10_000 + total.saturating_mul(64);
+        let estimate = if nop_mode == NopMode::Surrogate {
+            crate::sim::surrogate::drain_estimate(*topo, *k, &nop, flows, seed)
+        } else {
+            None
+        };
+        let (makespan, drained) = match estimate {
+            Some(est) => (est.min(budget), est <= budget),
+            None => {
+                let stats = crate::sim::memo::drain_makespan(*topo, *k, &nop, flows, budget, seed);
+                (stats.makespan, stats.drained)
+            }
+        };
         vec![
             k.to_string(),
             topo.name().into(),
             flows.len().to_string(),
             total.to_string(),
-            stats.makespan.to_string(),
-            stats.drained.to_string(),
+            makespan.to_string(),
+            drained.to_string(),
         ]
     });
     for row in drain_rows {
@@ -174,6 +198,29 @@ mod tests {
         for row in &sweep.rows {
             let err: f64 = row[4].parse().unwrap();
             assert!(err < 15.0, "{} k={}: {err}% off analytical", row[1], row[0]);
+        }
+    }
+
+    #[test]
+    fn surrogate_mode_reproduces_the_sweep_shape() {
+        // Same grid priced from the fitted curves: the low-load rows stay
+        // near analytical (the surrogate's first anchor is low-load) and
+        // every drain row still terminates.
+        let opts = Options {
+            nop_mode: NopMode::Surrogate,
+            ..fast_opts()
+        };
+        let tables = nop_congestion(&opts).unwrap();
+        assert_eq!(tables[0].rows.len(), 3);
+        for row in &tables[0].rows {
+            let err: f64 = row[4].parse().unwrap();
+            assert!(err < 20.0, "{} k={}: {err}% off analytical", row[1], row[0]);
+        }
+        assert_eq!(tables[1].rows.len(), 3);
+        for row in &tables[1].rows {
+            assert_eq!(row[5], "true", "{} k={} did not drain", row[1], row[0]);
+            let makespan: u64 = row[4].parse().unwrap();
+            assert!(makespan > 0);
         }
     }
 

@@ -75,6 +75,7 @@ pub fn serving(opts: &Options) -> Result<Vec<Table>, String> {
         let nop = NopConfig {
             topology: *topo,
             chiplets: *k,
+            mode: opts.nop_mode,
             ..NopConfig::default()
         };
         ServingModel::build(&g, &arch, &noc, &nop, &sim)

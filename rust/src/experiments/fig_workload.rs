@@ -73,6 +73,7 @@ pub fn workload(opts: &Options) -> Result<Vec<Table>, String> {
         let nop = NopConfig {
             topology: *topo,
             chiplets: *k,
+            mode: opts.nop_mode,
             ..NopConfig::default()
         };
         MixServingModel::build(&wl.mix, PlacementPolicy::NopAware, &arch, &noc, &nop, &sim)

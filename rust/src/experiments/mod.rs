@@ -18,6 +18,7 @@ pub mod fig_workload;
 pub mod tables;
 
 use crate::arch::CommBackend;
+use crate::config::NopMode;
 use crate::util::Table;
 
 /// Options shared by all experiments.
@@ -28,6 +29,11 @@ pub struct Options {
     pub backend: CommBackend,
     /// Restrict expensive sweeps to a smaller DNN set.
     pub fast: bool,
+    /// Package-leg pricing mode for NoP-bound experiments (`workload`,
+    /// `serving`, `nop-congestion`): `Analytical` keeps the seeds'
+    /// behavior, `Sim` prices via the flit simulator, `Surrogate` via the
+    /// sim-anchored curves of [`crate::sim::surrogate`].
+    pub nop_mode: NopMode,
     /// Simulation seed.
     pub seed: u64,
 }
@@ -37,6 +43,7 @@ impl Default for Options {
         Self {
             backend: CommBackend::Analytical,
             fast: false,
+            nop_mode: NopMode::Analytical,
             seed: 0x1AC5_EED,
         }
     }

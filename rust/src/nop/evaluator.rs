@@ -228,7 +228,9 @@ pub fn evaluate_package(
                         }
                         nop_hop_max = nop_hop_max.max(path.len() - 1);
                     }
-                    NopMode::Sim => nop_dflows.push(FlowSpec {
+                    // Surrogate prices the same flow set the simulator
+                    // would see, so it collects flows like Sim.
+                    NopMode::Sim | NopMode::Surrogate => nop_dflows.push(FlowSpec {
                         src: src_chiplet,
                         dst: c,
                         rate: 0.0,
@@ -253,13 +255,14 @@ pub fn evaluate_package(
         // the busiest NoP link plus the per-hop SerDes latency. Sim: the
         // measured drain makespan of this layer's package flows through
         // the flit-level simulator (credit stalls and link contention
-        // included), converted by the clock ratio.
+        // included), converted by the clock ratio. Surrogate: the fitted
+        // drain curve stands in for the simulator, with sim fallback.
         let nop_cycles = match nop.mode {
             NopMode::Analytical => {
                 let nop_bottleneck = nop_link_load.values().copied().max().unwrap_or(0);
                 nop_flit_cycles(nop_bottleneck, nop_hop_max, nop, arch.freq_hz)
             }
-            NopMode::Sim => {
+            NopMode::Sim | NopMode::Surrogate => {
                 if nop_dflows.is_empty() {
                     0.0
                 } else {
@@ -271,18 +274,39 @@ pub fn evaluate_package(
                         + total
                             .saturating_mul(4)
                             .saturating_mul(nop.hop_latency_cycles + 2);
-                    // Memoized: repeated evaluations of the same layer's
-                    // package flows (sweeps, the advisor, serving-model
-                    // builds) simulate once.
-                    let stats = crate::sim::memo::drain_makespan(
-                        nop.topology,
-                        nop.chiplets,
-                        nop,
-                        &nop_dflows,
-                        budget,
-                        sim.seed ^ lt.layer as u64,
-                    );
-                    let nop_native = if stats.drained { stats.makespan } else { budget };
+                    // Surrogate: the fitted drain curve prices the flow set
+                    // without simulating. Keyed on the base seed (not the
+                    // per-layer xor) so one fit serves every layer; `None`
+                    // falls through to the full memoized drain.
+                    let estimate = if nop.mode == NopMode::Surrogate {
+                        crate::sim::surrogate::drain_estimate(
+                            nop.topology,
+                            nop.chiplets,
+                            nop,
+                            &nop_dflows,
+                            sim.seed,
+                        )
+                        .map(|m| m.min(budget))
+                    } else {
+                        None
+                    };
+                    let nop_native = match estimate {
+                        Some(makespan) => makespan,
+                        None => {
+                            // Memoized: repeated evaluations of the same
+                            // layer's package flows (sweeps, the advisor,
+                            // serving-model builds) simulate once.
+                            let stats = crate::sim::memo::drain_makespan(
+                                nop.topology,
+                                nop.chiplets,
+                                nop,
+                                &nop_dflows,
+                                budget,
+                                sim.seed ^ lt.layer as u64,
+                            );
+                            if stats.drained { stats.makespan } else { budget }
+                        }
+                    };
                     nop_native as f64 * (arch.freq_hz / nop.freq_hz)
                 }
             }
@@ -702,6 +726,32 @@ mod tests {
         assert!(cyc.nop_latency_s >= 0.0);
         let ratio = cyc.latency_s() / ana.latency_s();
         assert!((0.5..2.0).contains(&ratio), "sim/analytical ratio {ratio}");
+    }
+
+    #[test]
+    fn surrogate_mode_stays_in_band_of_sim() {
+        // The fitted drain curve must track the simulator it stands in
+        // for: same flow collection, same budget clamp, loose band on the
+        // end-to-end latency (the surrogate smooths per-layer seed noise
+        // the sim path keeps).
+        let (arch, noc, sim) = defaults();
+        let g = models::nin();
+        let run = |mode: NopMode| {
+            let nop = NopConfig {
+                topology: NopTopology::Mesh,
+                chiplets: 4,
+                mode,
+                ..NopConfig::default()
+            };
+            evaluate_package(&g, &arch, &noc, &nop, &sim, CommBackend::Analytical)
+        };
+        let cyc = run(NopMode::Sim);
+        let sur = run(NopMode::Surrogate);
+        assert_eq!(cyc.cross_bits, sur.cross_bits);
+        assert_eq!(cyc.compute_latency_s, sur.compute_latency_s);
+        assert!(sur.nop_latency_s >= 0.0);
+        let ratio = sur.latency_s() / cyc.latency_s();
+        assert!((0.5..2.0).contains(&ratio), "surrogate/sim ratio {ratio}");
     }
 
     #[test]

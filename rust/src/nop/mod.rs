@@ -16,8 +16,9 @@
 //!   *existing* per-chip NoC machinery (analytical model or cycle-accurate
 //!   simulator, unchanged) over its local tiles, and cross-chiplet traffic
 //!   — derived from [`crate::mapping::ChipletPartition`] — rides the NoP
-//!   either analytically or through the flit-level simulator
-//!   (`[nop] mode = sim`, [`crate::config::NopConfig`]).
+//!   analytically, through the flit-level simulator (`[nop] mode = sim`,
+//!   [`crate::config::NopConfig`]), or through the sim-anchored surrogate
+//!   curves of [`crate::sim::surrogate`] (`[nop] mode = surrogate`).
 //!
 //! The joint (chiplet count, NoP topology, per-chiplet NoC topology)
 //! advisor lives in [`crate::arch::optimizer`].

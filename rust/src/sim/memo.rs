@@ -16,15 +16,18 @@
 //! compute it (identical results — the sims are deterministic), but
 //! neither ever blocks behind a multi-millisecond run.
 //!
-//! Both caches are bounded ([`DRAIN_CACHE_CAP`] / [`SAT_CACHE_CAP`]): at
-//! capacity an arbitrary resident entry is evicted before insertion, so a
-//! long sweep session cannot grow them without bound. Eviction order is
-//! nondeterministic (`HashMap` iteration), which is safe because a cache
-//! hit and a re-simulation are identical by the identity contract below.
-//! Lookups, insertions and evictions feed the
+//! Both caches are bounded ([`DRAIN_CACHE_CAP`] / [`SAT_CACHE_CAP`]) by
+//! an [`LruCache`]: every hit promotes its entry, and an insertion at
+//! capacity evicts the least-recently-used resident, so the hot keys of a
+//! sweep survive even when the sweep's total working set exceeds the
+//! bound. Eviction is deterministic (oldest access stamp loses; ties are
+//! impossible because stamps are a monotone counter), and safe because a
+//! cache hit and a re-simulation are identical by the identity contract
+//! below. Lookups, insertions and evictions feed the
 //! [`crate::telemetry::profile`] counters (`repro … --profile`).
 
 use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::{Mutex, OnceLock};
 
 use super::engine::{FlowSpec, Mode, SimStats};
@@ -32,32 +35,84 @@ use crate::config::NopConfig;
 use crate::nop::topology::NopTopology;
 use crate::telemetry::profile;
 
-/// Maximum resident drain-run results; one arbitrary entry is evicted
-/// per insertion beyond this.
+/// Maximum resident drain-run results; the least-recently-used entry is
+/// evicted per insertion beyond this.
 pub(crate) const DRAIN_CACHE_CAP: usize = 256;
 
 /// Maximum resident saturation-search results.
 pub(crate) const SAT_CACHE_CAP: usize = 256;
 
-/// Insert `(key, val)` into a bounded cache map: when `key` is absent and
-/// the map is at `cap`, evict one arbitrary resident entry first. Returns
-/// whether an eviction happened (so callers can bump the profile counter
-/// for their cache).
-fn insert_bounded<K: std::hash::Hash + Eq + Clone, V>(
-    map: &mut HashMap<K, V>,
+/// A bounded map with least-recently-used eviction.
+///
+/// Entries carry an access stamp from a monotone counter; `get` promotes
+/// (re-stamps) its entry and `insert` at capacity scans for the minimum
+/// stamp and evicts it. The linear victim scan is O(len) but the caches
+/// are small (≤ 256 entries) and insertions already paid for a
+/// multi-millisecond simulation, so a list-based O(1) LRU would be
+/// complexity without measurable payoff.
+pub(crate) struct LruCache<K, V> {
+    map: HashMap<K, (V, u64)>,
     cap: usize,
-    key: K,
-    val: V,
-) -> bool {
-    let mut evicted = false;
-    if map.len() >= cap && !map.contains_key(&key) {
-        if let Some(victim) = map.keys().next().cloned() {
-            map.remove(&victim);
-            evicted = true;
+    tick: u64,
+}
+
+impl<K: Hash + Eq + Clone, V> LruCache<K, V> {
+    /// An empty cache holding at most `cap` entries.
+    pub(crate) fn new(cap: usize) -> Self {
+        assert!(cap > 0, "LRU capacity must be positive");
+        LruCache {
+            map: HashMap::new(),
+            cap,
+            tick: 0,
         }
     }
-    map.insert(key, val);
-    evicted
+
+    fn next_stamp(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Look up `key`, promoting it to most-recently-used on a hit.
+    pub(crate) fn get(&mut self, key: &K) -> Option<&V> {
+        let stamp = self.next_stamp();
+        let (val, at) = self.map.get_mut(key)?;
+        *at = stamp;
+        Some(val)
+    }
+
+    /// Insert `(key, val)`; when `key` is absent and the cache is full,
+    /// evict the least-recently-used resident first. Returns whether an
+    /// eviction happened (so callers can bump the profile counter for
+    /// their cache).
+    pub(crate) fn insert(&mut self, key: K, val: V) -> bool {
+        let mut evicted = false;
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, at))| *at)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+                evicted = true;
+            }
+        }
+        let stamp = self.next_stamp();
+        self.map.insert(key, (val, stamp));
+        evicted
+    }
+
+    /// Resident entry count.
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether `key` is resident, without promoting it.
+    #[cfg(test)]
+    pub(crate) fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
 }
 
 /// Drain-run cache key: (topology, chiplets, hop latency, buffer depth,
@@ -67,10 +122,10 @@ fn insert_bounded<K: std::hash::Hash + Eq + Clone, V>(
 /// genuinely different workloads and must not collide.
 type DrainKey = (u8, usize, u64, usize, u64, u64, Vec<(u32, u32, u64)>);
 
-static DRAIN_CACHE: OnceLock<Mutex<HashMap<DrainKey, SimStats>>> = OnceLock::new();
+static DRAIN_CACHE: OnceLock<Mutex<LruCache<DrainKey, SimStats>>> = OnceLock::new();
 
-fn drain_cache() -> &'static Mutex<HashMap<DrainKey, SimStats>> {
-    DRAIN_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn drain_cache() -> &'static Mutex<LruCache<DrainKey, SimStats>> {
+    DRAIN_CACHE.get_or_init(|| Mutex::new(LruCache::new(DRAIN_CACHE_CAP)))
 }
 
 /// Run (or recall) an uninstrumented `NopSim` drain of `flows` on
@@ -100,9 +155,9 @@ pub fn drain_makespan(
         seed,
         fl,
     );
-    if let Some(hit) = drain_cache().lock().unwrap().get(&key) {
+    if let Some(hit) = drain_cache().lock().unwrap().get(&key).cloned() {
         profile::note_drain(true);
-        return hit.clone();
+        return hit;
     }
     profile::note_drain(false);
     // Attribution is always armed here: it only fills `flow_waits`
@@ -118,12 +173,7 @@ pub fn drain_makespan(
     )
     .attribute(true)
     .run();
-    if insert_bounded(
-        &mut drain_cache().lock().unwrap(),
-        DRAIN_CACHE_CAP,
-        key,
-        stats.clone(),
-    ) {
+    if drain_cache().lock().unwrap().insert(key, stats.clone()) {
         profile::note_drain_eviction();
     }
     stats
@@ -134,10 +184,10 @@ pub fn drain_makespan(
 /// [`crate::nop::sim::saturation_rate`].
 type SatKey = (u8, usize, u64, usize, u64);
 
-static SAT_CACHE: OnceLock<Mutex<HashMap<SatKey, Option<f64>>>> = OnceLock::new();
+static SAT_CACHE: OnceLock<Mutex<LruCache<SatKey, Option<f64>>>> = OnceLock::new();
 
-fn sat_cache() -> &'static Mutex<HashMap<SatKey, Option<f64>>> {
-    SAT_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn sat_cache() -> &'static Mutex<LruCache<SatKey, Option<f64>>> {
+    SAT_CACHE.get_or_init(|| Mutex::new(LruCache::new(SAT_CACHE_CAP)))
 }
 
 /// Memoize a saturation search: return the cached rate for this
@@ -162,7 +212,7 @@ pub(crate) fn memo_saturation(
     }
     profile::note_sat(false);
     let val = compute();
-    if insert_bounded(&mut sat_cache().lock().unwrap(), SAT_CACHE_CAP, key, val) {
+    if sat_cache().lock().unwrap().insert(key, val) {
         profile::note_sat_eviction();
     }
     val
@@ -256,19 +306,50 @@ mod tests {
 
     #[test]
     fn bounded_insert_evicts_at_capacity_only() {
-        let mut map: HashMap<u32, u32> = HashMap::new();
-        assert!(!insert_bounded(&mut map, 3, 1, 10));
-        assert!(!insert_bounded(&mut map, 3, 2, 20));
-        assert!(!insert_bounded(&mut map, 3, 3, 30));
-        assert_eq!(map.len(), 3);
+        let mut lru: LruCache<u32, u32> = LruCache::new(3);
+        assert!(!lru.insert(1, 10));
+        assert!(!lru.insert(2, 20));
+        assert!(!lru.insert(3, 30));
+        assert_eq!(lru.len(), 3);
         // Overwriting a resident key at capacity evicts nothing.
-        assert!(!insert_bounded(&mut map, 3, 2, 21));
-        assert_eq!(map.len(), 3);
-        assert_eq!(map.get(&2), Some(&21));
-        // A fresh key at capacity evicts exactly one resident entry.
-        assert!(insert_bounded(&mut map, 3, 4, 40));
-        assert_eq!(map.len(), 3);
-        assert_eq!(map.get(&4), Some(&40));
+        assert!(!lru.insert(2, 21));
+        assert_eq!(lru.len(), 3);
+        assert_eq!(lru.get(&2), Some(&21));
+        // A fresh key at capacity evicts exactly one resident entry, and
+        // the victim is the least recently used: key 1 was inserted first
+        // and never touched since (2 and 3 were both used after it).
+        assert!(lru.insert(4, 40));
+        assert_eq!(lru.len(), 3);
+        assert_eq!(lru.get(&4), Some(&40));
+        assert!(!lru.contains(&1), "LRU victim must be the cold key");
+        assert!(lru.contains(&3));
+    }
+
+    #[test]
+    fn lru_keeps_hot_keys_through_capacity_churn() {
+        // The sweep pattern the LRU exists for: one hot key is re-read
+        // between bursts of one-shot keys. Under churn far past capacity
+        // the hot key must stay resident the whole time, and exactly the
+        // overflow count must have been evicted.
+        let mut lru: LruCache<u32, u32> = LruCache::new(8);
+        let hot = 9999;
+        assert!(!lru.insert(hot, 1));
+        let mut evictions = 0u32;
+        for cold in 0..64 {
+            if lru.insert(cold, cold) {
+                evictions += 1;
+            }
+            assert_eq!(
+                lru.get(&hot),
+                Some(&1),
+                "hot key evicted after {cold} cold inserts"
+            );
+        }
+        assert_eq!(lru.len(), 8);
+        // 65 distinct keys through an 8-slot cache: 64 - 7 cold
+        // evictions (the hot key is never the minimum stamp).
+        assert_eq!(evictions, 64 - 7);
+        assert!(lru.contains(&hot));
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //!   configuration key, so repeated sweep points (experiments, the
 //!   advisor, serving-model builds, benches) hit the cache instead of
 //!   re-simulating.
+//! * [`surrogate`] — sim-anchored correction models: per
+//!   (topology, k, sim-knob, seed) key, a handful of sim anchors between
+//!   low load and the measured saturation rate pin a monotone latency
+//!   curve (and a drain-makespan ratio), so `[nop] mode = surrogate`
+//!   answers sweep queries at near-analytical cost with sim-level
+//!   fidelity — falling back to the full simulator outside the fitted
+//!   range.
 //!
 //! The fabric adapters stay in `noc::sim` / `nop::sim` and hold only what
 //! is genuinely topology-specific: router pipelines, port claims and
@@ -25,6 +32,7 @@
 
 pub mod engine;
 pub mod memo;
+pub mod surrogate;
 
 pub use engine::{FlowSpec, Mode, PairStat, SimStats};
 pub use memo::drain_makespan;

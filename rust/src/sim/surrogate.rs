@@ -1,0 +1,677 @@
+//! Sim-anchored surrogate latency models: sim-fidelity pricing at
+//! near-analytical cost.
+//!
+//! The analytical NoP model (`nop_transfer_cycles` and friends) is cheap
+//! but load-blind; the flit simulator sees queueing and saturation but
+//! dominates sweep wall-clock even after memoization. This module sits in
+//! between: per (topology, k, sim-relevant config knobs, seed) it runs
+//! the flit sim at a handful of injection rates between low load and the
+//! measured saturation rate, fits a monotone correction of sim latency
+//! versus offered rate, and answers every subsequent query from the
+//! fitted curve. One fit (≈ [`ANCHOR_FRACS`].len() short steady sims plus
+//! the memoized saturation search) is amortized across an entire sweep
+//! grid, which is how `[nop] mode = surrogate` reaches sim-level fidelity
+//! at a fraction of `mode = sim`'s cost.
+//!
+//! # Anchor selection and fit form
+//!
+//! **Steady latency.** Anchors are placed at fixed fractions of the
+//! measured [`crate::nop::sim::saturation_rate`] — denser toward the
+//! saturation knee where curvature concentrates — and each one records
+//! the average latency of a short uniform-traffic steady run with the
+//! same warmup/measure window the saturation probe uses. Anchors that
+//! break monotonicity (sim noise at indistinguishable loads) are dropped
+//! keep-first, so the stored curve is non-decreasing by construction. A
+//! query below the first anchor returns the first anchor's latency
+//! (low-load latency is flat in rate); between anchors it interpolates
+//! linearly; between the last anchor and saturation it follows a
+//! log-barrier tail `L(r) = Lₙ + β·ln((s − rₙ)/(s − r))` whose strength
+//! `β` continues the last segment's slope — monotone, exact at `rₙ`, and
+//! diverging at the saturation rate `s` like the queueing curve it
+//! stands in for.
+//!
+//! **Drain makespan.** The analytical lower bound for a drain is the
+//! bottleneck directed-link flit load plus the worst per-flow zero-load
+//! fill ([`drain_bound`]). Anchors record the ratio of the memoized sim
+//! makespan to that bound for a canonical scatter pattern at a ladder of
+//! total flit counts; a query interpolates the ratio in log-total-flits
+//! and scales its own analytical bound by it.
+//!
+//! # Fallback to full sim
+//!
+//! Every entry point returns `None` — and bumps the
+//! [`crate::telemetry::profile`] fallback counter — when the surrogate
+//! cannot stand behind a number: `k < 2` (no network), an unmeasurable
+//! saturation rate, fewer than two usable anchors, or a steady query at
+//! or beyond the saturation rate (where the fitted tail diverges).
+//! Callers then price via the full simulator exactly as `mode = sim`
+//! would.
+//!
+//! Fitted curves are cached process-wide in an [`super::memo::LruCache`]
+//! next to the drain/saturation caches, and the fit itself runs under the
+//! `surrogate.fit` profile phase so `--profile` attributes its cost.
+//! Everything is deterministic per seed: anchors come from deterministic
+//! sims at derived rates, so two fits of the same key produce
+//! byte-identical curves ([`SurrogateModel::curve_bytes`]).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::engine::{FlowSpec, Mode};
+use super::memo::LruCache;
+use crate::config::NopConfig;
+use crate::nop::sim::{
+    analytical_latency, saturation_rate, uniform_nop_flows, zero_load_cycles, NopSim,
+};
+use crate::nop::topology::{NopNetwork, NopTopology};
+use crate::telemetry::profile;
+
+/// Steady-anchor positions as fractions of the measured saturation rate.
+/// Denser toward the knee, where the latency curve bends hardest.
+pub const ANCHOR_FRACS: [f64; 8] = [0.08, 0.20, 0.35, 0.50, 0.62, 0.72, 0.81, 0.90];
+
+/// Total-flit ladder for the drain-ratio anchors.
+pub const DRAIN_ANCHOR_TOTALS: [u64; 4] = [128, 512, 2048, 8192];
+
+/// Steady-anchor warmup window, matching the saturation probe so anchor
+/// runs and the search that scales them see the same transient handling.
+const STEADY_WARMUP: u64 = 500;
+
+/// Steady-anchor measurement window (see [`STEADY_WARMUP`]).
+const STEADY_MEASURE: u64 = 2_000;
+
+/// Maximum resident fitted curves (shared-LRU bound, like the memo
+/// caches). Failed fits are cached too, so unfittable keys do not re-pay
+/// the probe on every query.
+const SUR_CACHE_CAP: usize = 256;
+
+/// A fitted surrogate for one (topology, k, sim-knob, seed) key.
+///
+/// `steady_anchors` is strictly increasing in rate and non-decreasing in
+/// latency; `drain_anchors` is increasing in log-total-flits. Both are
+/// exactly reproducible from the key (see [`SurrogateModel::curve_bytes`]).
+#[derive(Clone, Debug)]
+pub struct SurrogateModel {
+    /// Package topology the curve was fit on.
+    pub topology: NopTopology,
+    /// Chiplet count the curve was fit on.
+    pub k: usize,
+    /// Measured saturation rate (flits/chiplet/cycle); the steady curve's
+    /// vertical asymptote.
+    pub sat_rate: f64,
+    /// Analytical zero-load latency baseline (cycles) under uniform
+    /// traffic — the load-independent floor the correction bends away
+    /// from.
+    pub zero_load: f64,
+    /// Monotone (offered rate, sim average latency in cycles) anchors.
+    pub steady_anchors: Vec<(f64, f64)>,
+    /// (ln total flits, makespan / analytical bound) drain anchors.
+    pub drain_anchors: Vec<(f64, f64)>,
+}
+
+/// Cache key: the exact inputs `NopSim` dynamics read (topology, k,
+/// `hop_latency_cycles`, `buffer_flits`) plus the seed — mirroring the
+/// saturation memo key. Link width, frequency and energy are applied by
+/// callers after the fact and deliberately excluded.
+type SurKey = (u8, usize, u64, usize, u64);
+
+static SUR_CACHE: OnceLock<Mutex<LruCache<SurKey, Option<Arc<SurrogateModel>>>>> = OnceLock::new();
+
+fn sur_cache() -> &'static Mutex<LruCache<SurKey, Option<Arc<SurrogateModel>>>> {
+    SUR_CACHE.get_or_init(|| Mutex::new(LruCache::new(SUR_CACHE_CAP)))
+}
+
+fn sur_key(topology: NopTopology, k: usize, cfg: &NopConfig, seed: u64) -> SurKey {
+    (
+        topology as u8,
+        k,
+        cfg.hop_latency_cycles,
+        cfg.buffer_flits,
+        seed,
+    )
+}
+
+/// Linear interpolation through (x0, y0)–(x1, y1) at `x`.
+fn lerp(x0: f64, y0: f64, x1: f64, y1: f64, x: f64) -> f64 {
+    y0 + (y1 - y0) * ((x - x0) / (x1 - x0))
+}
+
+/// Analytical drain lower bound (cycles): bottleneck directed-link flit
+/// load plus the worst per-flow zero-load pipeline fill. Self-loops and
+/// empty flows are ignored, matching the drain memo's filter.
+pub fn drain_bound(net: &NopNetwork, cfg: &NopConfig, flows: &[FlowSpec]) -> f64 {
+    let mut link_load: HashMap<(usize, usize), u64> = HashMap::new();
+    let mut fill = 0.0_f64;
+    for f in flows {
+        if f.src == f.dst || f.flits == 0 {
+            continue;
+        }
+        let path = net.route_path(f.src, f.dst);
+        for w in path.windows(2) {
+            *link_load.entry((w[0], w[1])).or_insert(0) += f.flits;
+        }
+        fill = fill.max(zero_load_cycles(net, cfg, f.src, f.dst));
+    }
+    let bottleneck = link_load.values().copied().max().unwrap_or(0);
+    bottleneck as f64 + fill
+}
+
+/// Fit a surrogate for (topology, k, cfg, seed), uncached: run the
+/// saturation search (memoized), then one short steady sim per
+/// [`ANCHOR_FRACS`] entry and one memoized scatter drain per
+/// [`DRAIN_ANCHOR_TOTALS`] entry. `None` when the key is unfittable
+/// (`k < 2`, unmeasurable saturation, or fewer than two monotone steady
+/// anchors survive).
+pub fn fit_model(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    seed: u64,
+) -> Option<SurrogateModel> {
+    if k < 2 {
+        return None;
+    }
+    let sat = saturation_rate(topology, k, cfg, seed)?;
+    if !(sat.is_finite() && sat > 0.0) {
+        return None;
+    }
+    let net = NopNetwork::build(topology, k);
+    let zero_load = analytical_latency(&net, cfg, &uniform_nop_flows(k, 0.01));
+
+    // Steady anchors: keep-first monotone filter over the raw sim points.
+    let mut steady_anchors: Vec<(f64, f64)> = Vec::new();
+    for frac in ANCHOR_FRACS {
+        let rate = frac * sat;
+        let stats = NopSim::new(
+            topology,
+            k,
+            cfg,
+            &uniform_nop_flows(k, rate),
+            Mode::Steady {
+                warmup: STEADY_WARMUP,
+                measure: STEADY_MEASURE,
+            },
+            seed,
+        )
+        .run();
+        if stats.delivered == 0 || !stats.avg_latency.is_finite() || stats.avg_latency <= 0.0 {
+            continue;
+        }
+        match steady_anchors.last() {
+            Some(&(_, prev)) if stats.avg_latency < prev => {}
+            _ => steady_anchors.push((rate, stats.avg_latency)),
+        }
+    }
+    if steady_anchors.len() < 2 {
+        return None;
+    }
+
+    // Drain anchors: canonical scatter (chiplet 0 to every other chiplet,
+    // equal split) at a ladder of total flit counts; each anchor stores
+    // the sim-over-analytical-bound ratio in log-total-flits space.
+    let mut drain_anchors: Vec<(f64, f64)> = Vec::new();
+    for total in DRAIN_ANCHOR_TOTALS {
+        let per = (total / (k as u64 - 1)).max(1);
+        let flows: Vec<FlowSpec> = (1..k)
+            .map(|c| FlowSpec {
+                src: 0,
+                dst: c,
+                rate: 0.0,
+                flits: per,
+            })
+            .collect();
+        let actual_total = per * (k as u64 - 1);
+        let budget =
+            10_000 + actual_total.saturating_mul(4).saturating_mul(cfg.hop_latency_cycles + 2);
+        let stats = super::memo::drain_makespan(topology, k, cfg, &flows, budget, seed);
+        if !stats.drained {
+            continue;
+        }
+        let bound = drain_bound(&net, cfg, &flows);
+        if bound <= 0.0 {
+            continue;
+        }
+        drain_anchors.push(((actual_total as f64).ln(), stats.makespan as f64 / bound));
+    }
+
+    Some(SurrogateModel {
+        topology,
+        k,
+        sat_rate: sat,
+        zero_load,
+        steady_anchors,
+        drain_anchors,
+    })
+}
+
+/// Fetch (or fit and cache) the surrogate for this key. Lookups feed the
+/// surrogate hit/miss profile counters; a miss fits under the
+/// `surrogate.fit` phase timer and caches the outcome — including `None`,
+/// so unfittable keys fail fast on every later query.
+pub fn model_for(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    seed: u64,
+) -> Option<Arc<SurrogateModel>> {
+    let key = sur_key(topology, k, cfg, seed);
+    if let Some(hit) = sur_cache().lock().unwrap().get(&key).cloned() {
+        profile::note_surrogate(true);
+        return hit;
+    }
+    profile::note_surrogate(false);
+    // Fit outside the lock (never hold it across a simulation); racing
+    // workers may both fit, but the fits are deterministic and identical.
+    let fitted = {
+        let _t = profile::phase("surrogate.fit");
+        fit_model(topology, k, cfg, seed)
+    };
+    let val = fitted.map(Arc::new);
+    if val.is_some() {
+        profile::note_surrogate_fit();
+    }
+    sur_cache().lock().unwrap().insert(key, val.clone());
+    val
+}
+
+impl SurrogateModel {
+    /// Steady average latency (cycles) at `rate` flits/chiplet/cycle.
+    /// Exact at anchor rates, monotone non-decreasing everywhere, `None`
+    /// at or beyond the saturation rate.
+    pub fn steady_at(&self, rate: f64) -> Option<f64> {
+        if !rate.is_finite() || rate >= self.sat_rate {
+            return None;
+        }
+        let a = &self.steady_anchors;
+        let (first_r, first_l) = a[0];
+        if rate <= first_r {
+            return Some(first_l);
+        }
+        for w in a.windows(2) {
+            let (r0, l0) = w[0];
+            let (r1, l1) = w[1];
+            if rate == r1 {
+                return Some(l1);
+            }
+            if rate < r1 {
+                return Some(lerp(r0, l0, r1, l1, rate));
+            }
+        }
+        // Past the last anchor: log-barrier tail continuing the last
+        // segment's slope, diverging at the saturation rate.
+        let (rm, lm) = a[a.len() - 2];
+        let (rn, ln_) = a[a.len() - 1];
+        let slope = ((ln_ - lm) / (rn - rm)).max(0.0);
+        let beta = slope * (self.sat_rate - rn);
+        Some(ln_ + beta * ((self.sat_rate - rn) / (self.sat_rate - rate)).ln())
+    }
+
+    /// Drain makespan estimate (cycles) for `flows`: the analytical bound
+    /// scaled by the fitted sim/bound ratio at this total flit count.
+    /// `Some(0)` for an empty (or all-self-loop) flow list, `None` when
+    /// fewer than two drain anchors were usable.
+    pub fn drain_at(&self, cfg: &NopConfig, flows: &[FlowSpec]) -> Option<u64> {
+        let total: u64 = flows
+            .iter()
+            .filter(|f| f.src != f.dst)
+            .map(|f| f.flits)
+            .sum();
+        if total == 0 {
+            return Some(0);
+        }
+        if self.drain_anchors.len() < 2 {
+            return None;
+        }
+        let net = NopNetwork::build(self.topology, self.k);
+        let bound = drain_bound(&net, cfg, flows);
+        let x = (total as f64).ln();
+        let a = &self.drain_anchors;
+        let ratio = if x <= a[0].0 {
+            a[0].1
+        } else if x >= a[a.len() - 1].0 {
+            a[a.len() - 1].1
+        } else {
+            let w = a.windows(2).find(|w| x < w[1].0).unwrap_or(&a[a.len() - 2..]);
+            lerp(w[0].0, w[0].1, w[1].0, w[1].1, x)
+        };
+        Some((ratio * bound).round().max(0.0) as u64)
+    }
+
+    /// Bit-exact serialization of the fitted curve (hex `f64::to_bits`),
+    /// for determinism checks: two fits of the same key must match
+    /// byte-for-byte.
+    pub fn curve_bytes(&self) -> String {
+        let mut out = format!(
+            "{:016x}:{:016x}",
+            self.sat_rate.to_bits(),
+            self.zero_load.to_bits()
+        );
+        for (r, l) in &self.steady_anchors {
+            out.push_str(&format!(";{:016x},{:016x}", r.to_bits(), l.to_bits()));
+        }
+        for (x, p) in &self.drain_anchors {
+            out.push_str(&format!("|{:016x},{:016x}", x.to_bits(), p.to_bits()));
+        }
+        out
+    }
+}
+
+/// Surrogate steady latency (cycles) for uniform traffic at `rate`, or
+/// `None` (with a fallback count) when the key is unfittable or the rate
+/// is at/past saturation — callers then run the full simulator.
+pub fn steady_latency(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    rate: f64,
+    seed: u64,
+) -> Option<f64> {
+    let out = model_for(topology, k, cfg, seed).and_then(|m| m.steady_at(rate));
+    if out.is_none() {
+        profile::note_surrogate_fallback();
+    }
+    out
+}
+
+/// Surrogate drain makespan (cycles) for `flows`, or `None` (with a
+/// fallback count) when the key or flow set is outside the fitted range —
+/// callers then run the memoized full drain.
+pub fn drain_estimate(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    flows: &[FlowSpec],
+    seed: u64,
+) -> Option<u64> {
+    let out = model_for(topology, k, cfg, seed).and_then(|m| m.drain_at(cfg, flows));
+    if out.is_none() {
+        profile::note_surrogate_fallback();
+    }
+    out
+}
+
+/// One held-out comparison point in a [`SurrogateCheck`].
+#[derive(Clone, Debug)]
+pub struct HoldoutPoint {
+    /// Offered rate (flits/chiplet/cycle).
+    pub rate: f64,
+    /// Full-sim steady average latency (cycles).
+    pub sim: f64,
+    /// Surrogate steady latency (cycles).
+    pub surrogate: f64,
+    /// |surrogate − sim| / sim.
+    pub rel_err: f64,
+}
+
+/// Sim-vs-surrogate validation record for one (topology, k) config:
+/// held-out accuracy, anchor/fallback accounting and wall-clock for both
+/// paths. Consumed by `repro chiplet --surrogate-check-out` and gated by
+/// `scripts/check_surrogate.py`.
+#[derive(Clone, Debug)]
+pub struct SurrogateCheck {
+    /// Config topology.
+    pub topology: NopTopology,
+    /// Config chiplet count.
+    pub k: usize,
+    /// Measured saturation rate the holdout grid is scaled by.
+    pub sat_rate: f64,
+    /// Surviving steady anchors in the fitted curve.
+    pub steady_anchors: usize,
+    /// Surviving drain anchors in the fitted curve.
+    pub drain_anchors: usize,
+    /// Holdout queries the surrogate refused (each one fell back to sim).
+    pub fallbacks: usize,
+    /// Wall-clock of the full-sim holdout runs (ns).
+    pub sim_ns: u128,
+    /// Wall-clock of the surrogate fit plus all holdout queries (ns).
+    pub surrogate_ns: u128,
+    /// Per-rate comparison points.
+    pub holdout: Vec<HoldoutPoint>,
+}
+
+/// Number of held-out rates per config in [`check`].
+pub const HOLDOUT_POINTS: usize = 40;
+
+/// Run the sim-vs-surrogate comparison for one config: fit an uncached
+/// surrogate, query it at [`HOLDOUT_POINTS`] rates spread over
+/// `[0.10, 0.85] ×` saturation (none of which is an anchor), and time
+/// both paths. The saturation search runs first, outside both timers —
+/// it is memoized and shared by both paths, so charging it to either
+/// would skew the ratio. `None` when saturation is unmeasurable.
+pub fn check(
+    topology: NopTopology,
+    k: usize,
+    cfg: &NopConfig,
+    seed: u64,
+) -> Option<SurrogateCheck> {
+    let sat = saturation_rate(topology, k, cfg, seed)?;
+    let rates: Vec<f64> = (0..HOLDOUT_POINTS)
+        .map(|i| (0.10 + 0.75 * i as f64 / (HOLDOUT_POINTS - 1) as f64) * sat)
+        .collect();
+
+    let sur_start = std::time::Instant::now();
+    let model = fit_model(topology, k, cfg, seed)?;
+    let mut fallbacks = 0usize;
+    let sur: Vec<Option<f64>> = rates
+        .iter()
+        .map(|&r| {
+            let v = model.steady_at(r);
+            if v.is_none() {
+                fallbacks += 1;
+            }
+            v
+        })
+        .collect();
+    let surrogate_ns = sur_start.elapsed().as_nanos();
+
+    let sim_start = std::time::Instant::now();
+    let sim: Vec<f64> = rates
+        .iter()
+        .map(|&r| {
+            NopSim::new(
+                topology,
+                k,
+                cfg,
+                &uniform_nop_flows(k, r),
+                Mode::Steady {
+                    warmup: STEADY_WARMUP,
+                    measure: STEADY_MEASURE,
+                },
+                seed,
+            )
+            .run()
+            .avg_latency
+        })
+        .collect();
+    let sim_ns = sim_start.elapsed().as_nanos();
+
+    let holdout: Vec<HoldoutPoint> = rates
+        .iter()
+        .zip(sim.iter().zip(sur.iter()))
+        .filter_map(|(&rate, (&s, &u))| {
+            let u = u?;
+            Some(HoldoutPoint {
+                rate,
+                sim: s,
+                surrogate: u,
+                rel_err: if s > 0.0 { (u - s).abs() / s } else { 0.0 },
+            })
+        })
+        .collect();
+
+    Some(SurrogateCheck {
+        topology,
+        k,
+        sat_rate: sat,
+        steady_anchors: model.steady_anchors.len(),
+        drain_anchors: model.drain_anchors.len(),
+        fallbacks,
+        sim_ns,
+        surrogate_ns,
+        holdout,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NopConfig {
+        NopConfig::default()
+    }
+
+    #[test]
+    fn surrogate_latency_is_monotone_in_offered_rate() {
+        let model = fit_model(NopTopology::Mesh, 4, &cfg(), 0x5EED).expect("fittable");
+        let mut prev = 0.0_f64;
+        for i in 0..64 {
+            let rate = model.sat_rate * (0.99 * i as f64 / 63.0);
+            let lat = model.steady_at(rate).expect("below saturation");
+            assert!(
+                lat + 1e-9 >= prev,
+                "latency fell from {prev} to {lat} at rate {rate}"
+            );
+            prev = lat;
+        }
+    }
+
+    #[test]
+    fn surrogate_matches_sim_exactly_at_anchor_rates() {
+        let model = fit_model(NopTopology::Ring, 4, &cfg(), 0x5EED).expect("fittable");
+        for &(rate, lat) in &model.steady_anchors {
+            // Exact (bitwise) agreement with the stored anchor...
+            assert_eq!(model.steady_at(rate), Some(lat));
+            // ...which itself is the deterministic sim's own number.
+            let direct = NopSim::new(
+                NopTopology::Ring,
+                4,
+                &cfg(),
+                &uniform_nop_flows(4, rate),
+                Mode::Steady {
+                    warmup: 500,
+                    measure: 2_000,
+                },
+                0x5EED,
+            )
+            .run();
+            assert_eq!(lat, direct.avg_latency, "anchor at rate {rate}");
+        }
+    }
+
+    #[test]
+    fn surrogate_holdout_error_within_5pct_k4_k16_ring_mesh() {
+        for topo in [NopTopology::Ring, NopTopology::Mesh] {
+            for k in [4usize, 16] {
+                let model = fit_model(topo, k, &cfg(), 0x5EED)
+                    .unwrap_or_else(|| panic!("{} k={k} must fit", topo.name()));
+                for frac in [0.2, 0.5, 0.7] {
+                    let rate = frac * model.sat_rate;
+                    let sur = model.steady_at(rate).expect("below saturation");
+                    let sim = NopSim::new(
+                        topo,
+                        k,
+                        &cfg(),
+                        &uniform_nop_flows(k, rate),
+                        Mode::Steady {
+                            warmup: 500,
+                            measure: 2_000,
+                        },
+                        0x5EED,
+                    )
+                    .run()
+                    .avg_latency;
+                    let err = (sur - sim).abs() / sim;
+                    assert!(
+                        err <= 0.05,
+                        "{} k={k} frac={frac}: surrogate {sur} vs sim {sim} ({:.1}% off)",
+                        topo.name(),
+                        100.0 * err
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fitted_curves_are_byte_identical_per_seed() {
+        let a = fit_model(NopTopology::Mesh, 4, &cfg(), 0xD00D).expect("fittable");
+        let b = fit_model(NopTopology::Mesh, 4, &cfg(), 0xD00D).expect("fittable");
+        assert_eq!(a.curve_bytes(), b.curve_bytes());
+        // The serialization is total: anchors, saturation and baseline.
+        assert!(a.curve_bytes().len() > 32);
+    }
+
+    #[test]
+    fn drain_estimate_tracks_memoized_sim() {
+        let model = fit_model(NopTopology::Mesh, 4, &cfg(), 0x5EED).expect("fittable");
+        // A non-anchor pattern: two disjoint transfers.
+        let flows = [
+            FlowSpec {
+                src: 0,
+                dst: 1,
+                rate: 0.0,
+                flits: 120,
+            },
+            FlowSpec {
+                src: 2,
+                dst: 3,
+                rate: 0.0,
+                flits: 77,
+            },
+        ];
+        let est = model.drain_at(&cfg(), &flows).expect("anchored") as f64;
+        let budget = 10_000 + 197 * 4 * (cfg().hop_latency_cycles + 2);
+        let sim = crate::sim::memo::drain_makespan(
+            NopTopology::Mesh,
+            4,
+            &cfg(),
+            &flows,
+            budget,
+            0x5EED,
+        );
+        assert!(sim.drained);
+        let ratio = est / sim.makespan as f64;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "drain estimate {est} vs sim {} (ratio {ratio})",
+            sim.makespan
+        );
+        // Empty flow lists price to zero without falling back.
+        assert_eq!(model.drain_at(&cfg(), &[]), Some(0));
+    }
+
+    #[test]
+    fn unfittable_configs_fall_back() {
+        // k = 1: no network to saturate.
+        assert!(steady_latency(NopTopology::Mesh, 1, &cfg(), 0.1, 1).is_none());
+        assert!(drain_estimate(NopTopology::Mesh, 1, &cfg(), &[], 1).is_none());
+        // At or past saturation the steady curve refuses.
+        let model = fit_model(NopTopology::Ring, 4, &cfg(), 0x5EED).expect("fittable");
+        assert!(model.steady_at(model.sat_rate).is_none());
+        assert!(model.steady_at(model.sat_rate * 1.5).is_none());
+    }
+
+    #[test]
+    fn model_for_caches_process_wide() {
+        let cfg = cfg();
+        // Distinct seed to avoid cross-test interference on the shared
+        // cache; first call misses and fits, second hits.
+        let a = model_for(NopTopology::Mesh, 4, &cfg, 0xCAC4E).expect("fittable");
+        let b = model_for(NopTopology::Mesh, 4, &cfg, 0xCAC4E).expect("fittable");
+        assert_eq!(a.curve_bytes(), b.curve_bytes());
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+    }
+
+    #[test]
+    fn check_produces_gateable_record() {
+        let rec = check(NopTopology::Mesh, 4, &cfg(), 0x5EED).expect("measurable");
+        assert_eq!(rec.holdout.len(), HOLDOUT_POINTS);
+        assert_eq!(rec.fallbacks, 0, "holdout grid stays below saturation");
+        assert!(rec.steady_anchors >= 2);
+        assert!(rec.sat_rate > 0.0);
+        for p in &rec.holdout {
+            assert!(p.rate < rec.sat_rate);
+            assert!(p.sim > 0.0 && p.surrogate > 0.0);
+        }
+    }
+}

@@ -26,6 +26,10 @@ static DRAIN_EVICTIONS: AtomicU64 = AtomicU64::new(0);
 static SAT_HITS: AtomicU64 = AtomicU64::new(0);
 static SAT_MISSES: AtomicU64 = AtomicU64::new(0);
 static SAT_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+static SURR_HITS: AtomicU64 = AtomicU64::new(0);
+static SURR_MISSES: AtomicU64 = AtomicU64::new(0);
+static SURR_FITS: AtomicU64 = AtomicU64::new(0);
+static SURR_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 static ENGINE_RUNS: AtomicU64 = AtomicU64::new(0);
 static ENGINE_CYCLES: AtomicU64 = AtomicU64::new(0);
 
@@ -55,6 +59,24 @@ pub(crate) fn note_sat(hit: bool) {
 /// Record one saturation-cache eviction.
 pub(crate) fn note_sat_eviction() {
     SAT_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one surrogate-cache lookup ([`crate::sim::surrogate`]).
+pub(crate) fn note_surrogate(hit: bool) {
+    let c = if hit { &SURR_HITS } else { &SURR_MISSES };
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one successful surrogate anchor fit (the sims behind it run
+/// under the `surrogate.fit` phase timer).
+pub(crate) fn note_surrogate_fit() {
+    SURR_FITS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one surrogate refusal: a query the fitted curve could not
+/// answer, sending the caller back to the full simulator.
+pub(crate) fn note_surrogate_fallback() {
+    SURR_FALLBACKS.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Record one completed engine run and the cycles it simulated
@@ -109,6 +131,22 @@ pub fn snapshot() -> Registry {
         "profile.memo.sat.evictions",
         SAT_EVICTIONS.load(Ordering::Relaxed),
     );
+    reg.add(
+        "profile.memo.surrogate.hits",
+        SURR_HITS.load(Ordering::Relaxed),
+    );
+    reg.add(
+        "profile.memo.surrogate.misses",
+        SURR_MISSES.load(Ordering::Relaxed),
+    );
+    reg.add(
+        "profile.memo.surrogate.fits",
+        SURR_FITS.load(Ordering::Relaxed),
+    );
+    reg.add(
+        "profile.memo.surrogate.fallbacks",
+        SURR_FALLBACKS.load(Ordering::Relaxed),
+    );
     reg.add("profile.engine.runs", ENGINE_RUNS.load(Ordering::Relaxed));
     reg.add("profile.engine.cycles", ENGINE_CYCLES.load(Ordering::Relaxed));
     let ph = phases().lock().expect("profile phase lock");
@@ -148,6 +186,14 @@ pub fn text() -> String {
         rate(sh, sm),
         SAT_EVICTIONS.load(Ordering::Relaxed)
     ));
+    let uh = SURR_HITS.load(Ordering::Relaxed);
+    let um = SURR_MISSES.load(Ordering::Relaxed);
+    out.push_str(&format!(
+        "  memo surr:  {uh} hits / {um} misses ({:.1}% hit), {} fits, {} fallbacks\n",
+        rate(uh, um),
+        SURR_FITS.load(Ordering::Relaxed),
+        SURR_FALLBACKS.load(Ordering::Relaxed)
+    ));
     out.push_str(&format!(
         "  engine:     {} runs, {} cycles simulated\n",
         ENGINE_RUNS.load(Ordering::Relaxed),
@@ -178,6 +224,10 @@ pub fn reset() {
         &SAT_HITS,
         &SAT_MISSES,
         &SAT_EVICTIONS,
+        &SURR_HITS,
+        &SURR_MISSES,
+        &SURR_FITS,
+        &SURR_FALLBACKS,
         &ENGINE_RUNS,
         &ENGINE_CYCLES,
     ] {
@@ -201,6 +251,10 @@ mod tests {
         note_sat(true);
         note_sat(false);
         note_sat_eviction();
+        note_surrogate(true);
+        note_surrogate(false);
+        note_surrogate_fit();
+        note_surrogate_fallback();
         note_engine_run(123);
         let after = snapshot();
         let a = |n: &str| after.counter(n).unwrap_or(0);
@@ -209,10 +263,15 @@ mod tests {
         assert!(a("profile.memo.drain.evictions") >= b("profile.memo.drain.evictions") + 1);
         assert!(a("profile.memo.sat.hits") >= b("profile.memo.sat.hits") + 1);
         assert!(a("profile.memo.sat.evictions") >= b("profile.memo.sat.evictions") + 1);
+        assert!(a("profile.memo.surrogate.hits") >= b("profile.memo.surrogate.hits") + 1);
+        assert!(a("profile.memo.surrogate.misses") >= b("profile.memo.surrogate.misses") + 1);
+        assert!(a("profile.memo.surrogate.fits") >= b("profile.memo.surrogate.fits") + 1);
+        assert!(a("profile.memo.surrogate.fallbacks") >= b("profile.memo.surrogate.fallbacks") + 1);
         assert!(a("profile.engine.runs") >= b("profile.engine.runs") + 1);
         assert!(a("profile.engine.cycles") >= b("profile.engine.cycles") + 123);
         let dump = text();
         assert!(dump.contains("memo drain:"));
+        assert!(dump.contains("memo surr:"));
         assert!(dump.contains("engine:"));
     }
 

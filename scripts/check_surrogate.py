@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Surrogate fidelity gate for CI.
+
+Usage: check_surrogate.py CHECK.json [MAX_ERR] [MIN_SPEEDUP]
+
+CHECK.json is the dump written by `repro chiplet --surrogate-check-out`:
+one record per (topology, k) config with the fitted curve's anchor
+counts, fallback count, wall-clock for the full-sim and surrogate paths,
+and the per-rate held-out comparison points.
+
+The gate fails (exit 1) when any of these break:
+
+  * a config has fewer than 2 surviving steady anchors (the fit is
+    degenerate and would fall back everywhere);
+  * the pooled held-out |rel_err| p50 or p99 exceeds MAX_ERR
+    (default 0.05 — the "<= 5% error vs mode = sim" acceptance bound);
+  * the aggregate wall-clock ratio sum(sim_ns) / sum(surrogate_ns)
+    falls below MIN_SPEEDUP (default 5.0).
+
+Malformed or unreadable input exits 2 so CI never passes on a broken
+dump. Fallback holdout points (where the surrogate refused and the
+consumer would have run the full simulator) are reported but excluded
+from the error pool — they cost time, not accuracy.
+"""
+
+import json
+import sys
+
+
+def load_check(path):
+    """Load the check JSON, failing the gate (exit 2) on a missing or
+    malformed file instead of silently passing."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        print(f"ERROR: cannot read check file {path}: {e}")
+        sys.exit(2)
+    except json.JSONDecodeError as e:
+        print(f"ERROR: check file {path} is not valid JSON: {e}")
+        sys.exit(2)
+    configs = data.get("configs") if isinstance(data, dict) else None
+    if not isinstance(configs, list) or not configs:
+        print(f"ERROR: {path} must be an object with a non-empty 'configs' list")
+        sys.exit(2)
+    required = (
+        "topology",
+        "k",
+        "sat_rate",
+        "steady_anchors",
+        "drain_anchors",
+        "fallbacks",
+        "sim_ns",
+        "surrogate_ns",
+        "holdout",
+    )
+    for c in configs:
+        missing = [f for f in required if f not in c]
+        if missing:
+            print(f"ERROR: config record {c!r} is missing fields {missing}")
+            sys.exit(2)
+    return configs
+
+
+def quantile(sorted_vals, q):
+    """Nearest-rank quantile of an ascending list (q in [0, 1])."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    configs = load_check(sys.argv[1])
+    max_err = float(sys.argv[2]) if len(sys.argv) > 2 else 0.05
+    min_speedup = float(sys.argv[3]) if len(sys.argv) > 3 else 5.0
+
+    failures = []
+    errs = []
+    total_sim_ns = 0
+    total_sur_ns = 0
+    total_fallbacks = 0
+    print(
+        f"{'config':<12} {'sat_rate':>9} {'anchors':>8} {'holdout':>8}"
+        f" {'fallback':>9} {'p50_err':>8} {'p99_err':>8} {'speedup':>8}"
+    )
+    for c in configs:
+        name = f"{c['topology']}/k{c['k']}"
+        if c["steady_anchors"] < 2:
+            failures.append(f"{name}: only {c['steady_anchors']} steady anchors survived")
+        pts = [h for h in c["holdout"] if h.get("rel_err") is not None]
+        cfg_errs = sorted(abs(h["rel_err"]) for h in pts)
+        errs.extend(cfg_errs)
+        total_sim_ns += c["sim_ns"]
+        total_sur_ns += c["surrogate_ns"]
+        total_fallbacks += c["fallbacks"]
+        speedup = c["sim_ns"] / max(c["surrogate_ns"], 1)
+        print(
+            f"{name:<12} {c['sat_rate']:>9.4f} {c['steady_anchors']:>8}"
+            f" {len(pts):>8} {c['fallbacks']:>9}"
+            f" {quantile(cfg_errs, 0.50):>8.4f} {quantile(cfg_errs, 0.99):>8.4f}"
+            f" {speedup:>7.1f}x"
+        )
+
+    errs.sort()
+    p50 = quantile(errs, 0.50)
+    p99 = quantile(errs, 0.99)
+    speedup = total_sim_ns / max(total_sur_ns, 1)
+    print(
+        f"\npooled over {len(configs)} configs, {len(errs)} held-out points,"
+        f" {total_fallbacks} fallbacks:"
+    )
+    print(f"  |rel_err| p50 {p50:.4f}, p99 {p99:.4f} (budget {max_err:.2f})")
+    print(
+        f"  wall-clock sim {total_sim_ns / 1e6:.1f} ms vs surrogate"
+        f" {total_sur_ns / 1e6:.1f} ms ({speedup:.1f}x, budget {min_speedup:.1f}x)"
+    )
+
+    if p50 > max_err:
+        failures.append(f"pooled |rel_err| p50 {p50:.4f} exceeds {max_err:.2f}")
+    if p99 > max_err:
+        failures.append(f"pooled |rel_err| p99 {p99:.4f} exceeds {max_err:.2f}")
+    if speedup < min_speedup:
+        failures.append(f"speedup {speedup:.1f}x below required {min_speedup:.1f}x")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} surrogate gate(s) broken:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nOK: surrogate within error budget and past the speedup bar")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
